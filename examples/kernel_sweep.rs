@@ -1,0 +1,72 @@
+//! Kernel sweep: DR-SpMM forward/backward vs the cuSPARSE and GNNAdvisor
+//! analogs across K values — a focused version of paper Fig. 11 on one
+//! design (the full sweep lives in `cargo bench --bench fig11_kernel_sweep`).
+//!
+//! Run: `cargo run --release --example kernel_sweep [-- --fast]`
+
+use dr_circuitgnn::bench::{measure, Table};
+use dr_circuitgnn::datagen::{generate_design, table1_design, DesignSize};
+use dr_circuitgnn::graph::EdgeType;
+use dr_circuitgnn::sparse::{
+    dr_spmm, dr_spmm_bwd, drelu, spmm_csr, spmm_csr_bwd, spmm_gnna, spmm_gnna_bwd, DegreeBuckets,
+    GnnaConfig,
+};
+use dr_circuitgnn::tensor::Matrix;
+use dr_circuitgnn::util::rng::Rng;
+
+fn main() {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let scale = if fast { 0.1 } else { 0.5 };
+    let reps = if fast { 3 } else { 7 };
+    let dim = 64;
+
+    let spec = table1_design(DesignSize::Medium, scale);
+    let graphs = generate_design(&spec);
+    let g = &graphs[0];
+    println!(
+        "design {} graph 0 at scale {scale}: {} cells / {} nets",
+        spec.name, g.n_cells, g.n_nets
+    );
+
+    let mut rng = Rng::new(11);
+    for edge in [EdgeType::Near, EdgeType::Pins, EdgeType::Pinned] {
+        let adj = g.adj(edge).clone();
+        let csc = adj.to_csc();
+        let x = Matrix::randn(adj.cols, dim, 1.0, &mut rng);
+        let dy = Matrix::randn(adj.rows, dim, 1.0, &mut rng);
+        let buckets = DegreeBuckets::build(&adj);
+        let cfg = GnnaConfig::default();
+
+        let t_csr_f = measure(1, reps, || std::hint::black_box(spmm_csr(&adj, &x))).median;
+        let t_csr_b = measure(1, reps, || std::hint::black_box(spmm_csr_bwd(&csc, &dy))).median;
+        let t_gnna_f =
+            measure(1, reps, || std::hint::black_box(spmm_gnna(&adj, &x, &cfg))).median;
+        let t_gnna_b =
+            measure(1, reps, || std::hint::black_box(spmm_gnna_bwd(&csc, &dy, &cfg))).median;
+
+        let mut table = Table::new(
+            &format!("{} ({}×{}, {} nnz, dim {dim})", edge.name(), adj.rows, adj.cols, adj.nnz()),
+            &["K", "fwd ms", "bwd ms", "fwd vs cuSPARSE", "bwd vs cuSPARSE", "fwd vs GNNA", "bwd vs GNNA"],
+        );
+        for k in [2usize, 4, 8, 16, 32, 64] {
+            let compressed = drelu(&x, k);
+            let t_f =
+                measure(1, reps, || std::hint::black_box(dr_spmm(&adj, &compressed, &buckets)))
+                    .median;
+            let t_b = measure(1, reps, || {
+                std::hint::black_box(dr_spmm_bwd(&csc, &dy, &compressed))
+            })
+            .median;
+            table.row(&[
+                k.to_string(),
+                format!("{:.2}", t_f * 1e3),
+                format!("{:.2}", t_b * 1e3),
+                format!("{:.2}x", t_csr_f / t_f),
+                format!("{:.2}x", t_csr_b / t_b),
+                format!("{:.2}x", t_gnna_f / t_f),
+                format!("{:.2}x", t_gnna_b / t_b),
+            ]);
+        }
+        table.print();
+    }
+}

@@ -1,0 +1,93 @@
+//! Quickstart: generate a synthetic circuit graph, inspect its structure,
+//! and run one heterogeneous message-passing layer under all three kernel
+//! engines — verifying the DR path against the dense baseline and printing
+//! the first speedup numbers.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use dr_circuitgnn::bench::{fmt_speedup, measure};
+use dr_circuitgnn::datagen::{generate_graph, GraphSpec};
+use dr_circuitgnn::graph::stats::{degree_report, ImbalanceStats};
+use dr_circuitgnn::nn::hetero_conv::GraphCtx;
+use dr_circuitgnn::nn::{HeteroConv, MessageEngine};
+use dr_circuitgnn::sparse::GnnaConfig;
+use dr_circuitgnn::tensor::Matrix;
+use dr_circuitgnn::util::math::rel_l2;
+use dr_circuitgnn::util::rng::Rng;
+
+fn main() {
+    println!("== DR-CircuitGNN quickstart ==\n");
+
+    // 1. A CircuitNet-like heterograph: cells + nets, three edge types.
+    let spec = GraphSpec {
+        n_cells: 2000,
+        n_nets: 1000,
+        target_near: 80_000,
+        target_pins: 3_000,
+        d_cell: 16,
+        d_net: 16,
+    };
+    let mut rng = Rng::new(42);
+    let g = generate_graph(&spec, 0, &mut rng);
+    g.validate().expect("generated graph must be valid");
+    println!(
+        "graph: {} cells, {} nets | near {} / pins {} / pinned {} edges",
+        g.n_cells,
+        g.n_nets,
+        g.near.nnz(),
+        g.pins.nnz(),
+        g.pinned.nnz()
+    );
+    for (edge, hist) in degree_report(&g, 4) {
+        let imb = ImbalanceStats::of(g.adj(edge));
+        println!(
+            "  {:<7} avg deg {:6.1}  max {:4}  imbalance {:5.1}  {}",
+            edge.name(),
+            hist.avg_degree,
+            hist.max_degree,
+            imb.imbalance,
+            hist.sparkline(24)
+        );
+    }
+
+    // 2. One HeteroConv layer under each engine.
+    let ctx = GraphCtx::new(&g);
+    let hidden = 64;
+    let mut init_rng = Rng::new(7);
+    let layer = HeteroConv::new(hidden, hidden, hidden, &mut init_rng);
+    let x_cell = Matrix::randn(g.n_cells, hidden, 1.0, &mut init_rng);
+    let x_net = Matrix::randn(g.n_nets, hidden, 1.0, &mut init_rng);
+
+    let engines = [
+        ("cuSPARSE-analog", MessageEngine::Csr),
+        ("GNNA-analog", MessageEngine::Gnna(GnnaConfig::default())),
+        ("DR-SpMM (k=8)", MessageEngine::dr(8, 8)),
+    ];
+    let mut baseline_t = 0.0;
+    let mut baseline_out: Option<Matrix> = None;
+    println!("\none HeteroConv forward (hidden {hidden}):");
+    for (name, engine) in &engines {
+        let stats = measure(1, 5, || {
+            let mut l2 = layer.clone();
+            std::hint::black_box(l2.forward(&ctx, engine, &x_cell, &x_net));
+        });
+        let mut l = layer.clone();
+        let (yc, _) = l.forward(&ctx, engine, &x_cell, &x_net);
+        if baseline_out.is_none() {
+            baseline_t = stats.median;
+            baseline_out = Some(yc.clone());
+        }
+        let err = rel_l2(&yc.data, &baseline_out.as_ref().unwrap().data);
+        println!(
+            "  {name:<16} {:8.2} ms   speedup {}   output rel-err vs dense {err:.3}",
+            stats.median * 1e3,
+            fmt_speedup(baseline_t, stats.median),
+        );
+    }
+    println!(
+        "\nNote: the DR path's output differs from dense by design — D-ReLU keeps\n\
+         the top-k features per row (k=8 of 64 here); Fig. 10 of the paper shows\n\
+         rank-correlation metrics are stable across k. Run the table2_accuracy\n\
+         bench for the accuracy comparison and fig11_kernel_sweep for kernels."
+    );
+}

@@ -1,0 +1,175 @@
+"""AOT lowering: jax → StableHLO → XlaComputation → HLO *text* artifacts.
+
+HLO text (NOT `.serialize()`): jax ≥0.5 emits HloModuleProto with 64-bit
+instruction ids which the rust side's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/gen_hlo.py.
+
+Emitted artifacts (each `<name>.hlo.txt` + `<name>.meta`):
+  * hgnn_step_d{dim}  — fused train step: (params, graph, feats, y, mask)
+                        → (loss, grads). The rust Adam applies the update.
+  * hgnn_fwd_d{dim}   — inference forward → per-cell prediction.
+  * spmm_{edge}_d{dim} — standalone DR-SpMM kernels for the parallel
+                        pipeline example (one PJRT executable per edge type,
+                        dispatched from three rust threads).
+
+Usage: python -m compile.aot --out ../artifacts [--dim 64]
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import graph_spec as gs
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def write_artifact(out_dir, name, lowered, input_specs, output_specs, notes):
+    text = to_hlo_text(lowered)
+    hlo_path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(hlo_path, "w") as f:
+        f.write(text)
+    meta_path = os.path.join(out_dir, f"{name}.meta")
+    with open(meta_path, "w") as f:
+        for iname, shape in input_specs:
+            f.write(f"input {iname} {' '.join(str(d) for d in shape)}\n")
+        for oname, shape in output_specs:
+            f.write(f"output {oname} {' '.join(str(d) for d in shape)}\n")
+        for note in notes:
+            f.write(f"note {note}\n")
+    print(f"wrote {name}: {len(text)} chars, {len(input_specs)} inputs")
+
+
+def f32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def graph_specs():
+    """(name, shape) for the 12 graph tensors, canonical order.
+
+    All f32 — index tensors are f32-encoded (cast inside the model).
+    Forward ELL is destination-major; transposed ELL is source-major.
+    """
+    shapes = {
+        "near_idx": (gs.N_CELL, gs.W_NEAR),
+        "near_val": (gs.N_CELL, gs.W_NEAR),
+        "near_idx_t": (gs.N_CELL, gs.W_NEAR),
+        "near_val_t": (gs.N_CELL, gs.W_NEAR),
+        "pinned_idx": (gs.N_CELL, gs.W_PINNED),
+        "pinned_val": (gs.N_CELL, gs.W_PINNED),
+        "pinned_idx_t": (gs.N_NET, gs.W_PINS),
+        "pinned_val_t": (gs.N_NET, gs.W_PINS),
+        "pins_idx": (gs.N_NET, gs.W_PINS),
+        "pins_val": (gs.N_NET, gs.W_PINS),
+        "pins_idx_t": (gs.N_CELL, gs.W_PINNED),
+        "pins_val_t": (gs.N_CELL, gs.W_PINNED),
+    }
+    return [(k, shapes[k]) for k in model.GRAPH_KEYS]
+
+
+def param_specs(hidden):
+    """(name, shape) for the 19 live parameter tensors, canonical order.
+
+    conv2.pins is dead (see model.DEAD_PARAM_KEYS) and excluded — XLA would
+    strip those inputs from the compiled executable anyway.
+    """
+    out = []
+    for path in model.LIVE_PARAM_KEYS:
+        name = ".".join(path)
+        if path[0] == "lin_cell":
+            shape = (gs.D_CELL_RAW, hidden) if path[-1] == "w" else (hidden,)
+        elif path[0] == "lin_net":
+            shape = (gs.D_NET_RAW, hidden) if path[-1] == "w" else (hidden,)
+        elif path[0] == "out":
+            shape = (hidden, 1) if path[-1] == "w" else (1,)
+        else:  # conv blocks: all hidden×hidden weights / hidden biases
+            shape = (hidden, hidden) if path[-1].startswith("w") else (hidden,)
+        out.append((name, shape))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--dim", type=int, default=64, help="hidden width")
+    ap.add_argument("--k-cell", type=int, default=gs.K_CELL)
+    ap.add_argument("--k-net", type=int, default=gs.K_NET)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    hidden = args.dim
+
+    p_specs = param_specs(hidden)
+    g_specs = graph_specs()
+    feat_specs = [
+        ("x_cell", (gs.N_CELL, gs.D_CELL_RAW)),
+        ("x_net", (gs.N_NET, gs.D_NET_RAW)),
+    ]
+    bucket_note = (
+        f"bucket n_cell={gs.N_CELL} n_net={gs.N_NET} w_near={gs.W_NEAR} "
+        f"w_pins={gs.W_PINS} w_pinned={gs.W_PINNED} hidden={hidden} "
+        f"k_cell={args.k_cell} k_net={args.k_net}"
+    )
+
+    # ---- train step artifact ----
+    step = model.step_fn(args.k_cell, args.k_net)
+    step_inputs = (
+        p_specs
+        + g_specs
+        + feat_specs
+        + [("y_cell", (gs.N_CELL, 1)), ("cell_mask", (gs.N_CELL, 1))]
+    )
+    lowered = jax.jit(step).lower(*[f32(s) for _, s in step_inputs])
+    step_outputs = [("loss", ())] + [(f"grad.{n}", s) for n, s in p_specs]
+    write_artifact(
+        args.out, f"hgnn_step_d{hidden}", lowered, step_inputs, step_outputs, [bucket_note]
+    )
+
+    # ---- inference forward artifact ----
+    fwd = model.fwd_fn(args.k_cell, args.k_net)
+    fwd_inputs = p_specs + g_specs + feat_specs
+    lowered = jax.jit(fwd).lower(*[f32(s) for _, s in fwd_inputs])
+    write_artifact(
+        args.out,
+        f"hgnn_fwd_d{hidden}",
+        lowered,
+        fwd_inputs,
+        [("pred", (gs.N_CELL, 1))],
+        [bucket_note],
+    )
+
+    # ---- standalone DR-SpMM kernels (parallel pipeline example) ----
+    for edge, rows, width, n_src, k in [
+        ("near", gs.N_CELL, gs.W_NEAR, gs.N_CELL, args.k_cell),
+        ("pinned", gs.N_CELL, gs.W_PINNED, gs.N_NET, args.k_net),
+        ("pins", gs.N_NET, gs.W_PINS, gs.N_CELL, args.k_cell),
+    ]:
+        fn = model.spmm_fn(k)
+        inputs = [
+            ("idx", (rows, width)),
+            ("val", (rows, width)),
+            ("x", (n_src, hidden)),
+        ]
+        lowered = jax.jit(fn).lower(*[f32(s) for _, s in inputs])
+        write_artifact(
+            args.out,
+            f"spmm_{edge}_d{hidden}",
+            lowered,
+            inputs,
+            [("y", (rows, hidden))],
+            [f"edge {edge} k={k}", bucket_note],
+        )
+
+
+if __name__ == "__main__":
+    main()

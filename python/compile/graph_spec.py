@@ -1,0 +1,27 @@
+"""Static bucket shapes shared by the AOT artifacts and the rust feeder.
+
+HLO artifacts have static shapes; real graphs are padded into this bucket
+by `rust/src/runtime/pad.rs` (extra cells/nets carry zero features, padded
+ELL slots carry zero edge values, and the loss masks padded rows out).
+
+Keep in sync with the `bucket` note lines written into each artifact's
+`.meta` file — the rust side validates against those, not this file.
+"""
+
+# Node capacity of the bucket.
+N_CELL = 256
+N_NET = 128
+
+# ELL widths (max neighbors per destination row; rust truncates beyond
+# these and reports the truncation fraction).
+W_NEAR = 64
+W_PINS = 16  # pins: rows = nets (cell sources)
+W_PINNED = 16  # pinned: rows = cells (net sources)
+
+# Raw feature widths (match rust datagen::designs::{D_CELL_RAW, D_NET_RAW}).
+D_CELL_RAW = 16
+D_NET_RAW = 16
+
+# Default K values baked into the artifacts (paper §4.3 optimum region).
+K_CELL = 8
+K_NET = 8

@@ -1,0 +1,68 @@
+"""AOT path: artifacts lower, parse and carry consistent metadata."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def artifacts_built():
+    return os.path.exists(os.path.join(ART_DIR, "hgnn_step_d64.hlo.txt"))
+
+
+@pytest.fixture(scope="module", autouse=True)
+def ensure_artifacts():
+    """Build artifacts once if missing (same entry `make artifacts` uses)."""
+    if not artifacts_built():
+        subprocess.run(
+            [sys.executable, "-m", "compile.aot", "--out", ART_DIR],
+            cwd=os.path.join(os.path.dirname(__file__), ".."),
+            check=True,
+        )
+
+
+EXPECTED = [
+    "hgnn_step_d64",
+    "hgnn_fwd_d64",
+    "spmm_near_d64",
+    "spmm_pinned_d64",
+    "spmm_pins_d64",
+]
+
+
+@pytest.mark.parametrize("name", EXPECTED)
+def test_artifact_files_exist_and_nonempty(name):
+    hlo = os.path.join(ART_DIR, f"{name}.hlo.txt")
+    meta = os.path.join(ART_DIR, f"{name}.meta")
+    assert os.path.exists(hlo), hlo
+    assert os.path.exists(meta), meta
+    text = open(hlo).read()
+    assert text.startswith("HloModule"), "artifact must be HLO text"
+    assert len(text) > 1000
+
+
+def test_step_meta_structure():
+    meta = open(os.path.join(ART_DIR, "hgnn_step_d64.meta")).read()
+    inputs = [l for l in meta.splitlines() if l.startswith("input ")]
+    outputs = [l for l in meta.splitlines() if l.startswith("output ")]
+    # 19 live params + 12 graph + 2 feats + y + mask = 35 inputs.
+    assert len(inputs) == 35, len(inputs)
+    # loss + 19 grads.
+    assert len(outputs) == 20, len(outputs)
+    assert any("bucket" in l for l in meta.splitlines() if l.startswith("note"))
+
+
+def test_spmm_meta_shapes():
+    meta = open(os.path.join(ART_DIR, "spmm_near_d64.meta")).read()
+    lines = meta.splitlines()
+    assert any(l.startswith("input idx 256 64") for l in lines), lines
+    assert any(l.startswith("output y 256 64") for l in lines), lines
+
+
+def test_hlo_text_mentions_no_dynamic_shapes():
+    # Static-shape sanity: no parameter should be unbounded/dynamic.
+    text = open(os.path.join(ART_DIR, "hgnn_fwd_d64.hlo.txt")).read()
+    assert "<=?" not in text and "?x" not in text

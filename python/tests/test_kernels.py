@@ -1,0 +1,162 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Includes hypothesis sweeps over shapes and k — the build-time gate that the
+kernels the artifacts embed are numerically correct.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.drelu import drelu
+from compile.kernels.dr_spmm import dr_spmm, dr_spmm_bwd, ell_spmm
+
+
+def rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype=jnp.float32)
+
+
+class TestDrelu:
+    def test_keeps_exactly_k(self):
+        x = rand(0, 32, 16)
+        y = drelu(x, 4)
+        nz = (np.asarray(y) != 0).sum(axis=1)
+        assert (nz == 4).all()
+
+    def test_matches_ref_basic(self):
+        x = rand(1, 64, 32)
+        np.testing.assert_allclose(drelu(x, 8), ref.drelu_ref(x, 8), rtol=1e-6)
+
+    def test_k_equals_dim_identity(self):
+        x = rand(2, 10, 8)
+        np.testing.assert_allclose(drelu(x, 8), x, rtol=1e-6)
+
+    def test_kept_values_are_the_largest(self):
+        x = rand(3, 20, 12)
+        y = np.asarray(drelu(x, 3))
+        xs = np.asarray(x)
+        for r in range(20):
+            kept = y[r][y[r] != 0]
+            thresh = np.sort(xs[r])[-3]
+            assert (kept >= thresh - 1e-6).all()
+
+    def test_row_padding_path(self):
+        # 300 rows with tile 256 forces the padding branch.
+        x = rand(4, 300, 16)
+        np.testing.assert_allclose(drelu(x, 5), ref.drelu_ref(x, 5), rtol=1e-6)
+
+    def test_invalid_k_raises(self):
+        with pytest.raises(ValueError):
+            drelu(rand(5, 4, 4), 0)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.integers(1, 80),
+        d=st.integers(2, 48),
+        k=st.integers(1, 48),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_matches_ref(self, n, d, k, seed):
+        k = min(k, d)
+        x = jax.random.normal(jax.random.PRNGKey(seed), (n, d), dtype=jnp.float32)
+        np.testing.assert_allclose(drelu(x, k), ref.drelu_ref(x, k), rtol=1e-5, atol=1e-6)
+
+
+class TestEllSpmm:
+    def _graph(self, seed, rows, width, n_src):
+        kidx, kval = jax.random.split(jax.random.PRNGKey(seed))
+        idx = jax.random.randint(kidx, (rows, width), 0, n_src)
+        val = jax.random.uniform(kval, (rows, width), dtype=jnp.float32)
+        # Zero some slots to emulate ELL padding.
+        val = jnp.where(val < 0.3, 0.0, val)
+        return idx, val
+
+    def test_matches_ref(self):
+        idx, val = self._graph(0, 40, 8, 30)
+        x = rand(1, 30, 16)
+        np.testing.assert_allclose(
+            ell_spmm(idx, val, x), ref.ell_spmm_ref(idx, val, x), rtol=1e-5, atol=1e-5
+        )
+
+    def test_row_padding_path(self):
+        idx, val = self._graph(2, 200, 4, 64)
+        x = rand(3, 64, 8)
+        np.testing.assert_allclose(
+            ell_spmm(idx, val, x), ref.ell_spmm_ref(idx, val, x), rtol=1e-5, atol=1e-5
+        )
+
+    def test_zero_values_contribute_nothing(self):
+        idx = jnp.zeros((4, 3), dtype=jnp.int32)
+        val = jnp.zeros((4, 3), dtype=jnp.float32)
+        x = rand(4, 10, 6)
+        assert np.abs(np.asarray(ell_spmm(idx, val, x))).max() == 0.0
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        rows=st.integers(1, 64),
+        width=st.integers(1, 12),
+        n_src=st.integers(1, 64),
+        d=st.integers(1, 32),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_matches_ref(self, rows, width, n_src, d, seed):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+        idx = jax.random.randint(k1, (rows, width), 0, n_src)
+        val = jax.random.uniform(k2, (rows, width), dtype=jnp.float32)
+        x = jax.random.normal(k3, (n_src, d), dtype=jnp.float32)
+        np.testing.assert_allclose(
+            ell_spmm(idx, val, x), ref.ell_spmm_ref(idx, val, x), rtol=1e-4, atol=1e-4
+        )
+
+
+class TestDrSpmm:
+    def test_forward_composition(self):
+        idx = jax.random.randint(jax.random.PRNGKey(0), (20, 6), 0, 15)
+        val = jax.random.uniform(jax.random.PRNGKey(1), (20, 6), dtype=jnp.float32)
+        x = rand(2, 15, 16)
+        got = dr_spmm(idx, val, drelu(x, 4))
+        want = ref.dr_spmm_ref(idx, val, x, 4)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_backward_masks_to_forward_support(self):
+        x = rand(3, 12, 8)
+        keep = np.asarray(drelu(x, 3)) != 0
+        idx_t = jax.random.randint(jax.random.PRNGKey(4), (12, 5), 0, 9)
+        val_t = jax.random.uniform(jax.random.PRNGKey(5), (12, 5), dtype=jnp.float32)
+        dy = rand(6, 9, 8)
+        dx = np.asarray(dr_spmm_bwd(idx_t, val_t, dy, jnp.asarray(keep)))
+        assert (dx[~keep] == 0).all()
+        want = np.asarray(ref.dr_spmm_bwd_ref(idx_t, val_t, dy, jnp.asarray(keep)))
+        np.testing.assert_allclose(dx, want, rtol=1e-5, atol=1e-5)
+
+    def test_custom_vjp_chain_rule(self):
+        """jax.grad through the custom aggregation equals the masked
+        dense analytic gradient."""
+        from compile.model import make_aggregate
+
+        n_dst, n_src, d, width, k = 8, 10, 6, 4, 2
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(7), 3)
+        idx = jax.random.randint(k1, (n_dst, width), 0, n_src)
+        val = jax.random.uniform(k2, (n_dst, width), dtype=jnp.float32)
+        x = jax.random.normal(k3, (n_src, d), dtype=jnp.float32)
+        # Build exact transpose ELL of (idx, val).
+        a = np.zeros((n_dst, n_src), dtype=np.float32)
+        for r in range(n_dst):
+            for w in range(width):
+                a[r, int(idx[r, w])] += float(val[r, w])
+        width_t = max((a != 0).sum(axis=0).max(), 1)
+        idx_t = np.zeros((n_src, width_t), dtype=np.int32)
+        val_t = np.zeros((n_src, width_t), dtype=np.float32)
+        for j in range(n_src):
+            nz = np.nonzero(a[:, j])[0]
+            idx_t[j, : len(nz)] = nz
+            val_t[j, : len(nz)] = a[nz, j]
+        agg = make_aggregate(k)
+        g = jax.grad(lambda xx: agg(idx, val, jnp.asarray(idx_t), jnp.asarray(val_t), xx).sum())(x)
+        # Analytic: dX = (A^T · 1) masked to top-k support.
+        keep = np.asarray(ref.drelu_mask_ref(x, k))
+        want = (a.T @ np.ones((n_dst, d), dtype=np.float32)) * keep
+        np.testing.assert_allclose(np.asarray(g), want, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,98 @@
+//! E4 — regenerates paper **Fig. 11**: DR-SpMM forward/backward runtime
+//! speedup under varying K against cuSPARSE and GNNA, across the three
+//! representative designs (all graphs), embedding dims 64 and 128.
+//!
+//! Expected shape (paper §4.2): consistent acceleration while K < 32;
+//! largest wins on `pins` (tall-thin adjacency), smallest on `near`
+//! (square, dense); speedup decays toward K = dim; backward ≥ forward.
+
+use dr_circuitgnn::bench::workloads::{bench_reps, bench_scale, embedding, table1_graphs};
+use dr_circuitgnn::bench::{measure, Table};
+use dr_circuitgnn::graph::EdgeType;
+use dr_circuitgnn::sparse::{
+    dr_spmm, dr_spmm_bwd, drelu, spmm_csr, spmm_csr_bwd, spmm_gnna, spmm_gnna_bwd, DegreeBuckets,
+    GnnaConfig,
+};
+use dr_circuitgnn::util::math::geomean;
+
+fn main() {
+    let scale = bench_scale();
+    let reps = bench_reps();
+    let ks = [2usize, 4, 8, 16, 32, 64];
+    let gnna_cfg = GnnaConfig::default();
+    println!("Fig. 11 — kernel sweep (scale {scale}, reps {reps})");
+
+    for dim in [64usize, 128] {
+        // Collect per-edge-type speedups for the summary.
+        let mut sum_fwd_csr: Vec<f64> = Vec::new();
+        let mut sum_bwd_csr: Vec<f64> = Vec::new();
+        let mut sum_fwd_gnna: Vec<f64> = Vec::new();
+        let mut sum_bwd_gnna: Vec<f64> = Vec::new();
+        for (name, graphs) in table1_graphs(scale) {
+            for g in &graphs {
+                let mut t = Table::new(
+                    &format!("{name} graph {} dim {dim}", g.id),
+                    &[
+                        "edge", "K", "DR fwd ms", "DR bwd ms", "fwd/cuSP", "bwd/cuSP",
+                        "fwd/GNNA", "bwd/GNNA",
+                    ],
+                );
+                for edge in [EdgeType::Near, EdgeType::Pins, EdgeType::Pinned] {
+                    let adj = g.adj(edge);
+                    let csc = adj.to_csc();
+                    let buckets = DegreeBuckets::build(adj);
+                    let x = embedding(adj.cols, dim, 7 + g.id as u64);
+                    let dy = embedding(adj.rows, dim, 17 + g.id as u64);
+                    let t_csr_f =
+                        measure(1, reps, || std::hint::black_box(spmm_csr(adj, &x))).median;
+                    let t_csr_b =
+                        measure(1, reps, || std::hint::black_box(spmm_csr_bwd(&csc, &dy))).median;
+                    let t_gnna_f = measure(1, reps, || {
+                        std::hint::black_box(spmm_gnna(adj, &x, &gnna_cfg))
+                    })
+                    .median;
+                    let t_gnna_b = measure(1, reps, || {
+                        std::hint::black_box(spmm_gnna_bwd(&csc, &dy, &gnna_cfg))
+                    })
+                    .median;
+                    for &k in ks.iter().filter(|&&k| k <= dim) {
+                        let compressed = drelu(&x, k);
+                        let t_f = measure(1, reps, || {
+                            std::hint::black_box(dr_spmm(adj, &compressed, &buckets))
+                        })
+                        .median;
+                        let t_b = measure(1, reps, || {
+                            std::hint::black_box(dr_spmm_bwd(&csc, &dy, &compressed))
+                        })
+                        .median;
+                        t.row(&[
+                            edge.name().to_string(),
+                            k.to_string(),
+                            format!("{:.3}", t_f * 1e3),
+                            format!("{:.3}", t_b * 1e3),
+                            format!("{:.2}x", t_csr_f / t_f),
+                            format!("{:.2}x", t_csr_b / t_b),
+                            format!("{:.2}x", t_gnna_f / t_f),
+                            format!("{:.2}x", t_gnna_b / t_b),
+                        ]);
+                        if k <= 8 {
+                            sum_fwd_csr.push(t_csr_f / t_f);
+                            sum_bwd_csr.push(t_csr_b / t_b);
+                            sum_fwd_gnna.push(t_gnna_f / t_f);
+                            sum_bwd_gnna.push(t_gnna_b / t_b);
+                        }
+                    }
+                }
+                t.print();
+            }
+        }
+        println!(
+            "dim {dim} summary (K ≤ 8, geomean): vs cuSPARSE fwd {:.2}x bwd {:.2}x | vs GNNA fwd {:.2}x bwd {:.2}x",
+            geomean(&sum_fwd_csr),
+            geomean(&sum_bwd_csr),
+            geomean(&sum_fwd_gnna),
+            geomean(&sum_bwd_gnna),
+        );
+        println!("paper: dim 64 best 3.21x/3.51x vs cuSPARSE, 2.75x/4.09x vs GNNA (fwd/bwd)\n");
+    }
+}

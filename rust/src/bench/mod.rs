@@ -1,0 +1,128 @@
+//! Benchmark harness (criterion is unavailable offline).
+//!
+//! * [`measure`] — warmup + repeated timing with robust statistics.
+//! * [`Table`] — aligned ASCII table printer for the paper-figure benches.
+//! * [`workloads`] — shared workload builders (the three Table-1 designs at
+//!   a bench-friendly scale, plus embedding/gradient generators).
+
+pub mod workloads;
+
+use crate::util::timer::TimingStats;
+
+/// Measure a closure: `warmup` unrecorded runs then `reps` timed runs.
+pub fn measure<T>(warmup: usize, reps: usize, mut f: impl FnMut() -> T) -> TimingStats {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps.max(1) {
+        let t0 = std::time::Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    TimingStats::from_samples(&samples)
+}
+
+/// Simple aligned table printer.
+#[derive(Debug, Default)]
+pub struct Table {
+    pub title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n=== {} ===\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncol - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+}
+
+/// Format a speedup ratio.
+pub fn fmt_speedup(baseline: f64, ours: f64) -> String {
+    if ours <= 0.0 {
+        return "n/a".into();
+    }
+    format!("{:.2}x", baseline / ours)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_counts_runs() {
+        let mut calls = 0usize;
+        let stats = measure(2, 5, || {
+            calls += 1;
+        });
+        assert_eq!(calls, 7);
+        assert_eq!(stats.n, 5);
+        assert!(stats.median >= 0.0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Demo", &["name", "value"]);
+        t.row(&["alpha".into(), "1.0".into()]);
+        t.row(&["b".into(), "22.5".into()]);
+        let s = t.render();
+        assert!(s.contains("Demo"));
+        assert!(s.contains("alpha"));
+        assert!(s.contains("22.5"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_mismatch_panics() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn speedup_formatting() {
+        assert_eq!(fmt_speedup(2.0, 1.0), "2.00x");
+        assert_eq!(fmt_speedup(1.0, 0.0), "n/a");
+    }
+}

@@ -1,0 +1,81 @@
+//! Shared bench workloads.
+//!
+//! The kernel and e2e benches all run over the three Table-1 designs. At
+//! full scale a single `near` matrix holds ~0.5M nnz; benches default to a
+//! configurable scale (env `DRCG_BENCH_SCALE`, default 0.25) so the whole
+//! suite completes in minutes while preserving the degree distributions
+//! that drive the results. Set `DRCG_BENCH_SCALE=1.0` for paper-scale runs.
+
+use crate::datagen::{generate_design, table1_designs, DesignSpec};
+use crate::graph::HeteroGraph;
+use crate::tensor::Matrix;
+use crate::util::rng::Rng;
+
+/// Bench scale factor.
+pub fn bench_scale() -> f64 {
+    std::env::var("DRCG_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse::<f64>().ok())
+        .filter(|&s| s > 0.0 && s <= 1.0)
+        .unwrap_or(0.15)
+}
+
+/// Repetitions for timed sections (env `DRCG_BENCH_REPS`, default 5).
+pub fn bench_reps() -> usize {
+    std::env::var("DRCG_BENCH_REPS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&r| r > 0)
+        .unwrap_or(3)
+}
+
+/// All graphs of the three representative designs: (design name, graphs).
+pub fn table1_graphs(scale: f64) -> Vec<(String, Vec<HeteroGraph>)> {
+    table1_designs(scale)
+        .into_iter()
+        .map(|spec: DesignSpec| {
+            let name = spec.name.clone();
+            (name, generate_design(&spec))
+        })
+        .collect()
+}
+
+/// Random dense embedding for a node count.
+pub fn embedding(n: usize, dim: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    Matrix::randn(n, dim, 1.0, &mut rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_env_bounds() {
+        // default path (env var not set in tests)
+        let s = bench_scale();
+        assert!(s > 0.0 && s <= 1.0);
+        assert!(bench_reps() >= 1);
+    }
+
+    #[test]
+    fn table1_graphs_generate_at_tiny_scale() {
+        let designs = table1_graphs(0.01);
+        assert_eq!(designs.len(), 3);
+        assert_eq!(designs[0].1.len(), 2);
+        assert_eq!(designs[1].1.len(), 3);
+        assert_eq!(designs[2].1.len(), 4);
+        for (_, graphs) in &designs {
+            for g in graphs {
+                g.validate().unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn embedding_deterministic() {
+        let a = embedding(10, 4, 1);
+        let b = embedding(10, 4, 1);
+        assert_eq!(a.data, b.data);
+    }
+}

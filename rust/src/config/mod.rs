@@ -1,0 +1,233 @@
+//! Configuration system: TOML-subset files + CLI overrides.
+//!
+//! Precedence: built-in defaults < config file (`--config path`) < CLI
+//! flags. Everything the launcher needs — dataset scale, model hyper-
+//! parameters, kernel/engine selection, schedule mode, artifact paths.
+
+use crate::nn::MessageEngine;
+use crate::sched::ScheduleMode;
+use crate::sparse::{GnnaConfig, KernelKind};
+use crate::util::cli::Args;
+use crate::util::configfile::ConfigFile;
+use std::path::PathBuf;
+
+/// Full application configuration.
+#[derive(Clone, Debug)]
+pub struct Config {
+    // dataset
+    pub seed: u64,
+    pub scale: f64,
+    pub n_designs: usize,
+    // model
+    pub hidden: usize,
+    pub epochs: usize,
+    pub lr: f32,
+    pub weight_decay: f32,
+    pub k_cell: usize,
+    pub k_net: usize,
+    // execution
+    pub kernel: KernelKind,
+    pub parallel: bool,
+    pub dim: usize,
+    // paths
+    pub artifacts_dir: PathBuf,
+    pub out_dir: PathBuf,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            seed: 42,
+            scale: 0.1,
+            n_designs: 12,
+            hidden: 64,
+            epochs: 50,
+            lr: 2e-4,
+            weight_decay: 1e-5,
+            k_cell: 8,
+            k_net: 8,
+            kernel: KernelKind::DrSpmm,
+            parallel: true,
+            dim: 64,
+            artifacts_dir: PathBuf::from("artifacts"),
+            out_dir: PathBuf::from("out"),
+        }
+    }
+}
+
+impl Config {
+    /// Load from an optional file then apply CLI overrides.
+    pub fn resolve(args: &Args) -> Result<Config, String> {
+        let mut cfg = Config::default();
+        if let Some(path) = args.get("config") {
+            let file = ConfigFile::load(std::path::Path::new(path))?;
+            cfg.apply_file(&file)?;
+        }
+        cfg.apply_args(args)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn apply_file(&mut self, f: &ConfigFile) -> Result<(), String> {
+        macro_rules! take {
+            ($field:expr, $get:ident, $key:expr) => {
+                if let Some(v) = f.$get($key) {
+                    $field = v?;
+                }
+            };
+        }
+        if let Some(v) = f.get_usize("seed") {
+            self.seed = v? as u64;
+        }
+        if let Some(v) = f.get("data.scale") {
+            self.scale = v.parse().map_err(|_| "data.scale: bad float".to_string())?;
+        }
+        take!(self.n_designs, get_usize, "data.designs");
+        take!(self.hidden, get_usize, "model.hidden");
+        take!(self.epochs, get_usize, "train.epochs");
+        take!(self.lr, get_f32, "train.lr");
+        take!(self.weight_decay, get_f32, "train.weight_decay");
+        take!(self.k_cell, get_usize, "kernel.k_cell");
+        take!(self.k_net, get_usize, "kernel.k_net");
+        take!(self.dim, get_usize, "kernel.dim");
+        if let Some(v) = f.get("kernel.kind") {
+            self.kernel =
+                KernelKind::parse(v).ok_or_else(|| format!("kernel.kind: unknown '{v}'"))?;
+        }
+        if let Some(v) = f.get_bool("sched.parallel") {
+            self.parallel = v?;
+        }
+        if let Some(v) = f.get("paths.artifacts") {
+            self.artifacts_dir = PathBuf::from(v);
+        }
+        if let Some(v) = f.get("paths.out") {
+            self.out_dir = PathBuf::from(v);
+        }
+        Ok(())
+    }
+
+    pub fn apply_args(&mut self, a: &Args) -> Result<(), String> {
+        self.seed = a.get_usize("seed", self.seed as usize)? as u64;
+        self.scale = a.get_f64("scale", self.scale)?;
+        self.n_designs = a.get_usize("designs", self.n_designs)?;
+        self.hidden = a.get_usize("hidden", self.hidden)?;
+        self.epochs = a.get_usize("epochs", self.epochs)?;
+        self.lr = a.get_f32("lr", self.lr)?;
+        self.weight_decay = a.get_f32("weight-decay", self.weight_decay)?;
+        self.k_cell = a.get_usize("k-cell", self.k_cell)?;
+        self.k_net = a.get_usize("k-net", self.k_net)?;
+        self.dim = a.get_usize("dim", self.dim)?;
+        if let Some(v) = a.get("kernel") {
+            self.kernel = KernelKind::parse(v).ok_or_else(|| format!("--kernel: unknown '{v}'"))?;
+        }
+        if a.flag("sequential") {
+            self.parallel = false;
+        }
+        if a.flag("parallel") {
+            self.parallel = true;
+        }
+        if let Some(v) = a.get("artifacts") {
+            self.artifacts_dir = PathBuf::from(v);
+        }
+        if let Some(v) = a.get("out") {
+            self.out_dir = PathBuf::from(v);
+        }
+        Ok(())
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.scale <= 0.0 || self.scale > 1.0 {
+            return Err(format!("scale must be in (0, 1], got {}", self.scale));
+        }
+        if self.hidden == 0 || self.epochs == 0 {
+            return Err("hidden and epochs must be positive".into());
+        }
+        for (name, k) in [("k_cell", self.k_cell), ("k_net", self.k_net)] {
+            if k == 0 || k > self.hidden {
+                return Err(format!("{name} must be in [1, hidden], got {k}"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Build the message engine this config selects.
+    pub fn engine(&self) -> MessageEngine {
+        match self.kernel {
+            KernelKind::Csr => MessageEngine::Csr,
+            KernelKind::Gnna => MessageEngine::Gnna(GnnaConfig::default()),
+            KernelKind::DrSpmm => MessageEngine::dr(self.k_cell, self.k_net),
+        }
+    }
+
+    pub fn schedule(&self) -> ScheduleMode {
+        if self.parallel {
+            ScheduleMode::Parallel
+        } else {
+            ScheduleMode::Sequential
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn raw(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_validate() {
+        Config::default().validate().unwrap();
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let args = Args::default()
+            .parse(&raw(&["--epochs", "5", "--kernel", "csr", "--sequential", "--k-cell=16"]))
+            .unwrap();
+        let cfg = Config::resolve(&args).unwrap();
+        assert_eq!(cfg.epochs, 5);
+        assert_eq!(cfg.kernel, KernelKind::Csr);
+        assert!(!cfg.parallel);
+        assert_eq!(cfg.k_cell, 16);
+    }
+
+    #[test]
+    fn file_then_cli_precedence() {
+        let mut cfg = Config::default();
+        let f = ConfigFile::parse("[train]\nepochs = 7\nlr = 0.01").unwrap();
+        cfg.apply_file(&f).unwrap();
+        assert_eq!(cfg.epochs, 7);
+        let args = Args::default().parse(&raw(&["--epochs", "9"])).unwrap();
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.epochs, 9);
+        assert_eq!(cfg.lr, 0.01);
+    }
+
+    #[test]
+    fn engine_mapping() {
+        let mut cfg = Config::default();
+        cfg.kernel = KernelKind::DrSpmm;
+        cfg.k_cell = 4;
+        cfg.k_net = 2;
+        match cfg.engine() {
+            MessageEngine::Dr { k_cell, k_net } => {
+                assert_eq!((k_cell, k_net), (4, 2));
+            }
+            _ => panic!("wrong engine"),
+        }
+        cfg.kernel = KernelKind::Gnna;
+        assert_eq!(cfg.engine().name(), "GNNA");
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut cfg = Config::default();
+        cfg.scale = 0.0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = Config::default();
+        cfg.k_cell = 1000;
+        assert!(cfg.validate().is_err());
+    }
+}

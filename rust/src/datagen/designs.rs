@@ -1,0 +1,164 @@
+//! Design presets.
+//!
+//! `table1_designs()` reproduces the three representative CircuitNet designs
+//! of paper Table 1 — same graph counts and node/edge targets per partition.
+//! `random_design_spec` draws Mini-CircuitNet-style designs with the same
+//! statistical profile at a configurable scale.
+
+use super::{DesignSpec, GraphSpec};
+use crate::util::rng::Rng;
+
+/// Paper-named design sizes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DesignSize {
+    Small,
+    Medium,
+    Large,
+}
+
+impl DesignSize {
+    pub fn paper_name(&self) -> &'static str {
+        match self {
+            DesignSize::Small => "9282-zero",
+            DesignSize::Medium => "2216-RISCY",
+            DesignSize::Large => "7598-zero",
+        }
+    }
+}
+
+/// Raw feature widths used throughout (projected to 64/128 by the model).
+pub const D_CELL_RAW: usize = 16;
+pub const D_NET_RAW: usize = 16;
+
+fn spec(n_nets: usize, n_cells: usize, pins: usize, near: usize) -> GraphSpec {
+    GraphSpec {
+        n_cells,
+        n_nets,
+        target_near: near,
+        target_pins: pins,
+        d_cell: D_CELL_RAW,
+        d_net: D_NET_RAW,
+    }
+}
+
+/// The three Table-1 designs with exact published node/edge targets.
+///
+/// Columns per graph: (nodes-net, nodes-cell, edges-pins(=pinned), edges-near).
+pub fn table1_designs(scale: f64) -> Vec<DesignSpec> {
+    let s = |x: usize| ((x as f64 * scale).round() as usize).max(8);
+    let e = |x: usize| ((x as f64 * scale).round() as usize).max(32);
+    vec![
+        DesignSpec {
+            name: "9282-zero".into(),
+            seed: 9282,
+            graphs: vec![
+                spec(s(4628), s(7767), e(10013), e(338050)),
+                spec(s(3269), s(7347), e(7580), e(282216)),
+            ],
+        },
+        DesignSpec {
+            name: "2216-RISCY".into(),
+            seed: 2216,
+            graphs: vec![
+                spec(s(5331), s(9493), e(12382), e(432187)),
+                spec(s(7271), s(9733), e(18814), e(444258)),
+                spec(s(6461), s(9590), e(19227), e(409581)),
+            ],
+        },
+        DesignSpec {
+            name: "7598-zero".into(),
+            seed: 7598,
+            graphs: vec![
+                spec(s(5883), s(9816), e(16605), e(455383)),
+                spec(s(6183), s(9399), e(17394), e(449466)),
+                spec(s(9100), s(9579), e(34748), e(440481)),
+                spec(s(7146), s(9341), e(22056), e(483638)),
+            ],
+        },
+    ]
+}
+
+/// Pick one Table-1 design by size.
+pub fn table1_design(size: DesignSize, scale: f64) -> DesignSpec {
+    let idx = match size {
+        DesignSize::Small => 0,
+        DesignSize::Medium => 1,
+        DesignSize::Large => 2,
+    };
+    table1_designs(scale).swap_remove(idx)
+}
+
+/// Random design with CircuitNet-like proportions at `scale`
+/// (scale 1.0 ≈ 5–10k nodes/type per graph, near-degree ≈ 40–55,
+/// pin fanout ≈ 2–4).
+pub fn random_design_spec(name: &str, scale: f64, rng: &mut Rng) -> DesignSpec {
+    let n_graphs = rng.range(1, 4);
+    let mut graphs = Vec::with_capacity(n_graphs);
+    for _ in 0..n_graphs {
+        let n_cells = ((rng.range(7_000, 10_000) as f64 * scale) as usize).max(64);
+        let n_nets = ((rng.range(3_000, 9_000) as f64 * scale) as usize).max(32);
+        let near_deg = rng.uniform(38.0, 55.0) as f64;
+        let pin_fanout = rng.uniform(2.1, 3.9) as f64;
+        graphs.push(GraphSpec {
+            n_cells,
+            n_nets,
+            target_near: (n_cells as f64 * near_deg) as usize,
+            target_pins: ((n_nets as f64 * pin_fanout) as usize).max(n_nets * 2),
+            d_cell: D_CELL_RAW,
+            d_net: D_NET_RAW,
+        });
+    }
+    DesignSpec { name: name.to_string(), seed: rng.next_u64(), graphs }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_matches_paper_counts_at_full_scale() {
+        let designs = table1_designs(1.0);
+        assert_eq!(designs.len(), 3);
+        assert_eq!(designs[0].graphs.len(), 2);
+        assert_eq!(designs[1].graphs.len(), 3);
+        assert_eq!(designs[2].graphs.len(), 4);
+        // Spot-check the published numbers.
+        assert_eq!(designs[0].graphs[0].n_nets, 4628);
+        assert_eq!(designs[0].graphs[0].n_cells, 7767);
+        assert_eq!(designs[0].graphs[0].target_pins, 10013);
+        assert_eq!(designs[0].graphs[0].target_near, 338050);
+        assert_eq!(designs[2].graphs[2].target_pins, 34748);
+        assert_eq!(designs[1].graphs[1].target_near, 444258);
+    }
+
+    #[test]
+    fn scaling_shrinks_proportionally() {
+        let full = table1_designs(1.0);
+        let tenth = table1_designs(0.1);
+        let f = full[0].graphs[0].n_cells as f64;
+        let t = tenth[0].graphs[0].n_cells as f64;
+        assert!((t / f - 0.1).abs() < 0.01);
+    }
+
+    #[test]
+    fn size_lookup() {
+        assert_eq!(table1_design(DesignSize::Small, 1.0).name, "9282-zero");
+        assert_eq!(table1_design(DesignSize::Medium, 1.0).name, "2216-RISCY");
+        assert_eq!(table1_design(DesignSize::Large, 1.0).name, "7598-zero");
+        assert_eq!(DesignSize::Large.paper_name(), "7598-zero");
+    }
+
+    #[test]
+    fn random_spec_profile() {
+        let mut rng = Rng::new(10);
+        for i in 0..20 {
+            let d = random_design_spec(&format!("d{i}"), 0.1, &mut rng);
+            assert!(!d.graphs.is_empty() && d.graphs.len() <= 3);
+            for g in &d.graphs {
+                // near much denser than pins, as in Fig. 4.
+                assert!(g.target_near > 5 * g.target_pins);
+                assert!(g.target_pins >= 2 * g.n_nets);
+            }
+        }
+    }
+}

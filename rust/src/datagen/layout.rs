@@ -1,0 +1,173 @@
+//! Stage (a): cell placement on the die (paper Fig. 3a).
+//!
+//! Cells land in the unit square as a mixture of a uniform background and
+//! several Gaussian density hotspots — real placements cluster standard
+//! cells around macros, which is what gives the `near` graph its heavy
+//! degree tail ("evil rows", §2.3).
+
+use crate::util::rng::Rng;
+
+/// A placed cell.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Cell {
+    pub x: f32,
+    pub y: f32,
+    /// Hotspot id (usize::MAX = background).
+    pub cluster: usize,
+}
+
+/// Cell placement with a uniform spatial bin index for neighbor queries.
+#[derive(Clone, Debug)]
+pub struct Placement {
+    pub cells: Vec<Cell>,
+    /// Bin side length.
+    pub bin: f32,
+    /// Bins per axis.
+    pub grid: usize,
+    /// Cell ids per bin, row-major `grid × grid`.
+    pub bins: Vec<Vec<u32>>,
+}
+
+/// Fraction of cells placed in hotspots.
+const HOTSPOT_FRACTION: f64 = 0.45;
+/// Hotspot standard deviation.
+const HOTSPOT_SIGMA: f32 = 0.06;
+
+/// Place `n` cells: uniform background plus 4–8 Gaussian hotspots.
+pub fn place_cells(n: usize, rng: &mut Rng) -> Placement {
+    let n_hotspots = rng.range(4, 9);
+    let centers: Vec<(f32, f32)> = (0..n_hotspots)
+        .map(|_| (rng.uniform(0.12, 0.88), rng.uniform(0.12, 0.88)))
+        .collect();
+    let mut cells = Vec::with_capacity(n);
+    for _ in 0..n {
+        if rng.f64() < HOTSPOT_FRACTION {
+            let c = rng.below(n_hotspots);
+            let (cx, cy) = centers[c];
+            let x = (cx + rng.normal() * HOTSPOT_SIGMA).clamp(0.0, 0.999_9);
+            let y = (cy + rng.normal() * HOTSPOT_SIGMA).clamp(0.0, 0.999_9);
+            cells.push(Cell { x, y, cluster: c });
+        } else {
+            cells.push(Cell {
+                x: rng.uniform(0.0, 0.999_9),
+                y: rng.uniform(0.0, 0.999_9),
+                cluster: usize::MAX,
+            });
+        }
+    }
+    // Bin size targets O(10) cells/bin for neighbor queries.
+    let grid = ((n as f64 / 10.0).sqrt().ceil() as usize).max(1);
+    let bin = 1.0 / grid as f32;
+    let mut bins = vec![Vec::new(); grid * grid];
+    for (i, c) in cells.iter().enumerate() {
+        bins[bin_index(c.x, c.y, grid)].push(i as u32);
+    }
+    Placement { cells, bin, grid, bins }
+}
+
+#[inline]
+pub fn bin_index(x: f32, y: f32, grid: usize) -> usize {
+    let bx = ((x * grid as f32) as usize).min(grid - 1);
+    let by = ((y * grid as f32) as usize).min(grid - 1);
+    by * grid + bx
+}
+
+impl Placement {
+    /// Visit every cell within `radius` of cell `i` (excluding `i`).
+    pub fn for_neighbors_within(&self, i: usize, radius: f32, mut f: impl FnMut(usize, f32)) {
+        let c = self.cells[i];
+        let r2 = radius * radius;
+        let reach = (radius / self.bin).ceil() as isize;
+        let bx = ((c.x * self.grid as f32) as isize).min(self.grid as isize - 1);
+        let by = ((c.y * self.grid as f32) as isize).min(self.grid as isize - 1);
+        for dy in -reach..=reach {
+            for dx in -reach..=reach {
+                let (nx, ny) = (bx + dx, by + dy);
+                if nx < 0 || ny < 0 || nx >= self.grid as isize || ny >= self.grid as isize {
+                    continue;
+                }
+                for &j in &self.bins[ny as usize * self.grid + nx as usize] {
+                    let j = j as usize;
+                    if j == i {
+                        continue;
+                    }
+                    let o = self.cells[j];
+                    let d2 = (o.x - c.x) * (o.x - c.x) + (o.y - c.y) * (o.y - c.y);
+                    if d2 <= r2 {
+                        f(j, d2.sqrt());
+                    }
+                }
+            }
+        }
+    }
+
+    /// Local density: cells within `radius`, normalised by the max observed.
+    pub fn densities(&self, radius: f32) -> Vec<f32> {
+        let mut counts = vec![0usize; self.cells.len()];
+        for (i, count) in counts.iter_mut().enumerate() {
+            let mut c = 0usize;
+            self.for_neighbors_within(i, radius, |_, _| c += 1);
+            *count = c;
+        }
+        let max = *counts.iter().max().unwrap_or(&1) as f32;
+        counts.iter().map(|&c| c as f32 / max.max(1.0)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn places_all_cells_in_unit_square() {
+        let mut rng = Rng::new(1);
+        let p = place_cells(500, &mut rng);
+        assert_eq!(p.cells.len(), 500);
+        for c in &p.cells {
+            assert!((0.0..1.0).contains(&c.x) && (0.0..1.0).contains(&c.y));
+        }
+        let binned: usize = p.bins.iter().map(|b| b.len()).sum();
+        assert_eq!(binned, 500);
+    }
+
+    #[test]
+    fn neighbor_query_matches_bruteforce() {
+        let mut rng = Rng::new(2);
+        let p = place_cells(300, &mut rng);
+        let radius = 0.08;
+        for i in [0usize, 57, 123, 299] {
+            let mut fast: Vec<usize> = Vec::new();
+            p.for_neighbors_within(i, radius, |j, _| fast.push(j));
+            fast.sort_unstable();
+            let c = p.cells[i];
+            let mut brute: Vec<usize> = (0..p.cells.len())
+                .filter(|&j| {
+                    j != i && {
+                        let o = p.cells[j];
+                        (o.x - c.x).powi(2) + (o.y - c.y).powi(2) <= radius * radius
+                    }
+                })
+                .collect();
+            brute.sort_unstable();
+            assert_eq!(fast, brute, "cell {i}");
+        }
+    }
+
+    #[test]
+    fn hotspots_create_density_skew() {
+        let mut rng = Rng::new(3);
+        let p = place_cells(2000, &mut rng);
+        let d = p.densities(0.05);
+        let mean = d.iter().sum::<f32>() / d.len() as f32;
+        // Clustered layout: the max-density cell sees far more neighbors
+        // than average (this is what produces Fig. 4's near-degree tail).
+        assert!(mean < 0.5, "density should be skewed, mean={mean}");
+    }
+
+    #[test]
+    fn bin_index_corners() {
+        assert_eq!(bin_index(0.0, 0.0, 10), 0);
+        assert_eq!(bin_index(0.999, 0.999, 10), 99);
+        assert_eq!(bin_index(0.999, 0.0, 10), 9);
+    }
+}

@@ -1,0 +1,177 @@
+//! Stage (b): topological links — netlist construction (paper Fig. 3b).
+//!
+//! Each net selects a locality-biased group of cells to pin into. Fanouts
+//! are power-law distributed (most nets touch 2–4 cells, a few fan out to
+//! dozens — clock/reset-like nets), then nudged so the total pin count hits
+//! `target_pins` exactly, matching Table 1's `edges-pins` column.
+
+use super::layout::Placement;
+use crate::graph::Csr;
+use crate::util::rng::Rng;
+
+/// One net: the set of cells it pins into.
+#[derive(Clone, Debug)]
+pub struct Net {
+    pub cells: Vec<u32>,
+}
+
+/// Minimum/maximum net fanout.
+const FANOUT_MIN: usize = 2;
+const FANOUT_MAX: usize = 64;
+/// Power-law exponent for fanout (heavier than near's spatial tail).
+const FANOUT_ALPHA: f64 = 2.6;
+
+/// Build `n_nets` nets over the placed cells with Σ fanout = `target_pins`.
+pub fn build_netlist(
+    placement: &Placement,
+    n_nets: usize,
+    target_pins: usize,
+    rng: &mut Rng,
+) -> Vec<Net> {
+    let n_cells = placement.cells.len();
+    assert!(n_cells >= FANOUT_MIN, "need at least {FANOUT_MIN} cells");
+    assert!(
+        target_pins >= n_nets * FANOUT_MIN,
+        "target_pins {target_pins} below minimum {}",
+        n_nets * FANOUT_MIN
+    );
+
+    // Draw fanouts from the power law, then adjust the total to the target.
+    let mut fanouts: Vec<usize> = (0..n_nets)
+        .map(|_| {
+            (rng.power_law(FANOUT_MIN as f64, FANOUT_MAX as f64, FANOUT_ALPHA).round()
+                as usize)
+                .clamp(FANOUT_MIN, FANOUT_MAX.min(n_cells))
+        })
+        .collect();
+    let mut total: isize = fanouts.iter().sum::<usize>() as isize;
+    let target = target_pins as isize;
+    // Deterministic adjustment: sweep nets in a shuffled order, nudging
+    // fanouts toward the target until the total matches exactly. (A purely
+    // random walk can fail to converge when the adjustable nets thin out.)
+    let mut order: Vec<usize> = (0..n_nets).collect();
+    rng.shuffle(&mut order);
+    let fan_cap = FANOUT_MAX.min(n_cells);
+    while total != target {
+        let before = total;
+        for &i in &order {
+            if total == target {
+                break;
+            }
+            if total < target && fanouts[i] < fan_cap {
+                fanouts[i] += 1;
+                total += 1;
+            } else if total > target && fanouts[i] > FANOUT_MIN {
+                fanouts[i] -= 1;
+                total -= 1;
+            }
+        }
+        if total == before {
+            // No net is adjustable: the target is infeasible at these
+            // bounds; the caller's assert above makes this unreachable for
+            // the low side, the cap bounds the high side.
+            break;
+        }
+    }
+
+    // Each net pins a seed cell plus nearby cells (locality), falling back
+    // to uniform picks when the neighborhood is too small.
+    let mut nets = Vec::with_capacity(n_nets);
+    for &fanout in &fanouts {
+        let seed = rng.below(n_cells);
+        let mut chosen = vec![seed as u32];
+        let mut candidates: Vec<u32> = Vec::new();
+        // Gather a local candidate pool around the seed.
+        let mut radius = 0.03f32;
+        while candidates.len() < fanout * 3 && radius < 1.5 {
+            candidates.clear();
+            placement.for_neighbors_within(seed, radius, |j, _| candidates.push(j as u32));
+            radius *= 2.0;
+        }
+        while chosen.len() < fanout {
+            let pick = if !candidates.is_empty() && rng.f32() < 0.8 {
+                candidates[rng.below(candidates.len())]
+            } else {
+                rng.below(n_cells) as u32
+            };
+            if !chosen.contains(&pick) {
+                chosen.push(pick);
+            }
+        }
+        nets.push(Net { cells: chosen });
+    }
+    nets
+}
+
+/// Destination-major pins adjacency: rows = nets, cols = cells.
+pub fn pins_matrix(nets: &[Net], n_cells: usize, n_nets: usize) -> Csr {
+    assert_eq!(nets.len(), n_nets);
+    let mut triplets = Vec::new();
+    for (net_id, net) in nets.iter().enumerate() {
+        for &c in &net.cells {
+            triplets.push((net_id, c as usize, 1.0));
+        }
+    }
+    Csr::from_triplets(n_nets, n_cells, &triplets)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::layout::place_cells;
+    use super::*;
+
+    #[test]
+    fn total_pins_hits_target_exactly() {
+        let mut rng = Rng::new(1);
+        let p = place_cells(500, &mut rng);
+        let nets = build_netlist(&p, 200, 700, &mut rng);
+        let total: usize = nets.iter().map(|n| n.cells.len()).sum();
+        assert_eq!(total, 700);
+    }
+
+    #[test]
+    fn fanouts_within_bounds_and_distinct_cells() {
+        let mut rng = Rng::new(2);
+        let p = place_cells(300, &mut rng);
+        let nets = build_netlist(&p, 100, 350, &mut rng);
+        for net in &nets {
+            assert!(net.cells.len() >= FANOUT_MIN);
+            assert!(net.cells.len() <= FANOUT_MAX);
+            let mut s = net.cells.clone();
+            s.sort_unstable();
+            s.dedup();
+            assert_eq!(s.len(), net.cells.len(), "duplicate pins in a net");
+        }
+    }
+
+    #[test]
+    fn pins_matrix_shape_and_nnz() {
+        let mut rng = Rng::new(3);
+        let p = place_cells(120, &mut rng);
+        let nets = build_netlist(&p, 50, 160, &mut rng);
+        let m = pins_matrix(&nets, 120, 50);
+        assert_eq!(m.rows, 50);
+        assert_eq!(m.cols, 120);
+        assert_eq!(m.nnz(), 160);
+    }
+
+    #[test]
+    fn fanout_distribution_is_heavy_tailed() {
+        let mut rng = Rng::new(4);
+        let p = place_cells(2000, &mut rng);
+        // avg fanout 3 → power-law leaves most nets at 2, some much larger.
+        let nets = build_netlist(&p, 1000, 3000, &mut rng);
+        let at_min = nets.iter().filter(|n| n.cells.len() <= 3).count();
+        let max = nets.iter().map(|n| n.cells.len()).max().unwrap();
+        assert!(at_min > 600, "most nets should be small, got {at_min}");
+        assert!(max >= 10, "tail too light, max={max}");
+    }
+
+    #[test]
+    #[should_panic(expected = "below minimum")]
+    fn infeasible_target_panics() {
+        let mut rng = Rng::new(5);
+        let p = place_cells(50, &mut rng);
+        build_netlist(&p, 100, 100, &mut rng);
+    }
+}

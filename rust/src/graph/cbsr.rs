@@ -1,0 +1,132 @@
+//! CBSR — Compressed Balanced Sparse Row (paper §3.1).
+//!
+//! The output format of D-ReLU: every embedding row keeps exactly `k`
+//! surviving entries, stored as an `n × k` value matrix plus an `n × k`
+//! column-index matrix. The *balance* (fixed k per row) is what lets the
+//! DR-SpMM kernels assign regular per-warp workloads, unlike the irregular
+//! sparsity ReLU leaves behind.
+
+use crate::tensor::Matrix;
+
+/// Compressed Balanced Sparse Row embedding: `n` rows, original width `dim`,
+/// exactly `k` kept entries per row.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Cbsr {
+    pub n: usize,
+    /// Original (decompressed) embedding width D.
+    pub dim: usize,
+    /// Kept entries per row (k ≤ dim).
+    pub k: usize,
+    /// Row-major `n × k` surviving values.
+    pub values: Vec<f32>,
+    /// Row-major `n × k` column positions of the surviving values, each
+    /// strictly increasing within a row.
+    pub indices: Vec<u32>,
+}
+
+impl Cbsr {
+    pub fn zeros(n: usize, dim: usize, k: usize) -> Cbsr {
+        assert!(k <= dim && k > 0, "need 0 < k ≤ dim (k={k}, dim={dim})");
+        Cbsr {
+            n,
+            dim,
+            k,
+            values: vec![0.0; n * k],
+            // Default indices 0..k keep rows valid (strictly increasing).
+            indices: (0..n).flat_map(|_| 0..k as u32).collect(),
+        }
+    }
+
+    #[inline]
+    pub fn row_values(&self, r: usize) -> &[f32] {
+        &self.values[r * self.k..(r + 1) * self.k]
+    }
+
+    #[inline]
+    pub fn row_indices(&self, r: usize) -> &[u32] {
+        &self.indices[r * self.k..(r + 1) * self.k]
+    }
+
+    /// Decompress to a dense `n × dim` matrix (reference/tests).
+    pub fn to_dense(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.n, self.dim);
+        for r in 0..self.n {
+            let row = out.row_mut(r);
+            for (v, &c) in self.row_values(r).iter().zip(self.row_indices(r)) {
+                row[c as usize] = *v;
+            }
+        }
+        out
+    }
+
+    /// Validate structural invariants: index bounds and strict ordering.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.values.len() != self.n * self.k || self.indices.len() != self.n * self.k {
+            return Err("storage size mismatch".into());
+        }
+        for r in 0..self.n {
+            let idx = self.row_indices(r);
+            for (i, &c) in idx.iter().enumerate() {
+                if c as usize >= self.dim {
+                    return Err(format!("row {r}: index {c} ≥ dim {}", self.dim));
+                }
+                if i > 0 && idx[i - 1] >= c {
+                    return Err(format!("row {r}: indices not strictly increasing"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Number of stored non-zeros (n·k by construction).
+    pub fn stored(&self) -> usize {
+        self.n * self.k
+    }
+
+    /// Compression ratio vs dense (k/D) — the kernel's FLOP/byte saving.
+    pub fn density(&self) -> f64 {
+        self.k as f64 / self.dim as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_is_valid() {
+        let c = Cbsr::zeros(3, 8, 4);
+        c.validate().unwrap();
+        assert_eq!(c.stored(), 12);
+        assert!((c.density() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dense_round_trip_places_values() {
+        let mut c = Cbsr::zeros(2, 6, 2);
+        c.values.copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        c.indices.copy_from_slice(&[1, 5, 0, 3]);
+        c.validate().unwrap();
+        let d = c.to_dense();
+        assert_eq!(d.at(0, 1), 1.0);
+        assert_eq!(d.at(0, 5), 2.0);
+        assert_eq!(d.at(1, 0), 3.0);
+        assert_eq!(d.at(1, 3), 4.0);
+        assert_eq!(d.data.iter().filter(|&&x| x != 0.0).count(), 4);
+    }
+
+    #[test]
+    fn validate_catches_bad_indices() {
+        let mut c = Cbsr::zeros(1, 4, 2);
+        c.indices.copy_from_slice(&[3, 3]); // not strictly increasing
+        assert!(c.validate().is_err());
+        c.indices.copy_from_slice(&[1, 9]); // out of bounds
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "need 0 < k")]
+    fn k_larger_than_dim_panics() {
+        Cbsr::zeros(1, 4, 5);
+    }
+}

@@ -1,0 +1,348 @@
+//! Compressed sparse row / column adjacency matrices.
+
+/// CSR sparse matrix (`rows × cols`, f32 values).
+///
+/// `indptr.len() == rows + 1`; row `r`'s neighbors are
+/// `indices[indptr[r]..indptr[r+1]]` with matching `values`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    pub indptr: Vec<usize>,
+    pub indices: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+/// CSC sparse matrix — same fields, column-major. Used by the DR-SpMM
+/// backward kernel (paper Alg. 2 stage 1 transposes to CSC).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csc {
+    pub rows: usize,
+    pub cols: usize,
+    pub indptr: Vec<usize>,
+    /// Row indices per column.
+    pub indices: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl Csr {
+    /// Build from (row, col, value) triplets; duplicates are summed.
+    pub fn from_triplets(
+        rows: usize,
+        cols: usize,
+        triplets: &[(usize, usize, f32)],
+    ) -> Csr {
+        let mut counts = vec![0usize; rows];
+        for &(r, c, _) in triplets {
+            assert!(r < rows && c < cols, "triplet ({r},{c}) out of bounds");
+            counts[r] += 1;
+        }
+        let mut indptr = vec![0usize; rows + 1];
+        for r in 0..rows {
+            indptr[r + 1] = indptr[r] + counts[r];
+        }
+        let nnz = indptr[rows];
+        let mut indices = vec![0u32; nnz];
+        let mut values = vec![0f32; nnz];
+        let mut cursor = indptr.clone();
+        for &(r, c, v) in triplets {
+            let p = cursor[r];
+            indices[p] = c as u32;
+            values[p] = v;
+            cursor[r] += 1;
+        }
+        let mut m = Csr { rows, cols, indptr, indices, values };
+        m.sort_and_dedup();
+        m
+    }
+
+    /// Sort each row by column index and merge duplicate entries.
+    fn sort_and_dedup(&mut self) {
+        let mut new_indptr = vec![0usize; self.rows + 1];
+        let mut new_indices = Vec::with_capacity(self.indices.len());
+        let mut new_values = Vec::with_capacity(self.values.len());
+        for r in 0..self.rows {
+            let (s, e) = (self.indptr[r], self.indptr[r + 1]);
+            let mut row: Vec<(u32, f32)> = self.indices[s..e]
+                .iter()
+                .copied()
+                .zip(self.values[s..e].iter().copied())
+                .collect();
+            row.sort_by_key(|&(c, _)| c);
+            let mut i = 0;
+            while i < row.len() {
+                let (c, mut v) = row[i];
+                let mut j = i + 1;
+                while j < row.len() && row[j].0 == c {
+                    v += row[j].1;
+                    j += 1;
+                }
+                new_indices.push(c);
+                new_values.push(v);
+                i = j;
+            }
+            new_indptr[r + 1] = new_indices.len();
+        }
+        self.indptr = new_indptr;
+        self.indices = new_indices;
+        self.values = new_values;
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    #[inline]
+    pub fn row_range(&self, r: usize) -> std::ops::Range<usize> {
+        self.indptr[r]..self.indptr[r + 1]
+    }
+
+    #[inline]
+    pub fn degree(&self, r: usize) -> usize {
+        self.indptr[r + 1] - self.indptr[r]
+    }
+
+    pub fn max_degree(&self) -> usize {
+        (0..self.rows).map(|r| self.degree(r)).max().unwrap_or(0)
+    }
+
+    pub fn avg_degree(&self) -> f64 {
+        if self.rows == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / self.rows as f64
+        }
+    }
+
+    /// Convert to CSC (i.e. transpose the storage order, keeping the logical
+    /// matrix identical).
+    pub fn to_csc(&self) -> Csc {
+        let mut counts = vec![0usize; self.cols];
+        for &c in &self.indices {
+            counts[c as usize] += 1;
+        }
+        let mut indptr = vec![0usize; self.cols + 1];
+        for c in 0..self.cols {
+            indptr[c + 1] = indptr[c] + counts[c];
+        }
+        let mut indices = vec![0u32; self.nnz()];
+        let mut values = vec![0f32; self.nnz()];
+        let mut cursor = indptr.clone();
+        for r in 0..self.rows {
+            for p in self.row_range(r) {
+                let c = self.indices[p] as usize;
+                let q = cursor[c];
+                indices[q] = r as u32;
+                values[q] = self.values[p];
+                cursor[c] += 1;
+            }
+        }
+        Csc { rows: self.rows, cols: self.cols, indptr, indices, values }
+    }
+
+    /// Logical transpose: an `cols × rows` CSR (used for pins ↔ pinned).
+    pub fn transpose(&self) -> Csr {
+        let csc = self.to_csc();
+        Csr {
+            rows: self.cols,
+            cols: self.rows,
+            indptr: csc.indptr,
+            indices: csc.indices,
+            values: csc.values,
+        }
+    }
+
+    /// Dense representation (tests only; O(rows·cols)).
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0.0; self.rows * self.cols];
+        for r in 0..self.rows {
+            for p in self.row_range(r) {
+                out[r * self.cols + self.indices[p] as usize] = self.values[p];
+            }
+        }
+        out
+    }
+
+    /// Row-normalise values (mean aggregation: value = 1/deg). Rows with no
+    /// neighbors stay empty.
+    pub fn normalize_rows(&mut self) {
+        for r in 0..self.rows {
+            let range = self.row_range(r);
+            let deg = range.len();
+            if deg == 0 {
+                continue;
+            }
+            let inv = 1.0 / deg as f32;
+            for p in range {
+                self.values[p] = inv;
+            }
+        }
+    }
+
+    /// Symmetric GCN normalisation value(i,j) = 1/sqrt(deg_out(i)·deg_in(j))
+    /// — only meaningful for square matrices.
+    pub fn normalize_gcn(&mut self) {
+        assert_eq!(self.rows, self.cols, "GCN normalisation needs a square matrix");
+        let mut in_deg = vec![0usize; self.cols];
+        for &c in &self.indices {
+            in_deg[c as usize] += 1;
+        }
+        for r in 0..self.rows {
+            let deg_r = self.degree(r).max(1) as f32;
+            for p in self.row_range(r) {
+                let deg_c = in_deg[self.indices[p] as usize].max(1) as f32;
+                self.values[p] = 1.0 / (deg_r.sqrt() * deg_c.sqrt());
+            }
+        }
+    }
+
+    /// Structural equality with another matrix's transpose — validates the
+    /// paper's pins = pinnedᵀ invariant without allocating a transpose.
+    pub fn is_transpose_of(&self, other: &Csr) -> bool {
+        if self.rows != other.cols || self.cols != other.rows || self.nnz() != other.nnz() {
+            return false;
+        }
+        let t = other.transpose();
+        self.indptr == t.indptr && self.indices == t.indices && self.values == t.values
+    }
+}
+
+impl Csc {
+    #[inline]
+    pub fn col_range(&self, c: usize) -> std::ops::Range<usize> {
+        self.indptr[c]..self.indptr[c + 1]
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Back to CSR (round-trip used in tests).
+    pub fn to_csr(&self) -> Csr {
+        let mut counts = vec![0usize; self.rows];
+        for &r in &self.indices {
+            counts[r as usize] += 1;
+        }
+        let mut indptr = vec![0usize; self.rows + 1];
+        for r in 0..self.rows {
+            indptr[r + 1] = indptr[r] + counts[r];
+        }
+        let mut indices = vec![0u32; self.nnz()];
+        let mut values = vec![0f32; self.nnz()];
+        let mut cursor = indptr.clone();
+        for c in 0..self.cols {
+            for p in self.col_range(c) {
+                let r = self.indices[p] as usize;
+                let q = cursor[r];
+                indices[q] = c as u32;
+                values[q] = self.values[p];
+                cursor[r] += 1;
+            }
+        }
+        Csr { rows: self.rows, cols: self.cols, indptr, indices, values }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Csr {
+        // [[0, 1, 0],
+        //  [2, 0, 3],
+        //  [0, 0, 0],
+        //  [4, 5, 6]]
+        Csr::from_triplets(
+            4,
+            3,
+            &[(0, 1, 1.0), (1, 0, 2.0), (1, 2, 3.0), (3, 0, 4.0), (3, 1, 5.0), (3, 2, 6.0)],
+        )
+    }
+
+    #[test]
+    fn from_triplets_basic() {
+        let m = sample();
+        assert_eq!(m.nnz(), 6);
+        assert_eq!(m.degree(0), 1);
+        assert_eq!(m.degree(2), 0);
+        assert_eq!(m.degree(3), 3);
+        assert_eq!(m.max_degree(), 3);
+        assert!((m.avg_degree() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn duplicates_summed() {
+        let m = Csr::from_triplets(1, 2, &[(0, 1, 1.0), (0, 1, 2.5)]);
+        assert_eq!(m.nnz(), 1);
+        assert_eq!(m.values, vec![3.5]);
+    }
+
+    #[test]
+    fn rows_sorted() {
+        let m = Csr::from_triplets(1, 5, &[(0, 4, 1.0), (0, 1, 2.0), (0, 3, 3.0)]);
+        assert_eq!(m.indices, vec![1, 3, 4]);
+        assert_eq!(m.values, vec![2.0, 3.0, 1.0]);
+    }
+
+    #[test]
+    fn dense_matches() {
+        let m = sample();
+        let d = m.to_dense();
+        assert_eq!(d[0 * 3 + 1], 1.0);
+        assert_eq!(d[1 * 3 + 0], 2.0);
+        assert_eq!(d[3 * 3 + 2], 6.0);
+        assert_eq!(d.iter().filter(|&&x| x != 0.0).count(), 6);
+    }
+
+    #[test]
+    fn csc_round_trip() {
+        let m = sample();
+        let back = m.to_csc().to_csr();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn transpose_involution_and_dense_agreement() {
+        let m = sample();
+        let t = m.transpose();
+        assert_eq!(t.rows, 3);
+        assert_eq!(t.cols, 4);
+        assert_eq!(m.transpose().transpose(), m);
+        let d = m.to_dense();
+        let dt = t.to_dense();
+        for r in 0..4 {
+            for c in 0..3 {
+                assert_eq!(d[r * 3 + c], dt[c * 4 + r]);
+            }
+        }
+        assert!(t.is_transpose_of(&m));
+        assert!(m.is_transpose_of(&t));
+    }
+
+    #[test]
+    fn row_normalise_mean() {
+        let mut m = sample();
+        m.normalize_rows();
+        for p in m.row_range(3) {
+            assert!((m.values[p] - 1.0 / 3.0).abs() < 1e-7);
+        }
+        assert_eq!(m.degree(2), 0); // empty row untouched
+    }
+
+    #[test]
+    fn gcn_normalise_square() {
+        let mut m = Csr::from_triplets(2, 2, &[(0, 0, 1.0), (0, 1, 1.0), (1, 1, 1.0)]);
+        m.normalize_gcn();
+        // deg_out(0)=2, deg_in(0)=1 -> 1/sqrt(2)
+        let d = m.to_dense();
+        assert!((d[0] - 1.0 / (2f32).sqrt()).abs() < 1e-6);
+        // deg_out(1)=1, deg_in(1)=2 -> 1/sqrt(2)
+        assert!((d[3] - 1.0 / (2f32).sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn oob_triplet_panics() {
+        Csr::from_triplets(2, 2, &[(2, 0, 1.0)]);
+    }
+}

@@ -1,0 +1,235 @@
+//! The heterogeneous circuit graph (paper §2.2).
+//!
+//! Two node types — `cell` and `net` — and three edge types:
+//! * `near`   ⊆ cell × cell (geometric links from the shifting window)
+//! * `pins`   ⊆ cell → net  (topological: cell pins into a net)
+//! * `pinned` ⊆ net → cell  (the transpose of `pins`)
+//!
+//! Adjacency matrices are stored destination-major (rows = destination
+//! nodes), matching the forward aggregation direction `Y_i = Σ_j A_ij X_j`.
+
+use super::csr::Csr;
+use crate::tensor::Matrix;
+
+/// Node types of the circuit heterograph.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum NodeType {
+    Cell,
+    Net,
+}
+
+/// Edge types of the circuit heterograph.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum EdgeType {
+    /// cell → cell geometric proximity.
+    Near,
+    /// cell → net topological connection (source cell, destination net).
+    Pins,
+    /// net → cell, the transpose of `Pins`.
+    Pinned,
+}
+
+impl EdgeType {
+    pub const ALL: [EdgeType; 3] = [EdgeType::Near, EdgeType::Pins, EdgeType::Pinned];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EdgeType::Near => "near",
+            EdgeType::Pins => "pins",
+            EdgeType::Pinned => "pinned",
+        }
+    }
+
+    /// (source node type, destination node type).
+    pub fn endpoints(&self) -> (NodeType, NodeType) {
+        match self {
+            EdgeType::Near => (NodeType::Cell, NodeType::Cell),
+            EdgeType::Pins => (NodeType::Cell, NodeType::Net),
+            EdgeType::Pinned => (NodeType::Net, NodeType::Cell),
+        }
+    }
+}
+
+/// One heterogeneous circuit graph (one partition of a design).
+#[derive(Clone, Debug)]
+pub struct HeteroGraph {
+    /// Graph id within its design.
+    pub id: usize,
+    pub n_cells: usize,
+    pub n_nets: usize,
+    /// cell→cell adjacency, rows = destination cells. Square.
+    pub near: Csr,
+    /// cell→net adjacency stored destination-major: rows = nets, cols = cells.
+    pub pins: Csr,
+    /// net→cell adjacency destination-major: rows = cells, cols = nets.
+    pub pinned: Csr,
+    /// Cell node features (n_cells × d_cell).
+    pub x_cell: Matrix,
+    /// Net node features (n_nets × d_net).
+    pub x_net: Matrix,
+    /// Per-cell congestion label (n_cells × 1).
+    pub y_cell: Matrix,
+}
+
+impl HeteroGraph {
+    /// Adjacency matrix for an edge type (destination-major).
+    pub fn adj(&self, e: EdgeType) -> &Csr {
+        match e {
+            EdgeType::Near => &self.near,
+            EdgeType::Pins => &self.pins,
+            EdgeType::Pinned => &self.pinned,
+        }
+    }
+
+    /// Source-node features for an edge type.
+    pub fn src_features(&self, e: EdgeType) -> &Matrix {
+        match e.endpoints().0 {
+            NodeType::Cell => &self.x_cell,
+            NodeType::Net => &self.x_net,
+        }
+    }
+
+    pub fn total_nodes(&self) -> usize {
+        self.n_cells + self.n_nets
+    }
+
+    pub fn total_edges(&self) -> usize {
+        self.near.nnz() + self.pins.nnz() + self.pinned.nnz()
+    }
+
+    /// Validate shape/typing invariants from §2.2 including pins = pinnedᵀ.
+    pub fn validate(&self) -> Result<(), String> {
+        let c = self.n_cells;
+        let n = self.n_nets;
+        if self.near.rows != c || self.near.cols != c {
+            return Err(format!("near must be {c}×{c}, got {}×{}", self.near.rows, self.near.cols));
+        }
+        if self.pins.rows != n || self.pins.cols != c {
+            return Err(format!("pins must be {n}×{c}, got {}×{}", self.pins.rows, self.pins.cols));
+        }
+        if self.pinned.rows != c || self.pinned.cols != n {
+            return Err(format!(
+                "pinned must be {c}×{n}, got {}×{}",
+                self.pinned.rows, self.pinned.cols
+            ));
+        }
+        if !self.pinned.is_transpose_of(&self.pins) {
+            return Err("pinned must equal pinsᵀ".into());
+        }
+        if self.x_cell.rows != c || self.x_net.rows != n {
+            return Err("feature row counts must match node counts".into());
+        }
+        if self.y_cell.rows != c || self.y_cell.cols != 1 {
+            return Err("labels must be n_cells × 1".into());
+        }
+        Ok(())
+    }
+
+    /// Compact statistics line (Table-1 style).
+    pub fn stats_row(&self) -> GraphStats {
+        GraphStats {
+            id: self.id,
+            nodes_net: self.n_nets,
+            nodes_cell: self.n_cells,
+            edges_pinned: self.pinned.nnz(),
+            edges_near: self.near.nnz(),
+            edges_pins: self.pins.nnz(),
+        }
+    }
+}
+
+/// Per-graph statistics matching the columns of paper Table 1.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GraphStats {
+    pub id: usize,
+    pub nodes_net: usize,
+    pub nodes_cell: usize,
+    pub edges_pinned: usize,
+    pub edges_near: usize,
+    pub edges_pins: usize,
+}
+
+impl GraphStats {
+    pub fn total_nodes(&self) -> usize {
+        self.nodes_net + self.nodes_cell
+    }
+    pub fn total_edges(&self) -> usize {
+        self.edges_pinned + self.edges_near + self.edges_pins
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tiny 3-cell / 2-net graph used across the test suite.
+    pub fn toy_graph() -> HeteroGraph {
+        let n_cells = 3;
+        let n_nets = 2;
+        // near: cell 0 <-> 1, 1 <-> 2
+        let near = Csr::from_triplets(
+            3,
+            3,
+            &[(0, 1, 1.0), (1, 0, 1.0), (1, 2, 1.0), (2, 1, 1.0)],
+        );
+        // pins rows = nets: net0 <- cells {0,1}, net1 <- cells {1,2}
+        let pins =
+            Csr::from_triplets(2, 3, &[(0, 0, 1.0), (0, 1, 1.0), (1, 1, 1.0), (1, 2, 1.0)]);
+        let pinned = pins.transpose();
+        HeteroGraph {
+            id: 0,
+            n_cells,
+            n_nets,
+            near,
+            pins,
+            pinned,
+            x_cell: Matrix::ones(3, 4),
+            x_net: Matrix::ones(2, 4),
+            y_cell: Matrix::zeros(3, 1),
+        }
+    }
+
+    #[test]
+    fn toy_is_valid() {
+        toy_graph().validate().unwrap();
+    }
+
+    #[test]
+    fn edge_type_endpoints() {
+        assert_eq!(EdgeType::Near.endpoints(), (NodeType::Cell, NodeType::Cell));
+        assert_eq!(EdgeType::Pins.endpoints(), (NodeType::Cell, NodeType::Net));
+        assert_eq!(EdgeType::Pinned.endpoints(), (NodeType::Net, NodeType::Cell));
+        assert_eq!(EdgeType::ALL.len(), 3);
+    }
+
+    #[test]
+    fn adj_and_features_routing() {
+        let g = toy_graph();
+        assert_eq!(g.adj(EdgeType::Pins).rows, g.n_nets);
+        assert_eq!(g.adj(EdgeType::Pinned).rows, g.n_cells);
+        assert_eq!(g.src_features(EdgeType::Pins).rows, g.n_cells);
+        assert_eq!(g.src_features(EdgeType::Pinned).rows, g.n_nets);
+    }
+
+    #[test]
+    fn validate_rejects_broken_transpose() {
+        let mut g = toy_graph();
+        g.pinned = Csr::from_triplets(3, 2, &[(0, 0, 1.0)]);
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_bad_shapes() {
+        let mut g = toy_graph();
+        g.x_cell = Matrix::ones(5, 4);
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn stats_row_counts() {
+        let s = toy_graph().stats_row();
+        assert_eq!(s.total_nodes(), 5);
+        assert_eq!(s.edges_pins, s.edges_pinned);
+        assert_eq!(s.total_edges(), 4 + 4 + 4);
+    }
+}

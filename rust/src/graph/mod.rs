@@ -1,0 +1,22 @@
+//! Circuit-graph substrate: sparse formats and the heterogeneous graph.
+//!
+//! * [`Csr`] / [`Csc`] — compressed sparse row/column adjacency with
+//!   round-trip conversion (the backward pass traverses CSC, paper Alg. 2).
+//! * [`Cbsr`] — Compressed *Balanced* Sparse Row: the output format of
+//!   D-ReLU (exactly `k` surviving values + column indices per row).
+//! * [`HeteroGraph`] — typed nodes (`cell`, `net`) and typed edges
+//!   (`near`: cell→cell, `pins`: cell→net, `pinned`: net→cell), with the
+//!   pins = pinnedᵀ invariant from §2.2 of the paper.
+//! * [`stats`] — degree histograms (Fig. 4) and workload-imbalance metrics
+//!   (the "evil row" factor of §2.3).
+//! * [`partition`] — splits a design into ~10k-node partitions (§2.2 item 1).
+
+pub mod cbsr;
+pub mod csr;
+pub mod hetero;
+pub mod partition;
+pub mod stats;
+
+pub use cbsr::Cbsr;
+pub use csr::{Csc, Csr};
+pub use hetero::{EdgeType, HeteroGraph, NodeType};

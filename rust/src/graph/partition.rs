@@ -1,0 +1,172 @@
+//! Design partitioner (paper §2.2 item 1).
+//!
+//! CircuitNet partitions each design evenly into graphs of roughly 10k
+//! nodes. Our generator produces partitions directly, but this module also
+//! provides the inverse operation — splitting one large heterograph into
+//! balanced partitions — so the pipeline matches the paper's preprocessing
+//! and so tests can check conservation invariants.
+
+use super::csr::Csr;
+use super::hetero::HeteroGraph;
+
+
+/// Split a heterograph into `parts` cell-contiguous partitions. Cells are
+/// range-partitioned; each partition keeps the nets that touch its cells.
+/// Edges crossing partition boundaries are dropped (the paper's partitions
+/// are likewise independent graphs).
+pub fn partition(g: &HeteroGraph, parts: usize) -> Vec<HeteroGraph> {
+    assert!(parts >= 1);
+    let per = g.n_cells.div_ceil(parts);
+    let mut out = Vec::with_capacity(parts);
+    for p in 0..parts {
+        let cell_lo = p * per;
+        let cell_hi = ((p + 1) * per).min(g.n_cells);
+        if cell_lo >= cell_hi {
+            break;
+        }
+        let n_cells = cell_hi - cell_lo;
+
+        // near: keep edges with both endpoints inside.
+        let mut near_t = Vec::new();
+        for r in cell_lo..cell_hi {
+            for q in g.near.row_range(r) {
+                let c = g.near.indices[q] as usize;
+                if (cell_lo..cell_hi).contains(&c) {
+                    near_t.push((r - cell_lo, c - cell_lo, g.near.values[q]));
+                }
+            }
+        }
+
+        // Nets touched by this partition's cells (via pins: rows = nets).
+        let mut net_map = vec![usize::MAX; g.n_nets];
+        let mut n_nets = 0usize;
+        let mut pins_t = Vec::new();
+        for net in 0..g.n_nets {
+            for q in g.pins.row_range(net) {
+                let cell = g.pins.indices[q] as usize;
+                if (cell_lo..cell_hi).contains(&cell) {
+                    if net_map[net] == usize::MAX {
+                        net_map[net] = n_nets;
+                        n_nets += 1;
+                    }
+                    pins_t.push((net_map[net], cell - cell_lo, g.pins.values[q]));
+                }
+            }
+        }
+
+        let near = Csr::from_triplets(n_cells, n_cells, &near_t);
+        let pins = Csr::from_triplets(n_nets, n_cells, &pins_t);
+        let pinned = pins.transpose();
+
+        // Feature/label slices.
+        let cell_idx: Vec<usize> = (cell_lo..cell_hi).collect();
+        let mut net_idx = vec![0usize; n_nets];
+        for (old, &new) in net_map.iter().enumerate() {
+            if new != usize::MAX {
+                net_idx[new] = old;
+            }
+        }
+        out.push(HeteroGraph {
+            id: p,
+            n_cells,
+            n_nets,
+            near,
+            pins,
+            pinned,
+            x_cell: g.x_cell.gather_rows(&cell_idx),
+            x_net: g.x_net.gather_rows(&net_idx),
+            y_cell: g.y_cell.gather_rows(&cell_idx),
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Matrix;
+    use crate::util::rng::Rng;
+
+    fn random_graph(n_cells: usize, n_nets: usize, seed: u64) -> HeteroGraph {
+        let mut rng = Rng::new(seed);
+        let mut near_t = Vec::new();
+        for r in 0..n_cells {
+            for _ in 0..3 {
+                let c = rng.below(n_cells);
+                if c != r {
+                    near_t.push((r, c, 1.0));
+                }
+            }
+        }
+        let mut pins_t = Vec::new();
+        for net in 0..n_nets {
+            for _ in 0..2 {
+                pins_t.push((net, rng.below(n_cells), 1.0));
+            }
+        }
+        let near = Csr::from_triplets(n_cells, n_cells, &near_t);
+        let pins = Csr::from_triplets(n_nets, n_cells, &pins_t);
+        let pinned = pins.transpose();
+        HeteroGraph {
+            id: 0,
+            n_cells,
+            n_nets,
+            near,
+            pins,
+            pinned,
+            x_cell: Matrix::randn(n_cells, 4, 1.0, &mut rng),
+            x_net: Matrix::randn(n_nets, 4, 1.0, &mut rng),
+            y_cell: Matrix::randn(n_cells, 1, 1.0, &mut rng),
+        }
+    }
+
+    #[test]
+    fn partitions_are_valid_and_cover_cells() {
+        let g = random_graph(100, 40, 5);
+        let parts = partition(&g, 4);
+        assert_eq!(parts.len(), 4);
+        let total: usize = parts.iter().map(|p| p.n_cells).sum();
+        assert_eq!(total, 100);
+        for p in &parts {
+            p.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn partition_preserves_features() {
+        let g = random_graph(50, 20, 6);
+        let parts = partition(&g, 2);
+        // First cell of second partition is cell 25 of the original.
+        assert_eq!(parts[1].x_cell.row(0), g.x_cell.row(25));
+        assert_eq!(parts[1].y_cell.row(0), g.y_cell.row(25));
+    }
+
+    #[test]
+    fn single_partition_keeps_all_near_edges() {
+        let g = random_graph(30, 10, 7);
+        let parts = partition(&g, 1);
+        assert_eq!(parts.len(), 1);
+        assert_eq!(parts[0].near.nnz(), g.near.nnz());
+        assert_eq!(parts[0].pins.nnz(), g.pins.nnz());
+    }
+
+    #[test]
+    fn cross_edges_dropped_monotonically() {
+        let g = random_graph(60, 25, 8);
+        let p2: usize = partition(&g, 2).iter().map(|p| p.near.nnz()).sum();
+        let p6: usize = partition(&g, 6).iter().map(|p| p.near.nnz()).sum();
+        assert!(p2 <= g.near.nnz());
+        assert!(p6 <= p2);
+    }
+
+    #[test]
+    fn nets_not_duplicated_within_partition() {
+        let g = random_graph(40, 15, 9);
+        for p in partition(&g, 3) {
+            // each partition's nets have at least one pin
+            for net in 0..p.n_nets {
+                assert!(p.pins.degree(net) >= 1);
+            }
+        }
+    }
+}

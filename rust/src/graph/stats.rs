@@ -1,0 +1,178 @@
+//! Degree statistics and workload-imbalance metrics.
+//!
+//! Regenerates Fig. 4 (degree histograms per edge type) and quantifies the
+//! "evil row" effect of §2.3: `imbalance = max_deg / avg_deg`, the factor by
+//! which a static row-per-warp SpMM tail-lags.
+
+use super::csr::Csr;
+use super::hetero::{EdgeType, HeteroGraph};
+
+/// Histogram of node degrees with fixed-width bins.
+#[derive(Clone, Debug)]
+pub struct DegreeHistogram {
+    pub bin_width: usize,
+    /// counts[b] = number of rows with degree in [b*w, (b+1)*w).
+    pub counts: Vec<usize>,
+    pub max_degree: usize,
+    pub avg_degree: f64,
+    pub rows: usize,
+}
+
+impl DegreeHistogram {
+    pub fn of(adj: &Csr, bin_width: usize) -> DegreeHistogram {
+        assert!(bin_width > 0);
+        let max_degree = adj.max_degree();
+        let nbins = max_degree / bin_width + 1;
+        let mut counts = vec![0usize; nbins];
+        for r in 0..adj.rows {
+            counts[adj.degree(r) / bin_width] += 1;
+        }
+        DegreeHistogram {
+            bin_width,
+            counts,
+            max_degree,
+            avg_degree: adj.avg_degree(),
+            rows: adj.rows,
+        }
+    }
+
+    /// Degree value with the most rows (mode bin center) — paper Fig. 4
+    /// describes `near` peaking around 50 and pins/pinned at 3–4.
+    pub fn mode_degree(&self) -> usize {
+        let b = self
+            .counts
+            .iter()
+            .enumerate()
+            .max_by_key(|&(_, c)| *c)
+            .map(|(b, _)| b)
+            .unwrap_or(0);
+        b * self.bin_width + self.bin_width / 2
+    }
+
+    /// Fraction of rows with degree ≥ `d`.
+    pub fn tail_fraction(&self, d: usize) -> f64 {
+        if self.rows == 0 {
+            return 0.0;
+        }
+        let from_bin = d / self.bin_width;
+        let tail: usize = self.counts.iter().skip(from_bin).sum();
+        tail as f64 / self.rows as f64
+    }
+
+    /// ASCII sparkline of the histogram (bench output).
+    pub fn sparkline(&self, width: usize) -> String {
+        if self.counts.is_empty() {
+            return String::new();
+        }
+        const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        let step = self.counts.len().div_ceil(width.max(1));
+        let agg: Vec<usize> = self
+            .counts
+            .chunks(step.max(1))
+            .map(|c| c.iter().sum::<usize>())
+            .collect();
+        let max = *agg.iter().max().unwrap_or(&1) as f64;
+        agg.iter()
+            .map(|&c| {
+                let lvl = ((c as f64 / max.max(1.0)) * 7.0).round() as usize;
+                BARS[lvl.min(7)]
+            })
+            .collect()
+    }
+}
+
+/// Workload-imbalance metrics for an adjacency matrix (§2.3: W_i = |N(i)|·D;
+/// P_max throttled by max_i |N(i)|).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ImbalanceStats {
+    pub max_degree: usize,
+    pub avg_degree: f64,
+    /// max/avg — 1.0 means perfectly balanced rows.
+    pub imbalance: f64,
+    /// Coefficient of variation of row degrees.
+    pub cv: f64,
+}
+
+impl ImbalanceStats {
+    pub fn of(adj: &Csr) -> ImbalanceStats {
+        let degs: Vec<f64> = (0..adj.rows).map(|r| adj.degree(r) as f64).collect();
+        let avg = if degs.is_empty() { 0.0 } else { degs.iter().sum::<f64>() / degs.len() as f64 };
+        let var = if degs.is_empty() {
+            0.0
+        } else {
+            degs.iter().map(|d| (d - avg) * (d - avg)).sum::<f64>() / degs.len() as f64
+        };
+        ImbalanceStats {
+            max_degree: adj.max_degree(),
+            avg_degree: avg,
+            imbalance: if avg > 0.0 { adj.max_degree() as f64 / avg } else { 0.0 },
+            cv: if avg > 0.0 { var.sqrt() / avg } else { 0.0 },
+        }
+    }
+}
+
+/// Fig. 4 bundle: a histogram per edge type of a heterograph.
+pub fn degree_report(g: &HeteroGraph, bin_width: usize) -> Vec<(EdgeType, DegreeHistogram)> {
+    EdgeType::ALL
+        .iter()
+        .map(|&e| (e, DegreeHistogram::of(g.adj(e), bin_width)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn skewed() -> Csr {
+        // Row 0 has 8 neighbors, rows 1..=7 have 1 each: evil row 0.
+        let mut t = vec![];
+        for c in 0..8 {
+            t.push((0usize, c as usize, 1.0));
+        }
+        for r in 1..8 {
+            t.push((r, 0, 1.0));
+        }
+        Csr::from_triplets(8, 8, &t)
+    }
+
+    #[test]
+    fn histogram_counts_all_rows() {
+        let h = DegreeHistogram::of(&skewed(), 1);
+        assert_eq!(h.counts.iter().sum::<usize>(), 8);
+        assert_eq!(h.max_degree, 8);
+        assert_eq!(h.counts[1], 7); // seven rows of degree 1
+        assert_eq!(h.counts[8], 1); // one evil row
+    }
+
+    #[test]
+    fn mode_and_tail() {
+        let h = DegreeHistogram::of(&skewed(), 1);
+        assert_eq!(h.mode_degree(), 1);
+        assert!((h.tail_fraction(8) - 1.0 / 8.0).abs() < 1e-12);
+        assert!((h.tail_fraction(0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn imbalance_detects_evil_rows() {
+        let s = ImbalanceStats::of(&skewed());
+        assert_eq!(s.max_degree, 8);
+        assert!((s.avg_degree - 15.0 / 8.0).abs() < 1e-12);
+        assert!(s.imbalance > 4.0);
+        assert!(s.cv > 1.0);
+    }
+
+    #[test]
+    fn uniform_graph_is_balanced() {
+        let t: Vec<_> = (0..8).map(|r| (r, (r + 1) % 8, 1.0)).collect();
+        let s = ImbalanceStats::of(&Csr::from_triplets(8, 8, &t));
+        assert!((s.imbalance - 1.0).abs() < 1e-12);
+        assert_eq!(s.cv, 0.0);
+    }
+
+    #[test]
+    fn sparkline_renders() {
+        let h = DegreeHistogram::of(&skewed(), 1);
+        let s = h.sparkline(10);
+        assert!(!s.is_empty());
+    }
+}

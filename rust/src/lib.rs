@@ -1,0 +1,32 @@
+//! # DR-CircuitGNN
+//!
+//! A reproduction of *“DR-CircuitGNN: Training Acceleration of Heterogeneous
+//! Circuit Graph Neural Network on GPUs”* (ICS 2025) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the coordinator: heterogeneous circuit-graph
+//!   substrate, the D-ReLU/CBSR sparsification and DR-SpMM kernels with their
+//!   cuSPARSE/GNNAdvisor-analog baselines, a hand-differentiated HGNN training
+//!   stack, and the paper's §3.4 parallel subgraph pipeline.
+//! * **Layer 2 (python/compile/model.py)** — the same HGNN in JAX, AOT-lowered
+//!   to HLO text artifacts consumed by [`runtime`].
+//! * **Layer 1 (python/compile/kernels/)** — Pallas kernels (interpret mode)
+//!   for D-ReLU and DR-SpMM, validated against pure-jnp oracles.
+//!
+//! See `DESIGN.md` for the full system inventory and the per-experiment index
+//! mapping every table/figure of the paper to a bench target.
+
+pub mod bench;
+pub mod config;
+pub mod datagen;
+pub mod graph;
+pub mod nn;
+pub mod runtime;
+pub mod sched;
+pub mod sparse;
+pub mod tensor;
+pub mod train;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

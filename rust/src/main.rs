@@ -1,0 +1,283 @@
+//! DR-CircuitGNN launcher (Layer-3 coordinator entrypoint).
+//!
+//! Subcommands:
+//!   gen-data   — generate the synthetic CircuitNet designs; print Table-1
+//!                style statistics and Fig.-4 degree histograms.
+//!   train      — train DR-CircuitGNN (or a homogeneous baseline) on
+//!                Mini-CircuitNet; report Table-2 metrics.
+//!   profile-k  — the §4.3 preprocessing pass: per-subgraph optimal K.
+//!   e2e        — one end-to-end step per Table-1 graph under each engine
+//!                and schedule; report Table-3 style speedups.
+//!   runtime    — inspect and smoke-run AOT artifacts via PJRT.
+//!
+//! Run `dr-circuitgnn help` for options.
+
+use dr_circuitgnn::bench::{fmt_speedup, Table};
+use dr_circuitgnn::config::Config;
+use dr_circuitgnn::datagen::{self, mini_circuitnet, table1_designs};
+use dr_circuitgnn::graph::stats::{degree_report, ImbalanceStats};
+use dr_circuitgnn::nn::{HomoKind, MessageEngine};
+use dr_circuitgnn::runtime::{ArtifactRegistry, Runtime};
+use dr_circuitgnn::sched::{run_e2e_step, ScheduleMode};
+use dr_circuitgnn::sparse::GnnaConfig;
+use dr_circuitgnn::train::{kprofile, TrainConfig, Trainer};
+use dr_circuitgnn::util::cli::Args;
+use dr_circuitgnn::util::logger;
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::default()
+        .declare("config", "config file (TOML subset)", true)
+        .declare("scale", "dataset scale factor (0,1]", true)
+        .declare("designs", "number of Mini-CircuitNet designs", true)
+        .declare("epochs", "training epochs", true)
+        .declare("hidden", "hidden width", true)
+        .declare("lr", "learning rate", true)
+        .declare("kernel", "csr | gnna | dr", true)
+        .declare("model", "dr | gcn | sage | gat (train)", true)
+        .declare("k-cell", "D-ReLU K for cell embeddings", true)
+        .declare("k-net", "D-ReLU K for net embeddings", true)
+        .declare("dim", "embedding width for kernel benches", true)
+        .declare("seed", "RNG seed", true)
+        .declare("parallel", "enable §3.4 parallel schedule", false)
+        .declare("sequential", "disable §3.4 parallel schedule", false)
+        .declare("artifacts", "artifacts directory", true)
+        .declare("log", "log level: debug|info|warn|error", true)
+        .parse(&raw)
+    {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Some(level) = args.get("log").and_then(logger::parse_level) {
+        logger::set_level(level);
+    }
+    let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("help");
+    let cfg = match Config::resolve(&args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("config error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match cmd {
+        "gen-data" => cmd_gen_data(&cfg),
+        "train" => cmd_train(&cfg, &args),
+        "profile-k" => cmd_profile_k(&cfg),
+        "e2e" => cmd_e2e(&cfg),
+        "runtime" => cmd_runtime(&cfg),
+        _ => {
+            println!(
+                "dr-circuitgnn — heterogeneous circuit GNN training acceleration\n\n\
+                 commands: gen-data | train | profile-k | e2e | runtime\n\n{}",
+                args.usage("dr-circuitgnn <command>")
+            );
+            0
+        }
+    };
+    std::process::exit(code);
+}
+
+fn cmd_gen_data(cfg: &Config) -> i32 {
+    let mut table = Table::new(
+        &format!("Table 1 — design statistics (scale {})", cfg.scale),
+        &[
+            "design", "graph", "nodes-net", "nodes-cell", "e-pinned", "e-near", "e-pins",
+            "total-n", "total-e",
+        ],
+    );
+    for spec in table1_designs(cfg.scale) {
+        let graphs = datagen::generate_design(&spec);
+        for g in &graphs {
+            let s = g.stats_row();
+            table.row(&[
+                spec.name.clone(),
+                s.id.to_string(),
+                s.nodes_net.to_string(),
+                s.nodes_cell.to_string(),
+                s.edges_pinned.to_string(),
+                s.edges_near.to_string(),
+                s.edges_pins.to_string(),
+                s.total_nodes().to_string(),
+                s.total_edges().to_string(),
+            ]);
+        }
+        // Fig. 4 degree summary for the first graph of each design.
+        let g = &graphs[0];
+        for (edge, hist) in degree_report(g, 4) {
+            let imb = ImbalanceStats::of(g.adj(edge));
+            dr_circuitgnn::info!(
+                "{} {}: mode≈{} max={} avg={:.1} imbalance={:.1} {}",
+                spec.name,
+                edge.name(),
+                hist.mode_degree(),
+                hist.max_degree,
+                hist.avg_degree,
+                imb.imbalance,
+                hist.sparkline(32)
+            );
+        }
+    }
+    table.print();
+    0
+}
+
+fn cmd_train(cfg: &Config, args: &Args) -> i32 {
+    let (train, test) = mini_circuitnet(cfg.n_designs, cfg.scale, cfg.seed);
+    dr_circuitgnn::info!(
+        "Mini-CircuitNet: {} train / {} test designs ({} graphs)",
+        train.designs.len(),
+        test.designs.len(),
+        train.total_graphs() + test.total_graphs()
+    );
+    let tc = TrainConfig {
+        epochs: cfg.epochs,
+        lr: cfg.lr,
+        weight_decay: cfg.weight_decay,
+        hidden: cfg.hidden,
+        seed: cfg.seed,
+        parallel: cfg.parallel,
+        log_every: 5,
+    };
+    let model_kind = args.get_or("model", "dr").to_string();
+    let (scores, secs, params) = if model_kind == "dr" {
+        let (_, report) = Trainer::train_dr(&train, &test, cfg.engine(), &tc);
+        (report.test_scores, report.train_seconds, report.params)
+    } else {
+        let kind = match HomoKind::parse(&model_kind) {
+            Some(k) => k,
+            None => {
+                eprintln!("--model: unknown '{model_kind}'");
+                return 2;
+            }
+        };
+        let mut tc = tc;
+        tc.lr = 1e-3;
+        tc.weight_decay = 2e-4;
+        let (_, report) = Trainer::train_homo(kind, &train, &test, &tc);
+        (report.test_scores, report.train_seconds, report.params)
+    };
+    let mut t = Table::new(
+        &format!("Congestion prediction — {model_kind} ({} epochs)", cfg.epochs),
+        &["model", "Pearson", "Spear.", "Ken.", "MAE", "RMSE", "params", "train-s"],
+    );
+    t.row(&[
+        model_kind,
+        format!("{:.3}", scores.pearson),
+        format!("{:.3}", scores.spearman),
+        format!("{:.3}", scores.kendall),
+        format!("{:.3}", scores.mae),
+        format!("{:.3}", scores.rmse),
+        params.to_string(),
+        format!("{secs:.1}"),
+    ]);
+    t.print();
+    0
+}
+
+fn cmd_profile_k(cfg: &Config) -> i32 {
+    let designs = table1_designs(cfg.scale);
+    let mut t = Table::new(
+        &format!("§4.3 optimal-K profile (dim {})", cfg.dim),
+        &["design", "graph", "edge", "best-K", "timings (k: ms)"],
+    );
+    for spec in &designs {
+        let graphs = datagen::generate_design(spec);
+        for g in &graphs {
+            let profiles = kprofile::profile_optimal_k(g, cfg.dim, 3, cfg.seed);
+            for p in &profiles {
+                let detail = p
+                    .timings
+                    .iter()
+                    .map(|(k, s)| format!("{k}:{:.2}", s * 1e3))
+                    .collect::<Vec<_>>()
+                    .join(" ");
+                t.row(&[
+                    spec.name.clone(),
+                    g.id.to_string(),
+                    p.edge.name().to_string(),
+                    p.best_k.to_string(),
+                    detail,
+                ]);
+            }
+        }
+    }
+    t.print();
+    0
+}
+
+fn cmd_e2e(cfg: &Config) -> i32 {
+    let designs = table1_designs(cfg.scale);
+    let mut t = Table::new(
+        &format!("Table 3 — end-to-end speedups (dim {}, scale {})", cfg.dim, cfg.scale),
+        &["design", "graph", "cuSPARSE-seq", "GNNA-seq", "DR-par", "vs cuSPARSE", "vs GNNA"],
+    );
+    for spec in &designs {
+        let graphs = datagen::generate_design(spec);
+        for g in &graphs {
+            let base =
+                run_e2e_step(g, cfg.dim, &MessageEngine::Csr, ScheduleMode::Sequential, cfg.seed);
+            let gnna = run_e2e_step(
+                g,
+                cfg.dim,
+                &MessageEngine::Gnna(GnnaConfig::default()),
+                ScheduleMode::Sequential,
+                cfg.seed,
+            );
+            let ours = run_e2e_step(
+                g,
+                cfg.dim,
+                &MessageEngine::dr(cfg.k_cell, cfg.k_net),
+                cfg.schedule(),
+                cfg.seed,
+            );
+            t.row(&[
+                spec.name.clone(),
+                g.id.to_string(),
+                format!("{:.1}ms", base.total * 1e3),
+                format!("{:.1}ms", gnna.total * 1e3),
+                format!("{:.1}ms", ours.total * 1e3),
+                fmt_speedup(base.total, ours.total),
+                fmt_speedup(gnna.total, ours.total),
+            ]);
+        }
+    }
+    t.print();
+    0
+}
+
+fn cmd_runtime(cfg: &Config) -> i32 {
+    let reg = match ArtifactRegistry::scan(&cfg.artifacts_dir) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("artifact scan failed: {e}");
+            return 1;
+        }
+    };
+    if reg.names().is_empty() {
+        eprintln!("no artifacts in {} — run `make artifacts` first", cfg.artifacts_dir.display());
+        return 1;
+    }
+    println!("artifacts in {}:", cfg.artifacts_dir.display());
+    for name in reg.names() {
+        let meta = reg.meta(name).unwrap();
+        println!(
+            "  {name}: {} inputs, {} outputs {}",
+            meta.inputs.len(),
+            meta.outputs.len(),
+            meta.notes.first().map(|n| format!("({n})")).unwrap_or_default()
+        );
+    }
+    match Runtime::cpu() {
+        Ok(rt) => {
+            println!("PJRT: platform={} devices={}", rt.platform(), rt.device_count());
+            0
+        }
+        Err(e) => {
+            eprintln!("PJRT init failed: {e}");
+            1
+        }
+    }
+}

@@ -1,0 +1,142 @@
+//! Activations: plain ReLU (baselines) and the D-ReLU gate (paper §3.1).
+
+use crate::graph::Cbsr;
+use crate::sparse::{drelu, drelu_backward};
+use crate::tensor::Matrix;
+
+/// Standard ReLU with cached mask.
+#[derive(Clone, Debug, Default)]
+pub struct Relu {
+    mask: Option<Vec<bool>>,
+}
+
+impl Relu {
+    pub fn new() -> Relu {
+        Relu { mask: None }
+    }
+
+    pub fn forward(&mut self, x: &Matrix) -> Matrix {
+        let mut y = x.clone();
+        let mut mask = vec![false; x.data.len()];
+        for (i, v) in y.data.iter_mut().enumerate() {
+            if *v > 0.0 {
+                mask[i] = true;
+            } else {
+                *v = 0.0;
+            }
+        }
+        self.mask = Some(mask);
+        y
+    }
+
+    pub fn backward(&self, dy: &Matrix) -> Matrix {
+        let mask = self.mask.as_ref().expect("backward before forward");
+        let mut dx = dy.clone();
+        for (g, &m) in dx.data.iter_mut().zip(mask) {
+            if !m {
+                *g = 0.0;
+            }
+        }
+        dx
+    }
+}
+
+/// D-ReLU gate: row-wise top-k sparsification producing a CBSR activation.
+///
+/// Forward yields the CBSR (fed straight into DR-SpMM); backward masks the
+/// upstream gradient to the kept coordinates (eq. 3's subgradient).
+#[derive(Clone, Debug)]
+pub struct DReluGate {
+    pub k: usize,
+    cached: Option<Cbsr>,
+}
+
+impl DReluGate {
+    pub fn new(k: usize) -> DReluGate {
+        DReluGate { k, cached: None }
+    }
+
+    pub fn forward(&mut self, x: &Matrix) -> Cbsr {
+        let out = drelu(x, self.k.min(x.cols));
+        self.cached = Some(out.clone());
+        out
+    }
+
+    /// Dense upstream gradient → dense input gradient (masked).
+    pub fn backward(&self, dy: &Matrix) -> Matrix {
+        let fwd = self.cached.as_ref().expect("backward before forward");
+        drelu_backward(dy, fwd)
+    }
+
+    /// Compressed upstream gradient (aligned with the forward CBSR) →
+    /// dense input gradient. Used when the consumer was DR-SpMM whose
+    /// backward already returns CBSR-shaped gradients.
+    pub fn backward_compressed(&self, dy: &Cbsr) -> Matrix {
+        let fwd = self.cached.as_ref().expect("backward before forward");
+        assert_eq!(dy.n, fwd.n);
+        assert_eq!(dy.k, fwd.k);
+        assert_eq!(dy.indices, fwd.indices, "gradient must align with forward CBSR");
+        dy.to_dense()
+    }
+
+    pub fn cached(&self) -> Option<&Cbsr> {
+        self.cached.as_ref()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn relu_forward_backward() {
+        let mut relu = Relu::new();
+        let x = Matrix::from_vec(1, 4, vec![-1.0, 2.0, 0.0, 3.0]);
+        let y = relu.forward(&x);
+        assert_eq!(y.data, vec![0.0, 2.0, 0.0, 3.0]);
+        let dx = relu.backward(&Matrix::ones(1, 4));
+        assert_eq!(dx.data, vec![0.0, 1.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn drelu_gate_roundtrip() {
+        let mut rng = Rng::new(1);
+        let mut gate = DReluGate::new(3);
+        let x = Matrix::randn(6, 10, 1.0, &mut rng);
+        let c = gate.forward(&x);
+        assert_eq!(c.k, 3);
+        let dy = Matrix::ones(6, 10);
+        let dx = gate.backward(&dy);
+        // Gradient only at kept positions: 3 per row.
+        for r in 0..6 {
+            assert_eq!(dx.row(r).iter().filter(|&&v| v != 0.0).count(), 3);
+        }
+    }
+
+    #[test]
+    fn drelu_gate_clamps_k_to_dim() {
+        let mut gate = DReluGate::new(100);
+        let x = Matrix::ones(2, 4);
+        let c = gate.forward(&x);
+        assert_eq!(c.k, 4);
+    }
+
+    #[test]
+    fn compressed_backward_matches_dense() {
+        let mut rng = Rng::new(2);
+        let mut gate = DReluGate::new(2);
+        let x = Matrix::randn(4, 6, 1.0, &mut rng);
+        let fwd = gate.forward(&x);
+        // A CBSR gradient aligned with fwd.
+        let mut gc = fwd.clone();
+        for v in gc.values.iter_mut() {
+            *v = 1.0;
+        }
+        let via_compressed = gate.backward_compressed(&gc);
+        // Dense equivalent: ones at kept positions.
+        let dy = Matrix::ones(4, 6);
+        let via_dense = gate.backward(&dy);
+        assert_eq!(via_compressed.data, via_dense.data);
+    }
+}

@@ -1,0 +1,264 @@
+//! Single-head GAT layer (homogeneous baseline, paper Table 2).
+//!
+//! `h = X·W`, attention logits `z_ij = LeakyReLU(h_i·a_dst + h_j·a_src)` for
+//! edge j→i, `α_i,: = softmax_{j∈N(i)} z_ij`, output `y_i = Σ_j α_ij h_j`.
+//! Backward is hand-derived through the softmax and verified with finite
+//! differences.
+
+use super::Param;
+use crate::graph::Csr;
+use crate::tensor::{matmul, matmul_a_bt, matmul_at_b, Matrix};
+use crate::util::rng::Rng;
+
+const LEAKY_SLOPE: f32 = 0.2;
+
+#[derive(Clone, Debug)]
+pub struct GatConv {
+    pub w: Param,
+    /// Destination attention vector (d_out × 1).
+    pub a_dst: Param,
+    /// Source attention vector (d_out × 1).
+    pub a_src: Param,
+    cache: Option<GatCache>,
+}
+
+#[derive(Clone, Debug)]
+struct GatCache {
+    x: Matrix,
+    h: Matrix,
+    /// Per-edge softmaxed attention (aligned with adj storage order).
+    alpha: Vec<f32>,
+    /// Per-edge pre-activation logits.
+    z: Vec<f32>,
+}
+
+impl GatConv {
+    pub fn new(d_in: usize, d_out: usize, rng: &mut Rng) -> GatConv {
+        GatConv {
+            w: Param::new(Matrix::he_init(d_in, d_out, rng)),
+            a_dst: Param::new(Matrix::randn(d_out, 1, 0.1, rng)),
+            a_src: Param::new(Matrix::randn(d_out, 1, 0.1, rng)),
+            cache: None,
+        }
+    }
+
+    pub fn forward(&mut self, adj: &Csr, x: &Matrix) -> Matrix {
+        assert_eq!(adj.rows, adj.cols, "GAT expects a square (homogeneous) adjacency");
+        assert_eq!(adj.rows, x.rows);
+        let h = matmul(x, &self.w.value);
+        let d = h.cols;
+        // Node-level attention scores.
+        let s_dst: Vec<f32> =
+            (0..h.rows).map(|i| dot(h.row(i), &self.a_dst.value.data)).collect();
+        let s_src: Vec<f32> =
+            (0..h.rows).map(|j| dot(h.row(j), &self.a_src.value.data)).collect();
+        let mut alpha = vec![0f32; adj.nnz()];
+        let mut z = vec![0f32; adj.nnz()];
+        let mut y = Matrix::zeros(h.rows, d);
+        for i in 0..adj.rows {
+            let range = adj.row_range(i);
+            if range.is_empty() {
+                continue;
+            }
+            // Logits with LeakyReLU, then a stable softmax over N(i).
+            let mut maxz = f32::NEG_INFINITY;
+            for p in range.clone() {
+                let j = adj.indices[p] as usize;
+                let raw = s_dst[i] + s_src[j];
+                let zz = if raw > 0.0 { raw } else { LEAKY_SLOPE * raw };
+                z[p] = zz;
+                maxz = maxz.max(zz);
+            }
+            let mut denom = 0f32;
+            for p in range.clone() {
+                let e = (z[p] - maxz).exp();
+                alpha[p] = e;
+                denom += e;
+            }
+            let yrow = y.row_mut(i);
+            for p in range {
+                alpha[p] /= denom;
+                let j = adj.indices[p] as usize;
+                let a = alpha[p];
+                for (o, hv) in yrow.iter_mut().zip(h.row(j)) {
+                    *o += a * hv;
+                }
+            }
+        }
+        self.cache = Some(GatCache { x: x.clone(), h, alpha, z });
+        y
+    }
+
+    /// Backward: accumulates dW, da_dst, da_src; returns dX.
+    pub fn backward(&mut self, adj: &Csr, dy: &Matrix) -> Matrix {
+        let cache = self.cache.take().expect("backward before forward");
+        let GatCache { x, h, alpha, z } = cache;
+        let d = h.cols;
+        let n = h.rows;
+        let mut dh = Matrix::zeros(n, d);
+        let mut ds_dst = vec![0f32; n];
+        let mut ds_src = vec![0f32; n];
+        for i in 0..n {
+            let range = adj.row_range(i);
+            if range.is_empty() {
+                continue;
+            }
+            let dyrow = dy.row(i);
+            // dα_ij = dY_i · h_j ; also dh_j += α_ij dY_i.
+            let mut dalpha = Vec::with_capacity(range.len());
+            for p in range.clone() {
+                let j = adj.indices[p] as usize;
+                dalpha.push(dot(dyrow, h.row(j)));
+                let a = alpha[p];
+                for (g, dv) in dh.row_mut(j).iter_mut().zip(dyrow) {
+                    *g += a * dv;
+                }
+            }
+            // Softmax backward: de = α ⊙ (dα - Σ α dα).
+            let inner: f32 = range
+                .clone()
+                .zip(&dalpha)
+                .map(|(p, &da)| alpha[p] * da)
+                .sum();
+            for (p, &da) in range.clone().zip(&dalpha) {
+                let de = alpha[p] * (da - inner);
+                // LeakyReLU backward on the raw logit.
+                let slope = if z[p] > 0.0 { 1.0 } else { LEAKY_SLOPE };
+                let dz = de * slope;
+                let j = adj.indices[p] as usize;
+                ds_dst[i] += dz;
+                ds_src[j] += dz;
+            }
+        }
+        // s_dst_i = h_i · a_dst → dh_i += ds_dst_i · a_dst; da_dst += Σ ds_dst_i h_i.
+        for i in 0..n {
+            if ds_dst[i] != 0.0 {
+                for (g, &av) in dh.row_mut(i).iter_mut().zip(&self.a_dst.value.data) {
+                    *g += ds_dst[i] * av;
+                }
+                for (ga, hv) in self.a_dst.grad.data.iter_mut().zip(h.row(i)) {
+                    *ga += ds_dst[i] * hv;
+                }
+            }
+            if ds_src[i] != 0.0 {
+                for (g, &av) in dh.row_mut(i).iter_mut().zip(&self.a_src.value.data) {
+                    *g += ds_src[i] * av;
+                }
+                for (ga, hv) in self.a_src.grad.data.iter_mut().zip(h.row(i)) {
+                    *ga += ds_src[i] * hv;
+                }
+            }
+        }
+        // h = x·W → dW = xᵀ dh, dX = dh Wᵀ.
+        self.w.grad.add_inplace(&matmul_at_b(&x, &dh));
+        matmul_a_bt(&dh, &self.w.value)
+    }
+
+    pub fn params_mut(&mut self) -> Vec<&mut Param> {
+        vec![&mut self.w, &mut self.a_dst, &mut self.a_src]
+    }
+
+    pub fn numel(&self) -> usize {
+        self.w.numel() + self.a_dst.numel() + self.a_src.numel()
+    }
+}
+
+#[inline]
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_graph() -> Csr {
+        Csr::from_triplets(
+            4,
+            4,
+            &[
+                (0, 1, 1.0),
+                (0, 2, 1.0),
+                (1, 0, 1.0),
+                (1, 2, 1.0),
+                (1, 3, 1.0),
+                (2, 3, 1.0),
+                (3, 0, 1.0),
+            ],
+        )
+    }
+
+    #[test]
+    fn attention_rows_sum_to_one() {
+        let mut rng = Rng::new(1);
+        let mut layer = GatConv::new(3, 4, &mut rng);
+        let adj = small_graph();
+        let x = Matrix::randn(4, 3, 1.0, &mut rng);
+        let _ = layer.forward(&adj, &x);
+        let cache = layer.cache.as_ref().unwrap();
+        for i in 0..4 {
+            let s: f32 = adj.row_range(i).map(|p| cache.alpha[p]).sum();
+            assert!((s - 1.0).abs() < 1e-5, "row {i} alpha sum {s}");
+        }
+    }
+
+    #[test]
+    fn finite_difference_all_params_and_input() {
+        let mut rng = Rng::new(2);
+        let adj = small_graph();
+        let mut layer = GatConv::new(3, 2, &mut rng);
+        let x = Matrix::randn(4, 3, 1.0, &mut rng);
+        let _ = layer.forward(&adj, &x);
+        let dy = Matrix::ones(4, 2);
+        let mut l2 = layer.clone();
+        let dx = l2.backward(&adj, &dy);
+        let eps = 1e-3f32;
+        let loss = |l: &GatConv, xx: &Matrix| -> f32 {
+            let mut lc = l.clone();
+            lc.forward(&adj, xx).data.iter().sum()
+        };
+        for i in 0..layer.w.value.data.len() {
+            let mut lp = layer.clone();
+            lp.w.value.data[i] += eps;
+            let mut lm = layer.clone();
+            lm.w.value.data[i] -= eps;
+            let fd = (loss(&lp, &x) - loss(&lm, &x)) / (2.0 * eps);
+            assert!((fd - l2.w.grad.data[i]).abs() < 3e-2, "dW[{i}]: fd {fd} vs {}", l2.w.grad.data[i]);
+        }
+        for i in 0..layer.a_dst.value.data.len() {
+            let mut lp = layer.clone();
+            lp.a_dst.value.data[i] += eps;
+            let mut lm = layer.clone();
+            lm.a_dst.value.data[i] -= eps;
+            let fd = (loss(&lp, &x) - loss(&lm, &x)) / (2.0 * eps);
+            assert!((fd - l2.a_dst.grad.data[i]).abs() < 3e-2, "da_dst[{i}]");
+        }
+        for i in 0..layer.a_src.value.data.len() {
+            let mut lp = layer.clone();
+            lp.a_src.value.data[i] += eps;
+            let mut lm = layer.clone();
+            lm.a_src.value.data[i] -= eps;
+            let fd = (loss(&lp, &x) - loss(&lm, &x)) / (2.0 * eps);
+            assert!((fd - l2.a_src.grad.data[i]).abs() < 3e-2, "da_src[{i}]");
+        }
+        for i in 0..x.data.len() {
+            let mut xp = x.clone();
+            xp.data[i] += eps;
+            let mut xm = x.clone();
+            xm.data[i] -= eps;
+            let fd = (loss(&layer, &xp) - loss(&layer, &xm)) / (2.0 * eps);
+            assert!((fd - dx.data[i]).abs() < 3e-2, "dX[{i}]: fd {fd} vs {}", dx.data[i]);
+        }
+    }
+
+    #[test]
+    fn isolated_node_gets_zero_output() {
+        let mut rng = Rng::new(3);
+        let adj = Csr::from_triplets(3, 3, &[(0, 1, 1.0)]);
+        let mut layer = GatConv::new(2, 2, &mut rng);
+        let x = Matrix::randn(3, 2, 1.0, &mut rng);
+        let y = layer.forward(&adj, &x);
+        assert_eq!(y.row(1), &[0.0, 0.0]);
+        assert_eq!(y.row(2), &[0.0, 0.0]);
+    }
+}

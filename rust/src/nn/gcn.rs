@@ -1,0 +1,133 @@
+//! GraphConv (GCN) layer — the HeteroConv's `near` module (Fig. 1).
+//!
+//! `Y = Â · X · W + b` where Â is the (pre-normalised) adjacency. Backward:
+//! `dW = (ÂX)ᵀ · dY`, `dX = Âᵀ · (dY · Wᵀ)`.
+
+use super::Param;
+use crate::graph::{Csc, Csr};
+use crate::sparse::{spmm_csr, spmm_csr_bwd};
+use crate::tensor::{matmul, matmul_a_bt, matmul_at_b, Matrix};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct GraphConv {
+    pub w: Param,
+    pub b: Param,
+    /// Cached aggregate H = Â·X.
+    cached_h: Option<Matrix>,
+}
+
+impl GraphConv {
+    pub fn new(d_in: usize, d_out: usize, rng: &mut Rng) -> GraphConv {
+        GraphConv {
+            w: Param::new(Matrix::he_init(d_in, d_out, rng)),
+            b: Param::new(Matrix::zeros(1, d_out)),
+            cached_h: None,
+        }
+    }
+
+    /// Forward with a pluggable aggregation result: callers that use
+    /// DR-SpMM pass the aggregated `h` directly (see `hetero_conv`).
+    pub fn forward_from_agg(&mut self, h: Matrix) -> Matrix {
+        let y = matmul(&h, &self.w.value).add_bias(&self.b.value.data);
+        self.cached_h = Some(h);
+        y
+    }
+
+    /// Standard dense-aggregation forward.
+    pub fn forward(&mut self, adj: &Csr, x: &Matrix) -> Matrix {
+        let h = spmm_csr(adj, x);
+        self.forward_from_agg(h)
+    }
+
+    /// Backward up to the aggregation: accumulates dW/db and returns
+    /// `dH = dY · Wᵀ` (gradient w.r.t. the aggregated features). The caller
+    /// completes `dX = Âᵀ · dH` with its kernel of choice.
+    pub fn backward_to_agg(&mut self, dy: &Matrix) -> Matrix {
+        let h = self.cached_h.as_ref().expect("backward before forward");
+        self.w.grad.add_inplace(&matmul_at_b(h, dy));
+        for (g, d) in self.b.grad.data.iter_mut().zip(dy.col_sum()) {
+            *g += d;
+        }
+        matmul_a_bt(dy, &self.w.value)
+    }
+
+    /// Full dense backward: returns dX.
+    pub fn backward(&mut self, adj_csc: &Csc, dy: &Matrix) -> Matrix {
+        let dh = self.backward_to_agg(dy);
+        spmm_csr_bwd(adj_csc, &dh)
+    }
+
+    pub fn params_mut(&mut self) -> Vec<&mut Param> {
+        vec![&mut self.w, &mut self.b]
+    }
+
+    pub fn numel(&self) -> usize {
+        self.w.numel() + self.b.numel()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ring(n: usize) -> Csr {
+        let t: Vec<_> = (0..n).map(|r| (r, (r + 1) % n, 1.0f32)).collect();
+        Csr::from_triplets(n, n, &t)
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let mut rng = Rng::new(1);
+        let mut layer = GraphConv::new(4, 3, &mut rng);
+        let adj = ring(5);
+        let x = Matrix::randn(5, 4, 1.0, &mut rng);
+        let y = layer.forward(&adj, &x);
+        assert_eq!((y.rows, y.cols), (5, 3));
+    }
+
+    #[test]
+    fn finite_difference_w_and_x() {
+        let mut rng = Rng::new(2);
+        let mut layer = GraphConv::new(3, 2, &mut rng);
+        let adj = ring(4);
+        let x = Matrix::randn(4, 3, 1.0, &mut rng);
+        let _y = layer.forward(&adj, &x);
+        let dy = Matrix::ones(4, 2);
+        let dx = layer.backward(&adj.to_csc(), &dy);
+        let eps = 1e-3f32;
+        let loss = |l: &GraphConv, xx: &Matrix| -> f32 {
+            let h = spmm_csr(&adj, xx);
+            matmul(&h, &l.w.value).add_bias(&l.b.value.data).data.iter().sum()
+        };
+        for i in 0..layer.w.value.data.len() {
+            let mut lp = layer.clone();
+            lp.w.value.data[i] += eps;
+            let mut lm = layer.clone();
+            lm.w.value.data[i] -= eps;
+            let fd = (loss(&lp, &x) - loss(&lm, &x)) / (2.0 * eps);
+            assert!((fd - layer.w.grad.data[i]).abs() < 2e-2, "dW[{i}]");
+        }
+        for i in 0..x.data.len() {
+            let mut xp = x.clone();
+            xp.data[i] += eps;
+            let mut xm = x.clone();
+            xm.data[i] -= eps;
+            let fd = (loss(&layer, &xp) - loss(&layer, &xm)) / (2.0 * eps);
+            assert!((fd - dx.data[i]).abs() < 2e-2, "dX[{i}]");
+        }
+    }
+
+    #[test]
+    fn agg_split_path_equals_fused() {
+        let mut rng = Rng::new(3);
+        let mut a = GraphConv::new(3, 2, &mut rng);
+        let mut b = a.clone();
+        let adj = ring(6);
+        let x = Matrix::randn(6, 3, 1.0, &mut rng);
+        let y1 = a.forward(&adj, &x);
+        let h = spmm_csr(&adj, &x);
+        let y2 = b.forward_from_agg(h);
+        assert_eq!(y1.data, y2.data);
+    }
+}

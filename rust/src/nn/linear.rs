@@ -1,0 +1,141 @@
+//! Dense linear layer with manual backward.
+
+use super::Param;
+use crate::tensor::{matmul, matmul_a_bt, matmul_at_b, Matrix};
+use crate::util::rng::Rng;
+
+/// `y = x · W + b`, caching `x` for the backward pass.
+#[derive(Clone, Debug)]
+pub struct Linear {
+    pub w: Param,
+    pub b: Param,
+    cached_x: Option<Matrix>,
+}
+
+impl Linear {
+    pub fn new(d_in: usize, d_out: usize, rng: &mut Rng) -> Linear {
+        Linear {
+            w: Param::new(Matrix::he_init(d_in, d_out, rng)),
+            b: Param::new(Matrix::zeros(1, d_out)),
+            cached_x: None,
+        }
+    }
+
+    pub fn forward(&mut self, x: &Matrix) -> Matrix {
+        let y = matmul(x, &self.w.value).add_bias(&self.b.value.data);
+        self.cached_x = Some(x.clone());
+        y
+    }
+
+    /// Inference-only forward (no cache).
+    pub fn forward_inference(&self, x: &Matrix) -> Matrix {
+        matmul(x, &self.w.value).add_bias(&self.b.value.data)
+    }
+
+    /// Accumulates dW, db; returns dX.
+    pub fn backward(&mut self, dy: &Matrix) -> Matrix {
+        let x = self.cached_x.as_ref().expect("backward before forward");
+        self.w.grad.add_inplace(&matmul_at_b(x, dy));
+        let db = dy.col_sum();
+        for (g, d) in self.b.grad.data.iter_mut().zip(&db) {
+            *g += d;
+        }
+        matmul_a_bt(dy, &self.w.value)
+    }
+
+    pub fn params_mut(&mut self) -> Vec<&mut Param> {
+        vec![&mut self.w, &mut self.b]
+    }
+
+    pub fn numel(&self) -> usize {
+        self.w.numel() + self.b.numel()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::math::assert_allclose;
+
+    /// loss = sum(y) finite-difference check of dW, db, dX.
+    #[test]
+    fn finite_difference_gradients() {
+        let mut rng = Rng::new(1);
+        let mut layer = Linear::new(4, 3, &mut rng);
+        let x = Matrix::randn(5, 4, 1.0, &mut rng);
+        let _ = layer.forward(&x);
+        let dy = Matrix::ones(5, 3);
+        let dx = layer.backward(&dy);
+        let eps = 1e-3f32;
+
+        // dW
+        for i in 0..layer.w.value.data.len() {
+            let mut lp = layer.clone();
+            lp.w.value.data[i] += eps;
+            let mut lm = layer.clone();
+            lm.w.value.data[i] -= eps;
+            let fp: f32 = lp.forward_inference(&x).data.iter().sum();
+            let fm: f32 = lm.forward_inference(&x).data.iter().sum();
+            let fd = (fp - fm) / (2.0 * eps);
+            assert!(
+                (fd - layer.w.grad.data[i]).abs() < 2e-2,
+                "dW[{i}]: fd {fd} vs {}",
+                layer.w.grad.data[i]
+            );
+        }
+        // db
+        for i in 0..3 {
+            let mut lp = layer.clone();
+            lp.b.value.data[i] += eps;
+            let mut lm = layer.clone();
+            lm.b.value.data[i] -= eps;
+            let fp: f32 = lp.forward_inference(&x).data.iter().sum();
+            let fm: f32 = lm.forward_inference(&x).data.iter().sum();
+            let fd = (fp - fm) / (2.0 * eps);
+            assert!((fd - layer.b.grad.data[i]).abs() < 2e-2);
+        }
+        // dX
+        for i in 0..x.data.len() {
+            let mut xp = x.clone();
+            xp.data[i] += eps;
+            let mut xm = x.clone();
+            xm.data[i] -= eps;
+            let fp: f32 = layer.forward_inference(&xp).data.iter().sum();
+            let fm: f32 = layer.forward_inference(&xm).data.iter().sum();
+            let fd = (fp - fm) / (2.0 * eps);
+            assert!((fd - dx.data[i]).abs() < 2e-2, "dX[{i}]");
+        }
+    }
+
+    #[test]
+    fn forward_matches_inference() {
+        let mut rng = Rng::new(2);
+        let mut layer = Linear::new(6, 2, &mut rng);
+        let x = Matrix::randn(3, 6, 1.0, &mut rng);
+        let a = layer.forward(&x);
+        let b = layer.forward_inference(&x);
+        assert_allclose(&a.data, &b.data, 1e-6, 0.0);
+    }
+
+    #[test]
+    fn grads_accumulate_across_calls() {
+        let mut rng = Rng::new(3);
+        let mut layer = Linear::new(2, 2, &mut rng);
+        let x = Matrix::ones(1, 2);
+        let dy = Matrix::ones(1, 2);
+        let _ = layer.forward(&x);
+        layer.backward(&dy);
+        let g1 = layer.w.grad.clone();
+        let _ = layer.forward(&x);
+        layer.backward(&dy);
+        assert_allclose(&layer.w.grad.data, &g1.scale(2.0).data, 1e-6, 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "backward before forward")]
+    fn backward_without_forward_panics() {
+        let mut rng = Rng::new(4);
+        let mut layer = Linear::new(2, 2, &mut rng);
+        layer.backward(&Matrix::ones(1, 2));
+    }
+}

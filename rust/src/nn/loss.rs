@@ -1,0 +1,56 @@
+//! Losses.
+
+use crate::tensor::Matrix;
+
+/// Mean-squared error: returns `(loss, d_pred)` where
+/// `loss = mean((pred − target)²)` and `d_pred = 2(pred − target)/N`.
+pub fn mse(pred: &Matrix, target: &Matrix) -> (f32, Matrix) {
+    assert_eq!((pred.rows, pred.cols), (target.rows, target.cols), "mse: shape mismatch");
+    let n = pred.data.len().max(1) as f32;
+    let mut grad = Matrix::zeros(pred.rows, pred.cols);
+    let mut loss = 0f32;
+    for i in 0..pred.data.len() {
+        let diff = pred.data[i] - target.data[i];
+        loss += diff * diff;
+        grad.data[i] = 2.0 * diff / n;
+    }
+    (loss / n, grad)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_at_equality() {
+        let a = Matrix::from_vec(2, 1, vec![1.0, 2.0]);
+        let (l, g) = mse(&a, &a);
+        assert_eq!(l, 0.0);
+        assert!(g.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn matches_hand_computed() {
+        let p = Matrix::from_vec(1, 2, vec![1.0, 3.0]);
+        let t = Matrix::from_vec(1, 2, vec![0.0, 1.0]);
+        let (l, g) = mse(&p, &t);
+        assert!((l - (1.0 + 4.0) / 2.0).abs() < 1e-6);
+        assert_eq!(g.data, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn gradient_finite_difference() {
+        let p = Matrix::from_vec(1, 3, vec![0.5, -1.0, 2.0]);
+        let t = Matrix::from_vec(1, 3, vec![1.0, 0.0, 2.0]);
+        let (_, g) = mse(&p, &t);
+        let eps = 1e-3f32;
+        for i in 0..3 {
+            let mut pp = p.clone();
+            pp.data[i] += eps;
+            let mut pm = p.clone();
+            pm.data[i] -= eps;
+            let fd = (mse(&pp, &t).0 - mse(&pm, &t).0) / (2.0 * eps);
+            assert!((fd - g.data[i]).abs() < 1e-3);
+        }
+    }
+}

@@ -1,0 +1,78 @@
+//! Neural-network layers with hand-written forward/backward passes.
+//!
+//! The paper bypasses framework autograd for its message-passing op (custom
+//! CUDA backward, Alg. 2); we extend that approach to the whole model: every
+//! layer caches what its backward needs and exposes `backward` returning
+//! input gradients. Gradients are verified against finite differences in
+//! each module's tests.
+//!
+//! Layers:
+//! * [`Linear`] — dense projection.
+//! * [`GraphConv`] — GCN convolution `Â X W` (the HeteroConv's third module).
+//! * [`SageConv`] — GraphSAGE-mean `X W_self + (ĀX) W_neigh`.
+//! * [`GatConv`] — single-head graph attention (homogeneous baseline).
+//! * [`HeteroConv`] — the paper's block: two SageConv (pins, pinned) + one
+//!   GraphConv (near), cell outputs merged with element-wise max (eq. 8).
+//! * [`DReluGate`] — the D-ReLU activation wired to CBSR outputs.
+//!
+//! Models in [`model`]: `DrCircuitGnn` (2-layer HeteroConv, Fig. 1) and the
+//! homogeneous baselines (3-layer GCN / SAGE / GAT).
+
+pub mod activation;
+pub mod adam;
+pub mod gat;
+pub mod gcn;
+pub mod hetero_conv;
+pub mod linear;
+pub mod loss;
+pub mod model;
+pub mod sage;
+
+pub use activation::{DReluGate, Relu};
+pub use adam::Adam;
+pub use gat::GatConv;
+pub use gcn::GraphConv;
+pub use hetero_conv::{HeteroConv, MessageEngine};
+pub use linear::Linear;
+pub use loss::mse;
+pub use model::{homogenize, DrCircuitGnn, HomoGnn, HomoKind};
+pub use sage::SageConv;
+
+/// A trainable parameter: value + accumulated gradient.
+#[derive(Clone, Debug)]
+pub struct Param {
+    pub value: crate::tensor::Matrix,
+    pub grad: crate::tensor::Matrix,
+}
+
+impl Param {
+    pub fn new(value: crate::tensor::Matrix) -> Param {
+        let grad = crate::tensor::Matrix::zeros(value.rows, value.cols);
+        Param { value, grad }
+    }
+
+    pub fn zero_grad(&mut self) {
+        for g in self.grad.data.iter_mut() {
+            *g = 0.0;
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.value.data.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Matrix;
+
+    #[test]
+    fn param_zero_grad() {
+        let mut p = Param::new(Matrix::ones(2, 2));
+        p.grad = Matrix::ones(2, 2);
+        p.zero_grad();
+        assert!(p.grad.data.iter().all(|&g| g == 0.0));
+        assert_eq!(p.numel(), 4);
+    }
+}

@@ -1,0 +1,159 @@
+//! SageConv (GraphSAGE-mean) — the HeteroConv's pins/pinned modules.
+//!
+//! `Y = X_dst · W_self + (Ā · X_src) · W_neigh + b` with Ā row-normalised
+//! (mean aggregation). In the heterogeneous case the destination and source
+//! node sets differ (`pins`: cells → nets), so the layer takes both feature
+//! matrices.
+
+use super::Param;
+use crate::graph::{Csc, Csr};
+use crate::sparse::{spmm_csr, spmm_csr_bwd};
+use crate::tensor::{matmul, matmul_a_bt, matmul_at_b, Matrix};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct SageConv {
+    pub w_self: Param,
+    pub w_neigh: Param,
+    pub b: Param,
+    cached_x_dst: Option<Matrix>,
+    cached_h: Option<Matrix>,
+}
+
+impl SageConv {
+    /// `d_src` — source feature width; `d_dst` — destination feature width.
+    pub fn new(d_src: usize, d_dst: usize, d_out: usize, rng: &mut Rng) -> SageConv {
+        SageConv {
+            w_self: Param::new(Matrix::he_init(d_dst, d_out, rng)),
+            w_neigh: Param::new(Matrix::he_init(d_src, d_out, rng)),
+            b: Param::new(Matrix::zeros(1, d_out)),
+            cached_x_dst: None,
+            cached_h: None,
+        }
+    }
+
+    /// Forward from a precomputed aggregation `h = Ā · X_src` (lets the
+    /// heterogeneous engine swap kernels).
+    pub fn forward_from_agg(&mut self, x_dst: &Matrix, h: Matrix) -> Matrix {
+        let y = matmul(x_dst, &self.w_self.value)
+            .add(&matmul(&h, &self.w_neigh.value))
+            .add_bias(&self.b.value.data);
+        self.cached_x_dst = Some(x_dst.clone());
+        self.cached_h = Some(h);
+        y
+    }
+
+    pub fn forward(&mut self, adj: &Csr, x_src: &Matrix, x_dst: &Matrix) -> Matrix {
+        let h = spmm_csr(adj, x_src);
+        self.forward_from_agg(x_dst, h)
+    }
+
+    /// Backward: accumulates weight grads; returns `(dX_dst, dH)` where the
+    /// caller turns dH into dX_src via its aggregation backward.
+    pub fn backward_to_agg(&mut self, dy: &Matrix) -> (Matrix, Matrix) {
+        let x_dst = self.cached_x_dst.as_ref().expect("backward before forward");
+        let h = self.cached_h.as_ref().expect("backward before forward");
+        self.w_self.grad.add_inplace(&matmul_at_b(x_dst, dy));
+        self.w_neigh.grad.add_inplace(&matmul_at_b(h, dy));
+        for (g, d) in self.b.grad.data.iter_mut().zip(dy.col_sum()) {
+            *g += d;
+        }
+        let dx_dst = matmul_a_bt(dy, &self.w_self.value);
+        let dh = matmul_a_bt(dy, &self.w_neigh.value);
+        (dx_dst, dh)
+    }
+
+    /// Full dense backward: returns (dX_dst, dX_src).
+    pub fn backward(&mut self, adj_csc: &Csc, dy: &Matrix) -> (Matrix, Matrix) {
+        let (dx_dst, dh) = self.backward_to_agg(dy);
+        let dx_src = spmm_csr_bwd(adj_csc, &dh);
+        (dx_dst, dx_src)
+    }
+
+    pub fn params_mut(&mut self) -> Vec<&mut Param> {
+        vec![&mut self.w_self, &mut self.w_neigh, &mut self.b]
+    }
+
+    pub fn numel(&self) -> usize {
+        self.w_self.numel() + self.w_neigh.numel() + self.b.numel()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Bipartite adjacency: 3 dst rows, 4 src cols.
+    fn bip() -> Csr {
+        let mut m = Csr::from_triplets(
+            3,
+            4,
+            &[(0, 0, 1.0), (0, 1, 1.0), (1, 2, 1.0), (2, 1, 1.0), (2, 3, 1.0)],
+        );
+        m.normalize_rows();
+        m
+    }
+
+    #[test]
+    fn forward_shapes_hetero() {
+        let mut rng = Rng::new(1);
+        let mut layer = SageConv::new(5, 6, 2, &mut rng);
+        let x_src = Matrix::randn(4, 5, 1.0, &mut rng);
+        let x_dst = Matrix::randn(3, 6, 1.0, &mut rng);
+        let y = layer.forward(&bip(), &x_src, &x_dst);
+        assert_eq!((y.rows, y.cols), (3, 2));
+    }
+
+    #[test]
+    fn finite_difference_all_grads() {
+        let mut rng = Rng::new(2);
+        let adj = bip();
+        let mut layer = SageConv::new(3, 4, 2, &mut rng);
+        let x_src = Matrix::randn(4, 3, 1.0, &mut rng);
+        let x_dst = Matrix::randn(3, 4, 1.0, &mut rng);
+        let _ = layer.forward(&adj, &x_src, &x_dst);
+        let dy = Matrix::ones(3, 2);
+        let (dx_dst, dx_src) = layer.backward(&adj.to_csc(), &dy);
+        let eps = 1e-3f32;
+        let loss = |l: &SageConv, xs: &Matrix, xd: &Matrix| -> f32 {
+            let h = spmm_csr(&adj, xs);
+            matmul(xd, &l.w_self.value)
+                .add(&matmul(&h, &l.w_neigh.value))
+                .add_bias(&l.b.value.data)
+                .data
+                .iter()
+                .sum()
+        };
+        for i in 0..layer.w_neigh.value.data.len() {
+            let mut lp = layer.clone();
+            lp.w_neigh.value.data[i] += eps;
+            let mut lm = layer.clone();
+            lm.w_neigh.value.data[i] -= eps;
+            let fd = (loss(&lp, &x_src, &x_dst) - loss(&lm, &x_src, &x_dst)) / (2.0 * eps);
+            assert!((fd - layer.w_neigh.grad.data[i]).abs() < 2e-2, "dW_neigh[{i}]");
+        }
+        for i in 0..x_src.data.len() {
+            let mut xp = x_src.clone();
+            xp.data[i] += eps;
+            let mut xm = x_src.clone();
+            xm.data[i] -= eps;
+            let fd = (loss(&layer, &xp, &x_dst) - loss(&layer, &xm, &x_dst)) / (2.0 * eps);
+            assert!((fd - dx_src.data[i]).abs() < 2e-2, "dX_src[{i}]");
+        }
+        for i in 0..x_dst.data.len() {
+            let mut xp = x_dst.clone();
+            xp.data[i] += eps;
+            let mut xm = x_dst.clone();
+            xm.data[i] -= eps;
+            let fd = (loss(&layer, &x_src, &xp) - loss(&layer, &x_src, &xm)) / (2.0 * eps);
+            assert!((fd - dx_dst.data[i]).abs() < 2e-2, "dX_dst[{i}]");
+        }
+    }
+
+    #[test]
+    fn param_count() {
+        let mut rng = Rng::new(3);
+        let layer = SageConv::new(3, 4, 2, &mut rng);
+        assert_eq!(layer.numel(), 3 * 2 + 4 * 2 + 2);
+    }
+}

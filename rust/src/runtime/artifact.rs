@@ -1,0 +1,184 @@
+//! Artifact registry: discovers `*.hlo.txt` + `*.meta` pairs in the
+//! artifacts directory and validates feed shapes against the metadata
+//! `aot.py` records.
+//!
+//! Meta format (line-oriented, written by python/compile/aot.py):
+//! ```text
+//! input x_cell 128 64
+//! input x_net 96 64
+//! output y_cell 128 64
+//! note near spmm dim=64
+//! ```
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Shape metadata of one artifact.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ArtifactMeta {
+    pub name: String,
+    /// (name, dims) in positional order.
+    pub inputs: Vec<(String, Vec<i64>)>,
+    pub outputs: Vec<(String, Vec<i64>)>,
+    pub notes: Vec<String>,
+}
+
+impl ArtifactMeta {
+    pub fn parse(name: &str, text: &str) -> Result<ArtifactMeta> {
+        let mut meta = ArtifactMeta { name: name.to_string(), ..Default::default() };
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut toks = line.split_whitespace();
+            let kind = toks.next().unwrap();
+            match kind {
+                "input" | "output" => {
+                    let tname = toks
+                        .next()
+                        .with_context(|| format!("{name}.meta:{}: missing name", lineno + 1))?
+                        .to_string();
+                    let dims: Vec<i64> = toks
+                        .map(|t| t.parse::<i64>())
+                        .collect::<std::result::Result<_, _>>()
+                        .with_context(|| format!("{name}.meta:{}: bad dims", lineno + 1))?;
+                    if kind == "input" {
+                        meta.inputs.push((tname, dims));
+                    } else {
+                        meta.outputs.push((tname, dims));
+                    }
+                }
+                "note" => meta.notes.push(toks.collect::<Vec<_>>().join(" ")),
+                other => bail!("{name}.meta:{}: unknown record '{other}'", lineno + 1),
+            }
+        }
+        Ok(meta)
+    }
+
+    /// Check a positional feed of matrix shapes against the metadata.
+    pub fn validate_feed(&self, shapes: &[(usize, usize)]) -> Result<()> {
+        if shapes.len() != self.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.inputs.len(),
+                shapes.len()
+            );
+        }
+        for (i, ((iname, dims), &(r, c))) in self.inputs.iter().zip(shapes).enumerate() {
+            let want: Vec<i64> = dims.clone();
+            let got = vec![r as i64, c as i64];
+            if want != got {
+                bail!("{}: input {i} ({iname}) wants {want:?}, got {got:?}", self.name);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Registry over an artifacts directory.
+#[derive(Debug, Default)]
+pub struct ArtifactRegistry {
+    pub dir: PathBuf,
+    metas: BTreeMap<String, ArtifactMeta>,
+}
+
+impl ArtifactRegistry {
+    /// Scan `dir` for `<name>.hlo.txt` files (meta files optional but
+    /// recommended).
+    pub fn scan(dir: &Path) -> Result<ArtifactRegistry> {
+        let mut metas = BTreeMap::new();
+        if dir.is_dir() {
+            for entry in std::fs::read_dir(dir).context("reading artifacts dir")? {
+                let path = entry?.path();
+                let fname = path.file_name().and_then(|s| s.to_str()).unwrap_or("");
+                if let Some(name) = fname.strip_suffix(".hlo.txt") {
+                    let meta_path = dir.join(format!("{name}.meta"));
+                    let meta = if meta_path.exists() {
+                        ArtifactMeta::parse(name, &std::fs::read_to_string(&meta_path)?)?
+                    } else {
+                        ArtifactMeta { name: name.to_string(), ..Default::default() }
+                    };
+                    metas.insert(name.to_string(), meta);
+                }
+            }
+        }
+        Ok(ArtifactRegistry { dir: dir.to_path_buf(), metas })
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.metas.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn meta(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.metas.get(name)
+    }
+
+    pub fn hlo_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.metas.contains_key(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const META: &str = "\
+# example
+input x_cell 128 64
+input w 64 64
+output y 128 64
+note spmm near dim=64
+";
+
+    #[test]
+    fn parse_meta() {
+        let m = ArtifactMeta::parse("spmm_near", META).unwrap();
+        assert_eq!(m.inputs.len(), 2);
+        assert_eq!(m.inputs[0], ("x_cell".to_string(), vec![128, 64]));
+        assert_eq!(m.outputs.len(), 1);
+        assert_eq!(m.notes, vec!["spmm near dim=64"]);
+    }
+
+    #[test]
+    fn validate_feed_checks_shapes() {
+        let m = ArtifactMeta::parse("t", META).unwrap();
+        assert!(m.validate_feed(&[(128, 64), (64, 64)]).is_ok());
+        assert!(m.validate_feed(&[(128, 64)]).is_err());
+        assert!(m.validate_feed(&[(128, 32), (64, 64)]).is_err());
+    }
+
+    #[test]
+    fn bad_meta_rejected() {
+        assert!(ArtifactMeta::parse("t", "frobnicate x").is_err());
+        assert!(ArtifactMeta::parse("t", "input x 12a").is_err());
+    }
+
+    #[test]
+    fn scan_tempdir() {
+        let dir = std::env::temp_dir().join(format!("drcg_art_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("foo.hlo.txt"), "HloModule foo").unwrap();
+        std::fs::write(dir.join("foo.meta"), "input a 2 2\noutput b 2 2").unwrap();
+        std::fs::write(dir.join("bare.hlo.txt"), "HloModule bare").unwrap();
+        let reg = ArtifactRegistry::scan(&dir).unwrap();
+        assert!(reg.contains("foo"));
+        assert!(reg.contains("bare"));
+        assert_eq!(reg.meta("foo").unwrap().inputs.len(), 1);
+        assert_eq!(reg.meta("bare").unwrap().inputs.len(), 0);
+        assert!(reg.hlo_path("foo").ends_with("foo.hlo.txt"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn scan_missing_dir_is_empty() {
+        let reg = ArtifactRegistry::scan(Path::new("/nonexistent/xyz")).unwrap();
+        assert!(reg.names().is_empty());
+    }
+}

@@ -1,0 +1,89 @@
+//! Thin wrapper over the `xla` crate's PJRT CPU client.
+
+use crate::tensor::Matrix;
+use anyhow::{Context, Result};
+
+/// A PJRT client plus compilation entry points.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// CPU PJRT client (the only backend in this environment).
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load an HLO text artifact and compile it for this client.
+    pub fn load_hlo_text(&self, path: &std::path::Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable { exe, name: path.display().to_string() })
+    }
+}
+
+/// A compiled executable with matrix-level convenience I/O.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with f32 tensor inputs given as (data, dims) pairs.
+    /// Returns all outputs flattened to f32 vectors with their dims.
+    /// The AOT path lowers with `return_tuple=True`, so the single result
+    /// is a tuple literal that we decompose.
+    pub fn run(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, dims)| {
+                let lit = xla::Literal::vec1(data);
+                lit.reshape(dims).context("reshaping input literal")
+            })
+            .collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.name))?;
+        let mut out = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let parts = out.decompose_tuple().context("decomposing result tuple")?;
+        let parts = if parts.is_empty() { vec![out] } else { parts };
+        parts
+            .into_iter()
+            .map(|lit| lit.to_vec::<f32>().context("reading f32 output"))
+            .collect()
+    }
+
+    /// Convenience: run with Matrix inputs; outputs returned as flat vecs.
+    pub fn run_matrices(&self, inputs: &[&Matrix]) -> Result<Vec<Vec<f32>>> {
+        let prepared: Vec<(&[f32], Vec<i64>)> = inputs
+            .iter()
+            .map(|m| (m.data.as_slice(), vec![m.rows as i64, m.cols as i64]))
+            .collect();
+        let refs: Vec<(&[f32], &[i64])> =
+            prepared.iter().map(|(d, s)| (*d, s.as_slice())).collect();
+        self.run(&refs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // PJRT-dependent tests live in rust/tests/integration_runtime.rs so the
+    // unit suite stays independent of libxla_extension availability.
+}

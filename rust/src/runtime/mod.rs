@@ -1,0 +1,18 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them.
+//!
+//! Artifacts are HLO *text* files produced by `python/compile/aot.py`
+//! (jax → stablehlo → XlaComputation → HLO text; the text parser reassigns
+//! the 64-bit instruction ids that xla_extension 0.5.1's proto path
+//! rejects). Each `<name>.hlo.txt` ships with a `<name>.meta` describing
+//! input/output shapes so the coordinator can validate its feeds.
+//!
+//! Python never runs at request time: after `make artifacts`, the rust
+//! binary is self-contained.
+
+pub mod artifact;
+pub mod client;
+pub mod pad;
+
+pub use artifact::{ArtifactMeta, ArtifactRegistry};
+pub use client::{Executable, Runtime};
+pub use pad::{pad_graph, Bucket, PaddedGraph};

@@ -1,0 +1,264 @@
+//! Graph → static-bucket padding for the AOT artifacts.
+//!
+//! The HLO artifacts have fixed shapes (see python/compile/graph_spec.py
+//! and each artifact's `.meta` bucket note). This module pads a real
+//! heterograph into the bucket: ELL-encodes each adjacency (destination-
+//! major forward + source-major transpose), zero-pads features/labels and
+//! produces the cell mask used by the masked loss.
+
+use crate::graph::{Csr, HeteroGraph};
+use crate::tensor::Matrix;
+use anyhow::{bail, Result};
+
+/// Static bucket description (parsed from the artifact meta's bucket note).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Bucket {
+    pub n_cell: usize,
+    pub n_net: usize,
+    pub w_near: usize,
+    pub w_pins: usize,
+    pub w_pinned: usize,
+    pub hidden: usize,
+    pub k_cell: usize,
+    pub k_net: usize,
+}
+
+impl Bucket {
+    /// Parse from a meta note like
+    /// `bucket n_cell=256 n_net=128 w_near=64 w_pins=16 w_pinned=16 hidden=64 k_cell=8 k_net=8`.
+    pub fn parse_note(note: &str) -> Result<Bucket> {
+        let mut map = std::collections::BTreeMap::new();
+        for tok in note.split_whitespace() {
+            if let Some((k, v)) = tok.split_once('=') {
+                map.insert(k.to_string(), v.parse::<usize>()?);
+            }
+        }
+        let get = |k: &str| -> Result<usize> {
+            map.get(k).copied().ok_or_else(|| anyhow::anyhow!("bucket note missing '{k}'"))
+        };
+        Ok(Bucket {
+            n_cell: get("n_cell")?,
+            n_net: get("n_net")?,
+            w_near: get("w_near")?,
+            w_pins: get("w_pins")?,
+            w_pinned: get("w_pinned")?,
+            hidden: get("hidden")?,
+            k_cell: get("k_cell")?,
+            k_net: get("k_net")?,
+        })
+    }
+}
+
+/// ELL encoding of one adjacency: idx/val as f32 matrices (`rows × width`),
+/// plus how many entries were truncated by the width cap.
+#[derive(Clone, Debug)]
+pub struct Ell {
+    pub idx: Matrix,
+    pub val: Matrix,
+    pub truncated: usize,
+}
+
+/// ELL-encode a CSR into `rows_cap × width`, truncating over-wide rows.
+/// Index slots of padding entries point at row 0 with value 0 (harmless).
+pub fn to_ell(adj: &Csr, rows_cap: usize, width: usize) -> Result<Ell> {
+    if adj.rows > rows_cap {
+        bail!("adjacency rows {} exceed bucket capacity {}", adj.rows, rows_cap);
+    }
+    let mut idx = Matrix::zeros(rows_cap, width);
+    let mut val = Matrix::zeros(rows_cap, width);
+    let mut truncated = 0usize;
+    for r in 0..adj.rows {
+        let range = adj.row_range(r);
+        let deg = range.len();
+        if deg > width {
+            truncated += deg - width;
+        }
+        for (slot, p) in range.take(width).enumerate() {
+            *idx.at_mut(r, slot) = adj.indices[p] as f32;
+            *val.at_mut(r, slot) = adj.values[p];
+        }
+    }
+    Ok(Ell { idx, val, truncated })
+}
+
+/// A heterograph padded into an artifact bucket, ready to feed PJRT.
+#[derive(Clone, Debug)]
+pub struct PaddedGraph {
+    pub bucket: Bucket,
+    /// The 12 graph tensors in `model.GRAPH_KEYS` order.
+    pub graph_tensors: Vec<Matrix>,
+    pub x_cell: Matrix,
+    pub x_net: Matrix,
+    pub y_cell: Matrix,
+    pub cell_mask: Matrix,
+    /// Total ELL truncation across all six encodings.
+    pub truncated: usize,
+    /// Real node counts before padding.
+    pub real_cells: usize,
+    pub real_nets: usize,
+}
+
+/// Pad a graph (with pre-normalised adjacencies) into the bucket.
+///
+/// Normalisation mirrors the training path: GCN-norm on `near`, row mean
+/// on `pins`/`pinned`.
+pub fn pad_graph(g: &HeteroGraph, bucket: Bucket) -> Result<PaddedGraph> {
+    if g.n_cells > bucket.n_cell || g.n_nets > bucket.n_net {
+        bail!(
+            "graph ({} cells, {} nets) exceeds bucket ({}, {})",
+            g.n_cells,
+            g.n_nets,
+            bucket.n_cell,
+            bucket.n_net
+        );
+    }
+    let mut near = g.near.clone();
+    near.normalize_gcn();
+    let mut pinned = g.pinned.clone();
+    pinned.normalize_rows();
+    let mut pins = g.pins.clone();
+    pins.normalize_rows();
+
+    // Forward (destination-major) and transposed (source-major) ELLs.
+    let near_f = to_ell(&near, bucket.n_cell, bucket.w_near)?;
+    let near_t = to_ell(&near.transpose(), bucket.n_cell, bucket.w_near)?;
+    let pinned_f = to_ell(&pinned, bucket.n_cell, bucket.w_pinned)?;
+    let pinned_t = to_ell(&pinned.transpose(), bucket.n_net, bucket.w_pins)?;
+    let pins_f = to_ell(&pins, bucket.n_net, bucket.w_pins)?;
+    let pins_t = to_ell(&pins.transpose(), bucket.n_cell, bucket.w_pinned)?;
+    let truncated = near_f.truncated
+        + near_t.truncated
+        + pinned_f.truncated
+        + pinned_t.truncated
+        + pins_f.truncated
+        + pins_t.truncated;
+
+    let pad_rows = |m: &Matrix, rows: usize| -> Matrix {
+        let mut out = Matrix::zeros(rows, m.cols);
+        for r in 0..m.rows {
+            out.row_mut(r).copy_from_slice(m.row(r));
+        }
+        out
+    };
+    let mut cell_mask = Matrix::zeros(bucket.n_cell, 1);
+    for r in 0..g.n_cells {
+        cell_mask.data[r] = 1.0;
+    }
+    // GRAPH_KEYS order: near idx/val/idx_t/val_t, pinned ..., pins ...
+    let graph_tensors = vec![
+        near_f.idx, near_f.val, near_t.idx, near_t.val,
+        pinned_f.idx, pinned_f.val, pinned_t.idx, pinned_t.val,
+        pins_f.idx, pins_f.val, pins_t.idx, pins_t.val,
+    ];
+    Ok(PaddedGraph {
+        bucket,
+        graph_tensors,
+        x_cell: pad_rows(&g.x_cell, bucket.n_cell),
+        x_net: pad_rows(&g.x_net, bucket.n_net),
+        y_cell: pad_rows(&g.y_cell, bucket.n_cell),
+        cell_mask,
+        truncated,
+        real_cells: g.n_cells,
+        real_nets: g.n_nets,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::{generate_graph, GraphSpec};
+    use crate::util::rng::Rng;
+
+    fn bucket() -> Bucket {
+        Bucket {
+            n_cell: 256,
+            n_net: 128,
+            w_near: 64,
+            w_pins: 16,
+            w_pinned: 16,
+            hidden: 64,
+            k_cell: 8,
+            k_net: 8,
+        }
+    }
+
+    fn small() -> HeteroGraph {
+        let mut rng = Rng::new(1);
+        generate_graph(
+            &GraphSpec {
+                n_cells: 200,
+                n_nets: 100,
+                target_near: 4000,
+                target_pins: 300,
+                d_cell: 16,
+                d_net: 16,
+            },
+            0,
+            &mut rng,
+        )
+    }
+
+    #[test]
+    fn parse_bucket_note() {
+        let b = Bucket::parse_note(
+            "bucket n_cell=256 n_net=128 w_near=64 w_pins=16 w_pinned=16 hidden=64 k_cell=8 k_net=8",
+        )
+        .unwrap();
+        assert_eq!(b, bucket());
+        assert!(Bucket::parse_note("bucket n_cell=1").is_err());
+    }
+
+    #[test]
+    fn ell_round_trip_dense() {
+        let adj = Csr::from_triplets(3, 5, &[(0, 1, 2.0), (0, 4, 3.0), (2, 0, 1.0)]);
+        let ell = to_ell(&adj, 4, 3).unwrap();
+        assert_eq!(ell.truncated, 0);
+        assert_eq!(ell.idx.at(0, 0), 1.0);
+        assert_eq!(ell.val.at(0, 1), 3.0);
+        assert_eq!(ell.val.at(1, 0), 0.0); // empty row padded
+        assert_eq!(ell.val.at(3, 0), 0.0); // padded row
+    }
+
+    #[test]
+    fn ell_truncation_counted() {
+        let t: Vec<_> = (0..10).map(|c| (0usize, c, 1.0f32)).collect();
+        let adj = Csr::from_triplets(1, 10, &t);
+        let ell = to_ell(&adj, 1, 4).unwrap();
+        assert_eq!(ell.truncated, 6);
+    }
+
+    #[test]
+    fn pad_graph_shapes_and_mask() {
+        let g = small();
+        let p = pad_graph(&g, bucket()).unwrap();
+        assert_eq!(p.graph_tensors.len(), 12);
+        assert_eq!((p.x_cell.rows, p.x_cell.cols), (256, 16));
+        assert_eq!((p.x_net.rows, p.x_net.cols), (128, 16));
+        assert_eq!(p.cell_mask.data.iter().filter(|&&v| v == 1.0).count(), 200);
+        assert_eq!(p.real_cells, 200);
+        // Graph tensor shapes match the bucket.
+        assert_eq!((p.graph_tensors[0].rows, p.graph_tensors[0].cols), (256, 64));
+        assert_eq!((p.graph_tensors[8].rows, p.graph_tensors[8].cols), (128, 16));
+    }
+
+    #[test]
+    fn oversize_graph_rejected() {
+        let g = small();
+        let mut b = bucket();
+        b.n_cell = 10;
+        assert!(pad_graph(&g, b).is_err());
+    }
+
+    #[test]
+    fn ell_indices_in_range() {
+        let g = small();
+        let p = pad_graph(&g, bucket()).unwrap();
+        // near idx < n_cell cap; pins idx (cols = cells) < n_cell.
+        for &v in &p.graph_tensors[0].data {
+            assert!(v >= 0.0 && (v as usize) < 256);
+        }
+        for &v in &p.graph_tensors[8].data {
+            assert!(v >= 0.0 && (v as usize) < 256);
+        }
+    }
+}

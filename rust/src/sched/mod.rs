@@ -1,0 +1,22 @@
+//! Parallel subgraph scheduling (paper §3.4, Figs. 9 & 12).
+//!
+//! A circuit graph's three edge-type subgraphs are computationally
+//! independent until the cell-side merge, yet DGL processes them
+//! sequentially (Fig. 9a). This module implements both schedules:
+//!
+//! * **Sequential** — init → forward → backward per subgraph, one after
+//!   another (the baseline timeline).
+//! * **Parallel** — each subgraph gets its own lane: a dedicated CPU thread
+//!   performs initialization (normalisation, CSC transposition, degree
+//!   buckets — the paper's "data loading, memory allocation" phase) and then
+//!   drives its kernels. Lanes are the cudaStream analog; the only barrier
+//!   is the final merge.
+//!
+//! [`timeline`] captures per-lane events to render Fig. 9-style charts and
+//! compute the Fig. 12 savings breakdown.
+
+pub mod pipeline;
+pub mod timeline;
+
+pub use pipeline::{run_e2e_step, E2eTiming, ScheduleMode};
+pub use timeline::{Timeline, TimelineEvent};

@@ -1,0 +1,301 @@
+//! End-to-end subgraph pipeline (paper Fig. 9, Fig. 12's measurement rig).
+//!
+//! One "e2e step" per graph covers everything the paper's end-to-end
+//! numbers include: per-subgraph initialization (adjacency normalisation,
+//! CSC transposition for the backward pass, degree-bucket construction),
+//! the forward aggregation kernel and the backward aggregation kernel for
+//! each of the three edge types, plus the final cell-side merge.
+//!
+//! `ScheduleMode::Sequential` executes lanes one after another (DGL-style);
+//! `ScheduleMode::Parallel` gives each edge type its own thread — the
+//! multi-threaded CPU init + concurrent kernel launch of §3.4.
+
+use super::timeline::Timeline;
+use crate::graph::{Csr, HeteroGraph};
+use crate::sparse::{
+    dr_spmm, dr_spmm_bwd, drelu, spmm_csr, spmm_csr_bwd, spmm_gnna, spmm_gnna_bwd, DegreeBuckets,
+};
+use crate::nn::MessageEngine;
+use crate::tensor::Matrix;
+use crate::util::rng::Rng;
+
+/// Lane scheduling policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScheduleMode {
+    Sequential,
+    Parallel,
+}
+
+impl ScheduleMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScheduleMode::Sequential => "sequential",
+            ScheduleMode::Parallel => "parallel",
+        }
+    }
+}
+
+/// Timing result of one e2e step.
+#[derive(Debug)]
+pub struct E2eTiming {
+    pub mode: ScheduleMode,
+    pub engine: String,
+    /// Wall-clock seconds for the full step.
+    pub total: f64,
+    /// Σ of per-lane busy time (sequential-equivalent work).
+    pub busy: f64,
+    pub timeline: Timeline,
+    /// Per-lane (init, forward, backward) seconds.
+    pub lane_phases: Vec<(f64, f64, f64)>,
+}
+
+struct LaneInput<'a> {
+    /// Pre-normalised adjacency (normalisation/CSC happen once per graph
+    /// at dataset preprocessing, like the paper's pipeline — they are NOT
+    /// part of the per-step cost).
+    adj: &'a Csr,
+    csc: &'a crate::graph::Csc,
+    x_src: &'a Matrix,
+    /// Pre-sparsified source (Dr engine): D-ReLU runs once per node type
+    /// before the lanes (paper Fig. 5), its CBSR shared by all consumers.
+    cbsr: Option<&'a crate::graph::Cbsr>,
+    dy: &'a Matrix,
+}
+
+/// Everything one lane does per step: init (the paper's "data loading,
+/// memory allocation, host-to-device transfer" — modeled as a deep copy of
+/// the subgraph into lane-local memory + schedule construction) → forward
+/// kernel → backward kernel.
+fn run_lane(
+    lane_id: usize,
+    input: &LaneInput<'_>,
+    engine: &MessageEngine,
+    tl: &Timeline,
+) -> ((f64, f64, f64), Matrix) {
+    let t0 = std::time::Instant::now();
+    let (adj, csc, buckets) = tl.record(lane_id, "init", || {
+        // Lane-local copies = the UVM transfer analog of Fig. 9's Init.
+        let adj = input.adj.clone();
+        let csc = input.csc.clone();
+        let buckets = DegreeBuckets::build(&adj);
+        (adj, csc, buckets)
+    });
+    let t_init = t0.elapsed().as_secs_f64();
+
+    // --- forward kernel. Baselines apply the plain-ReLU activation the
+    // DGL pipeline runs before aggregation; the DR path replaces it with
+    // D-ReLU (paper §3.1) — both sides pay their activation here so the
+    // comparison matches the paper's end-to-end accounting.
+    let t1 = std::time::Instant::now();
+    let h = tl.record(lane_id, "fwd", || match engine {
+        MessageEngine::Csr => spmm_csr(&adj, input.x_src),
+        MessageEngine::Gnna(cfg) => spmm_gnna(&adj, input.x_src, cfg),
+        MessageEngine::Dr { .. } => {
+            dr_spmm(&adj, input.cbsr.expect("DR lane needs a CBSR"), &buckets)
+        }
+    });
+    let t_fwd = t1.elapsed().as_secs_f64();
+
+    // --- backward kernel.
+    let t2 = std::time::Instant::now();
+    tl.record(lane_id, "bwd", || match engine {
+        MessageEngine::Csr => {
+            let _ = spmm_csr_bwd(&csc, input.dy);
+        }
+        MessageEngine::Gnna(cfg) => {
+            let _ = spmm_gnna_bwd(&csc, input.dy, cfg);
+        }
+        MessageEngine::Dr { .. } => {
+            let _ = dr_spmm_bwd(&csc, input.dy, input.cbsr.unwrap());
+        }
+    });
+    let t_bwd = t2.elapsed().as_secs_f64();
+    ((t_init, t_fwd, t_bwd), h)
+}
+
+/// Run one end-to-end step over a graph's three subgraphs.
+///
+/// `dim` is the embedding width; random embeddings/gradients stand in for
+/// the model state (the kernels are data-oblivious).
+pub fn run_e2e_step(
+    g: &HeteroGraph,
+    dim: usize,
+    engine: &MessageEngine,
+    mode: ScheduleMode,
+    seed: u64,
+) -> E2eTiming {
+    let mut rng = Rng::new(seed);
+    let mut x_cell = Matrix::randn(g.n_cells, dim, 1.0, &mut rng);
+    let mut x_net = Matrix::randn(g.n_nets, dim, 1.0, &mut rng);
+    let dy_cell = Matrix::randn(g.n_cells, dim, 1.0, &mut rng);
+    let dy_net = Matrix::randn(g.n_nets, dim, 1.0, &mut rng);
+
+    // Per-graph preprocessing (normalisation + CSC transposition) — done
+    // once per dataset like paper Alg. 1 stage 1; excluded from the step.
+    let mut near = g.near.clone();
+    near.normalize_gcn();
+    let mut pinned = g.pinned.clone();
+    pinned.normalize_rows();
+    let mut pins = g.pins.clone();
+    pins.normalize_rows();
+    let (near_csc, pinned_csc, pins_csc) = (near.to_csc(), pinned.to_csc(), pins.to_csc());
+
+    let tl = Timeline::new();
+    let t0 = std::time::Instant::now();
+
+    // Activation stage (paper Fig. 5): baselines run plain ReLU, the DR
+    // engine runs D-ReLU once per node type — the CBSR (values + indices)
+    // is then shared by every consuming edge lane, forward and backward.
+    let (cbsr_cell, cbsr_net) = tl.record(3, "act", || match engine {
+        MessageEngine::Dr { k_cell, k_net } => {
+            let kc = (*k_cell).clamp(1, dim);
+            let kn = (*k_net).clamp(1, dim);
+            (Some(drelu(&x_cell, kc)), Some(drelu(&x_net, kn)))
+        }
+        _ => {
+            x_cell.map_inplace(|v| v.max(0.0));
+            x_net.map_inplace(|v| v.max(0.0));
+            (None, None)
+        }
+    });
+
+    let inputs = [
+        LaneInput {
+            adj: &near,
+            csc: &near_csc,
+            x_src: &x_cell,
+            cbsr: cbsr_cell.as_ref(),
+            dy: &dy_cell,
+        },
+        LaneInput {
+            adj: &pinned,
+            csc: &pinned_csc,
+            x_src: &x_net,
+            cbsr: cbsr_net.as_ref(),
+            dy: &dy_cell,
+        },
+        LaneInput {
+            adj: &pins,
+            csc: &pins_csc,
+            x_src: &x_cell,
+            cbsr: cbsr_cell.as_ref(),
+            dy: &dy_net,
+        },
+    ];
+    let mut lane_phases = vec![(0.0, 0.0, 0.0); 3];
+    let mut outputs: Vec<Matrix> = Vec::with_capacity(3);
+    match mode {
+        ScheduleMode::Sequential => {
+            for (i, input) in inputs.iter().enumerate() {
+                let (phases, h) = run_lane(i, input, engine, &tl);
+                lane_phases[i] = phases;
+                outputs.push(h);
+            }
+        }
+        ScheduleMode::Parallel => {
+            let results = std::thread::scope(|scope| {
+                let handles: Vec<_> = inputs
+                    .iter()
+                    .enumerate()
+                    .map(|(i, input)| {
+                        let tl = &tl;
+                        let engine = engine.clone();
+                        scope.spawn(move || run_lane(i, input, &engine, tl))
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect::<Vec<_>>()
+            });
+            for (i, (phases, h)) in results.into_iter().enumerate() {
+                lane_phases[i] = phases;
+                outputs.push(h);
+            }
+        }
+    }
+    // Final merge (eq. 8) — the only cross-lane dependency.
+    let (merged, _mask) = outputs[0].max_merge(&outputs[1]);
+    std::hint::black_box(&merged);
+    let total = t0.elapsed().as_secs_f64();
+    E2eTiming {
+        mode,
+        engine: engine.name().to_string(),
+        total,
+        busy: tl.busy_time(),
+        timeline: tl,
+        lane_phases,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::{generate_graph, GraphSpec};
+
+    fn test_graph(scale: usize) -> HeteroGraph {
+        let mut rng = Rng::new(3);
+        generate_graph(
+            &GraphSpec {
+                n_cells: scale,
+                n_nets: scale / 2,
+                target_near: scale * 30,
+                target_pins: scale,
+                d_cell: 8,
+                d_net: 8,
+            },
+            0,
+            &mut rng,
+        )
+    }
+
+    #[test]
+    fn both_modes_complete_all_engines() {
+        let g = test_graph(300);
+        for engine in [
+            MessageEngine::Csr,
+            MessageEngine::Gnna(Default::default()),
+            MessageEngine::dr(4, 4),
+        ] {
+            for mode in [ScheduleMode::Sequential, ScheduleMode::Parallel] {
+                let t = run_e2e_step(&g, 16, &engine, mode, 7);
+                assert!(t.total > 0.0);
+                assert_eq!(t.lane_phases.len(), 3);
+                assert_eq!(t.timeline.events().len(), 10, "act + 3 lanes × 3 phases");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_overlaps_lanes() {
+        if crate::util::pool::num_threads() < 2 {
+            // Single-core box: lanes interleave but cannot truly overlap.
+            return;
+        }
+        // Take the best overlap of several attempts: the unit-test runner
+        // itself runs tests concurrently, so a single run can be starved.
+        let g = test_graph(1500);
+        let best = (0..4)
+            .map(|r| {
+                run_e2e_step(&g, 64, &MessageEngine::Csr, ScheduleMode::Parallel, 7 + r)
+                    .timeline
+                    .overlap_factor()
+            })
+            .fold(0.0, f64::max);
+        assert!(best > 1.1, "best overlap factor {best}");
+    }
+
+    #[test]
+    fn sequential_busy_approximates_total() {
+        let g = test_graph(800);
+        let t = run_e2e_step(&g, 32, &MessageEngine::Csr, ScheduleMode::Sequential, 7);
+        // Sequential: busy time ≈ makespan (no overlap).
+        assert!(t.timeline.overlap_factor() < 1.15, "{}", t.timeline.overlap_factor());
+    }
+
+    #[test]
+    fn phases_positive() {
+        let g = test_graph(200);
+        let t = run_e2e_step(&g, 16, &MessageEngine::dr(4, 4), ScheduleMode::Sequential, 9);
+        for (i, f, b) in &t.lane_phases {
+            assert!(*i > 0.0 && *f >= 0.0 && *b >= 0.0);
+        }
+    }
+}

@@ -1,0 +1,150 @@
+//! Per-lane event capture and ASCII rendering (paper Fig. 9).
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// One recorded span.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TimelineEvent {
+    pub lane: usize,
+    pub label: String,
+    /// Seconds relative to the timeline origin.
+    pub start: f64,
+    pub end: f64,
+}
+
+/// Thread-safe event collector.
+#[derive(Debug)]
+pub struct Timeline {
+    origin: Instant,
+    events: Mutex<Vec<TimelineEvent>>,
+}
+
+impl Default for Timeline {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Timeline {
+    pub fn new() -> Timeline {
+        Timeline { origin: Instant::now(), events: Mutex::new(Vec::new()) }
+    }
+
+    /// Record a span around a closure.
+    pub fn record<T>(&self, lane: usize, label: &str, f: impl FnOnce() -> T) -> T {
+        let start = self.origin.elapsed().as_secs_f64();
+        let out = f();
+        let end = self.origin.elapsed().as_secs_f64();
+        self.events.lock().unwrap().push(TimelineEvent {
+            lane,
+            label: label.to_string(),
+            start,
+            end,
+        });
+        out
+    }
+
+    pub fn events(&self) -> Vec<TimelineEvent> {
+        let mut e = self.events.lock().unwrap().clone();
+        e.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+        e
+    }
+
+    /// Wall-clock makespan (max end over events).
+    pub fn makespan(&self) -> f64 {
+        self.events.lock().unwrap().iter().map(|e| e.end).fold(0.0, f64::max)
+    }
+
+    /// Sum of event durations (the sequential-equivalent busy time).
+    pub fn busy_time(&self) -> f64 {
+        self.events.lock().unwrap().iter().map(|e| e.end - e.start).sum()
+    }
+
+    /// Overlap factor = busy / makespan; 1.0 ⇒ fully serial, `L` ⇒ perfect
+    /// overlap across `L` lanes.
+    pub fn overlap_factor(&self) -> f64 {
+        let m = self.makespan();
+        if m <= 0.0 {
+            return 1.0;
+        }
+        self.busy_time() / m
+    }
+
+    /// ASCII chart: one row per lane, `width` columns spanning the makespan.
+    pub fn render(&self, width: usize) -> String {
+        let events = self.events();
+        if events.is_empty() {
+            return String::new();
+        }
+        let makespan = self.makespan().max(1e-12);
+        let n_lanes = events.iter().map(|e| e.lane).max().unwrap() + 1;
+        let mut rows = vec![vec![' '; width]; n_lanes];
+        for e in &events {
+            let s = ((e.start / makespan) * width as f64) as usize;
+            let t = (((e.end / makespan) * width as f64).ceil() as usize).clamp(s + 1, width);
+            let c = e.label.chars().next().unwrap_or('#');
+            for cell in rows[e.lane][s.min(width - 1)..t].iter_mut() {
+                *cell = c;
+            }
+        }
+        let mut out = String::new();
+        for (lane, row) in rows.iter().enumerate() {
+            out.push_str(&format!("lane {lane}: "));
+            out.extend(row.iter());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn records_spans_in_order() {
+        let tl = Timeline::new();
+        tl.record(0, "init", || std::thread::sleep(Duration::from_millis(2)));
+        tl.record(0, "fwd", || std::thread::sleep(Duration::from_millis(2)));
+        let events = tl.events();
+        assert_eq!(events.len(), 2);
+        assert!(events[0].end <= events[1].start + 1e-4);
+        assert!(tl.makespan() >= 0.004);
+    }
+
+    #[test]
+    fn overlap_factor_parallel_spans() {
+        let tl = Timeline::new();
+        std::thread::scope(|s| {
+            for lane in 0..3 {
+                let tl = &tl;
+                s.spawn(move || {
+                    tl.record(lane, "work", || std::thread::sleep(Duration::from_millis(8)));
+                });
+            }
+        });
+        // Three 8ms spans overlapping: busy ≈ 24ms, makespan ≈ 8–12ms.
+        assert!(tl.overlap_factor() > 1.5, "overlap {}", tl.overlap_factor());
+    }
+
+    #[test]
+    fn render_contains_lanes() {
+        let tl = Timeline::new();
+        tl.record(0, "a", || {});
+        tl.record(1, "b", || std::thread::sleep(Duration::from_millis(1)));
+        let chart = tl.render(40);
+        assert!(chart.contains("lane 0:"));
+        assert!(chart.contains("lane 1:"));
+        assert!(chart.contains('b'));
+    }
+
+    #[test]
+    fn empty_timeline() {
+        let tl = Timeline::new();
+        assert_eq!(tl.render(10), "");
+        assert_eq!(tl.makespan(), 0.0);
+        assert_eq!(tl.overlap_factor(), 1.0);
+    }
+}

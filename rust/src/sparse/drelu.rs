@@ -1,0 +1,197 @@
+//! D-ReLU — row-wise dynamic top-k activation (paper §3.1, eqs. 2–3).
+//!
+//! For each embedding row, the threshold `th_i = min(topk(X_i, k))` keeps
+//! exactly the k largest entries (ties broken by column order) and zeroes
+//! the rest, producing a [`Cbsr`] whose *balanced* sparsity the DR-SpMM
+//! kernels exploit. Unlike ReLU, negative values can survive when the row
+//! has fewer than k positive entries — D-ReLU is a ranking filter, not a
+//! sign filter; its job is workload regularisation.
+
+use crate::graph::Cbsr;
+use crate::tensor::Matrix;
+use crate::util::pool::{parallel_for_chunks, SendPtr};
+
+/// Forward: compress `x` (n×D) to exactly-k-per-row CBSR.
+pub fn drelu(x: &Matrix, k: usize) -> Cbsr {
+    let (n, dim) = (x.rows, x.cols);
+    assert!(k > 0 && k <= dim, "drelu: need 0 < k ≤ D (k={k}, D={dim})");
+    let mut out = Cbsr::zeros(n, dim, k);
+    let vptr = SendPtr(out.values.as_mut_ptr());
+    let iptr = SendPtr(out.indices.as_mut_ptr());
+    parallel_for_chunks(n, |lo, hi| {
+        let vp = vptr;
+        let ip = iptr;
+        // Scratch buffers reused across the chunk's rows.
+        let mut heap: Vec<(f32, u32)> = Vec::with_capacity(k);
+        for r in lo..hi {
+            let row = x.row(r);
+            select_topk(row, k, &mut heap);
+            // SAFETY: rows [lo,hi) exclusively owned by this worker.
+            let vals = unsafe { std::slice::from_raw_parts_mut(vp.0.add(r * k), k) };
+            let idxs = unsafe { std::slice::from_raw_parts_mut(ip.0.add(r * k), k) };
+            for (t, &(v, c)) in heap.iter().enumerate() {
+                vals[t] = v;
+                idxs[t] = c;
+            }
+        }
+    });
+    debug_assert!(out.validate().is_ok());
+    out
+}
+
+/// Select the k largest entries of `row` (ties → smaller column index wins),
+/// output sorted by column index ascending into `out`.
+///
+/// Implementation (§Perf L3-5): each (value, column) pair is packed into one
+/// `u64` key — the float mapped to a total order, inverted for descending
+/// value, with the column in the low bits for the tiebreak — so a single
+/// `select_nth_unstable` (O(D) quickselect) partitions the top-k. ~4×
+/// faster than the earlier streaming min-heap on D = 64–128 rows.
+fn select_topk(row: &[f32], k: usize, out: &mut Vec<(f32, u32)>) {
+    out.clear();
+    if k >= row.len() {
+        out.extend(row.iter().enumerate().map(|(c, &v)| (v, c as u32)));
+        return;
+    }
+    // Monotone map f32 → u32 (IEEE total order), inverted for descending.
+    #[inline]
+    fn desc_key(v: f32, col: u32) -> u64 {
+        let bits = v.to_bits();
+        let mono = if bits & 0x8000_0000 != 0 { !bits } else { bits | 0x8000_0000 };
+        (((!mono) as u64) << 32) | col as u64
+    }
+    KEYS.with(|cell| {
+        let keys = &mut *cell.borrow_mut();
+        keys.clear();
+        keys.extend(row.iter().enumerate().map(|(c, &v)| desc_key(v, c as u32)));
+        keys.select_nth_unstable(k - 1);
+        let top = &mut keys[..k];
+        top.sort_unstable_by_key(|&key| (key & 0xFFFF_FFFF) as u32);
+        out.extend(top.iter().map(|&key| {
+            let c = (key & 0xFFFF_FFFF) as u32;
+            (row[c as usize], c)
+        }));
+    });
+}
+
+thread_local! {
+    /// Per-thread scratch for select_topk (avoids a per-row allocation).
+    static KEYS: std::cell::RefCell<Vec<u64>> = const { std::cell::RefCell::new(Vec::new()) };
+}
+
+/// Backward: gradients flow only through the kept positions (the CBSR mask
+/// preserved from the forward pass). Given dense upstream `dy` (n×D) and
+/// the forward-pass CBSR, returns the dense gradient w.r.t. the D-ReLU
+/// input (n×D, zero outside kept indices).
+pub fn drelu_backward(dy: &Matrix, fwd: &Cbsr) -> Matrix {
+    assert_eq!(dy.rows, fwd.n);
+    assert_eq!(dy.cols, fwd.dim);
+    let mut dx = Matrix::zeros(dy.rows, dy.cols);
+    let ptr = SendPtr(dx.data.as_mut_ptr());
+    let d = dy.cols;
+    parallel_for_chunks(dy.rows, |lo, hi| {
+        let dp = ptr;
+        for r in lo..hi {
+            let dxrow = unsafe { std::slice::from_raw_parts_mut(dp.0.add(r * d), d) };
+            let dyrow = dy.row(r);
+            for &c in fwd.row_indices(r) {
+                dxrow[c as usize] = dyrow[c as usize];
+            }
+        }
+    });
+    dx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn keeps_exactly_k_largest() {
+        let x = Matrix::from_vec(1, 6, vec![0.5, -1.0, 3.0, 2.0, -0.1, 1.0]);
+        let c = drelu(&x, 3);
+        assert_eq!(c.row_indices(0), &[2, 3, 5]); // values 3.0, 2.0, 1.0
+        assert_eq!(c.row_values(0), &[3.0, 2.0, 1.0]);
+    }
+
+    #[test]
+    fn negative_values_survive_when_needed() {
+        let x = Matrix::from_vec(1, 4, vec![-1.0, -2.0, -3.0, -4.0]);
+        let c = drelu(&x, 2);
+        assert_eq!(c.row_indices(0), &[0, 1]);
+        assert_eq!(c.row_values(0), &[-1.0, -2.0]);
+    }
+
+    #[test]
+    fn ties_prefer_earlier_columns() {
+        let x = Matrix::from_vec(1, 5, vec![1.0, 1.0, 1.0, 1.0, 1.0]);
+        let c = drelu(&x, 2);
+        assert_eq!(c.row_indices(0), &[0, 1]);
+    }
+
+    #[test]
+    fn k_equals_dim_is_identity() {
+        let mut rng = Rng::new(1);
+        let x = Matrix::randn(7, 5, 1.0, &mut rng);
+        let c = drelu(&x, 5);
+        assert_eq!(c.to_dense().data, x.data);
+    }
+
+    #[test]
+    fn matches_sort_reference_on_random_rows() {
+        let mut rng = Rng::new(2);
+        for _ in 0..50 {
+            let dim = rng.range(2, 40);
+            let k = rng.range(1, dim + 1);
+            let x = Matrix::randn(3, dim, 1.0, &mut rng);
+            let c = drelu(&x, k);
+            c.validate().unwrap();
+            for r in 0..3 {
+                // Reference: threshold = k-th largest value.
+                let mut sorted: Vec<f32> = x.row(r).to_vec();
+                sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+                let th = sorted[k - 1];
+                // All kept values ≥ th, and sum of kept == sum of top-k.
+                let kept_sum: f32 = c.row_values(r).iter().sum();
+                let top_sum: f32 = sorted[..k].iter().sum();
+                assert!((kept_sum - top_sum).abs() < 1e-4, "row {r}: {kept_sum} vs {top_sum}");
+                assert!(c.row_values(r).iter().all(|&v| v >= th - 1e-6));
+            }
+        }
+    }
+
+    #[test]
+    fn dense_round_trip_is_masked_input() {
+        let mut rng = Rng::new(3);
+        let x = Matrix::randn(10, 16, 1.0, &mut rng);
+        let c = drelu(&x, 4);
+        let d = c.to_dense();
+        for r in 0..10 {
+            for col in 0..16 {
+                let v = d.at(r, col);
+                if v != 0.0 {
+                    assert_eq!(v, x.at(r, col));
+                }
+            }
+            assert_eq!(d.row(r).iter().filter(|&&v| v != 0.0).count().min(4), 4.min(4));
+        }
+    }
+
+    #[test]
+    fn backward_masks_gradient() {
+        let x = Matrix::from_vec(2, 4, vec![5.0, 1.0, 3.0, 0.0, 0.0, 2.0, 9.0, 4.0]);
+        let c = drelu(&x, 2);
+        let dy = Matrix::ones(2, 4);
+        let dx = drelu_backward(&dy, &c);
+        // Row 0 keeps cols {0, 2}; row 1 keeps cols {2, 3}.
+        assert_eq!(dx.row(0), &[1.0, 0.0, 1.0, 0.0]);
+        assert_eq!(dx.row(1), &[0.0, 0.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "drelu")]
+    fn zero_k_panics() {
+        drelu(&Matrix::ones(1, 4), 0);
+    }
+}

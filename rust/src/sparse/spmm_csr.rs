@@ -1,0 +1,144 @@
+//! cuSPARSE-analog baseline SpMM.
+//!
+//! The algorithm shape of `cusparseSpMM` with CSR/row-major operands:
+//! one output row per work unit, dense `D`-wide inner accumulation, static
+//! row→worker chunking. No sparsity awareness in the embedding, no degree
+//! awareness in the schedule — exactly what the paper baselines against.
+
+use crate::graph::{Csc, Csr};
+use crate::tensor::Matrix;
+use crate::util::pool::{parallel_for_chunks, SendPtr};
+
+/// Forward: `Y = A · X`, A is `M×N` CSR, X is `N×D` dense, Y is `M×D`.
+pub fn spmm_csr(a: &Csr, x: &Matrix) -> Matrix {
+    assert_eq!(a.cols, x.rows, "spmm_csr: A cols {} vs X rows {}", a.cols, x.rows);
+    let d = x.cols;
+    let mut y = Matrix::zeros(a.rows, d);
+    let y_ptr = SendPtr(y.data.as_mut_ptr());
+    parallel_for_chunks(a.rows, |lo, hi| {
+        let yp = y_ptr;
+        for i in lo..hi {
+            // SAFETY: row i written only by this worker's chunk.
+            let yrow = unsafe { std::slice::from_raw_parts_mut(yp.0.add(i * d), d) };
+            for p in a.row_range(i) {
+                let j = a.indices[p] as usize;
+                let v = a.values[p];
+                let xrow = x.row(j);
+                for (yv, xv) in yrow.iter_mut().zip(xrow) {
+                    *yv += v * xv;
+                }
+            }
+        }
+    });
+    y
+}
+
+/// Backward: `dX = Aᵀ · dY` via CSC traversal (column-major like cuSPARSE
+/// would run on the transposed descriptor). dY is `M×D`, dX is `N×D`.
+pub fn spmm_csr_bwd(a_csc: &Csc, dy: &Matrix) -> Matrix {
+    assert_eq!(a_csc.rows, dy.rows, "spmm_csr_bwd: A rows {} vs dY rows {}", a_csc.rows, dy.rows);
+    let d = dy.cols;
+    let mut dx = Matrix::zeros(a_csc.cols, d);
+    let dx_ptr = SendPtr(dx.data.as_mut_ptr());
+    parallel_for_chunks(a_csc.cols, |lo, hi| {
+        let dp = dx_ptr;
+        for j in lo..hi {
+            let dxrow = unsafe { std::slice::from_raw_parts_mut(dp.0.add(j * d), d) };
+            for p in a_csc.col_range(j) {
+                let i = a_csc.indices[p] as usize;
+                let v = a_csc.values[p];
+                let dyrow = dy.row(i);
+                for (o, g) in dxrow.iter_mut().zip(dyrow) {
+                    *o += v * g;
+                }
+            }
+        }
+    });
+    dx
+}
+
+/// Naive dense reference (tests): `Y = dense(A) · X`.
+pub fn spmm_dense_ref(a: &Csr, x: &Matrix) -> Matrix {
+    assert_eq!(a.cols, x.rows);
+    let ad = a.to_dense();
+    let mut y = Matrix::zeros(a.rows, x.cols);
+    for i in 0..a.rows {
+        for kk in 0..a.cols {
+            let v = ad[i * a.cols + kk];
+            if v == 0.0 {
+                continue;
+            }
+            for c in 0..x.cols {
+                *y.at_mut(i, c) += v * x.at(kk, c);
+            }
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::math::assert_allclose;
+    use crate::util::rng::Rng;
+
+    fn random_csr(rows: usize, cols: usize, avg_deg: usize, rng: &mut Rng) -> Csr {
+        let mut t = Vec::new();
+        for r in 0..rows {
+            let deg = rng.range(0, avg_deg * 2 + 1);
+            for _ in 0..deg {
+                t.push((r, rng.below(cols), rng.uniform(0.5, 1.5)));
+            }
+        }
+        Csr::from_triplets(rows, cols, &t)
+    }
+
+    #[test]
+    fn forward_matches_dense_reference() {
+        let mut rng = Rng::new(1);
+        for (m, n, d) in [(5, 7, 3), (40, 30, 16), (100, 100, 64)] {
+            let a = random_csr(m, n, 4, &mut rng);
+            let x = Matrix::randn(n, d, 1.0, &mut rng);
+            let fast = spmm_csr(&a, &x);
+            let slow = spmm_dense_ref(&a, &x);
+            assert_allclose(&fast.data, &slow.data, 1e-4, 1e-4);
+        }
+    }
+
+    #[test]
+    fn backward_equals_transpose_forward() {
+        let mut rng = Rng::new(2);
+        let a = random_csr(30, 20, 3, &mut rng);
+        let dy = Matrix::randn(30, 8, 1.0, &mut rng);
+        let via_csc = spmm_csr_bwd(&a.to_csc(), &dy);
+        let via_t = spmm_csr(&a.transpose(), &dy);
+        assert_allclose(&via_csc.data, &via_t.data, 1e-4, 1e-4);
+    }
+
+    #[test]
+    fn empty_rows_produce_zero_rows() {
+        let a = Csr::from_triplets(3, 2, &[(0, 0, 2.0)]);
+        let x = Matrix::ones(2, 4);
+        let y = spmm_csr(&a, &x);
+        assert_eq!(y.row(0), &[2.0, 2.0, 2.0, 2.0]);
+        assert_eq!(y.row(1), &[0.0; 4]);
+        assert_eq!(y.row(2), &[0.0; 4]);
+    }
+
+    #[test]
+    fn rectangular_hetero_shapes() {
+        // pins-like: more columns (cells) than rows (nets).
+        let mut rng = Rng::new(3);
+        let a = random_csr(10, 50, 3, &mut rng);
+        let x = Matrix::randn(50, 6, 1.0, &mut rng);
+        let y = spmm_csr(&a, &x);
+        assert_eq!((y.rows, y.cols), (10, 6));
+        assert_allclose(&y.data, &spmm_dense_ref(&a, &x).data, 1e-4, 1e-4);
+    }
+
+    #[test]
+    #[should_panic(expected = "spmm_csr")]
+    fn shape_mismatch_panics() {
+        spmm_csr(&Csr::from_triplets(2, 3, &[]), &Matrix::zeros(4, 2));
+    }
+}

@@ -1,0 +1,185 @@
+//! Warp-level scheduling model (paper Alg. 1 stages 1–2).
+//!
+//! The CUDA kernel assigns one warp per neighbor group (NG) and partitions
+//! each warp into `⌈32/K⌉` parts so that small K lets one warp serve several
+//! neighbors at once. On CPU the execution resource is a worker thread with
+//! SIMD lanes; the *scheduling policy* carries over:
+//!
+//! * rows are classified into degree buckets (low / medium / high — the
+//!   paper's three NG classes),
+//! * within a bucket, rows are dispatched dynamically with a grain inversely
+//!   proportional to the bucket's work so "evil rows" (§2.3) cannot tail-lag
+//!   a statically-chunked worker.
+
+use crate::graph::Csr;
+
+/// CUDA warp width — kept as the unit of the lane model.
+pub const WARP_SIZE: usize = 32;
+
+/// The paper's three neighbor-group classes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DegreeClass {
+    Low,
+    Medium,
+    High,
+}
+
+impl DegreeClass {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DegreeClass::Low => "low",
+            DegreeClass::Medium => "medium",
+            DegreeClass::High => "high",
+        }
+    }
+}
+
+/// Degree-bucketed row schedule.
+#[derive(Clone, Debug)]
+pub struct DegreeBuckets {
+    /// Row ids ordered low-bucket first, then medium, then high.
+    pub order: Vec<u32>,
+    /// (start offset in `order`, dispatch grain) per class.
+    pub low: (usize, usize),
+    pub medium: (usize, usize),
+    pub high: (usize, usize),
+    /// Degree thresholds used: deg < t_low → Low, deg < t_high → Medium.
+    pub t_low: usize,
+    pub t_high: usize,
+}
+
+impl DegreeBuckets {
+    /// Default thresholds: low < 8, medium < 64, high ≥ 64 — chosen so the
+    /// `pins`/`pinned` matrices land in Low and `near`'s hubs in High.
+    pub fn build(adj: &Csr) -> DegreeBuckets {
+        Self::build_with(adj, 8, 64)
+    }
+
+    pub fn build_with(adj: &Csr, t_low: usize, t_high: usize) -> DegreeBuckets {
+        assert!(t_low < t_high);
+        let mut low = Vec::new();
+        let mut med = Vec::new();
+        let mut high = Vec::new();
+        for r in 0..adj.rows {
+            let d = adj.degree(r);
+            if d < t_low {
+                low.push(r as u32);
+            } else if d < t_high {
+                med.push(r as u32);
+            } else {
+                high.push(r as u32);
+            }
+        }
+        let mut order = Vec::with_capacity(adj.rows);
+        let lo_start = 0;
+        order.extend_from_slice(&low);
+        let med_start = order.len();
+        order.extend_from_slice(&med);
+        let high_start = order.len();
+        order.extend_from_slice(&high);
+        // Grains: cheap rows dispatched in large blocks, evil rows one by one.
+        DegreeBuckets {
+            order,
+            low: (lo_start, 256),
+            medium: (med_start, 16),
+            high: (high_start, 1),
+            t_low,
+            t_high,
+        }
+    }
+
+    pub fn classify(&self, degree: usize) -> DegreeClass {
+        if degree < self.t_low {
+            DegreeClass::Low
+        } else if degree < self.t_high {
+            DegreeClass::Medium
+        } else {
+            DegreeClass::High
+        }
+    }
+
+    /// Number of rows in each class (low, medium, high).
+    pub fn counts(&self) -> (usize, usize, usize) {
+        (
+            self.medium.0 - self.low.0,
+            self.high.0 - self.medium.0,
+            self.order.len() - self.high.0,
+        )
+    }
+
+    /// Warp partition factor for a given K (paper: a warp splits into
+    /// ⌈32/K⌉ parts, each serving one neighbor's K surviving features).
+    pub fn partition_factor(k: usize) -> usize {
+        WARP_SIZE.div_ceil(k.max(1))
+    }
+
+    /// Iterate (class, rows-slice, grain).
+    pub fn segments(&self) -> [(DegreeClass, &[u32], usize); 3] {
+        let (l, m, h) = (self.low.0, self.medium.0, self.high.0);
+        [
+            (DegreeClass::Low, &self.order[l..m], self.low.1),
+            (DegreeClass::Medium, &self.order[m..h], self.medium.1),
+            (DegreeClass::High, &self.order[h..], self.high.1),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn graph_with_degrees(degs: &[usize]) -> Csr {
+        let cols = *degs.iter().max().unwrap_or(&1) + 1;
+        let mut t = Vec::new();
+        for (r, &d) in degs.iter().enumerate() {
+            for c in 0..d {
+                t.push((r, c, 1.0));
+            }
+        }
+        Csr::from_triplets(degs.len(), cols, &t)
+    }
+
+    #[test]
+    fn buckets_partition_all_rows() {
+        let adj = graph_with_degrees(&[2, 3, 10, 20, 100, 7, 64]);
+        let b = DegreeBuckets::build(&adj);
+        let (l, m, h) = b.counts();
+        assert_eq!(l + m + h, 7);
+        assert_eq!(l, 3); // degrees 2, 3, 7
+        assert_eq!(m, 2); // 10, 20
+        assert_eq!(h, 2); // 100, 64
+        let mut sorted = b.order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..7).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn classification_matches_thresholds() {
+        let adj = graph_with_degrees(&[1]);
+        let b = DegreeBuckets::build_with(&adj, 4, 32);
+        assert_eq!(b.classify(3), DegreeClass::Low);
+        assert_eq!(b.classify(4), DegreeClass::Medium);
+        assert_eq!(b.classify(31), DegreeClass::Medium);
+        assert_eq!(b.classify(32), DegreeClass::High);
+    }
+
+    #[test]
+    fn partition_factor_table() {
+        // ⌈32/K⌉ — the paper's warp split counts.
+        assert_eq!(DegreeBuckets::partition_factor(2), 16);
+        assert_eq!(DegreeBuckets::partition_factor(8), 4);
+        assert_eq!(DegreeBuckets::partition_factor(32), 1);
+        assert_eq!(DegreeBuckets::partition_factor(64), 1);
+    }
+
+    #[test]
+    fn segments_cover_order() {
+        let adj = graph_with_degrees(&[2, 50, 100, 3]);
+        let b = DegreeBuckets::build(&adj);
+        let total: usize = b.segments().iter().map(|(_, s, _)| s.len()).sum();
+        assert_eq!(total, 4);
+        // grains decrease with degree class
+        let segs = b.segments();
+        assert!(segs[0].2 > segs[1].2 && segs[1].2 > segs[2].2);
+    }
+}

@@ -1,0 +1,299 @@
+//! Row-major dense matrix.
+
+use crate::util::rng::Rng;
+
+/// Dense row-major `rows × cols` f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn ones(rows: usize, cols: usize) -> Matrix {
+        Matrix { rows, cols, data: vec![1.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Matrix {
+        assert_eq!(data.len(), rows * cols, "data length must be rows*cols");
+        Matrix { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Matrix {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    /// Standard-normal entries scaled by `std`.
+    pub fn randn(rows: usize, cols: usize, std: f32, rng: &mut Rng) -> Matrix {
+        let mut m = Matrix::zeros(rows, cols);
+        for x in m.data.iter_mut() {
+            *x = rng.normal() * std;
+        }
+        m
+    }
+
+    /// He initialisation for a `fan_in → fan_out` weight.
+    pub fn he_init(fan_in: usize, fan_out: usize, rng: &mut Rng) -> Matrix {
+        let mut m = Matrix::zeros(fan_in, fan_out);
+        rng.fill_he(&mut m.data, fan_in);
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness.
+        const B: usize = 32;
+        for rb in (0..self.rows).step_by(B) {
+            for cb in (0..self.cols).step_by(B) {
+                for r in rb..(rb + B).min(self.rows) {
+                    for c in cb..(cb + B).min(self.cols) {
+                        out.data[c * self.rows + r] = self.data[r * self.cols + c];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Matrix {
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    pub fn map_inplace(&mut self, f: impl Fn(f32) -> f32) {
+        for x in self.data.iter_mut() {
+            *x = f(*x);
+        }
+    }
+
+    pub fn zip_map(&self, other: &Matrix, f: impl Fn(f32, f32) -> f32) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&other.data).map(|(&a, &b)| f(a, b)).collect(),
+        }
+    }
+
+    pub fn add(&self, other: &Matrix) -> Matrix {
+        self.zip_map(other, |a, b| a + b)
+    }
+
+    pub fn sub(&self, other: &Matrix) -> Matrix {
+        self.zip_map(other, |a, b| a - b)
+    }
+
+    pub fn hadamard(&self, other: &Matrix) -> Matrix {
+        self.zip_map(other, |a, b| a * b)
+    }
+
+    pub fn add_inplace(&mut self, other: &Matrix) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn scale(&self, s: f32) -> Matrix {
+        self.map(|x| x * s)
+    }
+
+    pub fn scale_inplace(&mut self, s: f32) {
+        self.map_inplace(|x| x * s);
+    }
+
+    /// Add a 1×cols bias row to every row.
+    pub fn add_bias(&self, bias: &[f32]) -> Matrix {
+        assert_eq!(bias.len(), self.cols);
+        let mut out = self.clone();
+        for r in 0..out.rows {
+            let row = out.row_mut(r);
+            for (x, b) in row.iter_mut().zip(bias) {
+                *x += b;
+            }
+        }
+        out
+    }
+
+    /// Column sums (gradient of a broadcast bias).
+    pub fn col_sum(&self) -> Vec<f32> {
+        let mut out = vec![0.0; self.cols];
+        for r in 0..self.rows {
+            for (o, x) in out.iter_mut().zip(self.row(r)) {
+                *o += x;
+            }
+        }
+        out
+    }
+
+    /// Element-wise maximum with a mask output: `mask[i]=1` where self wins.
+    /// This is the paper's eq. (8)/(14) merge of the cell node's two updates.
+    pub fn max_merge(&self, other: &Matrix) -> (Matrix, Matrix) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        let mut mask = Matrix::zeros(self.rows, self.cols);
+        for i in 0..self.data.len() {
+            if self.data[i] >= other.data[i] {
+                out.data[i] = self.data[i];
+                mask.data[i] = 1.0;
+            } else {
+                out.data[i] = other.data[i];
+            }
+        }
+        (out, mask)
+    }
+
+    pub fn frob_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().sum::<f32>() / self.data.len() as f32
+    }
+
+    /// Horizontal concatenation `[self | other]`.
+    pub fn hconcat(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.rows, other.rows);
+        let cols = self.cols + other.cols;
+        let mut out = Matrix::zeros(self.rows, cols);
+        for r in 0..self.rows {
+            out.row_mut(r)[..self.cols].copy_from_slice(self.row(r));
+            out.row_mut(r)[self.cols..].copy_from_slice(other.row(r));
+        }
+        out
+    }
+
+    /// Split `[A | B]` back into A (first `cols_a` columns) and B.
+    pub fn hsplit(&self, cols_a: usize) -> (Matrix, Matrix) {
+        assert!(cols_a <= self.cols);
+        let cols_b = self.cols - cols_a;
+        let mut a = Matrix::zeros(self.rows, cols_a);
+        let mut b = Matrix::zeros(self.rows, cols_b);
+        for r in 0..self.rows {
+            a.row_mut(r).copy_from_slice(&self.row(r)[..cols_a]);
+            b.row_mut(r).copy_from_slice(&self.row(r)[cols_a..]);
+        }
+        (a, b)
+    }
+
+    /// Take a subset of rows.
+    pub fn gather_rows(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(idx.len(), self.cols);
+        for (o, &i) in idx.iter().enumerate() {
+            out.row_mut(o).copy_from_slice(self.row(i));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_access() {
+        let m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(m.at(0, 2), 3.0);
+        assert_eq!(m.at(1, 0), 4.0);
+        assert_eq!(m.row(1), &[4., 5., 6.]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_shape_panics() {
+        Matrix::from_vec(2, 2, vec![1.0]);
+    }
+
+    #[test]
+    fn transpose_round_trip() {
+        let mut rng = Rng::new(4);
+        let m = Matrix::randn(37, 53, 1.0, &mut rng);
+        let tt = m.transpose().transpose();
+        assert_eq!(m, tt);
+        assert_eq!(m.at(5, 7), m.transpose().at(7, 5));
+    }
+
+    #[test]
+    fn elementwise_ops() {
+        let a = Matrix::from_vec(1, 3, vec![1., -2., 3.]);
+        let b = Matrix::from_vec(1, 3, vec![2., 2., 2.]);
+        assert_eq!(a.add(&b).data, vec![3., 0., 5.]);
+        assert_eq!(a.sub(&b).data, vec![-1., -4., 1.]);
+        assert_eq!(a.hadamard(&b).data, vec![2., -4., 6.]);
+        assert_eq!(a.scale(2.0).data, vec![2., -4., 6.]);
+    }
+
+    #[test]
+    fn bias_and_colsum_are_adjoint() {
+        let a = Matrix::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        let with_bias = a.add_bias(&[10., 20.]);
+        assert_eq!(with_bias.data, vec![11., 22., 13., 24.]);
+        assert_eq!(a.col_sum(), vec![4., 6.]);
+    }
+
+    #[test]
+    fn max_merge_and_mask() {
+        let a = Matrix::from_vec(1, 3, vec![1., 5., 2.]);
+        let b = Matrix::from_vec(1, 3, vec![3., 4., 2.]);
+        let (m, mask) = a.max_merge(&b);
+        assert_eq!(m.data, vec![3., 5., 2.]);
+        // ties go to self (>=)
+        assert_eq!(mask.data, vec![0., 1., 1.]);
+    }
+
+    #[test]
+    fn concat_split_round_trip() {
+        let mut rng = Rng::new(8);
+        let a = Matrix::randn(5, 3, 1.0, &mut rng);
+        let b = Matrix::randn(5, 4, 1.0, &mut rng);
+        let (a2, b2) = a.hconcat(&b).hsplit(3);
+        assert_eq!(a, a2);
+        assert_eq!(b, b2);
+    }
+
+    #[test]
+    fn gather_rows_selects() {
+        let m = Matrix::from_vec(3, 2, vec![1., 2., 3., 4., 5., 6.]);
+        let g = m.gather_rows(&[2, 0]);
+        assert_eq!(g.data, vec![5., 6., 1., 2.]);
+    }
+}

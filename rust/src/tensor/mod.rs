@@ -1,0 +1,12 @@
+//! Dense tensor algebra substrate.
+//!
+//! A row-major f32 matrix with the operations the NN stack needs: blocked and
+//! threaded matmul (plus `A^T B` and `A B^T` variants used by manual
+//! backward passes), elementwise maps, reductions, and broadcasting adds.
+//! Built from scratch because `ndarray` is unavailable offline.
+
+mod matrix;
+mod ops;
+
+pub use matrix::Matrix;
+pub use ops::{matmul, matmul_at_b, matmul_a_bt};

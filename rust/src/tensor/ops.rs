@@ -1,0 +1,211 @@
+//! Blocked, threaded dense matmul kernels.
+//!
+//! Three variants cover everything the manual backward passes need without
+//! materialising transposes:
+//!   * `matmul(A, B)      = A · B`
+//!   * `matmul_at_b(A, B) = Aᵀ · B`   (weight gradients: Xᵀ · dY)
+//!   * `matmul_a_bt(A, B) = A · Bᵀ`   (input gradients: dY · Wᵀ)
+//!
+//! The inner kernel is an i-k-j loop over the row-major layout (unit-stride
+//! on B and C), parallelised over row blocks of the output.
+
+use super::Matrix;
+use crate::util::pool::parallel_for_chunks;
+
+/// `C = A · B` with shape check.
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.rows, "matmul: inner dims {} vs {}", a.cols, b.rows);
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = Matrix::zeros(m, n);
+    let c_ptr = crate::util::pool::SendPtr(c.data.as_mut_ptr());
+    parallel_for_chunks(m, |lo, hi| {
+        let cp = c_ptr;
+        for i in lo..hi {
+            let arow = &a.data[i * k..(i + 1) * k];
+            // SAFETY: row i of C is written only by this chunk's owner.
+            let crow =
+                unsafe { std::slice::from_raw_parts_mut(cp.0.add(i * n), n) };
+            for (kk, &aik) in arow.iter().enumerate() {
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = &b.data[kk * n..(kk + 1) * n];
+                axpy(aik, brow, crow);
+            }
+        }
+    });
+    c
+}
+
+/// `C = Aᵀ · B` where A is m×k, B is m×n, C is k×n.
+/// Parallelised over k-blocks of the output, scanning A,B by rows.
+pub fn matmul_at_b(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.rows, b.rows, "matmul_at_b: outer dims {} vs {}", a.rows, b.rows);
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = Matrix::zeros(k, n);
+    let c_ptr = crate::util::pool::SendPtr(c.data.as_mut_ptr());
+    // Each worker owns a contiguous block of C rows (i.e. columns of A).
+    parallel_for_chunks(k, |lo, hi| {
+        let cp = c_ptr;
+        for row in 0..m {
+            let arow = &a.data[row * k..(row + 1) * k];
+            let brow = &b.data[row * n..(row + 1) * n];
+            for kk in lo..hi {
+                let aik = arow[kk];
+                if aik == 0.0 {
+                    continue;
+                }
+                // SAFETY: C rows [lo,hi) owned exclusively by this worker.
+                let crow =
+                    unsafe { std::slice::from_raw_parts_mut(cp.0.add(kk * n), n) };
+                axpy(aik, brow, crow);
+            }
+        }
+    });
+    c
+}
+
+/// `C = A · Bᵀ` where A is m×k, B is n×k, C is m×n. Dot-product kernel.
+pub fn matmul_a_bt(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.cols, "matmul_a_bt: inner dims {} vs {}", a.cols, b.cols);
+    let (m, k, n) = (a.rows, a.cols, b.rows);
+    let mut c = Matrix::zeros(m, n);
+    let c_ptr = crate::util::pool::SendPtr(c.data.as_mut_ptr());
+    parallel_for_chunks(m, |lo, hi| {
+        let cp = c_ptr;
+        for i in lo..hi {
+            let arow = &a.data[i * k..(i + 1) * k];
+            let crow =
+                unsafe { std::slice::from_raw_parts_mut(cp.0.add(i * n), n) };
+            for (j, cij) in crow.iter_mut().enumerate() {
+                let brow = &b.data[j * k..(j + 1) * k];
+                *cij = dot(arow, brow);
+            }
+        }
+    });
+    c
+}
+
+/// `y += alpha * x`, the innermost kernel. Written to auto-vectorise.
+#[inline]
+fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    // Chunked so LLVM emits fused SIMD without bounds checks.
+    let n = x.len();
+    let (x8, xr) = x.split_at(n - n % 8);
+    let (y8, yr) = y.split_at_mut(n - n % 8);
+    for (xc, yc) in x8.chunks_exact(8).zip(y8.chunks_exact_mut(8)) {
+        for i in 0..8 {
+            yc[i] += alpha * xc[i];
+        }
+    }
+    for (xi, yi) in xr.iter().zip(yr.iter_mut()) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Dense dot product.
+#[inline]
+pub fn dot(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let mut acc = [0.0f32; 8];
+    let (x8, xr) = x.split_at(n - n % 8);
+    let (y8, yr) = y.split_at(n - n % 8);
+    for (xc, yc) in x8.chunks_exact(8).zip(y8.chunks_exact(8)) {
+        for i in 0..8 {
+            acc[i] += xc[i] * yc[i];
+        }
+    }
+    let mut s: f32 = acc.iter().sum();
+    for (xi, yi) in xr.iter().zip(yr) {
+        s += xi * yi;
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::math::assert_allclose;
+    use crate::util::rng::Rng;
+
+    fn naive_matmul(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0;
+                for k in 0..a.cols {
+                    s += a.at(i, k) * b.at(k, j);
+                }
+                *c.at_mut(i, j) = s;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Rng::new(10);
+        for (m, k, n) in [(1, 1, 1), (3, 5, 7), (33, 17, 65), (128, 64, 32)] {
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let b = Matrix::randn(k, n, 1.0, &mut rng);
+            let c = matmul(&a, &b);
+            let r = naive_matmul(&a, &b);
+            assert_allclose(&c.data, &r.data, 1e-4, 1e-4);
+        }
+    }
+
+    #[test]
+    fn at_b_matches_explicit_transpose() {
+        let mut rng = Rng::new(11);
+        let a = Matrix::randn(29, 13, 1.0, &mut rng);
+        let b = Matrix::randn(29, 21, 1.0, &mut rng);
+        let fast = matmul_at_b(&a, &b);
+        let slow = matmul(&a.transpose(), &b);
+        assert_allclose(&fast.data, &slow.data, 1e-4, 1e-4);
+    }
+
+    #[test]
+    fn a_bt_matches_explicit_transpose() {
+        let mut rng = Rng::new(12);
+        let a = Matrix::randn(19, 23, 1.0, &mut rng);
+        let b = Matrix::randn(31, 23, 1.0, &mut rng);
+        let fast = matmul_a_bt(&a, &b);
+        let slow = matmul(&a, &b.transpose());
+        assert_allclose(&fast.data, &slow.data, 1e-4, 1e-4);
+    }
+
+    #[test]
+    fn identity_is_noop() {
+        let mut rng = Rng::new(13);
+        let a = Matrix::randn(9, 9, 1.0, &mut rng);
+        let eye = Matrix::from_fn(9, 9, |r, c| if r == c { 1.0 } else { 0.0 });
+        assert_allclose(&matmul(&a, &eye).data, &a.data, 1e-6, 0.0);
+        assert_allclose(&matmul(&eye, &a).data, &a.data, 1e-6, 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "inner dims")]
+    fn shape_mismatch_panics() {
+        matmul(&Matrix::zeros(2, 3), &Matrix::zeros(4, 2));
+    }
+
+    #[test]
+    fn dot_small() {
+        assert_eq!(dot(&[1., 2., 3.], &[4., 5., 6.]), 32.0);
+        let x: Vec<f32> = (0..19).map(|i| i as f32).collect();
+        let expect: f32 = x.iter().map(|v| v * v).sum();
+        assert_eq!(dot(&x, &x), expect);
+    }
+
+    #[test]
+    fn large_threaded_path() {
+        let mut rng = Rng::new(14);
+        let a = Matrix::randn(300, 40, 0.5, &mut rng);
+        let b = Matrix::randn(40, 50, 0.5, &mut rng);
+        let c = matmul(&a, &b);
+        let r = naive_matmul(&a, &b);
+        assert_allclose(&c.data, &r.data, 1e-3, 1e-3);
+    }
+}

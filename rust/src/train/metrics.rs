@@ -1,0 +1,301 @@
+//! Evaluation metrics (paper §4.1): Pearson, Spearman, Kendall rank
+//! correlations — the EDA-preferred rank metrics — plus MAE and RMSE.
+
+/// Pearson correlation coefficient.
+pub fn pearson(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let ma = a.iter().map(|&x| x as f64).sum::<f64>() / n as f64;
+    let mb = b.iter().map(|&x| x as f64).sum::<f64>() / n as f64;
+    let (mut cov, mut va, mut vb) = (0f64, 0f64, 0f64);
+    for i in 0..n {
+        let da = a[i] as f64 - ma;
+        let db = b[i] as f64 - mb;
+        cov += da * db;
+        va += da * da;
+        vb += db * db;
+    }
+    if va <= 0.0 || vb <= 0.0 {
+        return 0.0;
+    }
+    cov / (va.sqrt() * vb.sqrt())
+}
+
+/// Fractional ranks with ties averaged (the standard competition-free rank).
+fn ranks(xs: &[f32]) -> Vec<f64> {
+    let n = xs.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&i, &j| xs[i].partial_cmp(&xs[j]).unwrap_or(std::cmp::Ordering::Equal));
+    let mut out = vec![0f64; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && xs[idx[j + 1]] == xs[idx[i]] {
+            j += 1;
+        }
+        let avg = (i + j) as f64 / 2.0 + 1.0;
+        for &k in &idx[i..=j] {
+            out[k] = avg;
+        }
+        i = j + 1;
+    }
+    out
+}
+
+/// Spearman rank correlation (Pearson over tie-averaged ranks).
+pub fn spearman(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let ra: Vec<f32> = ranks(a).iter().map(|&x| x as f32).collect();
+    let rb: Vec<f32> = ranks(b).iter().map(|&x| x as f32).collect();
+    pearson(&ra, &rb)
+}
+
+/// Kendall tau-b via merge-sort inversion counting — O(n log n), with tie
+/// corrections, matching scipy's `kendalltau`.
+pub fn kendall(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    if n < 2 {
+        return 0.0;
+    }
+    // Sort by a (ties broken by b).
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&i, &j| {
+        a[i].partial_cmp(&a[j])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(b[i].partial_cmp(&b[j]).unwrap_or(std::cmp::Ordering::Equal))
+    });
+    let bs: Vec<f32> = idx.iter().map(|&i| b[i]).collect();
+    let asrt: Vec<f32> = idx.iter().map(|&i| a[i]).collect();
+
+    // Tie counts in a, in b, and joint.
+    fn tie_sum(xs: &[f32]) -> (f64, f64) {
+        // returns (Σ t(t-1)/2, count of groups) over tie groups
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|x, y| x.partial_cmp(y).unwrap_or(std::cmp::Ordering::Equal));
+        let mut s = 0f64;
+        let mut i = 0;
+        while i < sorted.len() {
+            let mut j = i;
+            while j + 1 < sorted.len() && sorted[j + 1] == sorted[i] {
+                j += 1;
+            }
+            let t = (j - i + 1) as f64;
+            s += t * (t - 1.0) / 2.0;
+            i = j + 1;
+        }
+        (s, 0.0)
+    }
+    let (tie_a, _) = tie_sum(a);
+    let (tie_b, _) = tie_sum(b);
+    // Joint ties (pairs tied in both).
+    let mut joint = 0f64;
+    {
+        let mut i = 0;
+        while i < n {
+            let mut j = i;
+            while j + 1 < n && asrt[j + 1] == asrt[i] {
+                j += 1;
+            }
+            // Within an a-tie group, count b-ties.
+            let (jt, _) = tie_sum(&bs[i..=j]);
+            joint += jt;
+            i = j + 1;
+        }
+    }
+
+    // Count discordant pairs = inversions of bs restricted to strict a-order.
+    // Standard trick: merge-sort inversions of bs counts pairs (i<j) with
+    // bs[i] > bs[j]; pairs tied in a must be excluded — they were sorted by
+    // b ascending within the group so they contribute no inversions.
+    let mut arr: Vec<f32> = bs.clone();
+    let mut buf = vec![0f32; n];
+    let discordant = merge_count(&mut arr, &mut buf) as f64;
+
+    let total = n as f64 * (n as f64 - 1.0) / 2.0;
+    let concordant = total - discordant - tie_a - tie_b + joint;
+    // tau-b
+    let num = concordant - discordant;
+    let den = ((total - tie_a) * (total - tie_b)).sqrt();
+    if den <= 0.0 {
+        return 0.0;
+    }
+    num / den
+}
+
+/// Merge sort counting strict inversions.
+fn merge_count(a: &mut [f32], buf: &mut [f32]) -> u64 {
+    let n = a.len();
+    if n <= 1 {
+        return 0;
+    }
+    let mid = n / 2;
+    let (l, r) = a.split_at_mut(mid);
+    let mut inv = merge_count(l, buf) + merge_count(r, buf);
+    // merge
+    let (mut i, mut j, mut k) = (0usize, 0usize, 0usize);
+    while i < l.len() && j < r.len() {
+        if l[i] <= r[j] {
+            buf[k] = l[i];
+            i += 1;
+        } else {
+            buf[k] = r[j];
+            inv += (l.len() - i) as u64;
+            j += 1;
+        }
+        k += 1;
+    }
+    while i < l.len() {
+        buf[k] = l[i];
+        i += 1;
+        k += 1;
+    }
+    while j < r.len() {
+        buf[k] = r[j];
+        j += 1;
+        k += 1;
+    }
+    a.copy_from_slice(&buf[..n]);
+    inv
+}
+
+/// Mean absolute error.
+pub fn mae(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    a.iter().zip(b).map(|(x, y)| (x - y).abs() as f64).sum::<f64>() / a.len() as f64
+}
+
+/// Root mean squared error.
+pub fn rmse(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    (a.iter().zip(b).map(|(x, y)| ((x - y) as f64).powi(2)).sum::<f64>() / a.len() as f64)
+        .sqrt()
+}
+
+/// The Table-2 metric bundle.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct EvalScores {
+    pub pearson: f64,
+    pub spearman: f64,
+    pub kendall: f64,
+    pub mae: f64,
+    pub rmse: f64,
+}
+
+impl EvalScores {
+    pub fn compute(pred: &[f32], target: &[f32]) -> EvalScores {
+        EvalScores {
+            pearson: pearson(pred, target),
+            spearman: spearman(pred, target),
+            kendall: kendall(pred, target),
+            mae: mae(pred, target),
+            rmse: rmse(pred, target),
+        }
+    }
+
+    /// Average a set of per-design scores (how the paper reports Table 2).
+    pub fn average(scores: &[EvalScores]) -> EvalScores {
+        if scores.is_empty() {
+            return EvalScores::default();
+        }
+        let n = scores.len() as f64;
+        EvalScores {
+            pearson: scores.iter().map(|s| s.pearson).sum::<f64>() / n,
+            spearman: scores.iter().map(|s| s.spearman).sum::<f64>() / n,
+            kendall: scores.iter().map(|s| s.kendall).sum::<f64>() / n,
+            mae: scores.iter().map(|s| s.mae).sum::<f64>() / n,
+            rmse: scores.iter().map(|s| s.rmse).sum::<f64>() / n,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pearson_perfect_and_inverse() {
+        let a = [1.0f32, 2.0, 3.0, 4.0];
+        let b = [2.0f32, 4.0, 6.0, 8.0];
+        assert!((pearson(&a, &b) - 1.0).abs() < 1e-9);
+        let c = [4.0f32, 3.0, 2.0, 1.0];
+        assert!((pearson(&a, &c) + 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pearson_constant_input_is_zero() {
+        assert_eq!(pearson(&[1.0, 1.0, 1.0], &[1.0, 2.0, 3.0]), 0.0);
+    }
+
+    #[test]
+    fn spearman_monotone_nonlinear_is_one() {
+        let a = [1.0f32, 2.0, 3.0, 4.0, 5.0];
+        let b = [1.0f32, 8.0, 27.0, 64.0, 125.0]; // cubic: same order
+        assert!((spearman(&a, &b) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn spearman_handles_ties() {
+        let a = [1.0f32, 2.0, 2.0, 3.0];
+        let b = [1.0f32, 2.0, 2.0, 3.0];
+        assert!((spearman(&a, &b) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kendall_known_value() {
+        // scipy.stats.kendalltau([1,2,3,4],[1,2,4,3]) = 0.6666...
+        let a = [1.0f32, 2.0, 3.0, 4.0];
+        let b = [1.0f32, 2.0, 4.0, 3.0];
+        assert!((kendall(&a, &b) - 2.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kendall_with_ties_matches_scipy() {
+        // tau-b: C=5, D=0, tie_a=1 → 5/sqrt(5·6) = 0.912870929...
+        // (matches scipy.stats.kendalltau([1,2,2,3],[1,3,2,4]))
+        let a = [1.0f32, 2.0, 2.0, 3.0];
+        let b = [1.0f32, 3.0, 2.0, 4.0];
+        assert!((kendall(&a, &b) - 5.0 / 30f64.sqrt()).abs() < 1e-9, "{}", kendall(&a, &b));
+    }
+
+    #[test]
+    fn kendall_reverse_is_minus_one() {
+        let a = [1.0f32, 2.0, 3.0, 4.0, 5.0];
+        let b = [5.0f32, 4.0, 3.0, 2.0, 1.0];
+        assert!((kendall(&a, &b) + 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn error_metrics() {
+        let a = [1.0f32, 2.0];
+        let b = [2.0f32, 4.0];
+        assert!((mae(&a, &b) - 1.5).abs() < 1e-12);
+        assert!((rmse(&a, &b) - (2.5f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bundle_and_average() {
+        let s1 = EvalScores::compute(&[1.0, 2.0, 3.0], &[1.0, 2.0, 3.0]);
+        assert!((s1.pearson - 1.0).abs() < 1e-9);
+        assert_eq!(s1.mae, 0.0);
+        let s2 = EvalScores { pearson: 0.0, spearman: 0.0, kendall: 0.0, mae: 1.0, rmse: 1.0 };
+        let avg = EvalScores::average(&[s1, s2]);
+        assert!((avg.pearson - 0.5).abs() < 1e-9);
+        assert!((avg.mae - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ranks_tie_averaging() {
+        let r = ranks(&[10.0, 20.0, 20.0, 30.0]);
+        assert_eq!(r, vec![1.0, 2.5, 2.5, 4.0]);
+    }
+}

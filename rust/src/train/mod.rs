@@ -1,0 +1,9 @@
+//! Training stack: metrics, trainer loops, and the §4.3 K-profiler.
+
+pub mod kprofile;
+pub mod metrics;
+pub mod trainer;
+
+pub use kprofile::{profile_optimal_k, KProfile};
+pub use metrics::{kendall, mae, pearson, rmse, spearman, EvalScores};
+pub use trainer::{TrainConfig, TrainReport, Trainer};

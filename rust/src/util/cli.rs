@@ -1,0 +1,174 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional arguments,
+//! with typed getters and a usage printer. Subcommand dispatch lives in
+//! `main.rs`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+    /// Declared options for usage/validation: (name, help, takes_value).
+    spec: Vec<(String, String, bool)>,
+}
+
+impl Args {
+    /// Declare an option (for `usage()` and unknown-option detection).
+    pub fn declare(mut self, name: &str, help: &str, takes_value: bool) -> Self {
+        self.spec.push((name.to_string(), help.to_string(), takes_value));
+        self
+    }
+
+    /// Parse raw arguments. Options may appear as `--k v` or `--k=v`;
+    /// declared no-value options are flags.
+    pub fn parse(mut self, raw: &[String]) -> Result<Self, String> {
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    self.opts.insert(k.to_string(), v.to_string());
+                } else {
+                    let takes_value = self
+                        .spec
+                        .iter()
+                        .find(|(n, _, _)| n == name)
+                        .map(|(_, _, tv)| *tv)
+                        // Undeclared options: guess from the next token.
+                        .unwrap_or_else(|| {
+                            raw.get(i + 1).map(|n| !n.starts_with("--")).unwrap_or(false)
+                        });
+                    if takes_value {
+                        let v = raw
+                            .get(i + 1)
+                            .ok_or_else(|| format!("option --{name} expects a value"))?;
+                        self.opts.insert(name.to_string(), v.clone());
+                        i += 1;
+                    } else {
+                        self.flags.push(name.to_string());
+                    }
+                }
+            } else {
+                self.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(self)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name) || self.opts.get(name).is_some_and(|v| v == "true")
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name}: expected integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name}: expected float, got '{v}'")),
+        }
+    }
+
+    pub fn get_f32(&self, name: &str, default: f32) -> Result<f32, String> {
+        Ok(self.get_f64(name, default as f64)? as f32)
+    }
+
+    /// Comma-separated list of integers, e.g. `--ks 2,4,8`.
+    pub fn get_usize_list(&self, name: &str, default: &[usize]) -> Result<Vec<usize>, String> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|t| t.trim().parse().map_err(|_| format!("--{name}: bad integer '{t}'")))
+                .collect(),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn usage(&self, prog: &str) -> String {
+        let mut out = format!("usage: {prog} [options]\n");
+        for (name, help, tv) in &self.spec {
+            let arg = if *tv { format!("--{name} <v>") } else { format!("--{name}") };
+            out.push_str(&format!("  {arg:<24} {help}\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn raw(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_key_value_both_styles() {
+        let a = Args::default()
+            .declare("dim", "embedding dim", true)
+            .parse(&raw(&["--dim", "64", "--k=8"]))
+            .unwrap();
+        assert_eq!(a.get("dim"), Some("64"));
+        assert_eq!(a.get_usize("k", 0).unwrap(), 8);
+    }
+
+    #[test]
+    fn parse_flags_and_positionals() {
+        let a = Args::default()
+            .declare("fast", "quick mode", false)
+            .parse(&raw(&["train", "--fast", "out.txt"]))
+            .unwrap();
+        assert!(a.flag("fast"));
+        assert_eq!(a.positional(), &["train".to_string(), "out.txt".to_string()]);
+    }
+
+    #[test]
+    fn typed_defaults_and_errors() {
+        let a = Args::default().parse(&raw(&["--lr", "0.01"])).unwrap();
+        assert_eq!(a.get_f64("lr", 0.0).unwrap(), 0.01);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+        let b = Args::default().parse(&raw(&["--n", "abc"])).unwrap();
+        assert!(b.get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = Args::default().parse(&raw(&["--ks", "2,4, 8"])).unwrap();
+        assert_eq!(a.get_usize_list("ks", &[]).unwrap(), vec![2, 4, 8]);
+        let d = Args::default().parse(&raw(&[])).unwrap();
+        assert_eq!(d.get_usize_list("ks", &[1, 2]).unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        let r = Args::default().declare("out", "path", true).parse(&raw(&["--out"]));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn usage_mentions_options() {
+        let a = Args::default().declare("dim", "embedding dim", true);
+        assert!(a.usage("prog").contains("--dim"));
+    }
+}

@@ -1,0 +1,190 @@
+//! TOML-subset configuration parser (serde/toml unavailable offline).
+//!
+//! Supports what the config system needs: `[section]` headers, `key = value`
+//! with string / integer / float / boolean / flat arrays, `#` comments.
+//! Values are stored as strings with typed getters; sections flatten into
+//! dotted keys (`section.key`).
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct ConfigFile {
+    values: BTreeMap<String, String>,
+}
+
+impl ConfigFile {
+    pub fn parse(text: &str) -> Result<ConfigFile, String> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    return Err(format!("line {}: unterminated section header", lineno + 1));
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                if section.is_empty() {
+                    return Err(format!("line {}: empty section name", lineno + 1));
+                }
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            if key.is_empty() {
+                return Err(format!("line {}: empty key", lineno + 1));
+            }
+            values.insert(key, unquote(v.trim()));
+        }
+        Ok(ConfigFile { values })
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<ConfigFile, String> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str) -> Option<Result<usize, String>> {
+        self.get(key).map(|v| v.parse().map_err(|_| format!("{key}: bad integer '{v}'")))
+    }
+
+    pub fn get_f32(&self, key: &str) -> Option<Result<f32, String>> {
+        self.get(key).map(|v| v.parse().map_err(|_| format!("{key}: bad float '{v}'")))
+    }
+
+    pub fn get_bool(&self, key: &str) -> Option<Result<bool, String>> {
+        self.get(key).map(|v| match v {
+            "true" | "1" | "yes" => Ok(true),
+            "false" | "0" | "no" => Ok(false),
+            _ => Err(format!("{key}: bad bool '{v}'")),
+        })
+    }
+
+    /// Arrays like `ks = [2, 4, 8]`.
+    pub fn get_usize_list(&self, key: &str) -> Option<Result<Vec<usize>, String>> {
+        self.get(key).map(|v| {
+            let inner = v.trim().trim_start_matches('[').trim_end_matches(']');
+            inner
+                .split(',')
+                .filter(|t| !t.trim().is_empty())
+                .map(|t| t.trim().parse().map_err(|_| format!("{key}: bad integer '{t}'")))
+                .collect()
+        })
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+
+    /// Overlay: values from `other` replace this one's.
+    pub fn merged_with(mut self, other: &ConfigFile) -> ConfigFile {
+        for (k, v) in &other.values {
+            self.values.insert(k.clone(), v.clone());
+        }
+        self
+    }
+
+    pub fn insert(&mut self, key: &str, value: &str) {
+        self.values.insert(key.to_string(), value.to_string());
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` starts a comment unless inside quotes.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn unquote(v: &str) -> String {
+    let v = v.trim();
+    if v.len() >= 2 && v.starts_with('"') && v.ends_with('"') {
+        v[1..v.len() - 1].to_string()
+    } else {
+        v.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# global
+seed = 42
+name = "mini circuit"  # inline comment
+
+[train]
+lr = 0.0002
+epochs = 50
+parallel = true
+ks = [2, 4, 8]
+"#;
+
+    #[test]
+    fn parse_sections_and_types() {
+        let c = ConfigFile::parse(SAMPLE).unwrap();
+        assert_eq!(c.get_usize("seed").unwrap().unwrap(), 42);
+        assert_eq!(c.get("name"), Some("mini circuit"));
+        assert_eq!(c.get_f32("train.lr").unwrap().unwrap(), 0.0002);
+        assert_eq!(c.get_usize("train.epochs").unwrap().unwrap(), 50);
+        assert!(c.get_bool("train.parallel").unwrap().unwrap());
+        assert_eq!(c.get_usize_list("train.ks").unwrap().unwrap(), vec![2, 4, 8]);
+    }
+
+    #[test]
+    fn missing_key_is_none() {
+        let c = ConfigFile::parse(SAMPLE).unwrap();
+        assert!(c.get("nope").is_none());
+        assert!(c.get_usize("train.nope").is_none());
+    }
+
+    #[test]
+    fn bad_values_error() {
+        let c = ConfigFile::parse("x = abc").unwrap();
+        assert!(c.get_usize("x").unwrap().is_err());
+        assert!(c.get_bool("x").unwrap().is_err());
+    }
+
+    #[test]
+    fn malformed_lines_error() {
+        assert!(ConfigFile::parse("[open").is_err());
+        assert!(ConfigFile::parse("novalue").is_err());
+        assert!(ConfigFile::parse("[]").is_err());
+    }
+
+    #[test]
+    fn merge_overrides() {
+        let base = ConfigFile::parse("a = 1\nb = 2").unwrap();
+        let over = ConfigFile::parse("b = 3\nc = 4").unwrap();
+        let m = base.merged_with(&over);
+        assert_eq!(m.get("a"), Some("1"));
+        assert_eq!(m.get("b"), Some("3"));
+        assert_eq!(m.get("c"), Some("4"));
+    }
+
+    #[test]
+    fn hash_inside_quotes_kept() {
+        let c = ConfigFile::parse(r##"tag = "a#b""##).unwrap();
+        assert_eq!(c.get("tag"), Some("a#b"));
+    }
+}

@@ -1,0 +1,21 @@
+//! Infrastructure substrates.
+//!
+//! The offline build environment provides no `rayon`, `clap`, `serde`,
+//! `criterion` or `proptest`, so this module implements the minimal
+//! equivalents the rest of the crate needs: a counter-based RNG, a scoped
+//! thread pool with `parallel_for`, wall-clock timing statistics, a leveled
+//! logger, a CLI argument parser, a TOML-subset config reader and a tiny
+//! property-testing harness.
+
+pub mod cli;
+pub mod configfile;
+pub mod logger;
+pub mod math;
+pub mod pool;
+pub mod proptest;
+pub mod rng;
+pub mod timer;
+
+pub use pool::{num_threads, parallel_for, parallel_map};
+pub use rng::Rng;
+pub use timer::Stopwatch;

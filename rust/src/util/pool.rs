@@ -1,0 +1,243 @@
+//! Minimal data-parallel substrate (rayon is unavailable offline).
+//!
+//! `parallel_for` splits an index range into contiguous chunks executed on
+//! scoped OS threads; `parallel_map` collects per-index results. Both fall
+//! back to inline execution for small ranges so unit tests and tiny graphs
+//! don't pay thread spawn costs.
+//!
+//! This is also the substrate the §3.4 scheduler builds on: the "CPU
+//! multi-thread initialization" side of the paper maps to scoped threads
+//! here, while the cudaStream analog lives in [`crate::sched`].
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use (can be overridden with the
+/// `DRCG_THREADS` environment variable; defaults to available parallelism).
+pub fn num_threads() -> usize {
+    static CACHED: AtomicUsize = AtomicUsize::new(0);
+    let cached = CACHED.load(Ordering::Relaxed);
+    if cached != 0 {
+        return cached;
+    }
+    let n = std::env::var("DRCG_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        });
+    CACHED.store(n, Ordering::Relaxed);
+    n
+}
+
+/// Threshold below which parallel dispatch is not worth a thread spawn.
+const SEQ_CUTOFF: usize = 256;
+
+/// Run `f(i)` for every `i in 0..n`, in parallel chunks.
+///
+/// `f` must be `Sync` (shared across threads); disjoint output writes should
+/// go through raw pointers or per-chunk slices — see `parallel_for_chunks`.
+pub fn parallel_for<F>(n: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    parallel_for_chunks(n, |lo, hi| {
+        for i in lo..hi {
+            f(i);
+        }
+    });
+}
+
+/// Run `f(lo, hi)` over a contiguous partition of `0..n`. This is the
+/// building block used by the kernels: each worker owns `[lo, hi)` rows.
+pub fn parallel_for_chunks<F>(n: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let workers = num_threads().min(n);
+    if workers <= 1 || n < SEQ_CUTOFF {
+        f(0, n);
+        return;
+    }
+    let chunk = n.div_ceil(workers);
+    std::thread::scope(|scope| {
+        for w in 0..workers {
+            let lo = w * chunk;
+            let hi = ((w + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            let f = &f;
+            scope.spawn(move || f(lo, hi));
+        }
+    });
+}
+
+/// Work-stealing-ish dynamic scheduling: workers pull blocks of `grain`
+/// indices from a shared atomic counter. Used where per-index cost is
+/// highly skewed (power-law rows) and static chunking would tail-lag —
+/// exactly the "evil row" effect §2.3 of the paper describes.
+pub fn parallel_for_dynamic<F>(n: usize, grain: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let workers = num_threads().min(n);
+    if workers <= 1 || n < SEQ_CUTOFF {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let grain = grain.max(1);
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let f = &f;
+            let cursor = &cursor;
+            scope.spawn(move || loop {
+                let lo = cursor.fetch_add(grain, Ordering::Relaxed);
+                if lo >= n {
+                    break;
+                }
+                let hi = (lo + grain).min(n);
+                for i in lo..hi {
+                    f(i);
+                }
+            });
+        }
+    });
+}
+
+/// Dynamic scheduling over an explicit item slice (used by the DR-SpMM
+/// degree-bucket schedule: items are row ids in bucket order).
+pub fn parallel_for_dynamic_order<T: Sync, F>(items: &[T], grain: usize, f: F)
+where
+    F: Fn(&T) + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return;
+    }
+    let workers = num_threads().min(n);
+    if workers <= 1 || n < SEQ_CUTOFF.min(grain * 2) {
+        for it in items {
+            f(it);
+        }
+        return;
+    }
+    let grain = grain.max(1);
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let f = &f;
+            let cursor = &cursor;
+            scope.spawn(move || loop {
+                let lo = cursor.fetch_add(grain, Ordering::Relaxed);
+                if lo >= n {
+                    break;
+                }
+                for it in &items[lo..(lo + grain).min(n)] {
+                    f(it);
+                }
+            });
+        }
+    });
+}
+
+/// Parallel map collecting results in index order.
+pub fn parallel_map<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out = vec![T::default(); n];
+    {
+        let out_ptr = SendPtr(out.as_mut_ptr());
+        parallel_for_chunks(n, |lo, hi| {
+            let p = out_ptr; // copy the Send wrapper into the closure
+            for i in lo..hi {
+                // SAFETY: each index is written by exactly one worker.
+                unsafe { *p.0.add(i) = f(i) };
+            }
+        });
+    }
+    out
+}
+
+/// Pointer wrapper asserting disjoint-index write safety across threads.
+pub struct SendPtr<T>(pub *mut T);
+// Manual impls: derives would add a spurious `T: Copy` bound.
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+/// Run a set of independent closures concurrently, one thread each
+/// (the CPU-side "three threads for three subgraphs" of paper Fig. 9b).
+pub fn join_all<T: Send, F: FnOnce() -> T + Send>(tasks: Vec<F>) -> Vec<T> {
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = tasks.into_iter().map(|t| scope.spawn(t)).collect();
+        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn parallel_for_visits_all() {
+        let hits = AtomicU64::new(0);
+        parallel_for(10_000, |i| {
+            hits.fetch_add(i as u64 + 1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), (10_000u64 * 10_001) / 2);
+    }
+
+    #[test]
+    fn parallel_for_empty() {
+        parallel_for(0, |_| panic!("must not run"));
+    }
+
+    #[test]
+    fn parallel_map_ordered() {
+        let v = parallel_map(5_000, |i| i * 2);
+        assert!(v.iter().enumerate().all(|(i, &x)| x == i * 2));
+    }
+
+    #[test]
+    fn dynamic_visits_all_once() {
+        let n = 20_000;
+        let flags: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        parallel_for_dynamic(n, 64, |i| {
+            flags[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(flags.iter().all(|f| f.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn join_all_returns_in_order() {
+        let results = join_all(vec![|| 1, || 2, || 3]);
+        assert_eq!(results, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn chunks_partition_exactly() {
+        let seen = AtomicU64::new(0);
+        parallel_for_chunks(1_000, |lo, hi| {
+            seen.fetch_add((hi - lo) as u64, Ordering::Relaxed);
+        });
+        assert_eq!(seen.load(Ordering::Relaxed), 1_000);
+    }
+}

@@ -1,0 +1,129 @@
+//! Miniature property-testing harness (proptest is unavailable offline).
+//!
+//! `check(name, cases, |rng| ...)` runs a property over `cases` seeded random
+//! instances; on failure it reports the failing case index and seed so the
+//! instance can be replayed deterministically. Shrinking is approximated by
+//! re-running the generator with a "size" knob that grows from small to
+//! large, so the *first* failure tends to be a small instance.
+
+use super::rng::Rng;
+
+/// Context handed to a property: an RNG plus a size hint in `[0, 1]` that
+/// grows over the run (small cases first).
+pub struct Gen {
+    pub rng: Rng,
+    pub size: f64,
+    pub case: usize,
+}
+
+impl Gen {
+    /// Integer in `[lo, hi]` scaled by the size knob: early cases stay near
+    /// `lo`, later cases span the full range.
+    pub fn sized(&mut self, lo: usize, hi: usize) -> usize {
+        let span = ((hi - lo) as f64 * self.size).round() as usize;
+        self.rng.range(lo, lo + span.max(1) + 1).min(hi)
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi_inclusive: usize) -> usize {
+        self.rng.range(lo, hi_inclusive + 1)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.uniform(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u32() & 1 == 1
+    }
+
+    /// Random f32 vector with entries from N(0, 1).
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.rng.normal()).collect()
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+}
+
+/// Run a property over `cases` random instances. Panics with a replayable
+/// seed on the first failure.
+pub fn check<F>(name: &str, cases: usize, base_seed: u64, prop: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = base_seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen {
+            rng: Rng::new(seed),
+            size: (case as f64 + 1.0) / cases as f64,
+            case,
+        };
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property '{name}' failed at case {case}/{cases} (seed=0x{seed:016x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Convenience: property that asserts two f32 slices are close.
+pub fn prop_allclose(a: &[f32], b: &[f32], atol: f32, rtol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs();
+        if (x - y).abs() > tol || !x.is_finite() || !y.is_finite() {
+            return Err(format!("idx {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("always-true", 25, 1, |_| Ok(()));
+        // count is not shared into the closure above; run again with capture:
+        let counter = std::cell::Cell::new(0usize);
+        check("counting", 25, 1, |_| {
+            counter.set(counter.get() + 1);
+            Ok(())
+        });
+        count += counter.get();
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_seed() {
+        check("fails", 10, 2, |g| {
+            if g.case == 3 {
+                Err("boom".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn sized_grows() {
+        let mut small = Gen { rng: Rng::new(1), size: 0.01, case: 0 };
+        let mut large = Gen { rng: Rng::new(1), size: 1.0, case: 99 };
+        let s: usize = (0..100).map(|_| small.sized(1, 1000)).sum();
+        let l: usize = (0..100).map(|_| large.sized(1, 1000)).sum();
+        assert!(s < l);
+    }
+
+    #[test]
+    fn prop_allclose_detects_mismatch() {
+        assert!(prop_allclose(&[1.0], &[1.0], 1e-6, 0.0).is_ok());
+        assert!(prop_allclose(&[1.0], &[2.0], 1e-6, 0.0).is_err());
+        assert!(prop_allclose(&[1.0], &[1.0, 2.0], 1e-6, 0.0).is_err());
+    }
+}

@@ -1,0 +1,150 @@
+//! Wall-clock timing and summary statistics for the bench harness.
+
+use std::time::{Duration, Instant};
+
+/// A simple stopwatch with named lap capture.
+pub struct Stopwatch {
+    start: Instant,
+    laps: Vec<(String, Duration)>,
+    last: Instant,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        let now = Instant::now();
+        Stopwatch { start: now, laps: Vec::new(), last: now }
+    }
+
+    /// Record a named lap since the previous lap (or start).
+    pub fn lap(&mut self, name: &str) -> Duration {
+        let now = Instant::now();
+        let d = now - self.last;
+        self.last = now;
+        self.laps.push((name.to_string(), d));
+        d
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn laps(&self) -> &[(String, Duration)] {
+        &self.laps
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Robust summary of repeated timing samples (seconds).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TimingStats {
+    pub n: usize,
+    pub mean: f64,
+    pub median: f64,
+    pub min: f64,
+    pub max: f64,
+    /// Median absolute deviation — robust spread estimate.
+    pub mad: f64,
+}
+
+impl TimingStats {
+    pub fn from_samples(samples: &[f64]) -> TimingStats {
+        assert!(!samples.is_empty());
+        let mut s = samples.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = s.len();
+        let median = percentile_sorted(&s, 0.5);
+        let mean = s.iter().sum::<f64>() / n as f64;
+        let mut dev: Vec<f64> = s.iter().map(|x| (x - median).abs()).collect();
+        dev.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        TimingStats {
+            n,
+            mean,
+            median,
+            min: s[0],
+            max: s[n - 1],
+            mad: percentile_sorted(&dev, 0.5),
+        }
+    }
+}
+
+fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    let n = sorted.len();
+    if n == 1 {
+        return sorted[0];
+    }
+    let pos = q * (n - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Format seconds human-readably (µs/ms/s).
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.2}s", s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_of_constant() {
+        let s = TimingStats::from_samples(&[2.0, 2.0, 2.0]);
+        assert_eq!(s.median, 2.0);
+        assert_eq!(s.mad, 0.0);
+        assert_eq!(s.min, 2.0);
+        assert_eq!(s.max, 2.0);
+    }
+
+    #[test]
+    fn median_odd_even() {
+        let s = TimingStats::from_samples(&[1.0, 2.0, 9.0]);
+        assert_eq!(s.median, 2.0);
+        let s = TimingStats::from_samples(&[1.0, 2.0, 3.0, 10.0]);
+        assert!((s.median - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn median_robust_to_outlier() {
+        let s = TimingStats::from_samples(&[1.0, 1.0, 1.0, 1.0, 100.0]);
+        assert_eq!(s.median, 1.0);
+        assert!(s.mean > 10.0);
+    }
+
+    #[test]
+    fn stopwatch_laps_accumulate() {
+        let mut sw = Stopwatch::new();
+        std::thread::sleep(Duration::from_millis(2));
+        sw.lap("a");
+        std::thread::sleep(Duration::from_millis(2));
+        sw.lap("b");
+        assert_eq!(sw.laps().len(), 2);
+        assert!(sw.elapsed() >= Duration::from_millis(4));
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_secs(5e-6).ends_with("µs"));
+        assert!(fmt_secs(5e-3).ends_with("ms"));
+        assert!(fmt_secs(5.0).ends_with('s'));
+    }
+}

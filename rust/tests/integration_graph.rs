@@ -1,0 +1,82 @@
+//! Integration: datagen → graph substrate invariants at realistic scale.
+
+use dr_circuitgnn::datagen::{generate_design, mini_circuitnet, table1_designs};
+use dr_circuitgnn::graph::partition::partition;
+use dr_circuitgnn::graph::stats::ImbalanceStats;
+use dr_circuitgnn::graph::EdgeType;
+
+#[test]
+fn table1_designs_generate_and_validate_at_small_scale() {
+    for spec in table1_designs(0.05) {
+        let graphs = generate_design(&spec);
+        assert_eq!(graphs.len(), spec.graphs.len());
+        for (g, gs) in graphs.iter().zip(&spec.graphs) {
+            g.validate().unwrap();
+            assert_eq!(g.n_cells, gs.n_cells);
+            assert_eq!(g.n_nets, gs.n_nets);
+            // Edge counts within 5% of the scaled targets.
+            let near_err =
+                (g.near.nnz() as f64 - gs.target_near as f64).abs() / gs.target_near as f64;
+            assert!(near_err < 0.05, "{}: near {} vs {}", spec.name, g.near.nnz(), gs.target_near);
+            assert_eq!(g.pins.nnz(), gs.target_pins);
+        }
+    }
+}
+
+#[test]
+fn fig4_degree_shape_holds_per_design() {
+    for spec in table1_designs(0.05) {
+        let g = &generate_design(&spec)[0];
+        let near = ImbalanceStats::of(g.adj(EdgeType::Near));
+        let pins = ImbalanceStats::of(g.adj(EdgeType::Pins));
+        let pinned = ImbalanceStats::of(g.adj(EdgeType::Pinned));
+        assert!(near.avg_degree > 5.0 * pins.avg_degree);
+        assert!(near.avg_degree > 5.0 * pinned.avg_degree);
+        // Power-law evil rows on pins (nets with huge fanout).
+        assert!(pins.imbalance > 2.0, "{}: pins imbalance {}", spec.name, pins.imbalance);
+    }
+}
+
+#[test]
+fn mini_circuitnet_generates_split_and_labels() {
+    let (train, test) = mini_circuitnet(18, 0.03, 7);
+    assert_eq!(train.designs.len(), 15);
+    assert_eq!(test.designs.len(), 3);
+    for g in train.graphs().chain(test.graphs()) {
+        g.validate().unwrap();
+        // Labels vary (learnable target).
+        let mean = g.y_cell.mean();
+        let var: f32 = g
+            .y_cell
+            .data
+            .iter()
+            .map(|v| (v - mean) * (v - mean))
+            .sum::<f32>()
+            / g.y_cell.data.len() as f32;
+        assert!(var > 1e-6, "labels must vary");
+    }
+}
+
+#[test]
+fn partitioner_conserves_nodes_and_validates() {
+    let spec = table1_designs(0.05).remove(0);
+    let g = generate_design(&spec).remove(0);
+    let parts = partition(&g, 3);
+    let cells: usize = parts.iter().map(|p| p.n_cells).sum();
+    assert_eq!(cells, g.n_cells);
+    for p in &parts {
+        p.validate().unwrap();
+        // Partition keeps CircuitNet-ish density.
+        assert!(p.near.avg_degree() <= g.near.avg_degree() + 1.0);
+    }
+}
+
+#[test]
+fn pins_pinned_transposition_invariant_everywhere() {
+    let (train, _) = mini_circuitnet(6, 0.03, 9);
+    for g in train.graphs() {
+        assert!(g.pinned.is_transpose_of(&g.pins));
+        assert!(g.pins.is_transpose_of(&g.pinned));
+        assert!(g.near.is_transpose_of(&g.near), "near symmetric");
+    }
+}

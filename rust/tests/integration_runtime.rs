@@ -1,0 +1,154 @@
+//! Integration: PJRT runtime — artifact discovery, compilation and
+//! execution. Tests that need the AOT artifacts skip (with a notice) when
+//! `make artifacts` hasn't run; the artifact-independent pieces always run.
+
+use dr_circuitgnn::datagen::{generate_graph, GraphSpec};
+use dr_circuitgnn::runtime::{pad_graph, ArtifactRegistry, Bucket, Runtime};
+use dr_circuitgnn::util::rng::Rng;
+use std::path::Path;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("hgnn_fwd_d64.hlo.txt").exists()
+}
+
+#[test]
+fn pjrt_cpu_client_initialises() {
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    assert!(rt.device_count() >= 1);
+    assert!(!rt.platform().is_empty());
+}
+
+#[test]
+fn registry_scans_and_parses_meta() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let reg = ArtifactRegistry::scan(&artifacts_dir()).unwrap();
+    for name in ["hgnn_step_d64", "hgnn_fwd_d64", "spmm_near_d64"] {
+        assert!(reg.contains(name), "missing {name}");
+    }
+    let meta = reg.meta("hgnn_step_d64").unwrap();
+    assert_eq!(meta.inputs.len(), 35); // 19 live params + 12 graph + 4
+    assert_eq!(meta.outputs.len(), 20); // loss + 19 grads
+    let note = meta.notes.iter().find(|n| n.starts_with("bucket")).unwrap();
+    let bucket = Bucket::parse_note(note).unwrap();
+    assert_eq!(bucket.hidden, 64);
+}
+
+#[test]
+fn spmm_artifact_executes_and_matches_native_kernel() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let reg = ArtifactRegistry::scan(&artifacts_dir()).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load_hlo_text(&reg.hlo_path("spmm_near_d64")).unwrap();
+
+    // Bucket-shaped inputs from a real padded graph.
+    let meta = reg.meta("spmm_near_d64").unwrap();
+    let note = meta.notes.iter().find(|n| n.starts_with("bucket")).unwrap();
+    let bucket = Bucket::parse_note(note).unwrap();
+    let mut rng = Rng::new(5);
+    let g = generate_graph(
+        &GraphSpec {
+            n_cells: bucket.n_cell - 8,
+            n_nets: bucket.n_net - 8,
+            target_near: (bucket.n_cell - 8) * 16,
+            target_pins: (bucket.n_net - 8) * 2,
+            d_cell: 16,
+            d_net: 16,
+        },
+        0,
+        &mut rng,
+    );
+    let padded = pad_graph(&g, bucket).unwrap();
+    let x = dr_circuitgnn::tensor::Matrix::randn(bucket.n_cell, bucket.hidden, 1.0, &mut rng);
+    let outputs = exe
+        .run_matrices(&[&padded.graph_tensors[0], &padded.graph_tensors[1], &x])
+        .expect("spmm artifact run");
+    assert_eq!(outputs.len(), 1);
+    let y = &outputs[0];
+    assert_eq!(y.len(), bucket.n_cell * bucket.hidden);
+    assert!(y.iter().all(|v| v.is_finite()));
+
+    // Cross-check vs the native rust DR-SpMM on the same (normalised) graph.
+    let mut near = g.near.clone();
+    near.normalize_gcn();
+    let compressed = dr_circuitgnn::sparse::drelu(&x, bucket.k_cell);
+    // Native kernel over real rows only (artifact computed padded rows too).
+    let buckets = dr_circuitgnn::sparse::DegreeBuckets::build(&near);
+    // x restricted to real cells for the native path.
+    let x_real = x.gather_rows(&(0..g.n_cells).collect::<Vec<_>>());
+    let compressed_real = dr_circuitgnn::sparse::drelu(&x_real, bucket.k_cell);
+    let y_native = dr_circuitgnn::sparse::dr_spmm(&near, &compressed_real, &buckets);
+    let mut max_err = 0f32;
+    for r in 0..g.n_cells {
+        for c in 0..bucket.hidden {
+            let a = y[r * bucket.hidden + c];
+            let b = y_native.at(r, c);
+            max_err = max_err.max((a - b).abs());
+        }
+    }
+    assert!(
+        max_err < 2e-3,
+        "PJRT artifact vs native DR-SpMM max err {max_err}"
+    );
+    let _ = compressed;
+}
+
+#[test]
+fn fwd_artifact_executes_with_padded_graph() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let reg = ArtifactRegistry::scan(&artifacts_dir()).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load_hlo_text(&reg.hlo_path("hgnn_fwd_d64")).unwrap();
+    let meta = reg.meta("hgnn_fwd_d64").unwrap();
+    let note = meta.notes.iter().find(|n| n.starts_with("bucket")).unwrap();
+    let bucket = Bucket::parse_note(note).unwrap();
+
+    let mut rng = Rng::new(6);
+    let g = generate_graph(
+        &GraphSpec {
+            n_cells: bucket.n_cell / 2,
+            n_nets: bucket.n_net / 2,
+            target_near: (bucket.n_cell / 2) * 12,
+            target_pins: (bucket.n_net / 2) * 2,
+            d_cell: 16,
+            d_net: 16,
+        },
+        0,
+        &mut rng,
+    );
+    let p = pad_graph(&g, bucket).unwrap();
+
+    // 19 live parameters with artifact shapes.
+    let mut inputs: Vec<(Vec<f32>, Vec<i64>)> = Vec::new();
+    for (_, dims) in meta.inputs.iter().take(19) {
+        let numel: i64 = dims.iter().product::<i64>().max(1);
+        let mut data = vec![0f32; numel as usize];
+        for v in data.iter_mut() {
+            *v = rng.normal() * 0.1;
+        }
+        inputs.push((data, dims.clone()));
+    }
+    for m in &p.graph_tensors {
+        inputs.push((m.data.clone(), vec![m.rows as i64, m.cols as i64]));
+    }
+    inputs.push((p.x_cell.data.clone(), vec![p.x_cell.rows as i64, p.x_cell.cols as i64]));
+    inputs.push((p.x_net.data.clone(), vec![p.x_net.rows as i64, p.x_net.cols as i64]));
+    let refs: Vec<(&[f32], &[i64])> =
+        inputs.iter().map(|(d, s)| (d.as_slice(), s.as_slice())).collect();
+    let out = exe.run(&refs).expect("fwd artifact run");
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].len(), bucket.n_cell);
+    assert!(out[0].iter().all(|v| v.is_finite()));
+}

@@ -1,0 +1,102 @@
+//! Integration: the kernel zoo agrees on realistic circuit graphs and the
+//! D-ReLU/CBSR contract holds end to end.
+
+use dr_circuitgnn::datagen::{generate_design, table1_designs};
+use dr_circuitgnn::graph::EdgeType;
+use dr_circuitgnn::sparse::{
+    dr_spmm, dr_spmm_bwd, drelu, spmm_csr, spmm_csr_bwd, spmm_gnna, spmm_gnna_bwd, DegreeBuckets,
+    GnnaConfig,
+};
+use dr_circuitgnn::tensor::Matrix;
+use dr_circuitgnn::util::math::assert_allclose;
+use dr_circuitgnn::util::rng::Rng;
+
+fn test_graph() -> dr_circuitgnn::graph::HeteroGraph {
+    generate_design(&table1_designs(0.03).remove(1)).remove(0)
+}
+
+#[test]
+fn all_kernels_agree_on_circuit_adjacencies() {
+    let g = test_graph();
+    let mut rng = Rng::new(1);
+    let cfg = GnnaConfig::default();
+    for edge in [EdgeType::Near, EdgeType::Pins, EdgeType::Pinned] {
+        let adj = g.adj(edge);
+        let x = Matrix::randn(adj.cols, 32, 1.0, &mut rng);
+        let dense = spmm_csr(adj, &x);
+        let gnna = spmm_gnna(adj, &x, &cfg);
+        assert_allclose(&gnna.data, &dense.data, 1e-3, 1e-3);
+        // DR with k = D reproduces the dense result exactly.
+        let full = drelu(&x, 32);
+        let buckets = DegreeBuckets::build(adj);
+        let dr = dr_spmm(adj, &full, &buckets);
+        assert_allclose(&dr.data, &dense.data, 1e-3, 1e-3);
+        // DR with k < D equals dense SpMM over the masked embedding.
+        let part = drelu(&x, 8);
+        let dr8 = dr_spmm(adj, &part, &buckets);
+        let masked = spmm_csr(adj, &part.to_dense());
+        assert_allclose(&dr8.data, &masked.data, 1e-3, 1e-3);
+    }
+}
+
+#[test]
+fn backward_kernels_agree_on_circuit_adjacencies() {
+    let g = test_graph();
+    let mut rng = Rng::new(2);
+    let cfg = GnnaConfig::default();
+    for edge in [EdgeType::Near, EdgeType::Pins, EdgeType::Pinned] {
+        let adj = g.adj(edge);
+        let csc = adj.to_csc();
+        let dy = Matrix::randn(adj.rows, 16, 1.0, &mut rng);
+        let dense = spmm_csr_bwd(&csc, &dy);
+        let gnna = spmm_gnna_bwd(&csc, &dy, &cfg);
+        assert_allclose(&gnna.data, &dense.data, 1e-3, 1e-3);
+        let x = Matrix::randn(adj.cols, 16, 1.0, &mut rng);
+        let fwd = drelu(&x, 16);
+        let dr = dr_spmm_bwd(&csc, &dy, &fwd).to_dense();
+        assert_allclose(&dr.data, &dense.data, 1e-3, 1e-3);
+    }
+}
+
+#[test]
+fn cbsr_compression_ratio_and_flop_saving() {
+    let g = test_graph();
+    let mut rng = Rng::new(3);
+    let x = Matrix::randn(g.n_cells, 64, 1.0, &mut rng);
+    for k in [2usize, 8, 32] {
+        let c = drelu(&x, k);
+        c.validate().unwrap();
+        assert_eq!(c.stored(), g.n_cells * k);
+        assert!((c.density() - k as f64 / 64.0).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn degree_buckets_cover_and_respect_thresholds() {
+    let g = test_graph();
+    for edge in [EdgeType::Near, EdgeType::Pins, EdgeType::Pinned] {
+        let adj = g.adj(edge);
+        let b = DegreeBuckets::build(adj);
+        let (l, m, h) = b.counts();
+        assert_eq!(l + m + h, adj.rows);
+        for &r in &b.order[..l] {
+            assert!(adj.degree(r as usize) < b.t_low);
+        }
+        for &r in &b.order[l + m..] {
+            assert!(adj.degree(r as usize) >= b.t_high);
+        }
+    }
+}
+
+#[test]
+fn drelu_then_backward_masks_round_trip() {
+    let g = test_graph();
+    let mut rng = Rng::new(4);
+    let x = Matrix::randn(g.n_nets, 24, 1.0, &mut rng);
+    let fwd = drelu(&x, 6);
+    let dy = Matrix::ones(g.n_nets, 24);
+    let dx = dr_circuitgnn::sparse::drelu_backward(&dy, &fwd);
+    for r in 0..g.n_nets {
+        assert_eq!(dx.row(r).iter().filter(|&&v| v != 0.0).count(), 6);
+    }
+}

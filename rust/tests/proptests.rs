@@ -1,0 +1,186 @@
+//! Property-based tests over random instances (util::proptest harness).
+//!
+//! Each property runs across seeded random graphs/matrices with sizes
+//! growing over the run, and reports a replayable seed on failure.
+
+use dr_circuitgnn::graph::{Cbsr, Csr};
+use dr_circuitgnn::sparse::{
+    dr_spmm, dr_spmm_bwd, drelu, spmm_csr, spmm_csr_bwd, spmm_dense_ref, spmm_gnna, DegreeBuckets,
+    GnnaConfig,
+};
+use dr_circuitgnn::tensor::{matmul, matmul_a_bt, matmul_at_b, Matrix};
+use dr_circuitgnn::util::proptest::{check, prop_allclose, Gen};
+
+fn random_csr(g: &mut Gen, rows: usize, cols: usize, max_deg: usize) -> Csr {
+    let mut t = Vec::new();
+    for r in 0..rows {
+        let deg = g.rng.below(max_deg + 1);
+        for _ in 0..deg {
+            t.push((r, g.rng.below(cols), g.rng.uniform(0.1, 2.0)));
+        }
+    }
+    Csr::from_triplets(rows, cols, &t)
+}
+
+#[test]
+fn prop_spmm_kernels_match_dense_reference() {
+    check("spmm≡dense", 40, 0xA11CE, |g| {
+        let rows = g.sized(1, 60);
+        let cols = g.sized(1, 60);
+        let d = g.sized(1, 48);
+        let adj = random_csr(g, rows, cols, 6);
+        let x = Matrix::from_vec(cols, d, g.normal_vec(cols * d));
+        let want = spmm_dense_ref(&adj, &x);
+        prop_allclose(&spmm_csr(&adj, &x).data, &want.data, 1e-3, 1e-3)?;
+        let cfg = GnnaConfig { group_size: *g.pick(&[2usize, 8, 32]), dim_worker: 16 };
+        prop_allclose(&spmm_gnna(&adj, &x, &cfg).data, &want.data, 1e-3, 1e-3)
+    });
+}
+
+#[test]
+fn prop_dr_spmm_equals_masked_dense_spmm() {
+    check("dr_spmm≡spmm∘drelu", 40, 0xB0B, |g| {
+        let rows = g.sized(1, 50);
+        let cols = g.sized(2, 50);
+        let d = g.sized(2, 40);
+        let k = g.usize_in(1, d);
+        let adj = random_csr(g, rows, cols, 5);
+        let x = Matrix::from_vec(cols, d, g.normal_vec(cols * d));
+        let compressed = drelu(&x, k);
+        compressed.validate().map_err(|e| e.to_string())?;
+        let buckets = DegreeBuckets::build(&adj);
+        let got = dr_spmm(&adj, &compressed, &buckets);
+        let want = spmm_csr(&adj, &compressed.to_dense());
+        prop_allclose(&got.data, &want.data, 1e-3, 1e-3)
+    });
+}
+
+#[test]
+fn prop_drelu_row_invariants() {
+    check("drelu row invariants", 60, 0xD0D0, |g| {
+        let n = g.sized(1, 40);
+        let d = g.sized(1, 64);
+        let k = g.usize_in(1, d);
+        let x = Matrix::from_vec(n, d, g.normal_vec(n * d));
+        let c = drelu(&x, k);
+        c.validate().map_err(|e| e.to_string())?;
+        for r in 0..n {
+            // Sum of kept values equals sum of the k largest.
+            let mut sorted: Vec<f32> = x.row(r).to_vec();
+            sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            let top: f32 = sorted[..k].iter().sum();
+            let kept: f32 = c.row_values(r).iter().sum();
+            if (top - kept).abs() > 1e-3 * (1.0 + top.abs()) {
+                return Err(format!("row {r}: kept {kept} vs top-k {top}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_backward_is_adjoint_of_forward() {
+    // <A·X, Y> == <X, Aᵀ·Y> for the dense kernels (exact adjointness).
+    check("spmm adjoint", 30, 0xADD, |g| {
+        let rows = g.sized(1, 40);
+        let cols = g.sized(1, 40);
+        let d = g.sized(1, 24);
+        let adj = random_csr(g, rows, cols, 5);
+        let x = Matrix::from_vec(cols, d, g.normal_vec(cols * d));
+        let y = Matrix::from_vec(rows, d, g.normal_vec(rows * d));
+        let ax = spmm_csr(&adj, &x);
+        let aty = spmm_csr_bwd(&adj.to_csc(), &y);
+        let lhs: f64 = ax.data.iter().zip(&y.data).map(|(a, b)| (a * b) as f64).sum();
+        let rhs: f64 = x.data.iter().zip(&aty.data).map(|(a, b)| (a * b) as f64).sum();
+        if (lhs - rhs).abs() > 1e-2 * (1.0 + lhs.abs()) {
+            return Err(format!("<Ax,y>={lhs} vs <x,Aᵀy>={rhs}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dr_backward_masked_adjoint() {
+    // <A·X̃, Y> == <X̃, (Aᵀ·Y)|支持> where X̃ is the CBSR embedding.
+    check("dr adjoint", 30, 0xFADE, |g| {
+        let rows = g.sized(1, 30);
+        let cols = g.sized(2, 30);
+        let d = g.sized(2, 24);
+        let k = g.usize_in(1, d);
+        let adj = random_csr(g, rows, cols, 4);
+        let x = Matrix::from_vec(cols, d, g.normal_vec(cols * d));
+        let compressed = drelu(&x, k);
+        let buckets = DegreeBuckets::build(&adj);
+        let y = Matrix::from_vec(rows, d, g.normal_vec(rows * d));
+        let fwd = dr_spmm(&adj, &compressed, &buckets);
+        let bwd = dr_spmm_bwd(&adj.to_csc(), &y, &compressed);
+        let lhs: f64 = fwd.data.iter().zip(&y.data).map(|(a, b)| (a * b) as f64).sum();
+        let rhs: f64 =
+            bwd.values.iter().zip(&compressed.values).map(|(a, b)| (a * b) as f64).sum();
+        if (lhs - rhs).abs() > 1e-2 * (1.0 + lhs.abs()) {
+            return Err(format!("{lhs} vs {rhs}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_csr_transpose_involution_and_csc_roundtrip() {
+    check("csr transforms", 50, 0x7777, |g| {
+        let rows = g.sized(1, 50);
+        let cols = g.sized(1, 50);
+        let adj = random_csr(g, rows, cols, 6);
+        if adj.transpose().transpose() != adj {
+            return Err("transpose involution failed".into());
+        }
+        if adj.to_csc().to_csr() != adj {
+            return Err("csc round trip failed".into());
+        }
+        if !adj.transpose().is_transpose_of(&adj) {
+            return Err("is_transpose_of failed".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_matmul_variants_consistent() {
+    check("matmul variants", 40, 0x3A3A, |g| {
+        let m = g.sized(1, 30);
+        let k = g.sized(1, 30);
+        let n = g.sized(1, 30);
+        let a = Matrix::from_vec(m, k, g.normal_vec(m * k));
+        let b = Matrix::from_vec(k, n, g.normal_vec(k * n));
+        let c = matmul(&a, &b);
+        prop_allclose(&matmul_at_b(&a.transpose(), &b).data, &c.data, 1e-3, 1e-3)?;
+        prop_allclose(&matmul_a_bt(&a, &b.transpose()).data, &c.data, 1e-3, 1e-3)
+    });
+}
+
+#[test]
+fn prop_cbsr_dense_roundtrip() {
+    check("cbsr roundtrip", 40, 0xCB56, |g| {
+        let n = g.sized(1, 30);
+        let d = g.sized(1, 40);
+        let k = g.usize_in(1, d);
+        let x = Matrix::from_vec(n, d, g.normal_vec(n * d));
+        let c = drelu(&x, k);
+        let dense = c.to_dense();
+        // Dense reconstruction keeps values at exactly the kept indices.
+        for r in 0..n {
+            for (t, &col) in c.row_indices(r).iter().enumerate() {
+                if dense.at(r, col as usize) != c.row_values(r)[t] {
+                    return Err(format!("row {r} col {col} mismatch"));
+                }
+            }
+        }
+        let nnz = dense.data.iter().filter(|&&v| v != 0.0).count();
+        if nnz > n * k {
+            return Err(format!("too many nonzeros: {nnz} > {}", n * k));
+        }
+        Ok(())
+    });
+}
+
+#[allow(unused)]
+fn unused_cbsr(c: &Cbsr) {}
