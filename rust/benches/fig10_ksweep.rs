@@ -8,7 +8,7 @@
 
 use dr_circuitgnn::bench::Table;
 use dr_circuitgnn::datagen::mini_circuitnet;
-use dr_circuitgnn::nn::MessageEngine;
+use dr_circuitgnn::engine::EngineBuilder;
 use dr_circuitgnn::sparse::GnnaConfig;
 use dr_circuitgnn::train::{TrainConfig, Trainer};
 
@@ -40,9 +40,9 @@ fn main() {
     };
 
     // Baselines: identical model trained through the dense engines.
-    let (_m, base_csr) = Trainer::train_dr(&train, &test, MessageEngine::Csr, &cfg);
+    let (_m, base_csr) = Trainer::train_dr(&train, &test, &EngineBuilder::csr(), &cfg);
     let (_m, base_gnna) =
-        Trainer::train_dr(&train, &test, MessageEngine::Gnna(GnnaConfig::default()), &cfg);
+        Trainer::train_dr(&train, &test, &EngineBuilder::gnna(GnnaConfig::default()), &cfg);
     println!(
         "baselines: cuSPARSE {:.1}s, GNNA {:.1}s",
         base_csr.train_seconds, base_gnna.train_seconds
@@ -53,7 +53,7 @@ fn main() {
         &["K", "Pearson", "Spear.", "Ken.", "MAE", "RMSE", "train s", "speedup vs DGL", "vs GNNA"],
     );
     for k in [2usize, 4, 8, 16, 32, 64] {
-        let (_m, r) = Trainer::train_dr(&train, &test, MessageEngine::dr(k, k), &cfg);
+        let (_m, r) = Trainer::train_dr(&train, &test, &EngineBuilder::dr(k, k), &cfg);
         t.row(&[
             k.to_string(),
             format!("{:.3}", r.test_scores.pearson),
@@ -74,7 +74,7 @@ fn main() {
         &["K_cell", "K_net", "Spear.", "train s", "speedup vs DGL"],
     );
     for (kc, kn) in [(2, 8), (8, 2), (4, 16), (16, 4)] {
-        let (_m, r) = Trainer::train_dr(&train, &test, MessageEngine::dr(kc, kn), &cfg);
+        let (_m, r) = Trainer::train_dr(&train, &test, &EngineBuilder::dr(kc, kn), &cfg);
         t2.row(&[
             kc.to_string(),
             kn.to_string(),

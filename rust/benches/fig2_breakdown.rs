@@ -6,9 +6,9 @@
 
 use dr_circuitgnn::bench::workloads::{bench_reps, bench_scale, embedding, table1_graphs};
 use dr_circuitgnn::bench::{measure, Table};
+use dr_circuitgnn::engine::EngineBuilder;
 use dr_circuitgnn::graph::EdgeType;
 use dr_circuitgnn::nn::{GraphConv, SageConv};
-use dr_circuitgnn::sparse::spmm_csr;
 use dr_circuitgnn::util::rng::Rng;
 
 fn main() {
@@ -29,16 +29,13 @@ fn main() {
         &["module", "edge", "SpMM ms", "dense ms", "total ms", "SpMM share"],
     );
     let mut shares = Vec::new();
+    // One cuSPARSE-analog engine per graph: normalisation + plans built once.
+    let engine = EngineBuilder::csr().build(g);
     for (module, edge) in [
         ("SageConv", EdgeType::Pinned),
         ("SageConv", EdgeType::Pins),
         ("GraphConv", EdgeType::Near),
     ] {
-        let mut adj = g.adj(edge).clone();
-        match edge {
-            EdgeType::Near => adj.normalize_gcn(),
-            _ => adj.normalize_rows(),
-        }
         let x_src = match edge {
             EdgeType::Pinned => &x_net,
             _ => &x_cell,
@@ -47,10 +44,13 @@ fn main() {
             EdgeType::Pins => &x_net,
             _ => &x_cell,
         };
-        // SpMM part (the aggregation).
-        let t_spmm = measure(1, reps, || std::hint::black_box(spmm_csr(&adj, x_src))).median;
+        // SpMM part (the aggregation), through the engine's cached plan.
+        let t_spmm = measure(1, reps, || {
+            std::hint::black_box(engine.aggregate_with(edge, x_src, None))
+        })
+        .median;
         // Dense part (the module's linear algebra on the aggregate).
-        let h = spmm_csr(&adj, x_src);
+        let (h, _) = engine.aggregate_with(edge, x_src, None);
         let t_dense = if module == "GraphConv" {
             let mut layer = GraphConv::new(dim, dim, &mut rng);
             measure(1, reps, || {

@@ -13,7 +13,8 @@
 
 use dr_circuitgnn::bench::Table;
 use dr_circuitgnn::datagen::mini_circuitnet;
-use dr_circuitgnn::nn::{HomoKind, MessageEngine};
+use dr_circuitgnn::engine::EngineBuilder;
+use dr_circuitgnn::nn::HomoKind;
 use dr_circuitgnn::train::{TrainConfig, Trainer};
 
 fn env_usize(key: &str, default: usize) -> usize {
@@ -77,7 +78,7 @@ fn main() {
         parallel: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) > 1,
         log_every: 0,
     };
-    let (_m, r) = Trainer::train_dr(&train, &test, MessageEngine::dr(8, 8), &dr_cfg);
+    let (_m, r) = Trainer::train_dr(&train, &test, &EngineBuilder::dr(8, 8), &dr_cfg);
     t.row(&[
         "DR-CircuitGNN (ours)".to_string(),
         format!("{:.3}", r.test_scores.pearson),

@@ -7,7 +7,7 @@
 
 use dr_circuitgnn::bench::workloads::{bench_reps, bench_scale, table1_graphs};
 use dr_circuitgnn::bench::Table;
-use dr_circuitgnn::nn::MessageEngine;
+use dr_circuitgnn::engine::EngineBuilder;
 use dr_circuitgnn::sched::{run_e2e_step, ScheduleMode};
 use dr_circuitgnn::sparse::GnnaConfig;
 use dr_circuitgnn::util::math::mean;
@@ -15,7 +15,7 @@ use dr_circuitgnn::util::math::mean;
 fn median_total(
     g: &dr_circuitgnn::graph::HeteroGraph,
     dim: usize,
-    engine: &MessageEngine,
+    engine: &EngineBuilder,
     mode: ScheduleMode,
     reps: usize,
 ) -> f64 {
@@ -39,11 +39,12 @@ fn main() {
         let mut v_gnna = Vec::new();
         for (name, graphs) in table1_graphs(scale) {
             for g in &graphs {
-                let base = median_total(g, dim, &MessageEngine::Csr, ScheduleMode::Sequential, reps);
+                let base =
+                    median_total(g, dim, &EngineBuilder::csr(), ScheduleMode::Sequential, reps);
                 let gnna = median_total(
                     g,
                     dim,
-                    &MessageEngine::Gnna(GnnaConfig::default()),
+                    &EngineBuilder::gnna(GnnaConfig::default()),
                     ScheduleMode::Sequential,
                     reps,
                 );
@@ -60,7 +61,7 @@ fn main() {
                 } else {
                     ScheduleMode::Sequential
                 };
-                let ours = median_total(g, dim, &MessageEngine::dr(8, 8), mode, reps);
+                let ours = median_total(g, dim, &EngineBuilder::dr(8, 8), mode, reps);
                 let s_csr = base / ours;
                 let s_gnna = gnna / ours;
                 v_csr.push(s_csr);

@@ -1,4 +1,4 @@
-//! End-to-end three-layer validation (DESIGN.md E10).
+//! End-to-end three-layer validation (experiment E10, see docs/ENGINE.md).
 //!
 //! Trains the DR-CircuitGNN congestion model **through the AOT path**:
 //! the fused forward+backward train step was authored in JAX (L2), its
@@ -99,7 +99,16 @@ fn main() -> anyhow::Result<()> {
     }
 
     // --- runtime: compile the artifacts once.
-    let rt = Runtime::cpu()?;
+    let rt = match Runtime::cpu() {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!(
+                "PJRT unavailable ({e}) — this example needs the `pjrt` feature \
+                 (vendor xla-rs first; see rust/Cargo.toml)"
+            );
+            return Ok(());
+        }
+    };
     println!("PJRT platform: {}", rt.platform());
     let step_exe = rt.load_hlo_text(&reg.hlo_path(step_name))?;
     let fwd_exe = rt.load_hlo_text(&reg.hlo_path(fwd_name))?;

@@ -1,0 +1,99 @@
+//! Kernel sweep: DR-SpMM forward/backward vs the cuSPARSE and GNNAdvisor
+//! analogs across K values — a focused version of paper Fig. 11 on one
+//! design (the full sweep lives in `cargo bench --bench fig11_kernel_sweep`).
+//!
+//! Everything dispatches through the engine: one `Engine` per kernel
+//! family, plans (CSC / buckets / neighbor groups) built once per graph,
+//! timed regions are pure plan-execution.
+//!
+//! Run: `cargo run --release --example kernel_sweep [-- --fast]`
+
+use dr_circuitgnn::bench::{measure, Table};
+use dr_circuitgnn::datagen::{generate_design, table1_design, DesignSize};
+use dr_circuitgnn::engine::{AggCache, EngineBuilder};
+use dr_circuitgnn::graph::EdgeType;
+use dr_circuitgnn::sparse::GnnaConfig;
+use dr_circuitgnn::tensor::Matrix;
+use dr_circuitgnn::util::rng::Rng;
+
+fn main() {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let scale = if fast { 0.1 } else { 0.5 };
+    let reps = if fast { 3 } else { 7 };
+    let dim = 64;
+
+    let spec = table1_design(DesignSize::Medium, scale);
+    let graphs = generate_design(&spec);
+    let g = &graphs[0];
+    println!(
+        "design {} graph 0 at scale {scale}: {} cells / {} nets",
+        spec.name, g.n_cells, g.n_nets
+    );
+
+    let csr = EngineBuilder::csr().build(g);
+    let gnna = EngineBuilder::gnna(GnnaConfig::default()).build(g);
+    // One DR engine per K, planned once per graph (not per edge).
+    let dr_engines: Vec<_> = [2usize, 4, 8, 16, 32, 64]
+        .into_iter()
+        .map(|k| (k, EngineBuilder::dr(k, k).build(g)))
+        .collect();
+    let mut rng = Rng::new(11);
+    for edge in [EdgeType::Near, EdgeType::Pins, EdgeType::Pinned] {
+        let adj = g.adj(edge);
+        let x = Matrix::randn(adj.cols, dim, 1.0, &mut rng);
+        let dy = Matrix::randn(adj.rows, dim, 1.0, &mut rng);
+
+        let t_csr_f = measure(1, reps, || {
+            std::hint::black_box(csr.aggregate_with(edge, &x, None))
+        })
+        .median;
+        let t_csr_b = measure(1, reps, || {
+            std::hint::black_box(csr.aggregate_backward_raw(edge, &dy, &AggCache::None))
+        })
+        .median;
+        let t_gnna_f = measure(1, reps, || {
+            std::hint::black_box(gnna.aggregate_with(edge, &x, None))
+        })
+        .median;
+        let t_gnna_b = measure(1, reps, || {
+            std::hint::black_box(gnna.aggregate_backward_raw(edge, &dy, &AggCache::None))
+        })
+        .median;
+
+        let mut table = Table::new(
+            &format!("{} ({}×{}, {} nnz, dim {dim})", edge.name(), adj.rows, adj.cols, adj.nnz()),
+            &[
+                "K",
+                "fwd ms",
+                "bwd ms",
+                "fwd vs cuSPARSE",
+                "bwd vs cuSPARSE",
+                "fwd vs GNNA",
+                "bwd vs GNNA",
+            ],
+        );
+        for (k, dr) in &dr_engines {
+            let k = *k;
+            let prep = dr.sparsify(&x, edge.endpoints().0).expect("DR sparsifies its source");
+            let cache = AggCache::Cbsr(prep.clone());
+            let t_f = measure(1, reps, || {
+                std::hint::black_box(dr.aggregate_with(edge, &x, Some(&prep)))
+            })
+            .median;
+            let t_b = measure(1, reps, || {
+                std::hint::black_box(dr.aggregate_backward_raw(edge, &dy, &cache))
+            })
+            .median;
+            table.row(&[
+                k.to_string(),
+                format!("{:.2}", t_f * 1e3),
+                format!("{:.2}", t_b * 1e3),
+                format!("{:.2}x", t_csr_f / t_f),
+                format!("{:.2}x", t_csr_b / t_b),
+                format!("{:.2}x", t_gnna_f / t_f),
+                format!("{:.2}x", t_gnna_b / t_b),
+            ]);
+        }
+        table.print();
+    }
+}

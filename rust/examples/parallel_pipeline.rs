@@ -12,7 +12,7 @@
 //! Run: `cargo run --release --example parallel_pipeline [-- --fast]`
 
 use dr_circuitgnn::datagen::{generate_graph, GraphSpec};
-use dr_circuitgnn::nn::MessageEngine;
+use dr_circuitgnn::engine::EngineBuilder;
 use dr_circuitgnn::runtime::{pad::to_ell, ArtifactRegistry, Runtime};
 use dr_circuitgnn::sched::{run_e2e_step, ScheduleMode};
 use dr_circuitgnn::tensor::Matrix;
@@ -41,7 +41,7 @@ fn main() {
         (ScheduleMode::Sequential, "sequential (DGL-style, Fig. 9a)"),
         (ScheduleMode::Parallel, "parallel (3 CPU threads + lanes, Fig. 9b)"),
     ] {
-        let timing = run_e2e_step(&g, 64, &MessageEngine::dr(8, 8), mode, 3);
+        let timing = run_e2e_step(&g, 64, &EngineBuilder::dr(8, 8), mode, 3);
         println!(
             "\n{label}: total {}  busy {}  overlap ×{:.2}",
             fmt_secs(timing.total),
@@ -59,7 +59,16 @@ fn main() {
         println!("artifacts missing — run `make artifacts` to enable the PJRT demo");
         return;
     }
-    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let rt = match Runtime::cpu() {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!(
+                "PJRT unavailable ({e}) — Part 2 needs the `pjrt` feature \
+                 (vendor xla-rs first; see rust/Cargo.toml)"
+            );
+            return;
+        }
+    };
     println!("PJRT platform: {}", rt.platform());
     let exes: Vec<_> = names
         .iter()

@@ -1,15 +1,16 @@
 //! Quickstart: generate a synthetic circuit graph, inspect its structure,
 //! and run one heterogeneous message-passing layer under all three kernel
-//! engines — verifying the DR path against the dense baseline and printing
-//! the first speedup numbers.
+//! engines (plus the per-edge-type `"auto"` policy) — verifying the DR path
+//! against the dense baseline and printing the first speedup numbers.
 //!
 //! Run: `cargo run --release --example quickstart`
 
 use dr_circuitgnn::bench::{fmt_speedup, measure};
 use dr_circuitgnn::datagen::{generate_graph, GraphSpec};
+use dr_circuitgnn::engine::{Engine, EngineBuilder};
 use dr_circuitgnn::graph::stats::{degree_report, ImbalanceStats};
-use dr_circuitgnn::nn::hetero_conv::GraphCtx;
-use dr_circuitgnn::nn::{HeteroConv, MessageEngine};
+use dr_circuitgnn::graph::EdgeType;
+use dr_circuitgnn::nn::HeteroConv;
 use dr_circuitgnn::sparse::GnnaConfig;
 use dr_circuitgnn::tensor::Matrix;
 use dr_circuitgnn::util::math::rel_l2;
@@ -50,18 +51,19 @@ fn main() {
         );
     }
 
-    // 2. One HeteroConv layer under each engine.
-    let ctx = GraphCtx::new(&g);
+    // 2. One HeteroConv layer under each engine. Each `build` normalises
+    //    the adjacencies and plans the kernels once (plan/execute split).
     let hidden = 64;
     let mut init_rng = Rng::new(7);
     let layer = HeteroConv::new(hidden, hidden, hidden, &mut init_rng);
     let x_cell = Matrix::randn(g.n_cells, hidden, 1.0, &mut init_rng);
     let x_net = Matrix::randn(g.n_nets, hidden, 1.0, &mut init_rng);
 
-    let engines = [
-        ("cuSPARSE-analog", MessageEngine::Csr),
-        ("GNNA-analog", MessageEngine::Gnna(GnnaConfig::default())),
-        ("DR-SpMM (k=8)", MessageEngine::dr(8, 8)),
+    let engines: [(&str, Engine); 4] = [
+        ("cuSPARSE-analog", EngineBuilder::csr().build(&g)),
+        ("GNNA-analog", EngineBuilder::gnna(GnnaConfig::default()).build(&g)),
+        ("DR-SpMM (k=8)", EngineBuilder::dr(8, 8).build(&g)),
+        ("auto", EngineBuilder::auto().k_cell(8).k_net(8).build(&g)),
     ];
     let mut baseline_t = 0.0;
     let mut baseline_out: Option<Matrix> = None;
@@ -69,10 +71,10 @@ fn main() {
     for (name, engine) in &engines {
         let stats = measure(1, 5, || {
             let mut l2 = layer.clone();
-            std::hint::black_box(l2.forward(&ctx, engine, &x_cell, &x_net));
+            std::hint::black_box(l2.forward(engine, &x_cell, &x_net));
         });
         let mut l = layer.clone();
-        let (yc, _) = l.forward(&ctx, engine, &x_cell, &x_net);
+        let (yc, _) = l.forward(engine, &x_cell, &x_net);
         if baseline_out.is_none() {
             baseline_t = stats.median;
             baseline_out = Some(yc.clone());
@@ -84,6 +86,13 @@ fn main() {
             fmt_speedup(baseline_t, stats.median),
         );
     }
+    // What did "auto" resolve to, per edge type?
+    let auto_engine = &engines[3].1;
+    let picks: Vec<String> = EdgeType::ALL
+        .iter()
+        .map(|&e| format!("{}→{}", e.name(), auto_engine.kernel_name(e)))
+        .collect();
+    println!("\nauto policy picks (Fig. 4 guidance): {}", picks.join("  "));
     println!(
         "\nNote: the DR path's output differs from dense by design — D-ReLU keeps\n\
          the top-k features per row (k=8 of 64 here); Fig. 10 of the paper shows\n\

@@ -3,10 +3,13 @@
 //! Precedence: built-in defaults < config file (`--config path`) < CLI
 //! flags. Everything the launcher needs — dataset scale, model hyper-
 //! parameters, kernel/engine selection, schedule mode, artifact paths.
+//!
+//! Kernel strings (`--kernel`, `kernel.kind`) are parsed by the engine
+//! registry ([`KernelSpec::parse`]) — the single parse point — so config
+//! accepts exactly the registry vocabulary, including `"auto"`.
 
-use crate::nn::MessageEngine;
+use crate::engine::{Engine, EngineBuilder, KernelSpec};
 use crate::sched::ScheduleMode;
-use crate::sparse::{GnnaConfig, KernelKind};
 use crate::util::cli::Args;
 use crate::util::configfile::ConfigFile;
 use std::path::PathBuf;
@@ -26,7 +29,7 @@ pub struct Config {
     pub k_cell: usize,
     pub k_net: usize,
     // execution
-    pub kernel: KernelKind,
+    pub kernel: KernelSpec,
     pub parallel: bool,
     pub dim: usize,
     // paths
@@ -46,7 +49,7 @@ impl Default for Config {
             weight_decay: 1e-5,
             k_cell: 8,
             k_net: 8,
-            kernel: KernelKind::DrSpmm,
+            kernel: KernelSpec::Dr,
             parallel: true,
             dim: 64,
             artifacts_dir: PathBuf::from("artifacts"),
@@ -91,8 +94,7 @@ impl Config {
         take!(self.k_net, get_usize, "kernel.k_net");
         take!(self.dim, get_usize, "kernel.dim");
         if let Some(v) = f.get("kernel.kind") {
-            self.kernel =
-                KernelKind::parse(v).ok_or_else(|| format!("kernel.kind: unknown '{v}'"))?;
+            self.kernel = KernelSpec::parse(v).map_err(|e| format!("kernel.kind: {e}"))?;
         }
         if let Some(v) = f.get_bool("sched.parallel") {
             self.parallel = v?;
@@ -118,7 +120,7 @@ impl Config {
         self.k_net = a.get_usize("k-net", self.k_net)?;
         self.dim = a.get_usize("dim", self.dim)?;
         if let Some(v) = a.get("kernel") {
-            self.kernel = KernelKind::parse(v).ok_or_else(|| format!("--kernel: unknown '{v}'"))?;
+            self.kernel = KernelSpec::parse(v).map_err(|e| format!("--kernel: {e}"))?;
         }
         if a.flag("sequential") {
             self.parallel = false;
@@ -150,13 +152,14 @@ impl Config {
         Ok(())
     }
 
-    /// Build the message engine this config selects.
-    pub fn engine(&self) -> MessageEngine {
-        match self.kernel {
-            KernelKind::Csr => MessageEngine::Csr,
-            KernelKind::Gnna => MessageEngine::Gnna(GnnaConfig::default()),
-            KernelKind::DrSpmm => MessageEngine::dr(self.k_cell, self.k_net),
-        }
+    /// The engine builder this config selects (kernel spec for every edge
+    /// type, D-ReLU K values, §3.4 schedule mode).
+    pub fn engine_builder(&self) -> EngineBuilder {
+        Engine::builder()
+            .kernel_spec(self.kernel)
+            .k_cell(self.k_cell)
+            .k_net(self.k_net)
+            .parallel(self.parallel)
     }
 
     pub fn schedule(&self) -> ScheduleMode {
@@ -171,6 +174,7 @@ impl Config {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::graph::{EdgeType, NodeType};
 
     fn raw(xs: &[&str]) -> Vec<String> {
         xs.iter().map(|s| s.to_string()).collect()
@@ -188,7 +192,7 @@ mod tests {
             .unwrap();
         let cfg = Config::resolve(&args).unwrap();
         assert_eq!(cfg.epochs, 5);
-        assert_eq!(cfg.kernel, KernelKind::Csr);
+        assert_eq!(cfg.kernel, KernelSpec::Csr);
         assert!(!cfg.parallel);
         assert_eq!(cfg.k_cell, 16);
     }
@@ -206,19 +210,33 @@ mod tests {
     }
 
     #[test]
-    fn engine_mapping() {
+    fn engine_builder_mapping() {
         let mut cfg = Config::default();
-        cfg.kernel = KernelKind::DrSpmm;
+        cfg.kernel = KernelSpec::Dr;
         cfg.k_cell = 4;
         cfg.k_net = 2;
-        match cfg.engine() {
-            MessageEngine::Dr { k_cell, k_net } => {
-                assert_eq!((k_cell, k_net), (4, 2));
-            }
-            _ => panic!("wrong engine"),
-        }
-        cfg.kernel = KernelKind::Gnna;
-        assert_eq!(cfg.engine().name(), "GNNA");
+        cfg.parallel = false;
+        let b = cfg.engine_builder();
+        assert_eq!(b.spec_for(EdgeType::Near), KernelSpec::Dr);
+        assert_eq!(b.k_for(NodeType::Cell), 4);
+        assert_eq!(b.k_for(NodeType::Net), 2);
+        assert!(!b.is_parallel());
+        cfg.kernel = KernelSpec::Gnna;
+        assert_eq!(cfg.engine_builder().describe(), "GNNA");
+    }
+
+    #[test]
+    fn auto_kernel_accepted() {
+        let args = Args::default().parse(&raw(&["--kernel", "auto"])).unwrap();
+        let cfg = Config::resolve(&args).unwrap();
+        assert_eq!(cfg.kernel, KernelSpec::Auto);
+    }
+
+    #[test]
+    fn unknown_kernel_rejected_with_vocabulary() {
+        let args = Args::default().parse(&raw(&["--kernel", "warp9"])).unwrap();
+        let err = Config::resolve(&args).unwrap_err();
+        assert!(err.contains("auto") && err.contains("csr"), "{err}");
     }
 
     #[test]

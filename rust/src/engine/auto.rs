@@ -1,0 +1,137 @@
+//! The `"auto"` kernel policy — paper Fig. 4, programmatically.
+//!
+//! The paper's analysis shows the right SpMM kernel depends on the edge
+//! type's degree profile: the `near` (cell↔cell) adjacency is dense-ish
+//! (mode ≈ 50) with hub rows, while `pins`/`pinned` concentrate at degree
+//! 2–4 with a power-law tail — where GNNAdvisor's fixed 32-slot neighbor
+//! groups are mostly padding and its analog loses even to the cuSPARSE
+//! baseline (Table 3). This module encodes that guidance as a decision
+//! procedure over [`ImbalanceStats`], so `Engine::build` can pick a kernel
+//! per edge type without a hand-written table.
+
+use super::registry::KernelSpec;
+use crate::graph::stats::ImbalanceStats;
+use crate::graph::{Csr, EdgeType};
+use crate::sparse::WARP_SIZE;
+
+/// Minimum average degree for the GNNA analog to usefully fill its fixed
+/// 32-slot neighbor groups. Below this most group slots are predicated
+/// padding — the §2.3 under-utilisation that sinks GNNA on `pins`/`pinned`.
+pub const GNNA_MIN_AVG_DEGREE: f64 = (WARP_SIZE / 4) as f64;
+
+/// max/avg degree ratio above which a static row schedule tail-lags on
+/// "evil rows" (§2.3) and DR-SpMM's degree-bucketed dynamic schedule wins.
+pub const EVIL_ROW_IMBALANCE: f64 = 4.0;
+
+/// Below this average degree even CBSR construction isn't amortised by the
+/// per-edge k-sparse saving; plain row-parallel CSR is the cheapest choice.
+pub const DR_MIN_AVG_DEGREE: f64 = 2.0;
+
+/// One auto-selection outcome, with the rationale for logs and tables.
+#[derive(Clone, Debug)]
+pub struct AutoDecision {
+    pub edge: EdgeType,
+    pub spec: KernelSpec,
+    pub reason: String,
+}
+
+/// Pick a concrete kernel for one edge type from its adjacency's degree
+/// profile. Never returns [`KernelSpec::Auto`].
+pub fn auto_select(adj: &Csr, edge: EdgeType) -> AutoDecision {
+    let s = ImbalanceStats::of(adj);
+    let (spec, reason) = if s.avg_degree < DR_MIN_AVG_DEGREE {
+        (
+            KernelSpec::Csr,
+            format!(
+                "avg degree {:.1} < {DR_MIN_AVG_DEGREE}: too sparse to amortise CBSR; \
+                 row-parallel CSR",
+                s.avg_degree
+            ),
+        )
+    } else if s.avg_degree < GNNA_MIN_AVG_DEGREE {
+        (
+            KernelSpec::Dr,
+            format!(
+                "avg degree {:.1} < {GNNA_MIN_AVG_DEGREE}: GNNA groups would be mostly \
+                 padding; DR buckets absorb the skew",
+                s.avg_degree
+            ),
+        )
+    } else if s.imbalance > EVIL_ROW_IMBALANCE {
+        (
+            KernelSpec::Dr,
+            format!(
+                "imbalance {:.1} > {EVIL_ROW_IMBALANCE}: evil rows need the \
+                 degree-bucketed dynamic schedule",
+                s.imbalance
+            ),
+        )
+    } else {
+        (
+            KernelSpec::Gnna,
+            format!(
+                "avg degree {:.1}, imbalance {:.1}: dense balanced rows fill \
+                 neighbor groups",
+                s.avg_degree, s.imbalance
+            ),
+        )
+    };
+    AutoDecision { edge, spec, reason }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn graph_with_degrees(degs: &[usize]) -> Csr {
+        let cols = *degs.iter().max().unwrap_or(&1) + 1;
+        let mut t = Vec::new();
+        for (r, &d) in degs.iter().enumerate() {
+            for c in 0..d {
+                t.push((r, c, 1.0));
+            }
+        }
+        Csr::from_triplets(degs.len(), cols, &t)
+    }
+
+    #[test]
+    fn near_empty_matrix_gets_csr() {
+        let adj = graph_with_degrees(&[1, 1, 0, 1]);
+        let d = auto_select(&adj, EdgeType::Pinned);
+        assert_eq!(d.spec, KernelSpec::Csr, "{}", d.reason);
+    }
+
+    #[test]
+    fn low_degree_pins_profile_never_gets_gnna() {
+        // The pins/pinned profile: degrees 2–4 with a power-law tail.
+        let adj = graph_with_degrees(&[2, 3, 2, 4, 3, 2, 2, 30]);
+        let d = auto_select(&adj, EdgeType::Pins);
+        assert_ne!(d.spec, KernelSpec::Gnna, "{}", d.reason);
+        assert_eq!(d.spec, KernelSpec::Dr);
+    }
+
+    #[test]
+    fn dense_balanced_rows_get_gnna() {
+        let adj = graph_with_degrees(&[40; 16]);
+        let d = auto_select(&adj, EdgeType::Near);
+        assert_eq!(d.spec, KernelSpec::Gnna, "{}", d.reason);
+    }
+
+    #[test]
+    fn dense_but_skewed_rows_get_dr() {
+        // avg ≈ 33, max = 300: hub rows → dynamic buckets.
+        let mut degs = vec![16; 18];
+        degs.push(300);
+        let adj = graph_with_degrees(&degs);
+        let d = auto_select(&adj, EdgeType::Near);
+        assert_eq!(d.spec, KernelSpec::Dr, "{}", d.reason);
+    }
+
+    #[test]
+    fn decision_is_never_auto() {
+        for degs in [&[0usize; 4][..], &[3; 8], &[50; 8], &[1, 100, 1, 1]] {
+            let adj = graph_with_degrees(degs);
+            assert_ne!(auto_select(&adj, EdgeType::Near).spec, KernelSpec::Auto);
+        }
+    }
+}

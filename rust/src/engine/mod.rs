@@ -1,0 +1,515 @@
+//! The execution engine: planned, per-edge-type kernel dispatch.
+//!
+//! This subsystem unifies what used to be two parallel kernel selectors
+//! (`sparse::KernelKind` and `nn::MessageEngine`) behind one facade:
+//!
+//! * [`SpmmKernel`] — one kernel family behind a **plan/execute split**:
+//!   `plan(adj)` precomputes the per-graph state (CSC transpose, degree
+//!   buckets, GNNA neighbor groups) once, `forward`/`backward` run against
+//!   the cached [`KernelPlan`].
+//! * [`registry`] — the single parse point for kernel-name strings
+//!   (`"csr" | "gnna" | "dr" | "auto"` plus aliases).
+//! * [`Engine`] / [`EngineBuilder`] — the facade: a builder configures a
+//!   kernel **per edge type**, the node-type K values for D-ReLU, and the
+//!   §3.4 parallel aggregation mode; `build(&graph)` normalises the three
+//!   adjacencies, resolves `"auto"` against their degree profiles, and
+//!   plans every kernel exactly once.
+//! * [`auto`] — the Fig. 4 selection policy (`"auto"`).
+//!
+//! ```no_run
+//! # use dr_circuitgnn::engine::Engine;
+//! # use dr_circuitgnn::graph::EdgeType;
+//! # let graph: dr_circuitgnn::graph::HeteroGraph = unimplemented!();
+//! let engine = Engine::builder()
+//!     .kernel("auto")
+//!     .kernel_for(EdgeType::Near, "dr")
+//!     .k_cell(24)
+//!     .parallel(true)
+//!     .build(&graph);
+//! ```
+//!
+//! See `docs/ENGINE.md` for the full API walkthrough.
+
+pub mod auto;
+pub mod kernel;
+pub mod registry;
+
+pub use auto::{auto_select, AutoDecision};
+pub use kernel::{
+    plan_counters, AggCache, CsrKernel, DrKernel, GnnaKernel, GnnaPlan, Gradient, KernelPlan,
+    PlanCounters, SpmmKernel,
+};
+pub use registry::{known_names, KernelEntry, KernelSpec, REGISTRY};
+
+use crate::graph::{Cbsr, Csr, EdgeType, HeteroGraph, NodeType};
+use crate::sparse::{drelu, GnnaConfig};
+use crate::tensor::Matrix;
+use std::sync::Arc;
+
+/// Index of an edge type in the engine's internal arrays
+/// (the [`EdgeType::ALL`] order: near, pins, pinned).
+#[inline]
+fn edge_index(e: EdgeType) -> usize {
+    match e {
+        EdgeType::Near => 0,
+        EdgeType::Pins => 1,
+        EdgeType::Pinned => 2,
+    }
+}
+
+/// Normalise a graph's three adjacencies the way every execution path
+/// does ([`EdgeType::ALL`] order): symmetric GCN normalisation for `near`,
+/// row-mean for `pins`/`pinned`. Shared by [`EngineBuilder::build`] and the
+/// scheduler rig so the bench measures the exact matrices training uses.
+pub fn normalized_adjacencies(g: &HeteroGraph) -> [Csr; 3] {
+    let mut near = g.near.clone();
+    near.normalize_gcn();
+    let mut pins = g.pins.clone();
+    pins.normalize_rows();
+    let mut pinned = g.pinned.clone();
+    pinned.normalize_rows();
+    [near, pins, pinned]
+}
+
+/// Display label for a resolved kernel triple ([`EdgeType::ALL`] order):
+/// a single display name when all edges agree, `edge=name` pairs otherwise.
+pub fn kernel_label(kernels: [&dyn SpmmKernel; 3]) -> String {
+    label_from_names(kernels.map(|k| (k.name(), k.display_name())))
+}
+
+/// The one display convention behind [`kernel_label`] and
+/// [`EngineBuilder::describe`]: `(canonical, display)` name pairs in
+/// [`EdgeType::ALL`] order.
+fn label_from_names(names: [(&str, &str); 3]) -> String {
+    if names.iter().all(|(n, _)| *n == names[0].0) {
+        names[0].1.to_string()
+    } else {
+        EdgeType::ALL
+            .iter()
+            .zip(names)
+            .map(|(e, (n, _))| format!("{}={n}", e.name()))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+}
+
+/// Reusable engine configuration. One builder can `build()` an [`Engine`]
+/// per graph of a dataset; the kernel choices, K values and schedule mode
+/// are shared, the plans are per graph.
+#[derive(Clone, Debug)]
+pub struct EngineBuilder {
+    default: KernelSpec,
+    per_edge: [Option<KernelSpec>; 3],
+    k_cell: usize,
+    k_net: usize,
+    gnna: GnnaConfig,
+    parallel: bool,
+}
+
+impl Default for EngineBuilder {
+    fn default() -> EngineBuilder {
+        EngineBuilder {
+            default: KernelSpec::Dr,
+            per_edge: [None; 3],
+            k_cell: 8,
+            k_net: 8,
+            gnna: GnnaConfig::default(),
+            parallel: false,
+        }
+    }
+}
+
+impl EngineBuilder {
+    /// cuSPARSE-analog baseline for every edge type.
+    pub fn csr() -> EngineBuilder {
+        EngineBuilder::default().kernel_spec(KernelSpec::Csr)
+    }
+
+    /// GNNAdvisor analog for every edge type.
+    pub fn gnna(cfg: GnnaConfig) -> EngineBuilder {
+        EngineBuilder::default().kernel_spec(KernelSpec::Gnna).gnna_config(cfg)
+    }
+
+    /// The paper's engine: D-ReLU + DR-SpMM with per-node-type K (§3.1).
+    pub fn dr(k_cell: usize, k_net: usize) -> EngineBuilder {
+        EngineBuilder::default().kernel_spec(KernelSpec::Dr).k_cell(k_cell).k_net(k_net)
+    }
+
+    /// Per-edge-type automatic selection (paper Fig. 4).
+    pub fn auto() -> EngineBuilder {
+        EngineBuilder::default().kernel_spec(KernelSpec::Auto)
+    }
+
+    /// Set the kernel for every edge type by registry name.
+    ///
+    /// Panics on an unknown name — parse user input with
+    /// [`KernelSpec::parse`] first if you need a recoverable error.
+    pub fn kernel(self, name: &str) -> EngineBuilder {
+        match KernelSpec::parse(name) {
+            Ok(spec) => self.kernel_spec(spec),
+            Err(e) => panic!("EngineBuilder::kernel: {e}"),
+        }
+    }
+
+    /// Set the kernel for every edge type.
+    pub fn kernel_spec(mut self, spec: KernelSpec) -> EngineBuilder {
+        self.default = spec;
+        self
+    }
+
+    /// Override the kernel for one edge type by registry name (panics on an
+    /// unknown name, like [`EngineBuilder::kernel`]).
+    pub fn kernel_for(self, e: EdgeType, name: &str) -> EngineBuilder {
+        match KernelSpec::parse(name) {
+            Ok(spec) => self.kernel_spec_for(e, spec),
+            Err(err) => panic!("EngineBuilder::kernel_for: {err}"),
+        }
+    }
+
+    /// Override the kernel for one edge type.
+    pub fn kernel_spec_for(mut self, e: EdgeType, spec: KernelSpec) -> EngineBuilder {
+        self.per_edge[edge_index(e)] = Some(spec);
+        self
+    }
+
+    /// D-ReLU K for cell embeddings (clamped to the width at sparsify time).
+    pub fn k_cell(mut self, k: usize) -> EngineBuilder {
+        self.k_cell = k.max(1);
+        self
+    }
+
+    /// D-ReLU K for net embeddings.
+    pub fn k_net(mut self, k: usize) -> EngineBuilder {
+        self.k_net = k.max(1);
+        self
+    }
+
+    /// GNNAdvisor runtime parameters for GNNA-kernel edges.
+    pub fn gnna_config(mut self, cfg: GnnaConfig) -> EngineBuilder {
+        self.gnna = cfg;
+        self
+    }
+
+    /// Enable the §3.4 parallel aggregation mode (one lane per edge type).
+    pub fn parallel(mut self, on: bool) -> EngineBuilder {
+        self.parallel = on;
+        self
+    }
+
+    /// The spec configured for an edge type (per-edge override or default).
+    pub fn spec_for(&self, e: EdgeType) -> KernelSpec {
+        self.per_edge[edge_index(e)].unwrap_or(self.default)
+    }
+
+    /// The D-ReLU K configured for a node type.
+    pub fn k_for(&self, nt: NodeType) -> usize {
+        match nt {
+            NodeType::Cell => self.k_cell,
+            NodeType::Net => self.k_net,
+        }
+    }
+
+    pub fn gnna_cfg(&self) -> &GnnaConfig {
+        &self.gnna
+    }
+
+    pub fn is_parallel(&self) -> bool {
+        self.parallel
+    }
+
+    /// Resolve the concrete kernel for one edge of a graph (`"auto"`
+    /// inspects the adjacency's degree statistics).
+    pub fn resolve_kernel(&self, e: EdgeType, adj: &Csr) -> Arc<dyn SpmmKernel> {
+        registry::instantiate(self.spec_for(e), e, adj, &self.gnna)
+    }
+
+    /// One-line description of the configured kernels (display names; a
+    /// single name when all edges agree, `edge=name` pairs otherwise).
+    pub fn describe(&self) -> String {
+        label_from_names(
+            [EdgeType::Near, EdgeType::Pins, EdgeType::Pinned]
+                .map(|e| (self.spec_for(e).name(), self.spec_for(e).display_name())),
+        )
+    }
+
+    /// Build a graph-bound engine: normalise the three adjacencies, resolve
+    /// `"auto"`, and plan each edge's kernel exactly once (Alg. 1 stage 1).
+    pub fn build(&self, g: &HeteroGraph) -> Engine {
+        let [near, pins, pinned] = normalized_adjacencies(g);
+        let k_near = self.resolve_kernel(EdgeType::Near, &near);
+        let k_pins = self.resolve_kernel(EdgeType::Pins, &pins);
+        let k_pinned = self.resolve_kernel(EdgeType::Pinned, &pinned);
+        let plans = [k_near.plan(near), k_pins.plan(pins), k_pinned.plan(pinned)];
+        Engine {
+            kernels: [k_near, k_pins, k_pinned],
+            plans,
+            k_cell: self.k_cell,
+            k_net: self.k_net,
+            parallel: self.parallel,
+            n_cells: g.n_cells,
+            n_nets: g.n_nets,
+        }
+    }
+}
+
+/// A graph-bound execution engine: one resolved kernel + cached plan per
+/// edge type, the per-node-type D-ReLU K values, and the schedule mode.
+///
+/// Replaces the old `(GraphCtx, MessageEngine)` pair: the per-graph state
+/// and the kernel choice now travel together, and only the state each
+/// kernel actually needs is precomputed.
+#[derive(Debug)]
+pub struct Engine {
+    kernels: [Arc<dyn SpmmKernel>; 3],
+    plans: [KernelPlan; 3],
+    k_cell: usize,
+    k_net: usize,
+    parallel: bool,
+    n_cells: usize,
+    n_nets: usize,
+}
+
+impl Engine {
+    /// Start configuring an engine.
+    pub fn builder() -> EngineBuilder {
+        EngineBuilder::default()
+    }
+
+    /// The resolved kernel driving an edge type.
+    pub fn kernel(&self, e: EdgeType) -> &dyn SpmmKernel {
+        &*self.kernels[edge_index(e)]
+    }
+
+    /// Canonical name of the resolved kernel for an edge type.
+    pub fn kernel_name(&self, e: EdgeType) -> &'static str {
+        self.kernel(e).name()
+    }
+
+    /// The cached plan for an edge type.
+    pub fn plan(&self, e: EdgeType) -> &KernelPlan {
+        &self.plans[edge_index(e)]
+    }
+
+    /// Normalised adjacency for an edge type.
+    pub fn adj(&self, e: EdgeType) -> &Csr {
+        &self.plan(e).adj
+    }
+
+    pub fn n_cells(&self) -> usize {
+        self.n_cells
+    }
+
+    pub fn n_nets(&self) -> usize {
+        self.n_nets
+    }
+
+    /// §3.4 parallel aggregation mode.
+    pub fn is_parallel(&self) -> bool {
+        self.parallel
+    }
+
+    /// D-ReLU K for a node type.
+    pub fn k_for(&self, nt: NodeType) -> usize {
+        match nt {
+            NodeType::Cell => self.k_cell,
+            NodeType::Net => self.k_net,
+        }
+    }
+
+    /// Whether any edge's kernel consumes D-ReLU-sparsified sources. When
+    /// true the D-ReLU *is* the model's activation (§3.1); when false the
+    /// model applies a plain inter-layer ReLU.
+    pub fn uses_drelu(&self) -> bool {
+        self.kernels.iter().any(|k| k.needs_sparsified())
+    }
+
+    /// Whether this engine sparsifies a node type's embedding (i.e. some
+    /// edge consuming it runs a DR kernel). The model uses this per node
+    /// type: a sparsified type's activation is the D-ReLU inside its
+    /// aggregations, an unsparsified type gets the plain inter-layer ReLU.
+    /// (In a mixed engine, a *dense* kernel reading a sparsified type's
+    /// tensor sees the raw pre-activation values — the same convention the
+    /// pure-DR path uses for SageConv self-paths; the cell-side max merge
+    /// keeps that path nonlinear.)
+    pub fn sparsifies(&self, nt: NodeType) -> bool {
+        Self::edges_with_source(nt).iter().any(|&e| self.kernel(e).needs_sparsified())
+    }
+
+    /// One-line description of the *resolved* kernels.
+    pub fn describe(&self) -> String {
+        kernel_label([&*self.kernels[0], &*self.kernels[1], &*self.kernels[2]])
+    }
+
+    /// Edge types whose aggregation reads a node type's embedding.
+    fn edges_with_source(nt: NodeType) -> &'static [EdgeType] {
+        match nt {
+            NodeType::Cell => &[EdgeType::Near, EdgeType::Pins],
+            NodeType::Net => &[EdgeType::Pinned],
+        }
+    }
+
+    /// Sparsify one node type's embedding (D-ReLU → CBSR) iff some
+    /// consuming edge's kernel needs it. The CBSR is built **once per node
+    /// type per layer** and shared by every consumer (§3.1 — `x_cell` is
+    /// sparsified once for both `near` and `pins`, not twice).
+    pub fn sparsify(&self, x: &Matrix, nt: NodeType) -> Option<Arc<Cbsr>> {
+        if !self.sparsifies(nt) {
+            return None;
+        }
+        let k = self.k_for(nt).clamp(1, x.cols);
+        Some(Arc::new(drelu(x, k)))
+    }
+
+    /// Aggregate `h = Ā · x_src` for one edge type; sparsifies internally.
+    /// Hot paths sparsify once per node type and use
+    /// [`Engine::aggregate_with`] instead.
+    pub fn aggregate(&self, e: EdgeType, x_src: &Matrix) -> (Matrix, AggCache) {
+        let prep = self.sparsify(x_src, e.endpoints().0);
+        self.aggregate_with(e, x_src, prep.as_ref())
+    }
+
+    /// Aggregate with a pre-sparsified source (see [`Engine::sparsify`]).
+    pub fn aggregate_with(
+        &self,
+        e: EdgeType,
+        x_src: &Matrix,
+        prep: Option<&Arc<Cbsr>>,
+    ) -> (Matrix, AggCache) {
+        let i = edge_index(e);
+        self.kernels[i].forward(&self.plans[i], x_src, prep)
+    }
+
+    /// Backward of the aggregation: dense `dX_src = Āᵀ · dH`, using the
+    /// forward cache. DR gradients are masked to the CBSR support (the
+    /// D-ReLU subgradient, Alg. 2 reusing forward indices).
+    pub fn aggregate_backward(&self, e: EdgeType, dh: &Matrix, cache: &AggCache) -> Matrix {
+        self.aggregate_backward_raw(e, dh, cache).into_dense()
+    }
+
+    /// Backward in the kernel's native gradient representation (compressed
+    /// CBSR for DR) — what the kernel-level benches time.
+    pub fn aggregate_backward_raw(&self, e: EdgeType, dh: &Matrix, cache: &AggCache) -> Gradient {
+        let i = edge_index(e);
+        self.kernels[i].backward(&self.plans[i], dh, cache)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::HeteroGraph;
+    use crate::util::math::assert_allclose;
+
+    fn toy_graph() -> HeteroGraph {
+        let near = Csr::from_triplets(
+            3,
+            3,
+            &[(0, 1, 1.0), (1, 0, 1.0), (1, 2, 1.0), (2, 1, 1.0)],
+        );
+        let pins =
+            Csr::from_triplets(2, 3, &[(0, 0, 1.0), (0, 1, 1.0), (1, 1, 1.0), (1, 2, 1.0)]);
+        let pinned = pins.transpose();
+        HeteroGraph {
+            id: 0,
+            n_cells: 3,
+            n_nets: 2,
+            near,
+            pins,
+            pinned,
+            x_cell: Matrix::from_vec(3, 4, (0..12).map(|i| (i as f32) / 6.0 - 1.0).collect()),
+            x_net: Matrix::from_vec(2, 4, (0..8).map(|i| (i as f32) / 4.0 - 1.0).collect()),
+            y_cell: Matrix::zeros(3, 1),
+        }
+    }
+
+    #[test]
+    fn builder_defaults_and_shorthands() {
+        let b = Engine::builder();
+        assert_eq!(b.spec_for(EdgeType::Near), KernelSpec::Dr);
+        assert_eq!(EngineBuilder::csr().spec_for(EdgeType::Pins), KernelSpec::Csr);
+        assert_eq!(
+            EngineBuilder::gnna(GnnaConfig::default()).spec_for(EdgeType::Pinned),
+            KernelSpec::Gnna
+        );
+        assert_eq!(EngineBuilder::auto().spec_for(EdgeType::Near), KernelSpec::Auto);
+        let b = EngineBuilder::dr(4, 2);
+        assert_eq!(b.k_for(NodeType::Cell), 4);
+        assert_eq!(b.k_for(NodeType::Net), 2);
+    }
+
+    #[test]
+    fn per_edge_overrides_resolve() {
+        let g = toy_graph();
+        let eng = Engine::builder()
+            .kernel("csr")
+            .kernel_for(EdgeType::Near, "dr")
+            .kernel_for(EdgeType::Pins, "gnna")
+            .build(&g);
+        assert_eq!(eng.kernel_name(EdgeType::Near), "dr");
+        assert_eq!(eng.kernel_name(EdgeType::Pins), "gnna");
+        assert_eq!(eng.kernel_name(EdgeType::Pinned), "csr");
+        assert!(eng.uses_drelu());
+        assert_eq!(eng.describe(), "near=dr,pins=gnna,pinned=csr");
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown kernel")]
+    fn builder_panics_on_unknown_kernel() {
+        let _ = Engine::builder().kernel("warp9");
+    }
+
+    #[test]
+    fn aggregate_shapes_all_kernels() {
+        let g = toy_graph();
+        for name in ["csr", "gnna", "dr"] {
+            let eng = Engine::builder().kernel(name).k_cell(2).k_net(2).build(&g);
+            let (h_near, _) = eng.aggregate(EdgeType::Near, &g.x_cell);
+            assert_eq!((h_near.rows, h_near.cols), (3, 4), "{name}");
+            let (h_pins, _) = eng.aggregate(EdgeType::Pins, &g.x_cell);
+            assert_eq!((h_pins.rows, h_pins.cols), (2, 4), "{name}");
+            let (h_pinned, _) = eng.aggregate(EdgeType::Pinned, &g.x_net);
+            assert_eq!((h_pinned.rows, h_pinned.cols), (3, 4), "{name}");
+        }
+    }
+
+    #[test]
+    fn dr_full_k_matches_csr_engine() {
+        let g = toy_graph();
+        let csr = EngineBuilder::csr().build(&g);
+        let dr = EngineBuilder::dr(4, 4).build(&g);
+        for e in EdgeType::ALL {
+            let x = g.src_features(e);
+            let (a, _) = csr.aggregate(e, x);
+            let (b, cache) = dr.aggregate(e, x);
+            assert_allclose(&a.data, &b.data, 1e-5, 1e-5);
+            let dy = Matrix::ones(a.rows, a.cols);
+            let ga = csr.aggregate_backward(e, &dy, &AggCache::None);
+            let gb = dr.aggregate_backward(e, &dy, &cache);
+            assert_allclose(&ga.data, &gb.data, 1e-5, 1e-5);
+        }
+    }
+
+    #[test]
+    fn sparsify_only_when_a_consumer_needs_it() {
+        let g = toy_graph();
+        let csr = EngineBuilder::csr().build(&g);
+        assert!(csr.sparsify(&g.x_cell, NodeType::Cell).is_none());
+        // DR only on pinned (net source): cell embeddings stay dense.
+        let eng = Engine::builder()
+            .kernel("csr")
+            .kernel_for(EdgeType::Pinned, "dr")
+            .k_net(2)
+            .build(&g);
+        assert!(eng.sparsify(&g.x_cell, NodeType::Cell).is_none());
+        let net = eng.sparsify(&g.x_net, NodeType::Net).unwrap();
+        assert_eq!(net.k, 2);
+    }
+
+    #[test]
+    fn k_clamps_to_embedding_width() {
+        let g = toy_graph();
+        let eng = EngineBuilder::dr(64, 64).build(&g);
+        let c = eng.sparsify(&g.x_cell, NodeType::Cell).unwrap();
+        assert_eq!(c.k, g.x_cell.cols);
+    }
+}

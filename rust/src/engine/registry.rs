@@ -1,0 +1,179 @@
+//! Kernel registry — the single place kernel-name strings are interpreted.
+//!
+//! Every surface that accepts a kernel name (the `--kernel` CLI flag, the
+//! `kernel.kind` config key, bench environment knobs, the builder's
+//! `kernel_for`) parses through [`KernelSpec::parse`], so the accepted
+//! vocabulary and its aliases live in exactly one table: [`REGISTRY`].
+
+use super::auto::auto_select;
+use super::kernel::{CsrKernel, DrKernel, GnnaKernel, SpmmKernel};
+use crate::graph::{Csr, EdgeType};
+use crate::sparse::GnnaConfig;
+use std::sync::Arc;
+
+/// A parsed kernel selection. `Auto` is a *policy*, not a kernel: it
+/// resolves to one of the concrete specs per edge type at `Engine::build`
+/// time by inspecting the adjacency's degree profile (paper Fig. 4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelSpec {
+    /// cuSPARSE-analog baseline.
+    Csr,
+    /// GNNAdvisor analog.
+    Gnna,
+    /// D-ReLU + DR-SpMM (the paper's kernels).
+    Dr,
+    /// Per-edge-type automatic selection from degree statistics.
+    Auto,
+}
+
+/// One registry row: canonical name, accepted aliases, one-line summary.
+pub struct KernelEntry {
+    pub name: &'static str,
+    pub aliases: &'static [&'static str],
+    pub summary: &'static str,
+    pub spec: KernelSpec,
+}
+
+/// The kernel vocabulary. Order is the order help text lists them in.
+pub const REGISTRY: &[KernelEntry] = &[
+    KernelEntry {
+        name: "csr",
+        aliases: &["cusparse"],
+        summary: "cuSPARSE-analog row-parallel dense SpMM",
+        spec: KernelSpec::Csr,
+    },
+    KernelEntry {
+        name: "gnna",
+        aliases: &["gnnadvisor"],
+        summary: "GNNAdvisor-analog neighbor-group SpMM",
+        spec: KernelSpec::Gnna,
+    },
+    KernelEntry {
+        name: "dr",
+        aliases: &["drspmm", "dr-spmm"],
+        summary: "D-ReLU sparsification + DR-SpMM (the paper's kernels)",
+        spec: KernelSpec::Dr,
+    },
+    KernelEntry {
+        name: "auto",
+        aliases: &[],
+        summary: "per-edge-type selection from degree statistics (Fig. 4)",
+        spec: KernelSpec::Auto,
+    },
+];
+
+/// Canonical kernel names, for help text and error messages.
+pub fn known_names() -> Vec<&'static str> {
+    REGISTRY.iter().map(|e| e.name).collect()
+}
+
+impl KernelSpec {
+    /// Parse a kernel name or alias (case-insensitive). This is the only
+    /// parse point in the crate.
+    pub fn parse(s: &str) -> Result<KernelSpec, String> {
+        let needle = s.trim().to_ascii_lowercase();
+        for entry in REGISTRY {
+            if entry.name == needle || entry.aliases.contains(&needle.as_str()) {
+                return Ok(entry.spec);
+            }
+        }
+        Err(format!(
+            "unknown kernel '{s}' (expected one of: {})",
+            known_names().join(", ")
+        ))
+    }
+
+    /// Canonical registry name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelSpec::Csr => "csr",
+            KernelSpec::Gnna => "gnna",
+            KernelSpec::Dr => "dr",
+            KernelSpec::Auto => "auto",
+        }
+    }
+
+    /// Paper-facing display name.
+    pub fn display_name(&self) -> &'static str {
+        match self {
+            KernelSpec::Csr => "cuSPARSE",
+            KernelSpec::Gnna => "GNNA",
+            KernelSpec::Dr => "DR-SpMM",
+            KernelSpec::Auto => "auto",
+        }
+    }
+}
+
+/// Instantiate a concrete kernel for one edge of a graph. `Auto` is
+/// resolved against the adjacency's degree profile; the other specs map
+/// directly to their constructor.
+pub fn instantiate(
+    spec: KernelSpec,
+    edge: EdgeType,
+    adj: &Csr,
+    gnna: &GnnaConfig,
+) -> Arc<dyn SpmmKernel> {
+    let resolved = match spec {
+        KernelSpec::Auto => auto_select(adj, edge).spec,
+        concrete => concrete,
+    };
+    match resolved {
+        KernelSpec::Csr => Arc::new(CsrKernel),
+        KernelSpec::Gnna => Arc::new(GnnaKernel::new(*gnna)),
+        KernelSpec::Dr => Arc::new(DrKernel),
+        KernelSpec::Auto => unreachable!("auto_select returns a concrete spec"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_canonical_names_and_aliases() {
+        assert_eq!(KernelSpec::parse("csr").unwrap(), KernelSpec::Csr);
+        assert_eq!(KernelSpec::parse("cuSPARSE").unwrap(), KernelSpec::Csr);
+        assert_eq!(KernelSpec::parse("GNNA").unwrap(), KernelSpec::Gnna);
+        assert_eq!(KernelSpec::parse("gnnadvisor").unwrap(), KernelSpec::Gnna);
+        assert_eq!(KernelSpec::parse("dr").unwrap(), KernelSpec::Dr);
+        assert_eq!(KernelSpec::parse("DR-SpMM").unwrap(), KernelSpec::Dr);
+        assert_eq!(KernelSpec::parse("drspmm").unwrap(), KernelSpec::Dr);
+        assert_eq!(KernelSpec::parse(" auto ").unwrap(), KernelSpec::Auto);
+    }
+
+    #[test]
+    fn parse_error_lists_known_names() {
+        let err = KernelSpec::parse("???").unwrap_err();
+        for name in known_names() {
+            assert!(err.contains(name), "error must mention '{name}': {err}");
+        }
+    }
+
+    #[test]
+    fn every_entry_round_trips() {
+        for entry in REGISTRY {
+            assert_eq!(KernelSpec::parse(entry.name).unwrap(), entry.spec);
+            assert_eq!(entry.spec.name(), entry.name);
+            for alias in entry.aliases {
+                assert_eq!(KernelSpec::parse(alias).unwrap(), entry.spec);
+            }
+        }
+    }
+
+    #[test]
+    fn instantiate_concrete_specs() {
+        let adj = Csr::from_triplets(2, 2, &[(0, 1, 1.0)]);
+        let cfg = GnnaConfig::default();
+        for (spec, name) in [
+            (KernelSpec::Csr, "csr"),
+            (KernelSpec::Gnna, "gnna"),
+            (KernelSpec::Dr, "dr"),
+        ] {
+            let k = instantiate(spec, EdgeType::Near, &adj, &cfg);
+            assert_eq!(k.name(), name);
+        }
+        // Auto resolves to something concrete.
+        let k = instantiate(KernelSpec::Auto, EdgeType::Pins, &adj, &cfg);
+        assert_ne!(k.name(), "auto");
+    }
+}

@@ -13,12 +13,17 @@
 //! * **Layer 1 (python/compile/kernels/)** — Pallas kernels (interpret mode)
 //!   for D-ReLU and DR-SpMM, validated against pure-jnp oracles.
 //!
-//! See `DESIGN.md` for the full system inventory and the per-experiment index
-//! mapping every table/figure of the paper to a bench target.
+//! Kernel dispatch is unified behind the [`engine`] subsystem: a
+//! plan/execute [`engine::SpmmKernel`] trait, a name registry
+//! (`"csr" | "gnna" | "dr" | "auto"`), and an [`engine::Engine`] facade
+//! with per-edge-type kernel selection. See `docs/ENGINE.md` for the API
+//! walkthrough and the per-experiment index mapping every table/figure of
+//! the paper to a bench target.
 
 pub mod bench;
 pub mod config;
 pub mod datagen;
+pub mod engine;
 pub mod graph;
 pub mod nn;
 pub mod runtime;

@@ -15,8 +15,9 @@
 use dr_circuitgnn::bench::{fmt_speedup, Table};
 use dr_circuitgnn::config::Config;
 use dr_circuitgnn::datagen::{self, mini_circuitnet, table1_designs};
+use dr_circuitgnn::engine::{auto_select, EngineBuilder};
 use dr_circuitgnn::graph::stats::{degree_report, ImbalanceStats};
-use dr_circuitgnn::nn::{HomoKind, MessageEngine};
+use dr_circuitgnn::nn::HomoKind;
 use dr_circuitgnn::runtime::{ArtifactRegistry, Runtime};
 use dr_circuitgnn::sched::{run_e2e_step, ScheduleMode};
 use dr_circuitgnn::sparse::GnnaConfig;
@@ -33,7 +34,7 @@ fn main() {
         .declare("epochs", "training epochs", true)
         .declare("hidden", "hidden width", true)
         .declare("lr", "learning rate", true)
-        .declare("kernel", "csr | gnna | dr", true)
+        .declare("kernel", "csr | gnna | dr | auto (engine registry names)", true)
         .declare("model", "dr | gcn | sage | gat (train)", true)
         .declare("k-cell", "D-ReLU K for cell embeddings", true)
         .declare("k-net", "D-ReLU K for net embeddings", true)
@@ -104,19 +105,23 @@ fn cmd_gen_data(cfg: &Config) -> i32 {
                 s.total_edges().to_string(),
             ]);
         }
-        // Fig. 4 degree summary for the first graph of each design.
+        // Fig. 4 degree summary for the first graph of each design, plus
+        // what the engine's "auto" policy would pick per edge type.
         let g = &graphs[0];
         for (edge, hist) in degree_report(g, 4) {
             let imb = ImbalanceStats::of(g.adj(edge));
+            let auto = auto_select(g.adj(edge), edge);
             dr_circuitgnn::info!(
-                "{} {}: mode≈{} max={} avg={:.1} imbalance={:.1} {}",
+                "{} {}: mode≈{} max={} avg={:.1} imbalance={:.1} {} | auto→{} ({})",
                 spec.name,
                 edge.name(),
                 hist.mode_degree(),
                 hist.max_degree,
                 hist.avg_degree,
                 imb.imbalance,
-                hist.sparkline(32)
+                hist.sparkline(32),
+                auto.spec.name(),
+                auto.reason
             );
         }
     }
@@ -143,7 +148,7 @@ fn cmd_train(cfg: &Config, args: &Args) -> i32 {
     };
     let model_kind = args.get_or("model", "dr").to_string();
     let (scores, secs, params) = if model_kind == "dr" {
-        let (_, report) = Trainer::train_dr(&train, &test, cfg.engine(), &tc);
+        let (_, report) = Trainer::train_dr(&train, &test, &cfg.engine_builder(), &tc);
         (report.test_scores, report.train_seconds, report.params)
     } else {
         let kind = match HomoKind::parse(&model_kind) {
@@ -218,21 +223,15 @@ fn cmd_e2e(cfg: &Config) -> i32 {
         let graphs = datagen::generate_design(spec);
         for g in &graphs {
             let base =
-                run_e2e_step(g, cfg.dim, &MessageEngine::Csr, ScheduleMode::Sequential, cfg.seed);
+                run_e2e_step(g, cfg.dim, &EngineBuilder::csr(), ScheduleMode::Sequential, cfg.seed);
             let gnna = run_e2e_step(
                 g,
                 cfg.dim,
-                &MessageEngine::Gnna(GnnaConfig::default()),
+                &EngineBuilder::gnna(GnnaConfig::default()),
                 ScheduleMode::Sequential,
                 cfg.seed,
             );
-            let ours = run_e2e_step(
-                g,
-                cfg.dim,
-                &MessageEngine::dr(cfg.k_cell, cfg.k_net),
-                cfg.schedule(),
-                cfg.seed,
-            );
+            let ours = run_e2e_step(g, cfg.dim, &cfg.engine_builder(), cfg.schedule(), cfg.seed);
             t.row(&[
                 spec.name.clone(),
                 g.id.to_string(),

@@ -2,10 +2,14 @@
 //!
 //! `Y = Â · X · W + b` where Â is the (pre-normalised) adjacency. Backward:
 //! `dW = (ÂX)ᵀ · dY`, `dX = Âᵀ · (dY · Wᵀ)`.
+//!
+//! The heterogeneous path aggregates through an [`crate::engine::Engine`]
+//! and calls [`GraphConv::forward_from_agg`]; the homogeneous baselines use
+//! the fused [`GraphConv::forward`], which runs the cuSPARSE-analog kernel
+//! against a cached [`KernelPlan`].
 
 use super::Param;
-use crate::graph::{Csc, Csr};
-use crate::sparse::{spmm_csr, spmm_csr_bwd};
+use crate::engine::{AggCache, CsrKernel, KernelPlan, SpmmKernel};
 use crate::tensor::{matmul, matmul_a_bt, matmul_at_b, Matrix};
 use crate::util::rng::Rng;
 
@@ -34,9 +38,9 @@ impl GraphConv {
         y
     }
 
-    /// Standard dense-aggregation forward.
-    pub fn forward(&mut self, adj: &Csr, x: &Matrix) -> Matrix {
-        let h = spmm_csr(adj, x);
+    /// Fused dense-aggregation forward against a planned adjacency.
+    pub fn forward(&mut self, plan: &KernelPlan, x: &Matrix) -> Matrix {
+        let (h, _) = CsrKernel.forward(plan, x, None);
         self.forward_from_agg(h)
     }
 
@@ -52,10 +56,10 @@ impl GraphConv {
         matmul_a_bt(dy, &self.w.value)
     }
 
-    /// Full dense backward: returns dX.
-    pub fn backward(&mut self, adj_csc: &Csc, dy: &Matrix) -> Matrix {
+    /// Full dense backward against the planned adjacency: returns dX.
+    pub fn backward(&mut self, plan: &KernelPlan, dy: &Matrix) -> Matrix {
         let dh = self.backward_to_agg(dy);
-        spmm_csr_bwd(adj_csc, &dh)
+        CsrKernel.backward(plan, &dh, &AggCache::None).into_dense()
     }
 
     pub fn params_mut(&mut self) -> Vec<&mut Param> {
@@ -70,19 +74,20 @@ impl GraphConv {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::graph::Csr;
 
-    fn ring(n: usize) -> Csr {
+    fn ring(n: usize) -> KernelPlan {
         let t: Vec<_> = (0..n).map(|r| (r, (r + 1) % n, 1.0f32)).collect();
-        Csr::from_triplets(n, n, &t)
+        CsrKernel.plan(Csr::from_triplets(n, n, &t))
     }
 
     #[test]
     fn forward_shapes() {
         let mut rng = Rng::new(1);
         let mut layer = GraphConv::new(4, 3, &mut rng);
-        let adj = ring(5);
+        let plan = ring(5);
         let x = Matrix::randn(5, 4, 1.0, &mut rng);
-        let y = layer.forward(&adj, &x);
+        let y = layer.forward(&plan, &x);
         assert_eq!((y.rows, y.cols), (5, 3));
     }
 
@@ -90,14 +95,14 @@ mod tests {
     fn finite_difference_w_and_x() {
         let mut rng = Rng::new(2);
         let mut layer = GraphConv::new(3, 2, &mut rng);
-        let adj = ring(4);
+        let plan = ring(4);
         let x = Matrix::randn(4, 3, 1.0, &mut rng);
-        let _y = layer.forward(&adj, &x);
+        let _y = layer.forward(&plan, &x);
         let dy = Matrix::ones(4, 2);
-        let dx = layer.backward(&adj.to_csc(), &dy);
+        let dx = layer.backward(&plan, &dy);
         let eps = 1e-3f32;
         let loss = |l: &GraphConv, xx: &Matrix| -> f32 {
-            let h = spmm_csr(&adj, xx);
+            let (h, _) = CsrKernel.forward(&plan, xx, None);
             matmul(&h, &l.w.value).add_bias(&l.b.value.data).data.iter().sum()
         };
         for i in 0..layer.w.value.data.len() {
@@ -123,10 +128,10 @@ mod tests {
         let mut rng = Rng::new(3);
         let mut a = GraphConv::new(3, 2, &mut rng);
         let mut b = a.clone();
-        let adj = ring(6);
+        let plan = ring(6);
         let x = Matrix::randn(6, 3, 1.0, &mut rng);
-        let y1 = a.forward(&adj, &x);
-        let h = spmm_csr(&adj, &x);
+        let y1 = a.forward(&plan, &x);
+        let (h, _) = CsrKernel.forward(&plan, &x, None);
         let y2 = b.forward_from_agg(h);
         assert_eq!(y1.data, y2.data);
     }

@@ -8,175 +8,19 @@
 //! The two cell-side updates merge with element-wise `max` (eq. 8); the
 //! backward pass routes gradient through the cached argmax mask (eqs. 12–14).
 //!
-//! The aggregation kernel is pluggable via [`MessageEngine`], which is how
-//! the benchmarks swap cuSPARSE-analog / GNNA-analog / DR-SpMM paths, and
-//! `parallel` mode runs the three edge-type aggregations concurrently —
-//! the §3.4 cudaStream analog (see also [`crate::sched`]).
+//! All aggregations dispatch through an [`Engine`]: the engine owns the
+//! kernel per edge type (cuSPARSE-analog / GNNA-analog / DR-SpMM, possibly
+//! mixed), the shared D-ReLU sparsification per node type, and the §3.4
+//! parallel mode that runs the three edge-type aggregations concurrently —
+//! the cudaStream analog (see also [`crate::sched`]).
 
 use super::gcn::GraphConv;
 use super::sage::SageConv;
-use crate::graph::{Cbsr, Csc, Csr, EdgeType, HeteroGraph};
-use crate::sparse::{
-    dr_spmm, dr_spmm_bwd, drelu, spmm_csr, spmm_csr_bwd, spmm_gnna, spmm_gnna_bwd, DegreeBuckets,
-    GnnaConfig,
-};
+use crate::engine::{AggCache, Engine};
+use crate::graph::{EdgeType, NodeType};
 use crate::tensor::Matrix;
 use crate::util::pool::join_all;
 use crate::util::rng::Rng;
-
-/// Pre-processed per-graph state: normalised adjacencies, their CSC forms
-/// and degree-bucket schedules (paper Alg. 1 stage 1 — built once).
-#[derive(Clone, Debug)]
-pub struct GraphCtx {
-    /// GCN-normalised near (cell→cell).
-    pub near: Csr,
-    pub near_csc: Csc,
-    pub near_buckets: DegreeBuckets,
-    /// Row-normalised pinned (net→cell destination-major).
-    pub pinned: Csr,
-    pub pinned_csc: Csc,
-    pub pinned_buckets: DegreeBuckets,
-    /// Row-normalised pins (cell→net destination-major).
-    pub pins: Csr,
-    pub pins_csc: Csc,
-    pub pins_buckets: DegreeBuckets,
-}
-
-impl GraphCtx {
-    pub fn new(g: &HeteroGraph) -> GraphCtx {
-        let mut near = g.near.clone();
-        near.normalize_gcn();
-        let mut pinned = g.pinned.clone();
-        pinned.normalize_rows();
-        let mut pins = g.pins.clone();
-        pins.normalize_rows();
-        GraphCtx {
-            near_csc: near.to_csc(),
-            near_buckets: DegreeBuckets::build(&near),
-            near,
-            pinned_csc: pinned.to_csc(),
-            pinned_buckets: DegreeBuckets::build(&pinned),
-            pinned,
-            pins_csc: pins.to_csc(),
-            pins_buckets: DegreeBuckets::build(&pins),
-            pins,
-        }
-    }
-
-    pub fn adj(&self, e: EdgeType) -> (&Csr, &Csc, &DegreeBuckets) {
-        match e {
-            EdgeType::Near => (&self.near, &self.near_csc, &self.near_buckets),
-            EdgeType::Pinned => (&self.pinned, &self.pinned_csc, &self.pinned_buckets),
-            EdgeType::Pins => (&self.pins, &self.pins_csc, &self.pins_buckets),
-        }
-    }
-}
-
-/// The pluggable aggregation kernel.
-#[derive(Clone, Debug)]
-pub enum MessageEngine {
-    /// cuSPARSE-analog dense SpMM (the DGL baseline path).
-    Csr,
-    /// GNNAdvisor-analog neighbor-group SpMM.
-    Gnna(GnnaConfig),
-    /// The paper's path: D-ReLU sparsification + DR-SpMM, with node-type
-    /// specific K values (§3.1: different K for cell and net embeddings).
-    Dr { k_cell: usize, k_net: usize },
-}
-
-impl MessageEngine {
-    pub fn dr(k_cell: usize, k_net: usize) -> MessageEngine {
-        MessageEngine::Dr { k_cell, k_net }
-    }
-
-    pub fn name(&self) -> &'static str {
-        match self {
-            MessageEngine::Csr => "cuSPARSE",
-            MessageEngine::Gnna(_) => "GNNA",
-            MessageEngine::Dr { .. } => "DR-SpMM",
-        }
-    }
-
-    /// Sparsify one node type's embedding (D-ReLU → CBSR), shared by every
-    /// edge whose source is that type — the paper applies D-ReLU *per node
-    /// type per layer*, not per edge (§Perf L3-2: sparsifying `x_cell` once
-    /// for both `near` and `pins` instead of twice).
-    pub fn sparsify(
-        &self,
-        x: &Matrix,
-        nt: crate::graph::NodeType,
-    ) -> Option<std::sync::Arc<Cbsr>> {
-        match (self, nt) {
-            (MessageEngine::Dr { k_cell, .. }, crate::graph::NodeType::Cell) => {
-                Some(std::sync::Arc::new(drelu(x, (*k_cell).clamp(1, x.cols))))
-            }
-            (MessageEngine::Dr { k_net, .. }, crate::graph::NodeType::Net) => {
-                Some(std::sync::Arc::new(drelu(x, (*k_net).clamp(1, x.cols))))
-            }
-            _ => None,
-        }
-    }
-
-    /// Aggregate `h = Ā · x_src` for one edge type; returns the dense
-    /// aggregate plus the cache its backward needs. Convenience wrapper
-    /// that sparsifies internally — hot paths use [`Self::aggregate_with`].
-    pub fn aggregate(&self, ctx: &GraphCtx, e: EdgeType, x_src: &Matrix) -> (Matrix, AggCache) {
-        let prep = self.sparsify(x_src, e.endpoints().0);
-        self.aggregate_with(ctx, e, x_src, prep.as_ref())
-    }
-
-    /// Aggregate with a pre-sparsified source (see [`Self::sparsify`]).
-    pub fn aggregate_with(
-        &self,
-        ctx: &GraphCtx,
-        e: EdgeType,
-        x_src: &Matrix,
-        prep: Option<&std::sync::Arc<Cbsr>>,
-    ) -> (Matrix, AggCache) {
-        let (adj, _, buckets) = ctx.adj(e);
-        match self {
-            MessageEngine::Csr => (spmm_csr(adj, x_src), AggCache::None),
-            MessageEngine::Gnna(cfg) => (spmm_gnna(adj, x_src, cfg), AggCache::None),
-            MessageEngine::Dr { .. } => {
-                let compressed =
-                    prep.expect("DR aggregation requires a sparsified source").clone();
-                let h = dr_spmm(adj, &compressed, buckets);
-                (h, AggCache::Cbsr(compressed))
-            }
-        }
-    }
-
-    /// Backward of the aggregation: `dX_src = Āᵀ · dH` (dense), using the
-    /// forward cache. For DR, gradient is masked to the CBSR support — the
-    /// D-ReLU subgradient (Alg. 2 reusing forward indices).
-    pub fn aggregate_backward(
-        &self,
-        ctx: &GraphCtx,
-        e: EdgeType,
-        dh: &Matrix,
-        cache: &AggCache,
-    ) -> Matrix {
-        let (_, csc, _) = ctx.adj(e);
-        match (self, cache) {
-            (MessageEngine::Csr, _) => spmm_csr_bwd(csc, dh),
-            (MessageEngine::Gnna(cfg), _) => spmm_gnna_bwd(csc, dh, cfg),
-            (MessageEngine::Dr { .. }, AggCache::Cbsr(fwd)) => {
-                dr_spmm_bwd(csc, dh, fwd).to_dense()
-            }
-            (MessageEngine::Dr { .. }, AggCache::None) => {
-                panic!("DR backward requires the forward CBSR cache")
-            }
-        }
-    }
-}
-
-/// Forward-pass cache per aggregation. The CBSR is shared (`Arc`) between
-/// the edges that consume the same node type's sparsified embedding.
-#[derive(Clone, Debug)]
-pub enum AggCache {
-    None,
-    Cbsr(std::sync::Arc<Cbsr>),
-}
 
 /// One heterogeneous convolution block.
 #[derive(Clone, Debug)]
@@ -187,8 +31,6 @@ pub struct HeteroConv {
     pub pinned: SageConv,
     /// cell→net module.
     pub pins: SageConv,
-    /// Run the three edge-type aggregations concurrently (§3.4).
-    pub parallel: bool,
     /// Cached argmax mask of the cell-side max merge.
     mask: Option<Matrix>,
     caches: Option<[AggCache; 3]>,
@@ -201,7 +43,6 @@ impl HeteroConv {
             near: GraphConv::new(d_cell, d_out, rng),
             pinned: SageConv::new(d_net, d_cell, d_out, rng),
             pins: SageConv::new(d_cell, d_net, d_out, rng),
-            parallel: false,
             mask: None,
             caches: None,
         }
@@ -210,31 +51,28 @@ impl HeteroConv {
     /// Forward: returns `(y_cell, y_net)`.
     pub fn forward(
         &mut self,
-        ctx: &GraphCtx,
-        engine: &MessageEngine,
+        engine: &Engine,
         x_cell: &Matrix,
         x_net: &Matrix,
     ) -> (Matrix, Matrix) {
         // D-ReLU once per node type (paper §3.1), then three independent
         // SpMM aggregations — the §3.4 concurrency opportunity.
-        let prep_cell = engine.sparsify(x_cell, crate::graph::NodeType::Cell);
-        let prep_net = engine.sparsify(x_net, crate::graph::NodeType::Net);
-        let [(h_near, c_near), (h_pinned, c_pinned), (h_pins, c_pins)] = if self.parallel {
+        let prep_cell = engine.sparsify(x_cell, NodeType::Cell);
+        let prep_net = engine.sparsify(x_net, NodeType::Net);
+        let [(h_near, c_near), (h_pinned, c_pinned), (h_pins, c_pins)] = if engine.is_parallel() {
             let results = join_all(vec![
-                Box::new(|| engine.aggregate_with(ctx, EdgeType::Near, x_cell, prep_cell.as_ref()))
+                Box::new(|| engine.aggregate_with(EdgeType::Near, x_cell, prep_cell.as_ref()))
                     as Box<dyn FnOnce() -> (Matrix, AggCache) + Send>,
-                Box::new(|| {
-                    engine.aggregate_with(ctx, EdgeType::Pinned, x_net, prep_net.as_ref())
-                }),
-                Box::new(|| engine.aggregate_with(ctx, EdgeType::Pins, x_cell, prep_cell.as_ref())),
+                Box::new(|| engine.aggregate_with(EdgeType::Pinned, x_net, prep_net.as_ref())),
+                Box::new(|| engine.aggregate_with(EdgeType::Pins, x_cell, prep_cell.as_ref())),
             ]);
             let mut it = results.into_iter();
             [it.next().unwrap(), it.next().unwrap(), it.next().unwrap()]
         } else {
             [
-                engine.aggregate_with(ctx, EdgeType::Near, x_cell, prep_cell.as_ref()),
-                engine.aggregate_with(ctx, EdgeType::Pinned, x_net, prep_net.as_ref()),
-                engine.aggregate_with(ctx, EdgeType::Pins, x_cell, prep_cell.as_ref()),
+                engine.aggregate_with(EdgeType::Near, x_cell, prep_cell.as_ref()),
+                engine.aggregate_with(EdgeType::Pinned, x_net, prep_net.as_ref()),
+                engine.aggregate_with(EdgeType::Pins, x_cell, prep_cell.as_ref()),
             ]
         };
         let y_near = self.near.forward_from_agg(h_near);
@@ -250,8 +88,7 @@ impl HeteroConv {
     /// Backward: returns `(dx_cell, dx_net)` and accumulates module grads.
     pub fn backward(
         &mut self,
-        ctx: &GraphCtx,
-        engine: &MessageEngine,
+        engine: &Engine,
         dy_cell: &Matrix,
         dy_net: &Matrix,
     ) -> (Matrix, Matrix) {
@@ -268,22 +105,20 @@ impl HeteroConv {
 
         // Aggregation backward (the SpMM-heavy part) — parallelisable.
         let [c_near, c_pinned, c_pins] = &caches;
-        let (g_near, g_pinned, g_pins) = if self.parallel {
+        let (g_near, g_pinned, g_pins) = if engine.is_parallel() {
             let results = join_all(vec![
-                Box::new(|| engine.aggregate_backward(ctx, EdgeType::Near, &dh_near, c_near))
+                Box::new(|| engine.aggregate_backward(EdgeType::Near, &dh_near, c_near))
                     as Box<dyn FnOnce() -> Matrix + Send>,
-                Box::new(|| {
-                    engine.aggregate_backward(ctx, EdgeType::Pinned, &dh_pinned, c_pinned)
-                }),
-                Box::new(|| engine.aggregate_backward(ctx, EdgeType::Pins, &dh_pins, c_pins)),
+                Box::new(|| engine.aggregate_backward(EdgeType::Pinned, &dh_pinned, c_pinned)),
+                Box::new(|| engine.aggregate_backward(EdgeType::Pins, &dh_pins, c_pins)),
             ]);
             let mut it = results.into_iter();
             (it.next().unwrap(), it.next().unwrap(), it.next().unwrap())
         } else {
             (
-                engine.aggregate_backward(ctx, EdgeType::Near, &dh_near, c_near),
-                engine.aggregate_backward(ctx, EdgeType::Pinned, &dh_pinned, c_pinned),
-                engine.aggregate_backward(ctx, EdgeType::Pins, &dh_pins, c_pins),
+                engine.aggregate_backward(EdgeType::Near, &dh_near, c_near),
+                engine.aggregate_backward(EdgeType::Pinned, &dh_pinned, c_pinned),
+                engine.aggregate_backward(EdgeType::Pins, &dh_pins, c_pins),
             )
         };
         // dX_cell: near aggregation (cell src) + pinned self-path (cell dst)
@@ -312,6 +147,9 @@ impl HeteroConv {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::EngineBuilder;
+    use crate::graph::{Csr, HeteroGraph};
+    use crate::sparse::GnnaConfig;
     use crate::util::math::assert_allclose;
 
     fn toy() -> HeteroGraph {
@@ -339,40 +177,39 @@ mod tests {
     #[test]
     fn forward_shapes_all_engines() {
         let g = toy();
-        let ctx = GraphCtx::new(&g);
         let mut rng = Rng::new(1);
-        for engine in [
-            MessageEngine::Csr,
-            MessageEngine::Gnna(GnnaConfig::default()),
-            MessageEngine::dr(2, 2),
+        for builder in [
+            EngineBuilder::csr(),
+            EngineBuilder::gnna(GnnaConfig::default()),
+            EngineBuilder::dr(2, 2),
         ] {
+            let engine = builder.build(&g);
             let mut layer = HeteroConv::new(4, 4, 5, &mut rng);
-            let (yc, yn) = layer.forward(&ctx, &engine, &g.x_cell, &g.x_net);
-            assert_eq!((yc.rows, yc.cols), (3, 5), "{}", engine.name());
-            assert_eq!((yn.rows, yn.cols), (2, 5), "{}", engine.name());
+            let (yc, yn) = layer.forward(&engine, &g.x_cell, &g.x_net);
+            assert_eq!((yc.rows, yc.cols), (3, 5), "{}", engine.describe());
+            assert_eq!((yn.rows, yn.cols), (2, 5), "{}", engine.describe());
         }
     }
 
     #[test]
     fn parallel_forward_bitwise_equals_sequential() {
         let g = toy();
-        let ctx = GraphCtx::new(&g);
         let mut rng = Rng::new(2);
         let layer = HeteroConv::new(4, 4, 6, &mut rng);
-        for engine in [MessageEngine::Csr, MessageEngine::dr(2, 3)] {
+        for builder in [EngineBuilder::csr(), EngineBuilder::dr(2, 3)] {
+            let seq_engine = builder.clone().parallel(false).build(&g);
+            let par_engine = builder.parallel(true).build(&g);
             let mut seq = layer.clone();
-            seq.parallel = false;
             let mut par = layer.clone();
-            par.parallel = true;
-            let (yc1, yn1) = seq.forward(&ctx, &engine, &g.x_cell, &g.x_net);
-            let (yc2, yn2) = par.forward(&ctx, &engine, &g.x_cell, &g.x_net);
-            assert_eq!(yc1.data, yc2.data, "{}", engine.name());
+            let (yc1, yn1) = seq.forward(&seq_engine, &g.x_cell, &g.x_net);
+            let (yc2, yn2) = par.forward(&par_engine, &g.x_cell, &g.x_net);
+            assert_eq!(yc1.data, yc2.data, "{}", seq_engine.describe());
             assert_eq!(yn1.data, yn2.data);
             // And backward too.
             let dyc = Matrix::ones(3, 6);
             let dyn_ = Matrix::ones(2, 6);
-            let (a1, b1) = seq.backward(&ctx, &engine, &dyc, &dyn_);
-            let (a2, b2) = par.backward(&ctx, &engine, &dyc, &dyn_);
+            let (a1, b1) = seq.backward(&seq_engine, &dyc, &dyn_);
+            let (a2, b2) = par.backward(&par_engine, &dyc, &dyn_);
             assert_eq!(a1.data, a2.data);
             assert_eq!(b1.data, b2.data);
         }
@@ -384,19 +221,18 @@ mod tests {
     #[test]
     fn finite_difference_inputs_csr_engine() {
         let g = toy();
-        let ctx = GraphCtx::new(&g);
+        let engine = EngineBuilder::csr().build(&g);
         let mut rng = Rng::new(3);
         let layer0 = HeteroConv::new(4, 4, 3, &mut rng);
-        let engine = MessageEngine::Csr;
         let mut layer = layer0.clone();
-        let _ = layer.forward(&ctx, &engine, &g.x_cell, &g.x_net);
+        let _ = layer.forward(&engine, &g.x_cell, &g.x_net);
         let dyc = Matrix::ones(3, 3);
         let dyn_ = Matrix::ones(2, 3);
-        let (dxc, dxn) = layer.backward(&ctx, &engine, &dyc, &dyn_);
+        let (dxc, dxn) = layer.backward(&engine, &dyc, &dyn_);
         let eps = 1e-3f32;
         let loss = |xc: &Matrix, xn: &Matrix| -> f32 {
             let mut l = layer0.clone();
-            let (yc, yn) = l.forward(&ctx, &engine, xc, xn);
+            let (yc, yn) = l.forward(&engine, xc, xn);
             yc.data.iter().sum::<f32>() + yn.data.iter().sum::<f32>()
         };
         for i in 0..g.x_cell.data.len() {
@@ -421,19 +257,20 @@ mod tests {
     #[test]
     fn dr_engine_full_k_matches_csr_engine() {
         let g = toy();
-        let ctx = GraphCtx::new(&g);
+        let csr = EngineBuilder::csr().build(&g);
+        let dr = EngineBuilder::dr(4, 4).build(&g);
         let mut rng = Rng::new(4);
         let layer0 = HeteroConv::new(4, 4, 3, &mut rng);
         let mut a = layer0.clone();
         let mut b = layer0.clone();
-        let (yc1, yn1) = a.forward(&ctx, &MessageEngine::Csr, &g.x_cell, &g.x_net);
-        let (yc2, yn2) = b.forward(&ctx, &MessageEngine::dr(4, 4), &g.x_cell, &g.x_net);
+        let (yc1, yn1) = a.forward(&csr, &g.x_cell, &g.x_net);
+        let (yc2, yn2) = b.forward(&dr, &g.x_cell, &g.x_net);
         assert_allclose(&yc1.data, &yc2.data, 1e-5, 1e-5);
         assert_allclose(&yn1.data, &yn2.data, 1e-5, 1e-5);
         let dyc = Matrix::ones(3, 3);
         let dyn_ = Matrix::ones(2, 3);
-        let (ga1, gb1) = a.backward(&ctx, &MessageEngine::Csr, &dyc, &dyn_);
-        let (ga2, gb2) = b.backward(&ctx, &MessageEngine::dr(4, 4), &dyc, &dyn_);
+        let (ga1, gb1) = a.backward(&csr, &dyc, &dyn_);
+        let (ga2, gb2) = b.backward(&dr, &dyc, &dyn_);
         assert_allclose(&ga1.data, &ga2.data, 1e-5, 1e-5);
         assert_allclose(&gb1.data, &gb2.data, 1e-5, 1e-5);
     }
@@ -441,14 +278,34 @@ mod tests {
     #[test]
     fn dr_engine_gradient_masked_to_support() {
         let g = toy();
-        let ctx = GraphCtx::new(&g);
-        let engine = MessageEngine::dr(2, 2);
-        let (_, cache) = engine.aggregate(&ctx, EdgeType::Near, &g.x_cell);
+        let engine = EngineBuilder::dr(2, 2).build(&g);
+        let (_, cache) = engine.aggregate(EdgeType::Near, &g.x_cell);
         let dh = Matrix::ones(3, 4);
-        let dx = engine.aggregate_backward(&ctx, EdgeType::Near, &dh, &cache);
+        let dx = engine.aggregate_backward(EdgeType::Near, &dh, &cache);
         // Each source row's gradient support ≤ k = 2.
         for r in 0..3 {
             assert!(dx.row(r).iter().filter(|&&v| v != 0.0).count() <= 2);
         }
+    }
+
+    /// A mixed engine (different kernel per edge type) runs end to end.
+    #[test]
+    fn mixed_per_edge_kernels_forward_backward() {
+        let g = toy();
+        let engine = Engine::builder()
+            .kernel_for(EdgeType::Near, "dr")
+            .kernel_for(EdgeType::Pins, "csr")
+            .kernel_for(EdgeType::Pinned, "gnna")
+            .k_cell(2)
+            .k_net(2)
+            .build(&g);
+        let mut rng = Rng::new(5);
+        let mut layer = HeteroConv::new(4, 4, 3, &mut rng);
+        let (yc, yn) = layer.forward(&engine, &g.x_cell, &g.x_net);
+        assert!(yc.data.iter().all(|v| v.is_finite()));
+        assert!(yn.data.iter().all(|v| v.is_finite()));
+        let (dxc, dxn) = layer.backward(&engine, &Matrix::ones(3, 3), &Matrix::ones(2, 3));
+        assert_eq!((dxc.rows, dxc.cols), (3, 4));
+        assert_eq!((dxn.rows, dxn.cols), (2, 4));
     }
 }

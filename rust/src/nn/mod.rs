@@ -17,6 +17,11 @@
 //!
 //! Models in [`model`]: `DrCircuitGnn` (2-layer HeteroConv, Fig. 1) and the
 //! homogeneous baselines (3-layer GCN / SAGE / GAT).
+//!
+//! Aggregation kernels are not chosen here: every SpMM dispatches through
+//! [`crate::engine`] (an [`crate::engine::Engine`] built per graph), which
+//! owns the per-edge-type kernel selection, D-ReLU sharing and the §3.4
+//! parallel schedule.
 
 pub mod activation;
 pub mod adam;
@@ -32,7 +37,7 @@ pub use activation::{DReluGate, Relu};
 pub use adam::Adam;
 pub use gat::GatConv;
 pub use gcn::GraphConv;
-pub use hetero_conv::{HeteroConv, MessageEngine};
+pub use hetero_conv::HeteroConv;
 pub use linear::Linear;
 pub use loss::mse;
 pub use model::{homogenize, DrCircuitGnn, HomoGnn, HomoKind};

@@ -1,10 +1,11 @@
 //! The paper's models.
 //!
 //! * [`DrCircuitGnn`] — Fig. 1: per-type input Linear → HeteroConv ×2 →
-//!   output Linear head on cell nodes (congestion regression). The message
-//!   engine decides whether aggregations run the cuSPARSE-analog baseline,
-//!   the GNNA analog, or D-ReLU + DR-SpMM; `parallel` enables the §3.4
-//!   concurrent subgraph updates.
+//!   output Linear head on cell nodes (congestion regression). All
+//!   aggregations dispatch through the [`Engine`] passed to
+//!   `forward`/`backward`, which owns the per-edge-type kernel choice
+//!   (cuSPARSE-analog / GNNA-analog / DR-SpMM / auto) and the §3.4
+//!   parallel mode.
 //! * [`HomoGnn`] — the Table-2 homogeneous baselines: 3-layer GCN / SAGE /
 //!   GAT over the homogenised circuit graph (cells and nets merged into one
 //!   node set with type-flag features).
@@ -12,11 +13,12 @@
 use super::activation::Relu;
 use super::gat::GatConv;
 use super::gcn::GraphConv;
-use super::hetero_conv::{GraphCtx, HeteroConv, MessageEngine};
+use super::hetero_conv::HeteroConv;
 use super::linear::Linear;
 use super::sage::SageConv;
 use super::Param;
-use crate::graph::{Csc, Csr, HeteroGraph};
+use crate::engine::{CsrKernel, Engine, KernelPlan, SpmmKernel};
+use crate::graph::{Csr, HeteroGraph, NodeType};
 use crate::tensor::Matrix;
 use crate::util::rng::Rng;
 
@@ -28,73 +30,67 @@ pub struct DrCircuitGnn {
     pub conv1: HeteroConv,
     pub conv2: HeteroConv,
     pub out: Linear,
-    pub engine: MessageEngine,
     relu_cell: Relu,
     relu_net: Relu,
     hidden: usize,
 }
 
 impl DrCircuitGnn {
-    pub fn new(
-        d_cell_raw: usize,
-        d_net_raw: usize,
-        hidden: usize,
-        engine: MessageEngine,
-        rng: &mut Rng,
-    ) -> DrCircuitGnn {
+    pub fn new(d_cell_raw: usize, d_net_raw: usize, hidden: usize, rng: &mut Rng) -> DrCircuitGnn {
         DrCircuitGnn {
             lin_cell: Linear::new(d_cell_raw, hidden, rng),
             lin_net: Linear::new(d_net_raw, hidden, rng),
             conv1: HeteroConv::new(hidden, hidden, hidden, rng),
             conv2: HeteroConv::new(hidden, hidden, hidden, rng),
             out: Linear::new(hidden, 1, rng),
-            engine,
             relu_cell: Relu::new(),
             relu_net: Relu::new(),
             hidden,
         }
     }
 
-    /// Enable §3.4 parallel subgraph aggregation.
-    pub fn set_parallel(&mut self, on: bool) {
-        self.conv1.parallel = on;
-        self.conv2.parallel = on;
-    }
-
-    fn uses_plain_relu(&self) -> bool {
-        // The DR engine's D-ReLU *is* the activation (it sparsifies inside
-        // every aggregation); baselines use an explicit inter-layer ReLU.
-        !matches!(self.engine, MessageEngine::Dr { .. })
-    }
-
     /// Forward over one graph; returns per-cell congestion prediction (C×1).
-    pub fn forward(&mut self, ctx: &GraphCtx, g: &HeteroGraph) -> Matrix {
+    ///
+    /// Activation is decided *per node type*: a type the engine sparsifies
+    /// gets its activation from the D-ReLU inside its aggregations (§3.1);
+    /// an unsparsified type gets the baselines' plain inter-layer ReLU.
+    /// This keeps pure-CSR/GNNA and pure-DR engines on their paper paths
+    /// and gives mixed per-edge engines the right activation per tensor.
+    pub fn forward(&mut self, engine: &Engine, g: &HeteroGraph) -> Matrix {
         let xc0 = self.lin_cell.forward(&g.x_cell);
         let xn0 = self.lin_net.forward(&g.x_net);
-        let engine = self.engine.clone();
-        let (c1, n1) = self.conv1.forward(ctx, &engine, &xc0, &xn0);
-        let (c1a, n1a) = if self.uses_plain_relu() {
-            (self.relu_cell.forward(&c1), self.relu_net.forward(&n1))
+        let (c1, n1) = self.conv1.forward(engine, &xc0, &xn0);
+        let c1a = if engine.sparsifies(NodeType::Cell) {
+            c1
         } else {
-            (c1, n1)
+            self.relu_cell.forward(&c1)
         };
-        let (c2, _n2) = self.conv2.forward(ctx, &engine, &c1a, &n1a);
+        let n1a = if engine.sparsifies(NodeType::Net) {
+            n1
+        } else {
+            self.relu_net.forward(&n1)
+        };
+        let (c2, _n2) = self.conv2.forward(engine, &c1a, &n1a);
         self.out.forward(&c2)
     }
 
     /// Backward from the prediction gradient; accumulates all param grads.
-    pub fn backward(&mut self, ctx: &GraphCtx, d_pred: &Matrix) {
-        let engine = self.engine.clone();
+    pub fn backward(&mut self, engine: &Engine, d_pred: &Matrix) {
         let dc2 = self.out.backward(d_pred);
         // Net output of the last layer feeds nothing: zero gradient.
-        let dn2 = Matrix::zeros(ctx.pins.rows, self.hidden);
-        let (dc1a, dn1a) = self.conv2.backward(ctx, &engine, &dc2, &dn2);
-        let (dc1, dn1) = if self.uses_plain_relu() {
-            (self.relu_cell.backward(&dc1a), self.relu_net.backward(&dn1a))
+        let dn2 = Matrix::zeros(engine.n_nets(), self.hidden);
+        let (dc1a, dn1a) = self.conv2.backward(engine, &dc2, &dn2);
+        let dc1 = if engine.sparsifies(NodeType::Cell) {
+            dc1a
         } else {
-            (dc1a, dn1a)
+            self.relu_cell.backward(&dc1a)
         };
-        let (dxc0, dxn0) = self.conv1.backward(ctx, &engine, &dc1, &dn1);
+        let dn1 = if engine.sparsifies(NodeType::Net) {
+            dn1a
+        } else {
+            self.relu_net.backward(&dn1a)
+        };
+        let (dxc0, dxn0) = self.conv1.backward(engine, &dc1, &dn1);
         self.lin_cell.backward(&dxc0);
         self.lin_net.backward(&dxn0);
     }
@@ -118,12 +114,10 @@ impl DrCircuitGnn {
 pub struct HomoView {
     pub n: usize,
     pub n_cells: usize,
-    /// GCN-normalised adjacency.
-    pub adj_gcn: Csr,
-    pub adj_gcn_csc: Csc,
-    /// Mean-normalised adjacency (for SAGE).
-    pub adj_mean: Csr,
-    pub adj_mean_csc: Csc,
+    /// GCN-normalised adjacency, planned for the cuSPARSE-analog kernel.
+    pub gcn_plan: KernelPlan,
+    /// Mean-normalised adjacency (for SAGE), planned likewise.
+    pub mean_plan: KernelPlan,
     /// Unnormalised adjacency (for GAT attention).
     pub adj_raw: Csr,
     /// Node features `[x_cell | 0 | 1,0]` / `[0 | x_net | 0,1]`.
@@ -169,10 +163,8 @@ pub fn homogenize(g: &HeteroGraph) -> HomoView {
     HomoView {
         n,
         n_cells: c,
-        adj_gcn_csc: adj_gcn.to_csc(),
-        adj_gcn,
-        adj_mean_csc: adj_mean.to_csc(),
-        adj_mean,
+        gcn_plan: CsrKernel.plan(adj_gcn),
+        mean_plan: CsrKernel.plan(adj_mean),
         adj_raw,
         x,
     }
@@ -247,8 +239,8 @@ impl HomoGnn {
         let mut h = view.x.clone();
         for l in 0..self.n_layers {
             h = match self.kind {
-                HomoKind::Gcn => self.gcn[l].forward(&view.adj_gcn, &h),
-                HomoKind::Sage => self.sage[l].forward(&view.adj_mean, &h, &h),
+                HomoKind::Gcn => self.gcn[l].forward(&view.gcn_plan, &h),
+                HomoKind::Sage => self.sage[l].forward(&view.mean_plan, &h, &h),
                 HomoKind::Gat => self.gat[l].forward(&view.adj_raw, &h),
             };
             h = self.relus[l].forward(&h);
@@ -268,9 +260,9 @@ impl HomoGnn {
         for l in (0..self.n_layers).rev() {
             dh = self.relus[l].backward(&dh);
             dh = match self.kind {
-                HomoKind::Gcn => self.gcn[l].backward(&view.adj_gcn_csc, &dh),
+                HomoKind::Gcn => self.gcn[l].backward(&view.gcn_plan, &dh),
                 HomoKind::Sage => {
-                    let (d_dst, d_src) = self.sage[l].backward(&view.adj_mean_csc, &dh);
+                    let (d_dst, d_src) = self.sage[l].backward(&view.mean_plan, &dh);
                     d_dst.add(&d_src)
                 }
                 HomoKind::Gat => self.gat[l].backward(&view.adj_raw, &dh),
@@ -301,6 +293,7 @@ impl HomoGnn {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::EngineBuilder;
     use crate::nn::loss::mse;
 
     fn toy() -> HeteroGraph {
@@ -329,16 +322,16 @@ mod tests {
     #[test]
     fn dr_model_trains_loss_down() {
         let g = toy();
-        let ctx = GraphCtx::new(&g);
+        let engine = EngineBuilder::dr(4, 4).build(&g);
         let mut rng = Rng::new(1);
-        let mut model = DrCircuitGnn::new(6, 6, 8, MessageEngine::dr(4, 4), &mut rng);
+        let mut model = DrCircuitGnn::new(6, 6, 8, &mut rng);
         let mut opt = super::super::adam::Adam::new(0.01, 0.0);
         let mut first = None;
         let mut last = 0.0;
         for _ in 0..60 {
-            let pred = model.forward(&ctx, &g);
+            let pred = model.forward(&engine, &g);
             let (loss, dp) = mse(&pred, &g.y_cell);
-            model.backward(&ctx, &dp);
+            model.backward(&engine, &dp);
             opt.step(&mut model.params_mut());
             super::super::adam::Adam::zero_grad(&mut model.params_mut());
             first.get_or_insert(loss);
@@ -350,15 +343,15 @@ mod tests {
     #[test]
     fn dr_model_with_csr_engine_also_trains() {
         let g = toy();
-        let ctx = GraphCtx::new(&g);
+        let engine = EngineBuilder::csr().build(&g);
         let mut rng = Rng::new(2);
-        let mut model = DrCircuitGnn::new(6, 6, 8, MessageEngine::Csr, &mut rng);
+        let mut model = DrCircuitGnn::new(6, 6, 8, &mut rng);
         let mut opt = super::super::adam::Adam::new(0.01, 0.0);
         let mut losses = Vec::new();
         for _ in 0..50 {
-            let pred = model.forward(&ctx, &g);
+            let pred = model.forward(&engine, &g);
             let (loss, dp) = mse(&pred, &g.y_cell);
-            model.backward(&ctx, &dp);
+            model.backward(&engine, &dp);
             opt.step(&mut model.params_mut());
             super::super::adam::Adam::zero_grad(&mut model.params_mut());
             losses.push(loss);
@@ -379,6 +372,9 @@ mod tests {
         assert_eq!(v.x.at(4, 6 + 6 + 1), 1.0);
         // Homogeneous adjacency is symmetric.
         assert!(v.adj_raw.is_transpose_of(&v.adj_raw));
+        // Plans share the structure, with their own normalisations.
+        assert_eq!(v.gcn_plan.adj.nnz(), v.adj_raw.nnz());
+        assert_eq!(v.mean_plan.adj.nnz(), v.adj_raw.nnz());
     }
 
     #[test]
@@ -413,22 +409,54 @@ mod tests {
         let g = toy();
         let v = homogenize(&g);
         let mut rng = Rng::new(4);
-        let mut dr = DrCircuitGnn::new(6, 6, 16, MessageEngine::dr(4, 4), &mut rng);
+        let mut dr = DrCircuitGnn::new(6, 6, 16, &mut rng);
         let mut homo = HomoGnn::new(HomoKind::Gcn, v.x.cols, 16, &mut rng);
         assert!(dr.numel() > homo.numel(), "{} vs {}", dr.numel(), homo.numel());
+    }
+
+    /// Mixed per-edge engines keep a per-node-type activation: the net
+    /// tensor (no DR consumer here) still gets the inter-layer ReLU, and
+    /// the model trains.
+    #[test]
+    fn mixed_engine_keeps_per_node_type_activation() {
+        let g = toy();
+        let engine = Engine::builder()
+            .kernel("dr")
+            .kernel_spec_for(crate::graph::EdgeType::Pinned, crate::engine::KernelSpec::Csr)
+            .k_cell(4)
+            .k_net(4)
+            .build(&g);
+        // pins (cell→net) runs DR → cell sparsified; pinned runs CSR and is
+        // the only net consumer → net is NOT sparsified, so it must take
+        // the plain-ReLU branch.
+        assert!(engine.sparsifies(NodeType::Cell));
+        assert!(!engine.sparsifies(NodeType::Net));
+        let mut rng = Rng::new(7);
+        let mut model = DrCircuitGnn::new(6, 6, 8, &mut rng);
+        let mut opt = super::super::adam::Adam::new(0.01, 0.0);
+        let mut losses = Vec::new();
+        for _ in 0..40 {
+            let pred = model.forward(&engine, &g);
+            let (loss, dp) = mse(&pred, &g.y_cell);
+            model.backward(&engine, &dp);
+            opt.step(&mut model.params_mut());
+            super::super::adam::Adam::zero_grad(&mut model.params_mut());
+            losses.push(loss);
+        }
+        assert!(losses.last().unwrap() < &(losses[0] * 0.8), "{losses:?}");
     }
 
     #[test]
     fn parallel_mode_consistent_predictions() {
         let g = toy();
-        let ctx = GraphCtx::new(&g);
+        let seq_engine = EngineBuilder::dr(3, 3).build(&g);
+        let par_engine = EngineBuilder::dr(3, 3).parallel(true).build(&g);
         let mut rng = Rng::new(5);
-        let model = DrCircuitGnn::new(6, 6, 8, MessageEngine::dr(3, 3), &mut rng);
+        let model = DrCircuitGnn::new(6, 6, 8, &mut rng);
         let mut seq = model.clone();
         let mut par = model.clone();
-        par.set_parallel(true);
-        let a = seq.forward(&ctx, &g);
-        let b = par.forward(&ctx, &g);
+        let a = seq.forward(&seq_engine, &g);
+        let b = par.forward(&par_engine, &g);
         assert_eq!(a.data, b.data);
     }
 }

@@ -3,11 +3,12 @@
 //! `Y = X_dst · W_self + (Ā · X_src) · W_neigh + b` with Ā row-normalised
 //! (mean aggregation). In the heterogeneous case the destination and source
 //! node sets differ (`pins`: cells → nets), so the layer takes both feature
-//! matrices.
+//! matrices. The heterogeneous path aggregates through the engine and uses
+//! [`SageConv::forward_from_agg`]; the homogeneous baseline runs the fused
+//! path against a cached [`KernelPlan`].
 
 use super::Param;
-use crate::graph::{Csc, Csr};
-use crate::sparse::{spmm_csr, spmm_csr_bwd};
+use crate::engine::{AggCache, CsrKernel, KernelPlan, SpmmKernel};
 use crate::tensor::{matmul, matmul_a_bt, matmul_at_b, Matrix};
 use crate::util::rng::Rng;
 
@@ -43,8 +44,9 @@ impl SageConv {
         y
     }
 
-    pub fn forward(&mut self, adj: &Csr, x_src: &Matrix, x_dst: &Matrix) -> Matrix {
-        let h = spmm_csr(adj, x_src);
+    /// Fused forward against a planned adjacency.
+    pub fn forward(&mut self, plan: &KernelPlan, x_src: &Matrix, x_dst: &Matrix) -> Matrix {
+        let (h, _) = CsrKernel.forward(plan, x_src, None);
         self.forward_from_agg(x_dst, h)
     }
 
@@ -63,10 +65,11 @@ impl SageConv {
         (dx_dst, dh)
     }
 
-    /// Full dense backward: returns (dX_dst, dX_src).
-    pub fn backward(&mut self, adj_csc: &Csc, dy: &Matrix) -> (Matrix, Matrix) {
+    /// Full dense backward against the planned adjacency:
+    /// returns (dX_dst, dX_src).
+    pub fn backward(&mut self, plan: &KernelPlan, dy: &Matrix) -> (Matrix, Matrix) {
         let (dx_dst, dh) = self.backward_to_agg(dy);
-        let dx_src = spmm_csr_bwd(adj_csc, &dh);
+        let dx_src = CsrKernel.backward(plan, &dh, &AggCache::None).into_dense();
         (dx_dst, dx_src)
     }
 
@@ -82,16 +85,17 @@ impl SageConv {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::graph::Csr;
 
     /// Bipartite adjacency: 3 dst rows, 4 src cols.
-    fn bip() -> Csr {
+    fn bip() -> KernelPlan {
         let mut m = Csr::from_triplets(
             3,
             4,
             &[(0, 0, 1.0), (0, 1, 1.0), (1, 2, 1.0), (2, 1, 1.0), (2, 3, 1.0)],
         );
         m.normalize_rows();
-        m
+        CsrKernel.plan(m)
     }
 
     #[test]
@@ -107,16 +111,16 @@ mod tests {
     #[test]
     fn finite_difference_all_grads() {
         let mut rng = Rng::new(2);
-        let adj = bip();
+        let plan = bip();
         let mut layer = SageConv::new(3, 4, 2, &mut rng);
         let x_src = Matrix::randn(4, 3, 1.0, &mut rng);
         let x_dst = Matrix::randn(3, 4, 1.0, &mut rng);
-        let _ = layer.forward(&adj, &x_src, &x_dst);
+        let _ = layer.forward(&plan, &x_src, &x_dst);
         let dy = Matrix::ones(3, 2);
-        let (dx_dst, dx_src) = layer.backward(&adj.to_csc(), &dy);
+        let (dx_dst, dx_src) = layer.backward(&plan, &dy);
         let eps = 1e-3f32;
         let loss = |l: &SageConv, xs: &Matrix, xd: &Matrix| -> f32 {
-            let h = spmm_csr(&adj, xs);
+            let (h, _) = CsrKernel.forward(&plan, xs, None);
             matmul(xd, &l.w_self.value)
                 .add(&matmul(&h, &l.w_neigh.value))
                 .add_bias(&l.b.value.data)

@@ -1,75 +1,136 @@
 //! Thin wrapper over the `xla` crate's PJRT CPU client.
+//!
+//! Gated behind the `pjrt` cargo feature: the `xla` crate (xla-rs, pinned
+//! to `xla_extension` 0.5.1) is not on crates.io and needs the native
+//! `libxla_extension` — environments without it (CI, plain `cargo build`)
+//! compile the stub below, whose `Runtime::cpu()` returns an error that
+//! callers already handle (the runtime tests and examples skip with a
+//! notice). Enable with `--features pjrt` after vendoring the `xla`
+//! dependency; the wrapped API is identical.
 
 use crate::tensor::Matrix;
-use anyhow::{Context, Result};
+use anyhow::Result;
 
-/// A PJRT client plus compilation entry points.
-pub struct Runtime {
-    client: xla::PjRtClient,
+#[cfg(feature = "pjrt")]
+mod imp {
+    use super::*;
+    use anyhow::Context;
+
+    /// A PJRT client plus compilation entry points.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+    }
+
+    impl Runtime {
+        /// CPU PJRT client (the only backend in this environment).
+        pub fn cpu() -> Result<Runtime> {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(Runtime { client })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        pub fn device_count(&self) -> usize {
+            self.client.device_count()
+        }
+
+        /// Load an HLO text artifact and compile it for this client.
+        pub fn load_hlo_text(&self, path: &std::path::Path) -> Result<Executable> {
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?;
+            Ok(Executable { exe, name: path.display().to_string() })
+        }
+    }
+
+    /// A compiled executable with matrix-level convenience I/O.
+    pub struct Executable {
+        exe: xla::PjRtLoadedExecutable,
+        pub name: String,
+    }
+
+    impl Executable {
+        /// Execute with f32 tensor inputs given as (data, dims) pairs.
+        /// Returns all outputs flattened to f32 vectors with their dims.
+        /// The AOT path lowers with `return_tuple=True`, so the single
+        /// result is a tuple literal that we decompose.
+        pub fn run(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+            let literals: Vec<xla::Literal> = inputs
+                .iter()
+                .map(|(data, dims)| {
+                    let lit = xla::Literal::vec1(data);
+                    lit.reshape(dims).context("reshaping input literal")
+                })
+                .collect::<Result<_>>()?;
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&literals)
+                .with_context(|| format!("executing {}", self.name))?;
+            let mut out = result[0][0]
+                .to_literal_sync()
+                .context("fetching result literal")?;
+            let parts = out.decompose_tuple().context("decomposing result tuple")?;
+            let parts = if parts.is_empty() { vec![out] } else { parts };
+            parts
+                .into_iter()
+                .map(|lit| lit.to_vec::<f32>().context("reading f32 output"))
+                .collect()
+        }
+    }
 }
 
-impl Runtime {
-    /// CPU PJRT client (the only backend in this environment).
-    pub fn cpu() -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime { client })
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use super::*;
+
+    /// Stub runtime compiled when the `pjrt` feature is off.
+    pub struct Runtime {
+        _private: (),
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    impl Runtime {
+        pub fn cpu() -> Result<Runtime> {
+            anyhow::bail!(
+                "PJRT support not compiled in — vendor the xla-rs crate (add it \
+                 under [dependencies] in rust/Cargo.toml, needs libxla_extension) \
+                 and rebuild with `--features pjrt`"
+            )
+        }
+
+        pub fn platform(&self) -> String {
+            unreachable!("stub Runtime cannot be constructed")
+        }
+
+        pub fn device_count(&self) -> usize {
+            unreachable!("stub Runtime cannot be constructed")
+        }
+
+        pub fn load_hlo_text(&self, _path: &std::path::Path) -> Result<Executable> {
+            unreachable!("stub Runtime cannot be constructed")
+        }
     }
 
-    pub fn device_count(&self) -> usize {
-        self.client.device_count()
+    /// Stub executable (never constructed without the `pjrt` feature).
+    pub struct Executable {
+        pub name: String,
     }
 
-    /// Load an HLO text artifact and compile it for this client.
-    pub fn load_hlo_text(&self, path: &std::path::Path) -> Result<Executable> {
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))?;
-        Ok(Executable { exe, name: path.display().to_string() })
+    impl Executable {
+        pub fn run(&self, _inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+            unreachable!("stub Executable cannot be constructed")
+        }
     }
 }
 
-/// A compiled executable with matrix-level convenience I/O.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-    pub name: String,
-}
+pub use imp::{Executable, Runtime};
 
 impl Executable {
-    /// Execute with f32 tensor inputs given as (data, dims) pairs.
-    /// Returns all outputs flattened to f32 vectors with their dims.
-    /// The AOT path lowers with `return_tuple=True`, so the single result
-    /// is a tuple literal that we decompose.
-    pub fn run(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|(data, dims)| {
-                let lit = xla::Literal::vec1(data);
-                lit.reshape(dims).context("reshaping input literal")
-            })
-            .collect::<Result<_>>()?;
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .with_context(|| format!("executing {}", self.name))?;
-        let mut out = result[0][0]
-            .to_literal_sync()
-            .context("fetching result literal")?;
-        let parts = out.decompose_tuple().context("decomposing result tuple")?;
-        let parts = if parts.is_empty() { vec![out] } else { parts };
-        parts
-            .into_iter()
-            .map(|lit| lit.to_vec::<f32>().context("reading f32 output"))
-            .collect()
-    }
-
     /// Convenience: run with Matrix inputs; outputs returned as flat vecs.
     pub fn run_matrices(&self, inputs: &[&Matrix]) -> Result<Vec<Vec<f32>>> {
         let prepared: Vec<(&[f32], Vec<i64>)> = inputs

@@ -7,10 +7,11 @@
 //! * **Sequential** — init → forward → backward per subgraph, one after
 //!   another (the baseline timeline).
 //! * **Parallel** — each subgraph gets its own lane: a dedicated CPU thread
-//!   performs initialization (normalisation, CSC transposition, degree
-//!   buckets — the paper's "data loading, memory allocation" phase) and then
-//!   drives its kernels. Lanes are the cudaStream analog; the only barrier
-//!   is the final merge.
+//!   performs initialization (the lane-local copy plus its kernel's *plan* —
+//!   CSC transposition and schedule construction, the paper's "data loading,
+//!   memory allocation" phase) and then drives its kernels through the
+//!   [`crate::engine`] plan/execute API. Lanes are the cudaStream analog;
+//!   the only barrier is the final merge.
 //!
 //! [`timeline`] captures per-lane events to render Fig. 9-style charts and
 //! compute the Fig. 12 savings breakdown.

@@ -1,23 +1,29 @@
 //! End-to-end subgraph pipeline (paper Fig. 9, Fig. 12's measurement rig).
 //!
 //! One "e2e step" per graph covers everything the paper's end-to-end
-//! numbers include: per-subgraph initialization (adjacency normalisation,
-//! CSC transposition for the backward pass, degree-bucket construction),
-//! the forward aggregation kernel and the backward aggregation kernel for
-//! each of the three edge types, plus the final cell-side merge.
+//! numbers include: per-subgraph initialization (lane-local adjacency copy
+//! — the UVM-transfer analog — plus the kernel's *plan*: CSC transposition
+//! for the backward pass and schedule construction), the forward
+//! aggregation kernel and the backward aggregation kernel for each of the
+//! three edge types, plus the final cell-side merge.
+//!
+//! Kernels come from an [`EngineBuilder`]: each lane resolves its edge
+//! type's kernel (so `"auto"` or per-edge overrides give heterogeneous
+//! lanes) and re-plans it per step by design — the per-step init cost is
+//! exactly what this rig measures, in contrast to the training path where
+//! `EngineBuilder::build` plans once per graph.
 //!
 //! `ScheduleMode::Sequential` executes lanes one after another (DGL-style);
 //! `ScheduleMode::Parallel` gives each edge type its own thread — the
 //! multi-threaded CPU init + concurrent kernel launch of §3.4.
 
 use super::timeline::Timeline;
-use crate::graph::{Csr, HeteroGraph};
-use crate::sparse::{
-    dr_spmm, dr_spmm_bwd, drelu, spmm_csr, spmm_csr_bwd, spmm_gnna, spmm_gnna_bwd, DegreeBuckets,
-};
-use crate::nn::MessageEngine;
+use crate::engine::{kernel_label, normalized_adjacencies, EngineBuilder, SpmmKernel};
+use crate::graph::{Cbsr, Csr, EdgeType, HeteroGraph, NodeType};
+use crate::sparse::drelu;
 use crate::tensor::Matrix;
 use crate::util::rng::Rng;
+use std::sync::Arc;
 
 /// Lane scheduling policy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -39,6 +45,8 @@ impl ScheduleMode {
 #[derive(Debug)]
 pub struct E2eTiming {
     pub mode: ScheduleMode,
+    /// Display name(s) of the resolved kernels (one per edge type when
+    /// they differ).
     pub engine: String,
     /// Wall-clock seconds for the full step.
     pub total: f64,
@@ -50,64 +58,47 @@ pub struct E2eTiming {
 }
 
 struct LaneInput<'a> {
-    /// Pre-normalised adjacency (normalisation/CSC happen once per graph
-    /// at dataset preprocessing, like the paper's pipeline — they are NOT
-    /// part of the per-step cost).
+    /// Pre-normalised adjacency (normalisation happens once per graph at
+    /// dataset preprocessing, like the paper's pipeline — it is NOT part
+    /// of the per-step cost; the plan built from the lane-local copy is).
     adj: &'a Csr,
-    csc: &'a crate::graph::Csc,
+    /// The lane's resolved kernel.
+    kernel: Arc<dyn SpmmKernel>,
     x_src: &'a Matrix,
-    /// Pre-sparsified source (Dr engine): D-ReLU runs once per node type
+    /// Pre-sparsified source (DR lanes): D-ReLU runs once per node type
     /// before the lanes (paper Fig. 5), its CBSR shared by all consumers.
-    cbsr: Option<&'a crate::graph::Cbsr>,
+    cbsr: Option<&'a Arc<Cbsr>>,
     dy: &'a Matrix,
 }
 
 /// Everything one lane does per step: init (the paper's "data loading,
 /// memory allocation, host-to-device transfer" — modeled as a deep copy of
-/// the subgraph into lane-local memory + schedule construction) → forward
-/// kernel → backward kernel.
+/// the subgraph into lane-local memory + the kernel's plan: CSC transpose
+/// and schedule construction) → forward kernel → backward kernel.
 fn run_lane(
     lane_id: usize,
     input: &LaneInput<'_>,
-    engine: &MessageEngine,
     tl: &Timeline,
 ) -> ((f64, f64, f64), Matrix) {
     let t0 = std::time::Instant::now();
-    let (adj, csc, buckets) = tl.record(lane_id, "init", || {
-        // Lane-local copies = the UVM transfer analog of Fig. 9's Init.
-        let adj = input.adj.clone();
-        let csc = input.csc.clone();
-        let buckets = DegreeBuckets::build(&adj);
-        (adj, csc, buckets)
+    let plan = tl.record(lane_id, "init", || {
+        // Lane-local copy = the UVM transfer analog of Fig. 9's Init; the
+        // plan is the per-step CSC/schedule construction.
+        input.kernel.plan(input.adj.clone())
     });
     let t_init = t0.elapsed().as_secs_f64();
 
-    // --- forward kernel. Baselines apply the plain-ReLU activation the
-    // DGL pipeline runs before aggregation; the DR path replaces it with
-    // D-ReLU (paper §3.1) — both sides pay their activation here so the
-    // comparison matches the paper's end-to-end accounting.
+    // --- forward kernel.
     let t1 = std::time::Instant::now();
-    let h = tl.record(lane_id, "fwd", || match engine {
-        MessageEngine::Csr => spmm_csr(&adj, input.x_src),
-        MessageEngine::Gnna(cfg) => spmm_gnna(&adj, input.x_src, cfg),
-        MessageEngine::Dr { .. } => {
-            dr_spmm(&adj, input.cbsr.expect("DR lane needs a CBSR"), &buckets)
-        }
-    });
+    let (h, cache) =
+        tl.record(lane_id, "fwd", || input.kernel.forward(&plan, input.x_src, input.cbsr));
     let t_fwd = t1.elapsed().as_secs_f64();
 
-    // --- backward kernel.
+    // --- backward kernel (native gradient representation — compressed
+    // for DR, matching the paper's Alg. 2 output).
     let t2 = std::time::Instant::now();
-    tl.record(lane_id, "bwd", || match engine {
-        MessageEngine::Csr => {
-            let _ = spmm_csr_bwd(&csc, input.dy);
-        }
-        MessageEngine::Gnna(cfg) => {
-            let _ = spmm_gnna_bwd(&csc, input.dy, cfg);
-        }
-        MessageEngine::Dr { .. } => {
-            let _ = dr_spmm_bwd(&csc, input.dy, input.cbsr.unwrap());
-        }
+    tl.record(lane_id, "bwd", || {
+        let _ = input.kernel.backward(&plan, input.dy, &cache);
     });
     let t_bwd = t2.elapsed().as_secs_f64();
     ((t_init, t_fwd, t_bwd), h)
@@ -120,7 +111,7 @@ fn run_lane(
 pub fn run_e2e_step(
     g: &HeteroGraph,
     dim: usize,
-    engine: &MessageEngine,
+    engine: &EngineBuilder,
     mode: ScheduleMode,
     seed: u64,
 ) -> E2eTiming {
@@ -130,53 +121,61 @@ pub fn run_e2e_step(
     let dy_cell = Matrix::randn(g.n_cells, dim, 1.0, &mut rng);
     let dy_net = Matrix::randn(g.n_nets, dim, 1.0, &mut rng);
 
-    // Per-graph preprocessing (normalisation + CSC transposition) — done
+    // Per-graph preprocessing (normalisation + kernel resolution) — done
     // once per dataset like paper Alg. 1 stage 1; excluded from the step.
-    let mut near = g.near.clone();
-    near.normalize_gcn();
-    let mut pinned = g.pinned.clone();
-    pinned.normalize_rows();
-    let mut pins = g.pins.clone();
-    pins.normalize_rows();
-    let (near_csc, pinned_csc, pins_csc) = (near.to_csc(), pinned.to_csc(), pins.to_csc());
+    // Shared helpers keep the rig on the exact matrices and labels the
+    // training path uses.
+    let [near, pins, pinned] = normalized_adjacencies(g);
+    let k_near = engine.resolve_kernel(EdgeType::Near, &near);
+    let k_pinned = engine.resolve_kernel(EdgeType::Pinned, &pinned);
+    let k_pins = engine.resolve_kernel(EdgeType::Pins, &pins);
+    let engine_label = kernel_label([&*k_near, &*k_pins, &*k_pinned]);
+    // Which node types need D-ReLU sparsification (per consuming kernel).
+    let cell_sparsified = k_near.needs_sparsified() || k_pins.needs_sparsified();
+    let net_sparsified = k_pinned.needs_sparsified();
 
     let tl = Timeline::new();
     let t0 = std::time::Instant::now();
 
-    // Activation stage (paper Fig. 5): baselines run plain ReLU, the DR
-    // engine runs D-ReLU once per node type — the CBSR (values + indices)
+    // Activation stage (paper Fig. 5): dense lanes run plain ReLU, DR
+    // lanes run D-ReLU once per node type — the CBSR (values + indices)
     // is then shared by every consuming edge lane, forward and backward.
-    let (cbsr_cell, cbsr_net) = tl.record(3, "act", || match engine {
-        MessageEngine::Dr { k_cell, k_net } => {
-            let kc = (*k_cell).clamp(1, dim);
-            let kn = (*k_net).clamp(1, dim);
-            (Some(drelu(&x_cell, kc)), Some(drelu(&x_net, kn)))
-        }
-        _ => {
+    let (cbsr_cell, cbsr_net) = tl.record(3, "act", || {
+        let cbsr_cell = if cell_sparsified {
+            let k = engine.k_for(NodeType::Cell).clamp(1, dim);
+            Some(Arc::new(drelu(&x_cell, k)))
+        } else {
             x_cell.map_inplace(|v| v.max(0.0));
+            None
+        };
+        let cbsr_net = if net_sparsified {
+            let k = engine.k_for(NodeType::Net).clamp(1, dim);
+            Some(Arc::new(drelu(&x_net, k)))
+        } else {
             x_net.map_inplace(|v| v.max(0.0));
-            (None, None)
-        }
+            None
+        };
+        (cbsr_cell, cbsr_net)
     });
 
     let inputs = [
         LaneInput {
             adj: &near,
-            csc: &near_csc,
+            kernel: k_near,
             x_src: &x_cell,
             cbsr: cbsr_cell.as_ref(),
             dy: &dy_cell,
         },
         LaneInput {
             adj: &pinned,
-            csc: &pinned_csc,
+            kernel: k_pinned,
             x_src: &x_net,
             cbsr: cbsr_net.as_ref(),
             dy: &dy_cell,
         },
         LaneInput {
             adj: &pins,
-            csc: &pins_csc,
+            kernel: k_pins,
             x_src: &x_cell,
             cbsr: cbsr_cell.as_ref(),
             dy: &dy_net,
@@ -187,7 +186,7 @@ pub fn run_e2e_step(
     match mode {
         ScheduleMode::Sequential => {
             for (i, input) in inputs.iter().enumerate() {
-                let (phases, h) = run_lane(i, input, engine, &tl);
+                let (phases, h) = run_lane(i, input, &tl);
                 lane_phases[i] = phases;
                 outputs.push(h);
             }
@@ -199,8 +198,7 @@ pub fn run_e2e_step(
                     .enumerate()
                     .map(|(i, input)| {
                         let tl = &tl;
-                        let engine = engine.clone();
-                        scope.spawn(move || run_lane(i, input, &engine, tl))
+                        scope.spawn(move || run_lane(i, input, tl))
                     })
                     .collect();
                 handles.into_iter().map(|h| h.join().unwrap()).collect::<Vec<_>>()
@@ -217,7 +215,7 @@ pub fn run_e2e_step(
     let total = t0.elapsed().as_secs_f64();
     E2eTiming {
         mode,
-        engine: engine.name().to_string(),
+        engine: engine_label,
         total,
         busy: tl.busy_time(),
         timeline: tl,
@@ -229,6 +227,8 @@ pub fn run_e2e_step(
 mod tests {
     use super::*;
     use crate::datagen::{generate_graph, GraphSpec};
+    use crate::engine::EngineBuilder;
+    use crate::sparse::GnnaConfig;
 
     fn test_graph(scale: usize) -> HeteroGraph {
         let mut rng = Rng::new(3);
@@ -250,15 +250,17 @@ mod tests {
     fn both_modes_complete_all_engines() {
         let g = test_graph(300);
         for engine in [
-            MessageEngine::Csr,
-            MessageEngine::Gnna(Default::default()),
-            MessageEngine::dr(4, 4),
+            EngineBuilder::csr(),
+            EngineBuilder::gnna(GnnaConfig::default()),
+            EngineBuilder::dr(4, 4),
+            EngineBuilder::auto(),
         ] {
             for mode in [ScheduleMode::Sequential, ScheduleMode::Parallel] {
                 let t = run_e2e_step(&g, 16, &engine, mode, 7);
                 assert!(t.total > 0.0);
                 assert_eq!(t.lane_phases.len(), 3);
                 assert_eq!(t.timeline.events().len(), 10, "act + 3 lanes × 3 phases");
+                assert!(!t.engine.is_empty());
             }
         }
     }
@@ -274,7 +276,7 @@ mod tests {
         let g = test_graph(1500);
         let best = (0..4)
             .map(|r| {
-                run_e2e_step(&g, 64, &MessageEngine::Csr, ScheduleMode::Parallel, 7 + r)
+                run_e2e_step(&g, 64, &EngineBuilder::csr(), ScheduleMode::Parallel, 7 + r)
                     .timeline
                     .overlap_factor()
             })
@@ -285,7 +287,7 @@ mod tests {
     #[test]
     fn sequential_busy_approximates_total() {
         let g = test_graph(800);
-        let t = run_e2e_step(&g, 32, &MessageEngine::Csr, ScheduleMode::Sequential, 7);
+        let t = run_e2e_step(&g, 32, &EngineBuilder::csr(), ScheduleMode::Sequential, 7);
         // Sequential: busy time ≈ makespan (no overlap).
         assert!(t.timeline.overlap_factor() < 1.15, "{}", t.timeline.overlap_factor());
     }
@@ -293,9 +295,21 @@ mod tests {
     #[test]
     fn phases_positive() {
         let g = test_graph(200);
-        let t = run_e2e_step(&g, 16, &MessageEngine::dr(4, 4), ScheduleMode::Sequential, 9);
+        let t = run_e2e_step(&g, 16, &EngineBuilder::dr(4, 4), ScheduleMode::Sequential, 9);
         for (i, f, b) in &t.lane_phases {
             assert!(*i > 0.0 && *f >= 0.0 && *b >= 0.0);
         }
+        assert_eq!(t.engine, "DR-SpMM");
+    }
+
+    #[test]
+    fn mixed_engine_lanes_run() {
+        let g = test_graph(250);
+        let engine = EngineBuilder::csr()
+            .kernel_for(EdgeType::Near, "dr")
+            .k_cell(4);
+        let t = run_e2e_step(&g, 16, &engine, ScheduleMode::Sequential, 5);
+        assert!(t.engine.contains("near=dr"), "{}", t.engine);
+        assert!(t.total > 0.0);
     }
 }

@@ -16,6 +16,11 @@
 //!   of `D` columns per neighbor, degree-bucketed dynamic scheduling
 //!   (Alg. 1 stage 2), and a column-major (CSC) backward that reuses the
 //!   forward CBSR indices (Alg. 2).
+//!
+//! These are the raw kernels; everything above this layer dispatches them
+//! through [`crate::engine`], which owns kernel selection (by name or
+//! per-edge-type `"auto"` policy) and the plan/execute split that caches
+//! the per-graph schedules ([`DegreeBuckets`], [`NeighborGroups`], CSC).
 
 pub mod dr_spmm;
 pub mod dr_spmm_bwd;
@@ -28,49 +33,7 @@ pub use dr_spmm::dr_spmm;
 pub use dr_spmm_bwd::{dr_spmm_bwd, dr_spmm_bwd_dense};
 pub use drelu::{drelu, drelu_backward};
 pub use spmm_csr::{spmm_csr, spmm_csr_bwd, spmm_dense_ref};
-pub use spmm_gnna::{spmm_gnna, spmm_gnna_bwd, GnnaConfig};
+pub use spmm_gnna::{
+    spmm_gnna, spmm_gnna_bwd, spmm_gnna_bwd_planned, spmm_gnna_planned, GnnaConfig, NeighborGroups,
+};
 pub use warp::{DegreeBuckets, DegreeClass, WARP_SIZE};
-
-/// Which kernel family to use — threaded through configs and benches.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum KernelKind {
-    /// cuSPARSE-analog baseline.
-    Csr,
-    /// GNNAdvisor analog.
-    Gnna,
-    /// DR-SpMM (requires D-ReLU sparsified embeddings).
-    DrSpmm,
-}
-
-impl KernelKind {
-    pub fn name(&self) -> &'static str {
-        match self {
-            KernelKind::Csr => "cuSPARSE",
-            KernelKind::Gnna => "GNNA",
-            KernelKind::DrSpmm => "DR-SpMM",
-        }
-    }
-
-    pub fn parse(s: &str) -> Option<KernelKind> {
-        match s.to_ascii_lowercase().as_str() {
-            "csr" | "cusparse" => Some(KernelKind::Csr),
-            "gnna" | "gnnadvisor" => Some(KernelKind::Gnna),
-            "dr" | "drspmm" | "dr-spmm" => Some(KernelKind::DrSpmm),
-            _ => None,
-        }
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn kernel_kind_parse_and_name() {
-        assert_eq!(KernelKind::parse("cusparse"), Some(KernelKind::Csr));
-        assert_eq!(KernelKind::parse("GNNA"), Some(KernelKind::Gnna));
-        assert_eq!(KernelKind::parse("dr-spmm"), Some(KernelKind::DrSpmm));
-        assert_eq!(KernelKind::parse("???"), None);
-        assert_eq!(KernelKind::DrSpmm.name(), "DR-SpMM");
-    }
-}

@@ -35,6 +35,7 @@ impl Default for GnnaConfig {
 }
 
 /// One neighbor group: a row tile of ≤ `group_size` edges.
+#[derive(Clone, Debug)]
 struct Group {
     row: u32,
     start: u32,
@@ -43,35 +44,96 @@ struct Group {
     shared: bool,
 }
 
-fn build_groups(a: &Csr, cfg: &GnnaConfig) -> Vec<Group> {
-    let mut groups = Vec::with_capacity(a.nnz() / cfg.group_size + a.rows);
-    for r in 0..a.rows {
-        let range = a.row_range(r);
-        let deg = range.len();
-        if deg == 0 {
-            continue;
-        }
-        let n_groups = deg.div_ceil(cfg.group_size);
-        for g in 0..n_groups {
-            let start = range.start + g * cfg.group_size;
-            let len = cfg.group_size.min(range.end - start);
-            groups.push(Group {
-                row: r as u32,
-                start: start as u32,
-                len: len as u32,
-                shared: n_groups > 1,
-            });
-        }
-    }
-    groups
+/// The materialised neighbor-group schedule for one adjacency — GNNAdvisor's
+/// "2D workload management" precomputed once per graph (the `engine` layer
+/// caches this in its [`KernelPlan`](crate::engine::KernelPlan) so group
+/// construction is not paid per layer per step).
+#[derive(Clone, Debug)]
+pub struct NeighborGroups {
+    groups: Vec<Group>,
+    group_size: usize,
 }
 
-/// Forward: `Y = A · X` with neighbor-group scheduling.
+impl NeighborGroups {
+    /// Tile every row's neighbor list into ≤ `cfg.group_size` groups.
+    pub fn build(a: &Csr, cfg: &GnnaConfig) -> NeighborGroups {
+        Self::build_from_indptr(&a.indptr, cfg)
+    }
+
+    /// Build from a row-pointer array alone (the only structure grouping
+    /// needs). Passing a CSC's `indptr` yields the *transpose's* schedule —
+    /// how the backward reuses the CSC without materialising a second copy.
+    pub fn build_from_indptr(indptr: &[usize], cfg: &GnnaConfig) -> NeighborGroups {
+        let rows = indptr.len().saturating_sub(1);
+        let nnz = indptr.last().copied().unwrap_or(0);
+        let mut groups = Vec::with_capacity(nnz / cfg.group_size + rows);
+        for r in 0..rows {
+            let (start_p, end_p) = (indptr[r], indptr[r + 1]);
+            let deg = end_p - start_p;
+            if deg == 0 {
+                continue;
+            }
+            let n_groups = deg.div_ceil(cfg.group_size);
+            for g in 0..n_groups {
+                let start = start_p + g * cfg.group_size;
+                let len = cfg.group_size.min(end_p - start);
+                groups.push(Group {
+                    row: r as u32,
+                    start: start as u32,
+                    len: len as u32,
+                    shared: n_groups > 1,
+                });
+            }
+        }
+        NeighborGroups { groups, group_size: cfg.group_size }
+    }
+
+    pub fn len(&self) -> usize {
+        self.groups.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.groups.is_empty()
+    }
+}
+
+/// Forward: `Y = A · X` with neighbor-group scheduling (builds the group
+/// schedule ad hoc; planned callers use [`spmm_gnna_planned`]).
 pub fn spmm_gnna(a: &Csr, x: &Matrix, cfg: &GnnaConfig) -> Matrix {
+    let groups = NeighborGroups::build(a, cfg);
+    spmm_gnna_planned(a, x, cfg, &groups)
+}
+
+/// Forward with a prebuilt group schedule (the plan/execute hot path).
+pub fn spmm_gnna_planned(
+    a: &Csr,
+    x: &Matrix,
+    cfg: &GnnaConfig,
+    schedule: &NeighborGroups,
+) -> Matrix {
     assert_eq!(a.cols, x.rows, "spmm_gnna: A cols {} vs X rows {}", a.cols, x.rows);
+    spmm_groups_core(a.rows, &a.values, &a.indices, x, cfg, schedule)
+}
+
+/// The lock-step group kernel over raw CSR/CSC storage. `out_rows` is the
+/// destination row count; `values`/`indices` are the edge arrays the
+/// schedule's group offsets index into.
+fn spmm_groups_core(
+    out_rows: usize,
+    values: &[f32],
+    indices: &[u32],
+    x: &Matrix,
+    cfg: &GnnaConfig,
+    schedule: &NeighborGroups,
+) -> Matrix {
+    assert_eq!(
+        schedule.group_size, cfg.group_size,
+        "spmm_gnna: schedule built with group_size {}, config says {}",
+        schedule.group_size, cfg.group_size
+    );
     let d = x.cols;
-    let groups = build_groups(a, cfg);
-    let mut y = Matrix::zeros(a.rows, d);
+    let groups = &schedule.groups;
+    let mut y = Matrix::zeros(out_rows, d);
     let y_ptr = SendPtr(y.data.as_mut_ptr());
     let gs = cfg.group_size;
     parallel_for_dynamic(groups.len(), 8, |gi| {
@@ -84,7 +146,7 @@ pub fn spmm_gnna(a: &Csr, x: &Matrix, cfg: &GnnaConfig) -> Matrix {
         for slot in 0..gs {
             let (av, j) = if slot < g.len as usize {
                 let p = g.start as usize + slot;
-                (a.values[p], a.indices[p] as usize)
+                (values[p], indices[p] as usize)
             } else {
                 (0.0f32, 0usize)
             };
@@ -118,18 +180,25 @@ pub fn spmm_gnna(a: &Csr, x: &Matrix, cfg: &GnnaConfig) -> Matrix {
     y
 }
 
-/// Backward: `dX = Aᵀ · dY`, same group machinery over the CSC columns.
+/// Backward: `dX = Aᵀ · dY`, same group machinery over the CSC columns
+/// (builds the transpose schedule ad hoc; planned callers use
+/// [`spmm_gnna_bwd_planned`]).
 pub fn spmm_gnna_bwd(a_csc: &Csc, dy: &Matrix, cfg: &GnnaConfig) -> Matrix {
+    let schedule = NeighborGroups::build_from_indptr(&a_csc.indptr, cfg);
+    spmm_gnna_bwd_planned(a_csc, dy, cfg, &schedule)
+}
+
+/// Backward with a prebuilt transpose schedule (see
+/// [`NeighborGroups::build_from_indptr`]): the CSC's column arrays *are*
+/// the transpose's CSR arrays, so no second copy of the matrix is needed.
+pub fn spmm_gnna_bwd_planned(
+    a_csc: &Csc,
+    dy: &Matrix,
+    cfg: &GnnaConfig,
+    schedule: &NeighborGroups,
+) -> Matrix {
     assert_eq!(a_csc.rows, dy.rows, "spmm_gnna_bwd: A rows {} vs dY rows {}", a_csc.rows, dy.rows);
-    // Treat the CSC as a CSR of the transpose and reuse the forward kernel.
-    let at = Csr {
-        rows: a_csc.cols,
-        cols: a_csc.rows,
-        indptr: a_csc.indptr.clone(),
-        indices: a_csc.indices.clone(),
-        values: a_csc.values.clone(),
-    };
-    spmm_gnna(&at, dy, cfg)
+    spmm_groups_core(a_csc.cols, &a_csc.values, &a_csc.indices, dy, cfg, schedule)
 }
 
 #[inline]
@@ -220,10 +289,31 @@ mod tests {
                 .collect::<Vec<_>>(),
         );
         // row0: 33 nbrs → 2 groups (32+1); row1: 7 → 1 group; row2: 0 → none.
-        let groups = build_groups(&a, &GnnaConfig::default());
-        assert_eq!(groups.len(), 3);
-        assert!(groups[0].shared && groups[1].shared);
-        assert!(!groups[2].shared);
+        let schedule = NeighborGroups::build(&a, &GnnaConfig::default());
+        assert_eq!(schedule.len(), 3);
+        assert!(schedule.groups[0].shared && schedule.groups[1].shared);
+        assert!(!schedule.groups[2].shared);
+    }
+
+    #[test]
+    fn planned_forward_matches_ad_hoc() {
+        let mut rng = Rng::new(5);
+        let a = random_csr(25, 20, 6, &mut rng);
+        let x = Matrix::randn(20, 10, 1.0, &mut rng);
+        let cfg = GnnaConfig { group_size: 4, dim_worker: 8 };
+        let schedule = NeighborGroups::build(&a, &cfg);
+        let y1 = spmm_gnna(&a, &x, &cfg);
+        let y2 = spmm_gnna_planned(&a, &x, &cfg, &schedule);
+        assert_eq!(y1.data, y2.data);
+    }
+
+    #[test]
+    #[should_panic(expected = "schedule built with group_size")]
+    fn mismatched_schedule_panics() {
+        let a = Csr::from_triplets(2, 2, &[(0, 1, 1.0)]);
+        let x = Matrix::ones(2, 3);
+        let schedule = NeighborGroups::build(&a, &GnnaConfig { group_size: 4, dim_worker: 8 });
+        spmm_gnna_planned(&a, &x, &GnnaConfig::default(), &schedule);
     }
 
     #[test]

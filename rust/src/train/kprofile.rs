@@ -5,16 +5,22 @@
 //! keep warp partitions regular) for every subgraph, and applies the argmin
 //! to end-to-end training. A one-time cost far below the training savings.
 //!
+//! The profiler drives the engine's [`DrKernel`] through its plan/execute
+//! API: the plan (CSC + degree buckets) is built once per adjacency and
+//! shared by every candidate K, exactly like a training run would.
+//!
 //! We profile time-to-solution of the forward+backward kernel pair, with a
 //! small quality floor: candidates below `min_k` can be excluded by callers
 //! that care about accuracy (Fig. 10 shows scores stable across K, so the
 //! default profile is pure speed).
 
+use crate::engine::{AggCache, DrKernel, SpmmKernel};
 use crate::graph::{Csr, EdgeType, HeteroGraph};
-use crate::sparse::{dr_spmm, dr_spmm_bwd, drelu, DegreeBuckets};
+use crate::sparse::drelu;
 use crate::tensor::Matrix;
 use crate::util::rng::Rng;
 use crate::util::timer::time_it;
+use std::sync::Arc;
 
 /// Candidate K values (paper §4.3).
 pub fn candidate_ks(dim: usize) -> Vec<usize> {
@@ -41,17 +47,19 @@ pub fn profile_adj(
 ) -> KProfile {
     let x = Matrix::randn(adj.cols, dim, 1.0, rng);
     let dy = Matrix::randn(adj.rows, dim, 1.0, rng);
-    let buckets = DegreeBuckets::build(adj);
-    let csc = adj.to_csc();
+    let kernel = DrKernel;
+    // Plan once (Alg. 1 stage 1); shared across every candidate K.
+    let plan = kernel.plan(adj.clone());
     let mut timings = Vec::new();
     for k in candidate_ks(dim) {
-        let compressed = drelu(&x, k);
+        let prep = Arc::new(drelu(&x, k));
+        let cache = AggCache::Cbsr(prep.clone());
         // Warm-up once, then take the median of `reps`.
-        let _ = dr_spmm(adj, &compressed, &buckets);
+        let _ = kernel.forward(&plan, &x, Some(&prep));
         let mut samples = Vec::with_capacity(reps);
         for _ in 0..reps.max(1) {
-            let (_, t_f) = time_it(|| dr_spmm(adj, &compressed, &buckets));
-            let (_, t_b) = time_it(|| dr_spmm_bwd(&csc, &dy, &compressed));
+            let (_, t_f) = time_it(|| kernel.forward(&plan, &x, Some(&prep)));
+            let (_, t_b) = time_it(|| kernel.backward(&plan, &dy, &cache));
             samples.push(t_f + t_b);
         }
         samples.sort_by(|a, b| a.partial_cmp(b).unwrap());

@@ -3,12 +3,16 @@
 //! Hyper-parameters default to the paper's §4.1 setup: DR-CircuitGNN with
 //! 2 layers, lr 2e-4, weight decay 1e-5; baselines with 3 layers, lr 1e-3,
 //! weight decay 2e-4, 50 epochs, GraphSAGE in 'mean' mode.
+//!
+//! Kernel selection comes in as an [`EngineBuilder`]; the trainer builds
+//! one [`Engine`](crate::engine::Engine) per training graph up front
+//! (paper Alg. 1 stage 1 — plans are cached across every epoch and layer).
 
 use super::metrics::EvalScores;
 use crate::datagen::Dataset;
-use crate::nn::hetero_conv::GraphCtx;
+use crate::engine::{Engine, EngineBuilder};
 use crate::nn::model::{homogenize, HomoView};
-use crate::nn::{mse, Adam, DrCircuitGnn, HomoGnn, HomoKind, MessageEngine};
+use crate::nn::{mse, Adam, DrCircuitGnn, HomoGnn, HomoKind};
 use crate::util::rng::Rng;
 use crate::util::timer::time_it;
 
@@ -63,23 +67,24 @@ impl Trainer {
     pub fn train_dr(
         train: &Dataset,
         test: &Dataset,
-        engine: MessageEngine,
+        engine: &EngineBuilder,
         cfg: &TrainConfig,
     ) -> (DrCircuitGnn, TrainReport) {
         let mut rng = Rng::new(cfg.seed);
         // Raw feature dims from the first graph.
         let first = train.graphs().next().expect("empty training set");
         let (dc, dn) = (first.x_cell.cols, first.x_net.cols);
-        let mut model = DrCircuitGnn::new(dc, dn, cfg.hidden, engine, &mut rng);
-        model.set_parallel(cfg.parallel);
+        let mut model = DrCircuitGnn::new(dc, dn, cfg.hidden, &mut rng);
         let params = model.numel();
         let mut opt = Adam::new(cfg.lr, cfg.weight_decay);
 
-        // Preprocess every graph once (paper Alg. 1 stage 1).
-        let train_ctx: Vec<Vec<GraphCtx>> = train
+        // Plan every graph once (paper Alg. 1 stage 1): normalisation, CSC
+        // transposition and kernel schedules are paid here, never per step.
+        let builder = engine.clone().parallel(cfg.parallel);
+        let engines: Vec<Vec<Engine>> = train
             .designs
             .iter()
-            .map(|(_, gs)| gs.iter().map(GraphCtx::new).collect())
+            .map(|(_, gs)| gs.iter().map(|g| builder.build(g)).collect())
             .collect();
 
         let mut epoch_losses = Vec::with_capacity(cfg.epochs);
@@ -89,10 +94,10 @@ impl Trainer {
                 let mut count = 0usize;
                 for (di, (_, graphs)) in train.designs.iter().enumerate() {
                     for (gi, g) in graphs.iter().enumerate() {
-                        let ctx = &train_ctx[di][gi];
-                        let pred = model.forward(ctx, g);
+                        let eng = &engines[di][gi];
+                        let pred = model.forward(eng, g);
                         let (loss, dp) = mse(&pred, &g.y_cell);
-                        model.backward(ctx, &dp);
+                        model.backward(eng, &dp);
                         opt.step(&mut model.params_mut());
                         Adam::zero_grad(&mut model.params_mut());
                         epoch_loss += loss as f64;
@@ -107,20 +112,30 @@ impl Trainer {
             }
         });
 
-        let (test_scores, per_graph_scores) = Self::eval_dr(&mut model, test);
+        let (test_scores, per_graph_scores) = Self::eval_dr(&mut model, test, &builder);
         (
             model,
-            TrainReport { epoch_losses, test_scores, per_graph_scores, train_seconds: secs, params },
+            TrainReport {
+                epoch_losses,
+                test_scores,
+                per_graph_scores,
+                train_seconds: secs,
+                params,
+            },
         )
     }
 
     /// Evaluate a trained DR model on a dataset.
-    pub fn eval_dr(model: &mut DrCircuitGnn, data: &Dataset) -> (EvalScores, Vec<EvalScores>) {
+    pub fn eval_dr(
+        model: &mut DrCircuitGnn,
+        data: &Dataset,
+        engine: &EngineBuilder,
+    ) -> (EvalScores, Vec<EvalScores>) {
         let mut per_graph = Vec::new();
         for (_, graphs) in &data.designs {
             for g in graphs {
-                let ctx = GraphCtx::new(g);
-                let pred = model.forward(&ctx, g);
+                let eng = engine.build(g);
+                let pred = model.forward(&eng, g);
                 per_graph.push(EvalScores::compute(&pred.data, &g.y_cell.data));
             }
         }
@@ -173,7 +188,13 @@ impl Trainer {
         let (test_scores, per_graph_scores) = Self::eval_homo(&mut model, test);
         (
             model,
-            TrainReport { epoch_losses, test_scores, per_graph_scores, train_seconds: secs, params },
+            TrainReport {
+                epoch_losses,
+                test_scores,
+                per_graph_scores,
+                train_seconds: secs,
+                params,
+            },
         )
     }
 
@@ -194,6 +215,7 @@ impl Trainer {
 mod tests {
     use super::*;
     use crate::datagen::mini_circuitnet;
+    use crate::engine::EngineBuilder;
 
     fn tiny_sets() -> (Dataset, Dataset) {
         mini_circuitnet(6, 0.02, 11)
@@ -215,14 +237,14 @@ mod tests {
     fn dr_training_reduces_loss_and_scores_populate() {
         let (train, test) = tiny_sets();
         let (_m, report) =
-            Trainer::train_dr(&train, &test, MessageEngine::dr(4, 4), &fast_cfg());
+            Trainer::train_dr(&train, &test, &EngineBuilder::dr(4, 4), &fast_cfg());
         assert_eq!(report.epoch_losses.len(), 8);
         assert!(
             report.epoch_losses.last().unwrap() < &report.epoch_losses[0],
             "{:?}",
             report.epoch_losses
         );
-        assert!(report.per_graph_scores.len() >= 1);
+        assert!(!report.per_graph_scores.is_empty());
         assert!(report.params > 0);
         assert!(report.test_scores.rmse.is_finite());
     }
@@ -239,12 +261,21 @@ mod tests {
         let (train, test) = tiny_sets();
         let mut cfg = fast_cfg();
         cfg.epochs = 3;
-        let (_m1, r1) = Trainer::train_dr(&train, &test, MessageEngine::dr(4, 4), &cfg);
+        let (_m1, r1) = Trainer::train_dr(&train, &test, &EngineBuilder::dr(4, 4), &cfg);
         let mut cfg2 = cfg.clone();
         cfg2.parallel = true;
-        let (_m2, r2) = Trainer::train_dr(&train, &test, MessageEngine::dr(4, 4), &cfg2);
+        let (_m2, r2) = Trainer::train_dr(&train, &test, &EngineBuilder::dr(4, 4), &cfg2);
         for (a, b) in r1.epoch_losses.iter().zip(&r2.epoch_losses) {
             assert!((a - b).abs() < 1e-9, "parallel changed numerics: {a} vs {b}");
         }
+    }
+
+    #[test]
+    fn auto_engine_trains_end_to_end() {
+        let (train, test) = tiny_sets();
+        let mut cfg = fast_cfg();
+        cfg.epochs = 3;
+        let (_m, report) = Trainer::train_dr(&train, &test, &EngineBuilder::auto(), &cfg);
+        assert!(report.epoch_losses.iter().all(|l| l.is_finite()));
     }
 }

@@ -1,0 +1,156 @@
+//! Integration: the engine subsystem — registry parsing, per-edge-type
+//! kernel selection, the `"auto"` policy on the seed datagen designs, and
+//! plan caching (CSC/bucket construction once per graph, not per step).
+
+use dr_circuitgnn::datagen::{generate_design, table1_designs};
+use dr_circuitgnn::engine::{plan_counters, Engine, EngineBuilder, KernelSpec};
+use dr_circuitgnn::graph::EdgeType;
+use dr_circuitgnn::nn::{mse, DrCircuitGnn};
+use dr_circuitgnn::util::rng::Rng;
+use std::sync::Mutex;
+
+/// The plan counters are process-global; tests in this binary run on
+/// threads, so every test that builds plans takes this lock to keep the
+/// exact-count assertions meaningful.
+static COUNTER_GUARD: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    COUNTER_GUARD.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[test]
+fn registry_is_the_single_parse_point() {
+    let _g = lock();
+    // Canonical names and aliases resolve; junk is rejected with the
+    // vocabulary listed.
+    assert_eq!(KernelSpec::parse("cusparse").unwrap(), KernelSpec::Csr);
+    assert_eq!(KernelSpec::parse("GNNAdvisor").unwrap(), KernelSpec::Gnna);
+    assert_eq!(KernelSpec::parse("DR-SpMM").unwrap(), KernelSpec::Dr);
+    assert_eq!(KernelSpec::parse("auto").unwrap(), KernelSpec::Auto);
+    let err = KernelSpec::parse("nope").unwrap_err();
+    for name in ["csr", "gnna", "dr", "auto"] {
+        assert!(err.contains(name), "{err}");
+    }
+}
+
+#[test]
+fn per_edge_type_kernel_selection() {
+    let _g = lock();
+    let designs = table1_designs(0.02);
+    let graphs = generate_design(&designs[0]);
+    let g = &graphs[0];
+    let engine = Engine::builder()
+        .kernel_for(EdgeType::Near, "dr")
+        .kernel_for(EdgeType::Pins, "csr")
+        .kernel_for(EdgeType::Pinned, "gnna")
+        .k_cell(4)
+        .build(g);
+    assert_eq!(engine.kernel_name(EdgeType::Near), "dr");
+    assert_eq!(engine.kernel_name(EdgeType::Pins), "csr");
+    assert_eq!(engine.kernel_name(EdgeType::Pinned), "gnna");
+    // And the mixed engine actually runs a model step.
+    let mut rng = Rng::new(1);
+    let mut model = DrCircuitGnn::new(g.x_cell.cols, g.x_net.cols, 16, &mut rng);
+    let pred = model.forward(&engine, g);
+    assert_eq!(pred.rows, g.n_cells);
+    let (_, dp) = mse(&pred, &g.y_cell);
+    model.backward(&engine, &dp);
+}
+
+/// Acceptance: `"auto"` must select DR or CSR — never the GNNA analog —
+/// for the low-degree `pins`/`pinned` matrices of every seed datagen
+/// design (paper Fig. 4: GNNA's fixed groups are mostly padding there).
+#[test]
+fn auto_selects_dr_or_csr_for_low_degree_pins_and_pinned() {
+    let _g = lock();
+    for spec in table1_designs(0.05) {
+        let graphs = generate_design(&spec);
+        for g in &graphs {
+            let engine = EngineBuilder::auto().build(g);
+            for e in [EdgeType::Pins, EdgeType::Pinned] {
+                let picked = engine.kernel_name(e);
+                assert_ne!(
+                    picked,
+                    "gnna",
+                    "{} graph {} {}: auto must not pick GNNA (avg degree {:.1})",
+                    spec.name,
+                    g.id,
+                    e.name(),
+                    g.adj(e).avg_degree()
+                );
+                assert!(
+                    picked == "dr" || picked == "csr",
+                    "{} graph {} {}: picked {picked}",
+                    spec.name,
+                    g.id,
+                    e.name()
+                );
+            }
+        }
+    }
+}
+
+/// Acceptance: plan construction (CSC transpose + degree buckets) happens
+/// once per graph per kernel at `build`, and never again across forward/
+/// backward steps — the plan/execute split's whole point.
+#[test]
+fn plans_built_once_per_graph_not_per_step() {
+    let _g = lock();
+    let designs = table1_designs(0.02);
+    let graphs = generate_design(&designs[1]);
+
+    let c0 = plan_counters();
+    let engines: Vec<Engine> =
+        graphs.iter().map(|g| EngineBuilder::dr(4, 4).build(g)).collect();
+    let built = plan_counters().since(&c0);
+    assert_eq!(built.plans, 3 * graphs.len(), "3 plans (edge types) per graph");
+    assert_eq!(built.cscs, 3 * graphs.len(), "one CSC per plan");
+    assert_eq!(built.buckets, 3 * graphs.len(), "DR plans carry buckets");
+    assert_eq!(built.groups, 0, "no GNNA schedules for a DR engine");
+
+    // Train-style loop: many epochs over the same engines.
+    let mut rng = Rng::new(2);
+    let g0 = &graphs[0];
+    let mut model = DrCircuitGnn::new(g0.x_cell.cols, g0.x_net.cols, 16, &mut rng);
+    let c1 = plan_counters();
+    for _ in 0..5 {
+        for (g, engine) in graphs.iter().zip(&engines) {
+            let pred = model.forward(engine, g);
+            let (_, dp) = mse(&pred, &g.y_cell);
+            model.backward(engine, &dp);
+        }
+    }
+    let during = plan_counters().since(&c1);
+    assert_eq!(
+        during.plans, 0,
+        "no CSC/bucket/group construction during training steps: {during:?}"
+    );
+}
+
+#[test]
+fn gnna_engine_plans_carry_group_schedules() {
+    let _g = lock();
+    let designs = table1_designs(0.02);
+    let g = &generate_design(&designs[0])[0];
+    let c0 = plan_counters();
+    let engine = EngineBuilder::gnna(Default::default()).build(g);
+    let built = plan_counters().since(&c0);
+    assert_eq!(built.plans, 3);
+    assert_eq!(built.groups, 3, "one fwd+bwd group schedule per edge type");
+    assert_eq!(built.buckets, 0);
+    assert_eq!(engine.describe(), "GNNA");
+}
+
+#[test]
+fn engine_describe_reflects_resolution() {
+    let _g = lock();
+    let designs = table1_designs(0.02);
+    let g = &generate_design(&designs[0])[0];
+    assert_eq!(EngineBuilder::csr().build(g).describe(), "cuSPARSE");
+    assert_eq!(EngineBuilder::dr(8, 8).build(g).describe(), "DR-SpMM");
+    // Auto resolves to concrete names — never "auto".
+    let auto = EngineBuilder::auto().build(g);
+    for e in EdgeType::ALL {
+        assert_ne!(auto.kernel_name(e), "auto");
+    }
+}

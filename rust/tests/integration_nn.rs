@@ -2,14 +2,11 @@
 //! circuit graphs; gradient flow and engine consistency.
 
 use dr_circuitgnn::datagen::{generate_graph, GraphSpec};
-use dr_circuitgnn::nn::hetero_conv::GraphCtx;
-use dr_circuitgnn::nn::{
-    homogenize, mse, Adam, DrCircuitGnn, HomoGnn, HomoKind, MessageEngine,
-};
+use dr_circuitgnn::engine::EngineBuilder;
+use dr_circuitgnn::nn::{homogenize, mse, Adam, DrCircuitGnn, HomoGnn, HomoKind};
 use dr_circuitgnn::sparse::GnnaConfig;
 use dr_circuitgnn::util::math::assert_allclose;
 use dr_circuitgnn::util::rng::Rng;
-
 
 fn graph() -> dr_circuitgnn::graph::HeteroGraph {
     let mut rng = Rng::new(5);
@@ -30,20 +27,21 @@ fn graph() -> dr_circuitgnn::graph::HeteroGraph {
 #[test]
 fn dr_model_trains_on_generated_graph_all_engines() {
     let g = graph();
-    let ctx = GraphCtx::new(&g);
-    for engine in [
-        MessageEngine::Csr,
-        MessageEngine::Gnna(GnnaConfig::default()),
-        MessageEngine::dr(8, 8),
+    for builder in [
+        EngineBuilder::csr(),
+        EngineBuilder::gnna(GnnaConfig::default()),
+        EngineBuilder::dr(8, 8),
+        EngineBuilder::auto(),
     ] {
+        let engine = builder.build(&g);
         let mut rng = Rng::new(1);
-        let mut model = DrCircuitGnn::new(16, 16, 32, engine.clone(), &mut rng);
+        let mut model = DrCircuitGnn::new(16, 16, 32, &mut rng);
         let mut opt = Adam::new(5e-3, 0.0);
         let mut losses = Vec::new();
         for _ in 0..12 {
-            let pred = model.forward(&ctx, &g);
+            let pred = model.forward(&engine, &g);
             let (loss, dp) = mse(&pred, &g.y_cell);
-            model.backward(&ctx, &dp);
+            model.backward(&engine, &dp);
             opt.step(&mut model.params_mut());
             Adam::zero_grad(&mut model.params_mut());
             losses.push(loss);
@@ -51,7 +49,7 @@ fn dr_model_trains_on_generated_graph_all_engines() {
         assert!(
             losses.last().unwrap() < &losses[0],
             "{}: {:?}",
-            engine.name(),
+            engine.describe(),
             losses
         );
     }
@@ -60,14 +58,14 @@ fn dr_model_trains_on_generated_graph_all_engines() {
 #[test]
 fn csr_and_full_k_dr_produce_identical_training() {
     let g = graph();
-    let ctx = GraphCtx::new(&g);
+    let csr_engine = EngineBuilder::csr().build(&g);
+    let dr_engine = EngineBuilder::dr(16, 16).build(&g); // k = hidden: no sparsification
     let mut rng = Rng::new(2);
-    let m0 = DrCircuitGnn::new(16, 16, 16, MessageEngine::Csr, &mut rng);
+    let m0 = DrCircuitGnn::new(16, 16, 16, &mut rng);
     let mut a = m0.clone();
     let mut b = m0.clone();
-    b.engine = MessageEngine::dr(16, 16); // k = hidden: no sparsification
-    let pa = a.forward(&ctx, &g);
-    let pb = b.forward(&ctx, &g);
+    let pa = a.forward(&csr_engine, &g);
+    let pb = b.forward(&dr_engine, &g);
     // Same predictions except: baseline path uses plain ReLU between
     // layers, DR path does not — so compare only through one layer by
     // checking both are finite and same shape, then compare grads flow.
@@ -79,19 +77,19 @@ fn csr_and_full_k_dr_produce_identical_training() {
 #[test]
 fn parallel_and_sequential_training_bitwise_match() {
     let g = graph();
-    let ctx = GraphCtx::new(&g);
+    let seq_engine = EngineBuilder::dr(4, 4).build(&g);
+    let par_engine = EngineBuilder::dr(4, 4).parallel(true).build(&g);
     let mut rng = Rng::new(3);
-    let model = DrCircuitGnn::new(16, 16, 32, MessageEngine::dr(4, 4), &mut rng);
+    let model = DrCircuitGnn::new(16, 16, 32, &mut rng);
     let mut seq = model.clone();
     let mut par = model.clone();
-    par.set_parallel(true);
     for _ in 0..3 {
-        let ps = seq.forward(&ctx, &g);
-        let pp = par.forward(&ctx, &g);
+        let ps = seq.forward(&seq_engine, &g);
+        let pp = par.forward(&par_engine, &g);
         assert_eq!(ps.data, pp.data, "parallel must not change numerics");
         let (_, ds) = mse(&ps, &g.y_cell);
-        seq.backward(&ctx, &ds);
-        par.backward(&ctx, &ds);
+        seq.backward(&seq_engine, &ds);
+        par.backward(&par_engine, &ds);
     }
     // Gradients identical too.
     for (a, b) in seq.params_mut().iter().zip(par.params_mut().iter()) {
@@ -123,7 +121,7 @@ fn dr_param_count_roughly_double_homo() {
     let g = graph();
     let view = homogenize(&g);
     let mut rng = Rng::new(6);
-    let mut dr = DrCircuitGnn::new(16, 16, 64, MessageEngine::dr(8, 8), &mut rng);
+    let mut dr = DrCircuitGnn::new(16, 16, 64, &mut rng);
     let mut gcn = HomoGnn::new(HomoKind::Gcn, view.x.cols, 64, &mut rng);
     let ratio = dr.numel() as f64 / gcn.numel() as f64;
     assert!(

@@ -2,7 +2,7 @@
 //! timeline capture, and the Fig. 12 measurement rig.
 
 use dr_circuitgnn::datagen::{generate_graph, GraphSpec};
-use dr_circuitgnn::nn::MessageEngine;
+use dr_circuitgnn::engine::EngineBuilder;
 use dr_circuitgnn::sched::{run_e2e_step, ScheduleMode};
 use dr_circuitgnn::sparse::GnnaConfig;
 use dr_circuitgnn::util::rng::Rng;
@@ -27,15 +27,15 @@ fn graph(n: usize) -> dr_circuitgnn::graph::HeteroGraph {
 fn e2e_step_runs_for_every_engine_and_mode() {
     let g = graph(400);
     for engine in [
-        MessageEngine::Csr,
-        MessageEngine::Gnna(GnnaConfig::default()),
-        MessageEngine::dr(4, 4),
+        EngineBuilder::csr(),
+        EngineBuilder::gnna(GnnaConfig::default()),
+        EngineBuilder::dr(4, 4),
     ] {
         for mode in [ScheduleMode::Sequential, ScheduleMode::Parallel] {
             let t = run_e2e_step(&g, 32, &engine, mode, 1);
             assert!(t.total > 0.0 && t.busy > 0.0);
             assert_eq!(t.timeline.events().len(), 10); // act + 3 lanes × 3 phases
-            assert_eq!(t.engine, engine.name());
+            assert_eq!(t.engine, engine.describe());
         }
     }
 }
@@ -47,7 +47,7 @@ fn parallel_reduces_makespan_on_large_graph() {
         return;
     }
     let g = graph(3000);
-    let engine = MessageEngine::Csr;
+    let engine = EngineBuilder::csr();
     // Median of 3 to de-noise.
     let median = |mode: ScheduleMode| {
         let mut s: Vec<f64> =
@@ -69,10 +69,10 @@ fn timeline_lanes_overlap_only_in_parallel_mode() {
     // Best of several runs: the test harness itself runs suites in
     // parallel, so a single run can be starved of cores.
     let g = graph(1500);
-    let seq = run_e2e_step(&g, 64, &MessageEngine::Csr, ScheduleMode::Sequential, 2);
+    let seq = run_e2e_step(&g, 64, &EngineBuilder::csr(), ScheduleMode::Sequential, 2);
     let par_best = (0..4)
         .map(|r| {
-            run_e2e_step(&g, 64, &MessageEngine::Csr, ScheduleMode::Parallel, 2 + r)
+            run_e2e_step(&g, 64, &EngineBuilder::csr(), ScheduleMode::Parallel, 2 + r)
                 .timeline
                 .overlap_factor()
         })
@@ -93,7 +93,7 @@ fn fig12_savings_decompose() {
     // loaded single-core test machine swamps the kernel-level saving
     // (the wall-clock decomposition is the fig12_breakdown bench's job).
     let g = graph(4000);
-    let kernel_time = |engine: &MessageEngine, mode: ScheduleMode| {
+    let kernel_time = |engine: &EngineBuilder, mode: ScheduleMode| {
         let mut s: Vec<f64> = (0..5)
             .map(|r| {
                 let t = run_e2e_step(&g, 64, engine, mode, 3 + r);
@@ -103,9 +103,9 @@ fn fig12_savings_decompose() {
         s.sort_by(|a, b| a.partial_cmp(b).unwrap());
         s[s.len() / 2]
     };
-    let base = kernel_time(&MessageEngine::Csr, ScheduleMode::Sequential);
-    let kernel = kernel_time(&MessageEngine::dr(8, 8), ScheduleMode::Sequential);
-    let both = kernel_time(&MessageEngine::dr(8, 8), ScheduleMode::Parallel);
+    let base = kernel_time(&EngineBuilder::csr(), ScheduleMode::Sequential);
+    let kernel = kernel_time(&EngineBuilder::dr(8, 8), ScheduleMode::Sequential);
+    let both = kernel_time(&EngineBuilder::dr(8, 8), ScheduleMode::Parallel);
     assert!(base > 0.0 && kernel > 0.0 && both > 0.0);
     assert!(
         kernel < base,
@@ -116,7 +116,7 @@ fn fig12_savings_decompose() {
 #[test]
 fn lane_phases_sum_close_to_busy_time() {
     let g = graph(800);
-    let t = run_e2e_step(&g, 32, &MessageEngine::dr(4, 4), ScheduleMode::Sequential, 4);
+    let t = run_e2e_step(&g, 32, &EngineBuilder::dr(4, 4), ScheduleMode::Sequential, 4);
     let phases: f64 =
         t.lane_phases.iter().map(|(i, f, b)| i + f + b).sum();
     // Busy time = lane spans + the shared activation span, so it bounds

@@ -1,7 +1,8 @@
 //! Integration: trainer + metrics + K-profiler over Mini-CircuitNet.
 
 use dr_circuitgnn::datagen::mini_circuitnet;
-use dr_circuitgnn::nn::{HomoKind, MessageEngine};
+use dr_circuitgnn::engine::EngineBuilder;
+use dr_circuitgnn::nn::HomoKind;
 use dr_circuitgnn::train::kprofile::{candidate_ks, profile_optimal_k, to_type_ks};
 use dr_circuitgnn::train::{TrainConfig, Trainer};
 
@@ -20,7 +21,7 @@ fn cfg(epochs: usize) -> TrainConfig {
 #[test]
 fn dr_training_end_to_end_with_metrics() {
     let (train, test) = mini_circuitnet(6, 0.04, 31);
-    let (_m, report) = Trainer::train_dr(&train, &test, MessageEngine::dr(6, 6), &cfg(10));
+    let (_m, report) = Trainer::train_dr(&train, &test, &EngineBuilder::dr(6, 6), &cfg(10));
     assert_eq!(report.epoch_losses.len(), 10);
     assert!(report.epoch_losses.last().unwrap() < &report.epoch_losses[0]);
     let s = report.test_scores;
@@ -37,7 +38,7 @@ fn dr_training_end_to_end_with_metrics() {
 fn homo_and_dr_comparable_pipeline() {
     let (train, test) = mini_circuitnet(6, 0.04, 33);
     let (_g, homo) = Trainer::train_homo(HomoKind::Sage, &train, &test, &cfg(8));
-    let (_d, dr) = Trainer::train_dr(&train, &test, MessageEngine::dr(6, 6), &cfg(8));
+    let (_d, dr) = Trainer::train_dr(&train, &test, &EngineBuilder::dr(6, 6), &cfg(8));
     // Both produce usable predictors on the same data.
     assert!(homo.test_scores.spearman.is_finite());
     assert!(dr.test_scores.spearman.is_finite());
@@ -65,8 +66,8 @@ fn kprofiler_selects_valid_k_per_subgraph() {
 #[test]
 fn training_deterministic_given_seed() {
     let (train, test) = mini_circuitnet(4, 0.03, 41);
-    let (_a, r1) = Trainer::train_dr(&train, &test, MessageEngine::dr(4, 4), &cfg(4));
-    let (_b, r2) = Trainer::train_dr(&train, &test, MessageEngine::dr(4, 4), &cfg(4));
+    let (_a, r1) = Trainer::train_dr(&train, &test, &EngineBuilder::dr(4, 4), &cfg(4));
+    let (_b, r2) = Trainer::train_dr(&train, &test, &EngineBuilder::dr(4, 4), &cfg(4));
     for (x, y) in r1.epoch_losses.iter().zip(&r2.epoch_losses) {
         assert!((x - y).abs() < 1e-10, "training must be deterministic");
     }
