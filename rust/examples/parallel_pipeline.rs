@@ -4,7 +4,12 @@
 //! type) under the sequential and parallel schedules, with the captured
 //! lane timelines rendered like Fig. 9a/9b.
 //!
-//! Part 2 — PJRT lanes: if AOT artifacts are present, the three standalone
+//! Part 2 — fleet: the graph partitioned into independent subgraphs and a
+//! full training step run across a bounded worker pool (graph-level
+//! parallelism stacked on the edge lanes), with the shared plan cache and
+//! the worker-count-invariant loss on display.
+//!
+//! Part 3 — PJRT lanes: if AOT artifacts are present, the three standalone
 //! DR-SpMM executables (one per edge type) are loaded through the runtime
 //! and dispatched sequentially vs from three threads — the cudaStream
 //! analog at the PJRT level, proving the three-layer composition.
@@ -13,9 +18,12 @@
 
 use dr_circuitgnn::datagen::{generate_graph, GraphSpec};
 use dr_circuitgnn::engine::EngineBuilder;
+use dr_circuitgnn::fleet::Fleet;
+use dr_circuitgnn::nn::{Adam, DrCircuitGnn};
 use dr_circuitgnn::runtime::{pad::to_ell, ArtifactRegistry, Runtime};
 use dr_circuitgnn::sched::{run_e2e_step, ScheduleMode};
 use dr_circuitgnn::tensor::Matrix;
+use dr_circuitgnn::util::pool::num_threads;
 use dr_circuitgnn::util::rng::Rng;
 use dr_circuitgnn::util::timer::fmt_secs;
 
@@ -51,7 +59,39 @@ fn main() {
         print!("{}", timing.timeline.render(60));
     }
 
-    println!("\n== Part 2: PJRT executable lanes ==");
+    println!("\n== Part 2: fleet — batched multi-subgraph training steps ==");
+    let parts = 6usize;
+    let fleet_graphs: Vec<_> =
+        dr_circuitgnn::graph::partition::partition(&g, parts);
+    let mut mrng = Rng::new(7);
+    let model = DrCircuitGnn::new(g.x_cell.cols, g.x_net.cols, 32, &mut mrng);
+    let mut baseline = f64::NAN;
+    for workers in [1usize, num_threads().min(parts).max(2)] {
+        let fleet = Fleet::builder(EngineBuilder::dr(8, 8).parallel(true))
+            .workers(workers)
+            .build(&fleet_graphs);
+        let mut m = model.clone();
+        let mut opt = Adam::new(2e-4, 1e-5);
+        let t0 = std::time::Instant::now();
+        let step = fleet.step(&mut m, &mut opt);
+        let secs = t0.elapsed().as_secs_f64();
+        if workers == 1 {
+            baseline = secs;
+        }
+        println!(
+            "{workers:>2} workers over {} subgraphs: step {}  loss {:.6}  \
+             plan cache {} unique / {} lookups  speedup ×{:.2}",
+            fleet.n_subgraphs(),
+            fmt_secs(secs),
+            step.loss,
+            fleet.cache_stats().unique(),
+            fleet.cache_stats().lookups(),
+            baseline / secs
+        );
+    }
+    println!("(loss is identical at every worker count — deterministic reduction)");
+
+    println!("\n== Part 3: PJRT executable lanes ==");
     let art_dir = std::path::PathBuf::from("artifacts");
     let reg = ArtifactRegistry::scan(&art_dir).expect("scan artifacts dir");
     let names = ["spmm_near_d64", "spmm_pinned_d64", "spmm_pins_d64"];
@@ -63,7 +103,7 @@ fn main() {
         Ok(rt) => rt,
         Err(e) => {
             println!(
-                "PJRT unavailable ({e}) — Part 2 needs the `pjrt` feature \
+                "PJRT unavailable ({e}) — Part 3 needs the `xla-backend` feature \
                  (vendor xla-rs first; see rust/Cargo.toml)"
             );
             return;

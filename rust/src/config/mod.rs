@@ -6,9 +6,12 @@
 //!
 //! Kernel strings (`--kernel`, `kernel.kind`) are parsed by the engine
 //! registry ([`KernelSpec::parse`]) — the single parse point — so config
-//! accepts exactly the registry vocabulary, including `"auto"`.
+//! accepts exactly the registry vocabulary, including `"auto"`. Fleet
+//! strings (`--fleet`, `fleet`) go through [`FleetSpec::parse`] the same
+//! way.
 
 use crate::engine::{Engine, EngineBuilder, KernelSpec};
+use crate::fleet::FleetSpec;
 use crate::sched::ScheduleMode;
 use crate::util::cli::Args;
 use crate::util::configfile::ConfigFile;
@@ -31,6 +34,8 @@ pub struct Config {
     // execution
     pub kernel: KernelSpec,
     pub parallel: bool,
+    /// Batched multi-subgraph execution (`--fleet`, `fleet`).
+    pub fleet: FleetSpec,
     pub dim: usize,
     // paths
     pub artifacts_dir: PathBuf,
@@ -51,6 +56,7 @@ impl Default for Config {
             k_net: 8,
             kernel: KernelSpec::Dr,
             parallel: true,
+            fleet: FleetSpec::Off,
             dim: 64,
             artifacts_dir: PathBuf::from("artifacts"),
             out_dir: PathBuf::from("out"),
@@ -99,6 +105,9 @@ impl Config {
         if let Some(v) = f.get_bool("sched.parallel") {
             self.parallel = v?;
         }
+        if let Some(v) = f.get("fleet") {
+            self.fleet = FleetSpec::parse(v).map_err(|e| format!("fleet: {e}"))?;
+        }
         if let Some(v) = f.get("paths.artifacts") {
             self.artifacts_dir = PathBuf::from(v);
         }
@@ -127,6 +136,9 @@ impl Config {
         }
         if a.flag("parallel") {
             self.parallel = true;
+        }
+        if let Some(v) = a.get("fleet") {
+            self.fleet = FleetSpec::parse(v).map_err(|e| format!("--fleet: {e}"))?;
         }
         if let Some(v) = a.get("artifacts") {
             self.artifacts_dir = PathBuf::from(v);
@@ -223,6 +235,26 @@ mod tests {
         assert!(!b.is_parallel());
         cfg.kernel = KernelSpec::Gnna;
         assert_eq!(cfg.engine_builder().describe(), "GNNA");
+    }
+
+    #[test]
+    fn fleet_parsed_through_single_parse_point() {
+        // CLI surface.
+        let args = Args::default().parse(&raw(&["--fleet", "4x2"])).unwrap();
+        let cfg = Config::resolve(&args).unwrap();
+        assert_eq!(cfg.fleet, FleetSpec::On { workers: 4, parts: Some(2) });
+        // File surface, overridden by CLI (precedence).
+        let mut cfg = Config::default();
+        let f = ConfigFile::parse("fleet = \"8\"").unwrap();
+        cfg.apply_file(&f).unwrap();
+        assert_eq!(cfg.fleet, FleetSpec::On { workers: 8, parts: None });
+        let args = Args::default().parse(&raw(&["--fleet", "off"])).unwrap();
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.fleet, FleetSpec::Off);
+        // Junk rejected with the grammar.
+        let args = Args::default().parse(&raw(&["--fleet", "lots"])).unwrap();
+        let err = Config::resolve(&args).unwrap_err();
+        assert!(err.contains("<workers>"), "{err}");
     }
 
     #[test]

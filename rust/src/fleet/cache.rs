@@ -1,0 +1,136 @@
+//! Shared plan cache: adjacency content-hash → planned [`Engine`].
+//!
+//! `EngineBuilder::build` pays Alg. 1 stage 1 (normalisation, CSC
+//! transposition, kernel schedules) per graph. Real designs repeat
+//! structure — evenly partitioned CircuitNet designs produce many
+//! content-identical subgraphs — so the fleet keys engines by
+//! [`HeteroGraph::adjacency_hash`] and plans each *unique* adjacency
+//! exactly once; content-identical subgraphs share one `Arc<Engine>`.
+//! Features and labels are not part of the key because plans depend only
+//! on the adjacency. Any mutation of an edge, weight or shape changes the
+//! hash and therefore misses the cache (verified in
+//! `tests/integration_fleet.rs` via `engine::plan_counters`).
+
+use crate::engine::{Engine, EngineBuilder};
+use crate::graph::HeteroGraph;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Hit/miss counters of a [`PlanCache`]; `misses` equals the number of
+/// unique adjacencies planned.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: usize,
+    pub misses: usize,
+}
+
+impl CacheStats {
+    /// Unique engines built (one per distinct adjacency).
+    pub fn unique(&self) -> usize {
+        self.misses
+    }
+
+    pub fn lookups(&self) -> usize {
+        self.hits + self.misses
+    }
+}
+
+/// Content-addressed engine cache used while building a fleet.
+pub struct PlanCache {
+    builder: EngineBuilder,
+    entries: HashMap<u64, Arc<Engine>>,
+    stats: CacheStats,
+}
+
+impl PlanCache {
+    pub fn new(builder: EngineBuilder) -> PlanCache {
+        PlanCache { builder, entries: HashMap::new(), stats: CacheStats::default() }
+    }
+
+    /// The engine for a subgraph: cached when a content-identical adjacency
+    /// was already planned, freshly planned (and cached) otherwise.
+    pub fn engine_for(&mut self, g: &HeteroGraph) -> Arc<Engine> {
+        let key = g.adjacency_hash();
+        if let Some(engine) = self.entries.get(&key) {
+            self.stats.hits += 1;
+            return Arc::clone(engine);
+        }
+        self.stats.misses += 1;
+        let engine = Arc::new(self.builder.build(g));
+        self.entries.insert(key, Arc::clone(&engine));
+        engine
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::partition::partition;
+    use crate::graph::Csr;
+    use crate::tensor::Matrix;
+
+    fn toy(seed_val: f32) -> HeteroGraph {
+        let near = Csr::from_triplets(
+            4,
+            4,
+            &[(0, 1, 1.0), (1, 0, 1.0), (2, 3, 1.0), (3, 2, 1.0)],
+        );
+        let pins =
+            Csr::from_triplets(2, 4, &[(0, 0, 1.0), (0, 1, 1.0), (1, 2, 1.0), (1, 3, 1.0)]);
+        let pinned = pins.transpose();
+        HeteroGraph {
+            id: 0,
+            n_cells: 4,
+            n_nets: 2,
+            near,
+            pins,
+            pinned,
+            x_cell: Matrix::from_fn(4, 3, |r, c| seed_val + (r * 3 + c) as f32),
+            x_net: Matrix::ones(2, 3),
+            y_cell: Matrix::zeros(4, 1),
+        }
+    }
+
+    #[test]
+    fn identical_adjacencies_share_one_engine() {
+        let mut cache = PlanCache::new(EngineBuilder::dr(2, 2));
+        let a = toy(0.0);
+        let b = toy(5.0); // different features, same adjacency
+        let ea = cache.engine_for(&a);
+        let eb = cache.engine_for(&b);
+        assert!(Arc::ptr_eq(&ea, &eb));
+        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 1 });
+        assert_eq!(cache.stats().unique(), 1);
+    }
+
+    #[test]
+    fn mutated_adjacency_misses() {
+        let mut cache = PlanCache::new(EngineBuilder::csr());
+        let a = toy(0.0);
+        let mut b = toy(0.0);
+        b.near.values[0] = 0.5;
+        let ea = cache.engine_for(&a);
+        let eb = cache.engine_for(&b);
+        assert!(!Arc::ptr_eq(&ea, &eb));
+        assert_eq!(cache.stats().unique(), 2);
+    }
+
+    #[test]
+    fn symmetric_partition_halves_plan_work() {
+        // toy()'s two halves are content-identical after partitioning, so a
+        // 2-way split plans once.
+        let g = toy(0.0);
+        let subs = partition(&g, 2);
+        assert_eq!(subs.len(), 2);
+        assert_eq!(subs[0].adjacency_hash(), subs[1].adjacency_hash());
+        let mut cache = PlanCache::new(EngineBuilder::dr(2, 2));
+        for s in &subs {
+            cache.engine_for(s);
+        }
+        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 1 });
+    }
+}

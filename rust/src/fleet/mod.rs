@@ -1,0 +1,321 @@
+//! Batched multi-subgraph execution (paper §3.4 at design scale).
+//!
+//! The paper's headline end-to-end numbers come from running a design's
+//! *independent subgraphs* concurrently: multi-threaded CPU initialization
+//! overlapped with per-stream kernel execution. PR 1's [`Engine`] is
+//! strictly per-graph; this subsystem is the layer above it:
+//!
+//! * [`Fleet`] / [`FleetBuilder`] — one engine per subgraph of a design,
+//!   built through a [`PlanCache`] keyed by adjacency content-hash so
+//!   content-identical subgraphs plan once (Alg. 1 stage 1 deduplicated);
+//! * [`Fleet::step`] — one training step over all subgraphs on a bounded
+//!   worker pool ([`crate::util::pool::bounded_map`]), with **deterministic
+//!   gradient reduction**: per-subgraph gradients are reduced in subgraph
+//!   index order, so losses and gradients are bit-identical for every
+//!   worker count (the `fleet(N) ≡ sequential` guarantee asserted in
+//!   `tests/integration_fleet.rs` and `tests/proptests.rs`);
+//! * [`FleetSpec`] — the single parse point for `--fleet` / `fleet`
+//!   settings, mirroring the engine's kernel registry.
+//!
+//! Inside each worker the §3.4 edge-level lanes still apply (the engine's
+//! `parallel` flag, dispatched via [`crate::sched::run_lanes`]), giving the
+//! graph-level × edge-level parallelism of Fig. 9b. See `docs/FLEET.md`.
+
+pub mod cache;
+pub mod spec;
+
+pub use cache::{CacheStats, PlanCache};
+pub use spec::FleetSpec;
+
+use crate::engine::{Engine, EngineBuilder};
+use crate::graph::{partition_with_map, HeteroGraph};
+use crate::nn::{mse, Adam, DrCircuitGnn};
+use crate::tensor::Matrix;
+use crate::util::pool::bounded_map;
+use std::borrow::Cow;
+use std::sync::Arc;
+
+/// Reusable fleet configuration: an engine configuration plus the fleet
+/// shape (worker count, optional re-partitioning). One builder can `build`
+/// a fleet per design of a dataset.
+#[derive(Clone, Debug)]
+pub struct FleetBuilder {
+    engine: EngineBuilder,
+    workers: usize,
+    parts: Option<usize>,
+}
+
+impl FleetBuilder {
+    pub fn new(engine: EngineBuilder) -> FleetBuilder {
+        FleetBuilder { engine, workers: 1, parts: None }
+    }
+
+    /// Worker-pool width for per-subgraph steps. More workers than
+    /// subgraphs is fine — the pool clamps. Results never depend on this.
+    pub fn workers(mut self, workers: usize) -> FleetBuilder {
+        self.workers = workers.max(1);
+        self
+    }
+
+    /// Re-partition each input graph into `parts` independent subgraphs
+    /// (cell-contiguous, stable remapping — see
+    /// [`crate::graph::partition_with_map`]).
+    pub fn parts(mut self, parts: usize) -> FleetBuilder {
+        self.parts = Some(parts.max(1));
+        self
+    }
+
+    /// Apply a parsed [`FleetSpec`] (the CLI/config surface).
+    pub fn spec(mut self, spec: &FleetSpec) -> FleetBuilder {
+        self.workers = spec.workers();
+        self.parts = spec.parts();
+        self
+    }
+
+    /// Build a fleet over a design's graphs: optionally re-partition, then
+    /// resolve one engine per subgraph through the shared plan cache.
+    ///
+    /// Without re-partitioning the fleet *borrows* the input graphs (no
+    /// duplication of the dataset's adjacencies/features — a design-scale
+    /// training run holds one copy); with `parts` set, the freshly cut
+    /// subgraphs are owned and get fleet-wide ids.
+    pub fn build<'a>(&self, graphs: &'a [HeteroGraph]) -> Fleet<'a> {
+        let subgraphs: Vec<Cow<'a, HeteroGraph>> = match self.parts {
+            None => graphs.iter().map(Cow::Borrowed).collect(),
+            Some(p) => {
+                let mut out: Vec<Cow<'a, HeteroGraph>> = Vec::new();
+                for g in graphs {
+                    for (mut sub, _) in partition_with_map(g, p) {
+                        sub.id = out.len(); // fleet-wide ids, stable across builds
+                        out.push(Cow::Owned(sub));
+                    }
+                }
+                out
+            }
+        };
+        assert!(!subgraphs.is_empty(), "fleet needs at least one subgraph");
+        let total_cells: usize = subgraphs.iter().map(|g| g.n_cells).sum();
+        let mut cache = PlanCache::new(self.engine.clone());
+        let units = subgraphs
+            .into_iter()
+            .map(|g| {
+                let engine = cache.engine_for(&g);
+                let weight = g.n_cells as f32 / total_cells.max(1) as f32;
+                FleetUnit { graph: g, engine, weight }
+            })
+            .collect();
+        Fleet { units, workers: self.workers, cache_stats: cache.stats() }
+    }
+}
+
+/// One subgraph with its (possibly shared) engine and its loss weight.
+/// Borrowed for a design's native graphs, owned when freshly partitioned.
+struct FleetUnit<'a> {
+    graph: Cow<'a, HeteroGraph>,
+    engine: Arc<Engine>,
+    /// Cell share of the design: the fleet loss is the cell-count-weighted
+    /// mean of per-subgraph MSEs, i.e. exactly the MSE over the union of
+    /// all cells.
+    weight: f32,
+}
+
+/// A design-bound fleet: every subgraph paired with a planned engine.
+pub struct Fleet<'a> {
+    units: Vec<FleetUnit<'a>>,
+    workers: usize,
+    cache_stats: CacheStats,
+}
+
+/// The fleet gradient of one model state: per-subgraph losses plus the
+/// parameter gradients reduced in subgraph index order.
+pub struct FleetGradients {
+    /// Cell-weighted design loss (= MSE over all cells of the design).
+    pub loss: f64,
+    /// Unweighted per-subgraph MSE, in subgraph order.
+    pub subgraph_losses: Vec<f64>,
+    /// One gradient matrix per model parameter (the order of
+    /// `DrCircuitGnn::params_mut`).
+    pub grads: Vec<Matrix>,
+}
+
+/// Result of one [`Fleet::step`].
+#[derive(Clone, Debug)]
+pub struct FleetStep {
+    pub loss: f64,
+    pub subgraph_losses: Vec<f64>,
+}
+
+impl<'a> Fleet<'a> {
+    /// Start configuring a fleet.
+    pub fn builder(engine: EngineBuilder) -> FleetBuilder {
+        FleetBuilder::new(engine)
+    }
+
+    pub fn n_subgraphs(&self) -> usize {
+        self.units.len()
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Plan-cache statistics of the build (`unique()` = engines planned).
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache_stats
+    }
+
+    pub fn subgraphs(&self) -> impl Iterator<Item = &HeteroGraph> {
+        self.units.iter().map(|u| u.graph.as_ref())
+    }
+
+    /// The engine driving a subgraph (shared between content-identical
+    /// subgraphs).
+    pub fn engine(&self, i: usize) -> &Arc<Engine> {
+        &self.units[i].engine
+    }
+
+    /// Compute the fleet gradient without applying an update.
+    ///
+    /// Each subgraph runs forward + backward on a model replica (engines
+    /// and kernels are deterministic, so replicas on worker threads give
+    /// bit-identical results to a sequential loop); gradients are then
+    /// reduced in subgraph index order. The per-subgraph prediction
+    /// gradient is scaled by the subgraph's cell share so the summed
+    /// gradient is the gradient of the design-wide cell MSE.
+    pub fn gradients(&self, model: &DrCircuitGnn) -> FleetGradients {
+        let per_unit: Vec<(Vec<Matrix>, f32)> =
+            bounded_map(self.units.len(), self.workers, |i| {
+                let unit = &self.units[i];
+                let mut replica = model.clone();
+                // The clone carries the caller's accumulated grads; drop
+                // them so the reduction sees this subgraph's alone.
+                Adam::zero_grad(&mut replica.params_mut());
+                let pred = replica.forward(&unit.engine, &unit.graph);
+                let (loss, dp) = mse(&pred, &unit.graph.y_cell);
+                replica.backward(&unit.engine, &dp.scale(unit.weight));
+                let grads = replica
+                    .params_mut()
+                    .iter_mut()
+                    .map(|p| std::mem::replace(&mut p.grad, Matrix::zeros(0, 0)))
+                    .collect();
+                (grads, loss)
+            });
+        let mut loss = 0f64;
+        let mut subgraph_losses = Vec::with_capacity(self.units.len());
+        let mut grads: Option<Vec<Matrix>> = None;
+        // Deterministic reduction: subgraph index order, whatever the
+        // worker count or completion order was.
+        for (i, (unit_grads, unit_loss)) in per_unit.into_iter().enumerate() {
+            loss += self.units[i].weight as f64 * unit_loss as f64;
+            subgraph_losses.push(unit_loss as f64);
+            match &mut grads {
+                None => grads = Some(unit_grads),
+                Some(acc) => {
+                    for (a, g) in acc.iter_mut().zip(&unit_grads) {
+                        a.add_inplace(g);
+                    }
+                }
+            }
+        }
+        FleetGradients { loss, subgraph_losses, grads: grads.unwrap_or_default() }
+    }
+
+    /// One fleet training step: compute the design gradient (concurrently,
+    /// deterministically reduced) and apply one optimizer update.
+    pub fn step(&self, model: &mut DrCircuitGnn, opt: &mut Adam) -> FleetStep {
+        let FleetGradients { loss, subgraph_losses, grads } = self.gradients(model);
+        let mut params = model.params_mut();
+        assert_eq!(params.len(), grads.len(), "fleet gradient structure mismatch");
+        for (p, g) in params.iter_mut().zip(grads) {
+            p.grad = g;
+        }
+        opt.step(&mut params);
+        Adam::zero_grad(&mut params);
+        FleetStep { loss, subgraph_losses }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::{generate_graph, GraphSpec};
+    use crate::util::rng::Rng;
+
+    fn test_graph(n_cells: usize, seed: u64) -> HeteroGraph {
+        let mut rng = Rng::new(seed);
+        generate_graph(
+            &GraphSpec {
+                n_cells,
+                n_nets: n_cells / 2,
+                target_near: n_cells * 8,
+                target_pins: n_cells,
+                d_cell: 6,
+                d_net: 6,
+            },
+            0,
+            &mut rng,
+        )
+    }
+
+    #[test]
+    fn build_shapes_and_weights() {
+        let g = test_graph(120, 1);
+        let fleet = Fleet::builder(EngineBuilder::dr(3, 3)).parts(4).workers(2).build(
+            std::slice::from_ref(&g),
+        );
+        assert_eq!(fleet.n_subgraphs(), 4);
+        assert_eq!(fleet.workers(), 2);
+        let w: f32 = fleet.units.iter().map(|u| u.weight).sum();
+        assert!((w - 1.0).abs() < 1e-6);
+        let ids: Vec<usize> = fleet.subgraphs().map(|s| s.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn gradients_are_worker_count_invariant() {
+        let g = test_graph(90, 2);
+        let mut rng = Rng::new(7);
+        let model = DrCircuitGnn::new(6, 6, 8, &mut rng);
+        let builder = Fleet::builder(EngineBuilder::dr(3, 3)).parts(3);
+        let reference = builder.clone().workers(1).build(std::slice::from_ref(&g));
+        let base = reference.gradients(&model);
+        for workers in [2, 5, 16] {
+            let fleet = builder.clone().workers(workers).build(std::slice::from_ref(&g));
+            let got = fleet.gradients(&model);
+            assert_eq!(got.loss, base.loss, "workers={workers}");
+            for (a, b) in got.grads.iter().zip(&base.grads) {
+                assert_eq!(a.data, b.data, "workers={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn step_descends_and_reports_per_subgraph_losses() {
+        let g = test_graph(80, 3);
+        let fleet =
+            Fleet::builder(EngineBuilder::dr(4, 4)).parts(2).workers(2).build(
+                std::slice::from_ref(&g),
+            );
+        let mut rng = Rng::new(5);
+        let mut model = DrCircuitGnn::new(6, 6, 8, &mut rng);
+        let mut opt = Adam::new(5e-3, 0.0);
+        let first = fleet.step(&mut model, &mut opt);
+        assert_eq!(first.subgraph_losses.len(), 2);
+        let mut last = first.loss;
+        for _ in 0..15 {
+            last = fleet.step(&mut model, &mut opt).loss;
+        }
+        assert!(last < first.loss, "{} -> {last}", first.loss);
+    }
+
+    #[test]
+    fn spec_round_trips_into_builder() {
+        let b = FleetBuilder::new(EngineBuilder::csr())
+            .spec(&FleetSpec::parse("4x2").unwrap());
+        assert_eq!(b.workers, 4);
+        assert_eq!(b.parts, Some(2));
+        let b = b.spec(&FleetSpec::Off);
+        assert_eq!(b.workers, 1);
+        assert_eq!(b.parts, None);
+    }
+}

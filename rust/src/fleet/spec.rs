@@ -1,0 +1,136 @@
+//! Fleet settings — the single place fleet strings are interpreted.
+//!
+//! Every surface that accepts a fleet setting (the `--fleet` CLI flag, the
+//! `fleet` config key, bench environment knobs) parses through
+//! [`FleetSpec::parse`], mirroring how kernel names go through the engine
+//! registry's `KernelSpec::parse`: one grammar, one error message, listed
+//! in one place.
+
+/// A parsed fleet selection.
+///
+/// Grammar (case-insensitive):
+/// * `off` (also `0`, `none`) — fleet mode disabled;
+/// * `<workers>` — fleet mode over the design's native subgraphs, with at
+///   most `workers` concurrent per-subgraph steps;
+/// * `<workers>x<parts>` — additionally re-partition each input graph into
+///   `parts` independent subgraphs first.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FleetSpec {
+    /// Per-graph training (the PR-1 path).
+    Off,
+    /// Fleet training: concurrent per-subgraph steps with deterministic
+    /// gradient reduction.
+    On {
+        /// Worker-pool width (≥ 1). Results are worker-count invariant.
+        workers: usize,
+        /// Optional re-partitioning of each input graph.
+        parts: Option<usize>,
+    },
+}
+
+impl FleetSpec {
+    /// Parse a fleet setting. This is the only parse point in the crate.
+    pub fn parse(s: &str) -> Result<FleetSpec, String> {
+        let t = s.trim().to_ascii_lowercase();
+        if t == "off" || t == "none" || t == "0" {
+            return Ok(FleetSpec::Off);
+        }
+        let bad = || {
+            format!("invalid fleet spec '{s}' (expected: off | <workers> | <workers>x<parts>)")
+        };
+        let (w, p) = match t.split_once('x') {
+            None => (t.as_str(), None),
+            Some((w, p)) => (w, Some(p)),
+        };
+        let workers: usize = w.trim().parse().map_err(|_| bad())?;
+        if workers == 0 {
+            return Err(bad());
+        }
+        let parts = match p {
+            None => None,
+            Some(p) => {
+                let parts: usize = p.trim().parse().map_err(|_| bad())?;
+                if parts == 0 {
+                    return Err(bad());
+                }
+                Some(parts)
+            }
+        };
+        Ok(FleetSpec::On { workers, parts })
+    }
+
+    pub fn is_on(&self) -> bool {
+        matches!(self, FleetSpec::On { .. })
+    }
+
+    /// Worker-pool width (1 when off).
+    pub fn workers(&self) -> usize {
+        match self {
+            FleetSpec::Off => 1,
+            FleetSpec::On { workers, .. } => *workers,
+        }
+    }
+
+    /// Re-partition factor, if any.
+    pub fn parts(&self) -> Option<usize> {
+        match self {
+            FleetSpec::Off => None,
+            FleetSpec::On { parts, .. } => *parts,
+        }
+    }
+
+    /// One-line description for logs and tables.
+    pub fn describe(&self) -> String {
+        match self {
+            FleetSpec::Off => "off".to_string(),
+            FleetSpec::On { workers, parts: None } => format!("{workers} workers"),
+            FleetSpec::On { workers, parts: Some(p) } => {
+                format!("{workers} workers × {p} parts/graph")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_grammar() {
+        assert_eq!(FleetSpec::parse("off").unwrap(), FleetSpec::Off);
+        assert_eq!(FleetSpec::parse("none").unwrap(), FleetSpec::Off);
+        assert_eq!(FleetSpec::parse("0").unwrap(), FleetSpec::Off);
+        assert_eq!(
+            FleetSpec::parse("4").unwrap(),
+            FleetSpec::On { workers: 4, parts: None }
+        );
+        assert_eq!(
+            FleetSpec::parse(" 4x2 ").unwrap(),
+            FleetSpec::On { workers: 4, parts: Some(2) }
+        );
+        assert_eq!(
+            FleetSpec::parse("8X3").unwrap(),
+            FleetSpec::On { workers: 8, parts: Some(3) }
+        );
+    }
+
+    #[test]
+    fn parse_rejects_junk_with_grammar() {
+        for bad in ["", "x", "4x", "x2", "4x0", "0x2", "-1", "fast", "4x2x1"] {
+            let err = FleetSpec::parse(bad).unwrap_err();
+            assert!(err.contains("<workers>"), "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn accessors_and_describe() {
+        assert!(!FleetSpec::Off.is_on());
+        assert_eq!(FleetSpec::Off.workers(), 1);
+        assert_eq!(FleetSpec::Off.describe(), "off");
+        let on = FleetSpec::parse("4x2").unwrap();
+        assert!(on.is_on());
+        assert_eq!(on.workers(), 4);
+        assert_eq!(on.parts(), Some(2));
+        assert!(on.describe().contains("4 workers"));
+    }
+}

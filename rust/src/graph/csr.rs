@@ -1,5 +1,15 @@
 //! Compressed sparse row / column adjacency matrices.
 
+pub(crate) const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+
+/// One FNV-1a mixing step — shared with [`super::hetero`]'s composite
+/// adjacency hash so the cache-key scheme lives in one place.
+#[inline]
+pub(crate) fn fnv_mix(h: u64, x: u64) -> u64 {
+    (h ^ x).wrapping_mul(FNV_PRIME)
+}
+
 /// CSR sparse matrix (`rows × cols`, f32 values).
 ///
 /// `indptr.len() == rows + 1`; row `r`'s neighbors are
@@ -196,6 +206,26 @@ impl Csr {
         }
     }
 
+    /// 64-bit FNV-1a content hash over the full matrix content: shape,
+    /// row pointers, column indices and value bits. Two matrices hash equal
+    /// iff they are logically identical (up to the 2⁻⁶⁴ collision odds), so
+    /// this is the key the fleet's shared plan cache uses — any mutation of
+    /// an edge, a weight or the shape changes the hash.
+    pub fn content_hash(&self) -> u64 {
+        let mut h = fnv_mix(FNV_OFFSET, self.rows as u64);
+        h = fnv_mix(h, self.cols as u64);
+        for &p in &self.indptr {
+            h = fnv_mix(h, p as u64);
+        }
+        for &c in &self.indices {
+            h = fnv_mix(h, c as u64);
+        }
+        for &v in &self.values {
+            h = fnv_mix(h, v.to_bits() as u64);
+        }
+        h
+    }
+
     /// Structural equality with another matrix's transpose — validates the
     /// paper's pins = pinnedᵀ invariant without allocating a transpose.
     pub fn is_transpose_of(&self, other: &Csr) -> bool {
@@ -344,5 +374,36 @@ mod tests {
     #[should_panic(expected = "out of bounds")]
     fn oob_triplet_panics() {
         Csr::from_triplets(2, 2, &[(2, 0, 1.0)]);
+    }
+
+    #[test]
+    fn content_hash_stable_for_equal_matrices() {
+        assert_eq!(sample().content_hash(), sample().content_hash());
+    }
+
+    #[test]
+    fn content_hash_changes_on_any_mutation() {
+        let base = sample();
+        let h0 = base.content_hash();
+        // Changed value.
+        let mut m = base.clone();
+        m.values[0] += 1.0;
+        assert_ne!(m.content_hash(), h0);
+        // Extra edge.
+        let mut t = vec![
+            (0, 1, 1.0),
+            (1, 0, 2.0),
+            (1, 2, 3.0),
+            (3, 0, 4.0),
+            (3, 1, 5.0),
+            (3, 2, 6.0),
+        ];
+        t.push((2, 2, 1.0));
+        let m = Csr::from_triplets(4, 3, &t);
+        assert_ne!(m.content_hash(), h0);
+        // Same nnz, different shape.
+        let mut m = base.clone();
+        m.cols = 4;
+        assert_ne!(m.content_hash(), h0);
     }
 }

@@ -125,6 +125,20 @@ impl HeteroGraph {
         Ok(())
     }
 
+    /// Content hash of the graph's *adjacency* (all three edge types plus
+    /// the node counts), composed from [`Csr::content_hash`]. Features and
+    /// labels are deliberately excluded: engines and their kernel plans
+    /// depend only on the adjacency, so this is the key under which the
+    /// fleet's shared plan cache deduplicates content-identical subgraphs.
+    pub fn adjacency_hash(&self) -> u64 {
+        let mut h = super::csr::fnv_mix(super::csr::FNV_OFFSET, self.n_cells as u64);
+        h = super::csr::fnv_mix(h, self.n_nets as u64);
+        for adj in [&self.near, &self.pins, &self.pinned] {
+            h = super::csr::fnv_mix(h, adj.content_hash());
+        }
+        h
+    }
+
     /// Compact statistics line (Table-1 style).
     pub fn stats_row(&self) -> GraphStats {
         GraphStats {
@@ -223,6 +237,24 @@ mod tests {
         let mut g = toy_graph();
         g.x_cell = Matrix::ones(5, 4);
         assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn adjacency_hash_ignores_features_but_not_edges() {
+        let g = toy_graph();
+        let h0 = g.adjacency_hash();
+        // Features/labels are not part of the key.
+        let mut f = g.clone();
+        f.x_cell = Matrix::zeros(3, 7);
+        f.y_cell = Matrix::ones(3, 1);
+        assert_eq!(f.adjacency_hash(), h0);
+        // Any adjacency mutation invalidates it.
+        let mut m = g.clone();
+        m.near.values[0] = 2.0;
+        assert_ne!(m.adjacency_hash(), h0);
+        let mut m = g;
+        m.pins = Csr::from_triplets(2, 3, &[(0, 0, 1.0)]);
+        assert_ne!(m.adjacency_hash(), h0);
     }
 
     #[test]

@@ -9,7 +9,8 @@
 //!   pins = pinnedᵀ invariant from §2.2 of the paper.
 //! * [`stats`] — degree histograms (Fig. 4) and workload-imbalance metrics
 //!   (the "evil row" factor of §2.3).
-//! * [`partition`] — splits a design into ~10k-node partitions (§2.2 item 1).
+//! * [`partition`] — splits a design into ~10k-node partitions (§2.2 item 1),
+//!   with stable node remapping ([`PartitionMap`]) for the fleet layer.
 
 pub mod cbsr;
 pub mod csr;
@@ -20,3 +21,4 @@ pub mod stats;
 pub use cbsr::Cbsr;
 pub use csr::{Csc, Csr};
 pub use hetero::{EdgeType, HeteroGraph, NodeType};
+pub use partition::{partition_with_map, PartitionMap};

@@ -9,12 +9,30 @@
 use super::csr::Csr;
 use super::hetero::HeteroGraph;
 
+/// Stable node remapping of one partition back to its parent graph:
+/// `cell_ids[i]` / `net_ids[j]` are the parent indices of local cell `i` /
+/// local net `j`. Cell ids are contiguous ranges (range partitioning) and
+/// net ids are in first-touch order, both fully determined by the parent
+/// graph and the partition count — the fleet relies on this stability to
+/// reduce per-subgraph results deterministically.
+#[derive(Clone, Debug)]
+pub struct PartitionMap {
+    pub cell_ids: Vec<usize>,
+    pub net_ids: Vec<usize>,
+}
 
 /// Split a heterograph into `parts` cell-contiguous partitions. Cells are
 /// range-partitioned; each partition keeps the nets that touch its cells.
 /// Edges crossing partition boundaries are dropped (the paper's partitions
 /// are likewise independent graphs).
 pub fn partition(g: &HeteroGraph, parts: usize) -> Vec<HeteroGraph> {
+    partition_with_map(g, parts).into_iter().map(|(sub, _)| sub).collect()
+}
+
+/// [`partition`], additionally returning each subgraph's [`PartitionMap`]
+/// so per-subgraph outputs (predictions, gradients) can be scattered back
+/// to parent node indices.
+pub fn partition_with_map(g: &HeteroGraph, parts: usize) -> Vec<(HeteroGraph, PartitionMap)> {
     assert!(parts >= 1);
     let per = g.n_cells.div_ceil(parts);
     let mut out = Vec::with_capacity(parts);
@@ -66,17 +84,20 @@ pub fn partition(g: &HeteroGraph, parts: usize) -> Vec<HeteroGraph> {
                 net_idx[new] = old;
             }
         }
-        out.push(HeteroGraph {
-            id: p,
-            n_cells,
-            n_nets,
-            near,
-            pins,
-            pinned,
-            x_cell: g.x_cell.gather_rows(&cell_idx),
-            x_net: g.x_net.gather_rows(&net_idx),
-            y_cell: g.y_cell.gather_rows(&cell_idx),
-        });
+        out.push((
+            HeteroGraph {
+                id: p,
+                n_cells,
+                n_nets,
+                near,
+                pins,
+                pinned,
+                x_cell: g.x_cell.gather_rows(&cell_idx),
+                x_net: g.x_net.gather_rows(&net_idx),
+                y_cell: g.y_cell.gather_rows(&cell_idx),
+            },
+            PartitionMap { cell_ids: cell_idx, net_ids: net_idx },
+        ));
     }
     out
 }
@@ -157,6 +178,31 @@ mod tests {
         let p6: usize = partition(&g, 6).iter().map(|p| p.near.nnz()).sum();
         assert!(p2 <= g.near.nnz());
         assert!(p6 <= p2);
+    }
+
+    #[test]
+    fn maps_are_stable_and_consistent_with_slices() {
+        let g = random_graph(60, 22, 10);
+        let a = partition_with_map(&g, 3);
+        let b = partition_with_map(&g, 3);
+        for ((pa, ma), (pb, mb)) in a.iter().zip(&b) {
+            assert_eq!(ma.cell_ids, mb.cell_ids, "cell remap must be deterministic");
+            assert_eq!(ma.net_ids, mb.net_ids, "net remap must be deterministic");
+            assert_eq!(pa.adjacency_hash(), pb.adjacency_hash());
+        }
+        for (sub, map) in &a {
+            assert_eq!(map.cell_ids.len(), sub.n_cells);
+            assert_eq!(map.net_ids.len(), sub.n_nets);
+            for (local, &parent) in map.cell_ids.iter().enumerate() {
+                assert_eq!(sub.x_cell.row(local), g.x_cell.row(parent));
+            }
+            for (local, &parent) in map.net_ids.iter().enumerate() {
+                assert_eq!(sub.x_net.row(local), g.x_net.row(parent));
+            }
+        }
+        // Cell ranges are contiguous and cover the parent exactly once.
+        let all: Vec<usize> = a.iter().flat_map(|(_, m)| m.cell_ids.clone()).collect();
+        assert_eq!(all, (0..60).collect::<Vec<_>>());
     }
 
     #[test]

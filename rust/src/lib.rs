@@ -19,11 +19,17 @@
 //! with per-edge-type kernel selection. See `docs/ENGINE.md` for the API
 //! walkthrough and the per-experiment index mapping every table/figure of
 //! the paper to a bench target.
+//!
+//! Above the engine sits the [`fleet`] subsystem — batched multi-subgraph
+//! execution: one engine per subgraph of a design (deduplicated through a
+//! content-hash plan cache), per-subgraph train steps on a bounded worker
+//! pool, and deterministic gradient reduction. See `docs/FLEET.md`.
 
 pub mod bench;
 pub mod config;
 pub mod datagen;
 pub mod engine;
+pub mod fleet;
 pub mod graph;
 pub mod nn;
 pub mod runtime;

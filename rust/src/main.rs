@@ -42,6 +42,7 @@ fn main() {
         .declare("seed", "RNG seed", true)
         .declare("parallel", "enable §3.4 parallel schedule", false)
         .declare("sequential", "disable §3.4 parallel schedule", false)
+        .declare("fleet", "fleet mode: off | <workers> | <workers>x<parts>", true)
         .declare("artifacts", "artifacts directory", true)
         .declare("log", "log level: debug|info|warn|error", true)
         .parse(&raw)
@@ -148,8 +149,16 @@ fn cmd_train(cfg: &Config, args: &Args) -> i32 {
     };
     let model_kind = args.get_or("model", "dr").to_string();
     let (scores, secs, params) = if model_kind == "dr" {
-        let (_, report) = Trainer::train_dr(&train, &test, &cfg.engine_builder(), &tc);
+        let (_, report) = if cfg.fleet.is_on() {
+            dr_circuitgnn::info!("fleet mode: {}", cfg.fleet.describe());
+            Trainer::train_dr_fleet(&train, &test, &cfg.engine_builder(), &tc, &cfg.fleet)
+        } else {
+            Trainer::train_dr(&train, &test, &cfg.engine_builder(), &tc)
+        };
         (report.test_scores, report.train_seconds, report.params)
+    } else if cfg.fleet.is_on() {
+        eprintln!("--fleet applies to the DR model only (got --model {model_kind})");
+        return 2;
     } else {
         let kind = match HomoKind::parse(&model_kind) {
             Some(k) => k,

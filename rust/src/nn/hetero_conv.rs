@@ -18,9 +18,18 @@ use super::gcn::GraphConv;
 use super::sage::SageConv;
 use crate::engine::{AggCache, Engine};
 use crate::graph::{EdgeType, NodeType};
+use crate::sched::{run_lanes, ScheduleMode};
 use crate::tensor::Matrix;
-use crate::util::pool::join_all;
 use crate::util::rng::Rng;
+
+/// The §3.4 lane schedule an engine's parallel flag selects.
+fn schedule_of(engine: &Engine) -> ScheduleMode {
+    if engine.is_parallel() {
+        ScheduleMode::Parallel
+    } else {
+        ScheduleMode::Sequential
+    }
+}
 
 /// One heterogeneous convolution block.
 #[derive(Clone, Debug)]
@@ -56,25 +65,22 @@ impl HeteroConv {
         x_net: &Matrix,
     ) -> (Matrix, Matrix) {
         // D-ReLU once per node type (paper §3.1), then three independent
-        // SpMM aggregations — the §3.4 concurrency opportunity.
+        // SpMM aggregations — the §3.4 concurrency opportunity, dispatched
+        // through the scheduler's one lane primitive.
         let prep_cell = engine.sparsify(x_cell, NodeType::Cell);
         let prep_net = engine.sparsify(x_net, NodeType::Net);
-        let [(h_near, c_near), (h_pinned, c_pinned), (h_pins, c_pins)] = if engine.is_parallel() {
-            let results = join_all(vec![
+        let results = run_lanes(
+            schedule_of(engine),
+            vec![
                 Box::new(|| engine.aggregate_with(EdgeType::Near, x_cell, prep_cell.as_ref()))
                     as Box<dyn FnOnce() -> (Matrix, AggCache) + Send>,
                 Box::new(|| engine.aggregate_with(EdgeType::Pinned, x_net, prep_net.as_ref())),
                 Box::new(|| engine.aggregate_with(EdgeType::Pins, x_cell, prep_cell.as_ref())),
-            ]);
-            let mut it = results.into_iter();
-            [it.next().unwrap(), it.next().unwrap(), it.next().unwrap()]
-        } else {
-            [
-                engine.aggregate_with(EdgeType::Near, x_cell, prep_cell.as_ref()),
-                engine.aggregate_with(EdgeType::Pinned, x_net, prep_net.as_ref()),
-                engine.aggregate_with(EdgeType::Pins, x_cell, prep_cell.as_ref()),
-            ]
-        };
+            ],
+        );
+        let mut it = results.into_iter();
+        let [(h_near, c_near), (h_pinned, c_pinned), (h_pins, c_pins)] =
+            [it.next().unwrap(), it.next().unwrap(), it.next().unwrap()];
         let y_near = self.near.forward_from_agg(h_near);
         let y_pinned = self.pinned.forward_from_agg(x_cell, h_pinned);
         let y_net = self.pins.forward_from_agg(x_net, h_pins);
@@ -103,24 +109,20 @@ impl HeteroConv {
         let (dx_cell_self, dh_pinned) = self.pinned.backward_to_agg(&d_pinned_out);
         let (dx_net_self, dh_pins) = self.pins.backward_to_agg(dy_net);
 
-        // Aggregation backward (the SpMM-heavy part) — parallelisable.
+        // Aggregation backward (the SpMM-heavy part) — same lanes.
         let [c_near, c_pinned, c_pins] = &caches;
-        let (g_near, g_pinned, g_pins) = if engine.is_parallel() {
-            let results = join_all(vec![
+        let results = run_lanes(
+            schedule_of(engine),
+            vec![
                 Box::new(|| engine.aggregate_backward(EdgeType::Near, &dh_near, c_near))
                     as Box<dyn FnOnce() -> Matrix + Send>,
                 Box::new(|| engine.aggregate_backward(EdgeType::Pinned, &dh_pinned, c_pinned)),
                 Box::new(|| engine.aggregate_backward(EdgeType::Pins, &dh_pins, c_pins)),
-            ]);
-            let mut it = results.into_iter();
-            (it.next().unwrap(), it.next().unwrap(), it.next().unwrap())
-        } else {
-            (
-                engine.aggregate_backward(EdgeType::Near, &dh_near, c_near),
-                engine.aggregate_backward(EdgeType::Pinned, &dh_pinned, c_pinned),
-                engine.aggregate_backward(EdgeType::Pins, &dh_pins, c_pins),
-            )
-        };
+            ],
+        );
+        let mut it = results.into_iter();
+        let (g_near, g_pinned, g_pins) =
+            (it.next().unwrap(), it.next().unwrap(), it.next().unwrap());
         // dX_cell: near aggregation (cell src) + pinned self-path (cell dst)
         //          + pins aggregation (cell src).
         let mut dx_cell = g_near;

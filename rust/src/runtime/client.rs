@@ -1,17 +1,22 @@
 //! Thin wrapper over the `xla` crate's PJRT CPU client.
 //!
-//! Gated behind the `pjrt` cargo feature: the `xla` crate (xla-rs, pinned
-//! to `xla_extension` 0.5.1) is not on crates.io and needs the native
-//! `libxla_extension` — environments without it (CI, plain `cargo build`)
-//! compile the stub below, whose `Runtime::cpu()` returns an error that
-//! callers already handle (the runtime tests and examples skip with a
-//! notice). Enable with `--features pjrt` after vendoring the `xla`
-//! dependency; the wrapped API is identical.
+//! Two cargo features gate this module:
+//! * `pjrt` — the runtime scaffolding; alone it still compiles the stub
+//!   below (so CI's feature-matrix lane can build `--features pjrt`
+//!   without native dependencies);
+//! * `xla-backend` (implies `pjrt`) — the real client. The `xla` crate
+//!   (xla-rs, pinned to `xla_extension` 0.5.1) is not on crates.io and
+//!   needs the native `libxla_extension`; vendor it and add
+//!   `xla = { path = "..." }` under `[dependencies]` before enabling.
+//!
+//! The stub's `Runtime::cpu()` returns an error that callers already
+//! handle (the runtime tests and examples skip with a notice); the wrapped
+//! API is identical either way.
 
 use crate::tensor::Matrix;
 use anyhow::Result;
 
-#[cfg(feature = "pjrt")]
+#[cfg(feature = "xla-backend")]
 mod imp {
     use super::*;
     use anyhow::Context;
@@ -85,21 +90,31 @@ mod imp {
     }
 }
 
-#[cfg(not(feature = "pjrt"))]
+#[cfg(not(feature = "xla-backend"))]
 mod imp {
     use super::*;
 
-    /// Stub runtime compiled when the `pjrt` feature is off.
+    /// Stub runtime compiled without the `xla-backend` feature.
     pub struct Runtime {
         _private: (),
     }
 
     impl Runtime {
         pub fn cpu() -> Result<Runtime> {
+            // The two messages are feature-gated so `--features pjrt`
+            // compiles a distinct configuration (CI's feature-matrix lane
+            // exercises it) even though both are stubs without a backend.
+            #[cfg(feature = "pjrt")]
             anyhow::bail!(
-                "PJRT support not compiled in — vendor the xla-rs crate (add it \
-                 under [dependencies] in rust/Cargo.toml, needs libxla_extension) \
-                 and rebuild with `--features pjrt`"
+                "PJRT scaffolding enabled but no backend — vendor the xla-rs \
+                 crate (add it under [dependencies] in rust/Cargo.toml, needs \
+                 libxla_extension) and rebuild with `--features xla-backend`"
+            );
+            #[cfg(not(feature = "pjrt"))]
+            anyhow::bail!(
+                "PJRT support not compiled in — rebuild with `--features pjrt` \
+                 for the scaffolding, plus vendored xla-rs and \
+                 `--features xla-backend` for the real client"
             )
         }
 

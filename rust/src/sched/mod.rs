@@ -19,5 +19,5 @@
 pub mod pipeline;
 pub mod timeline;
 
-pub use pipeline::{run_e2e_step, E2eTiming, ScheduleMode};
+pub use pipeline::{run_e2e_step, run_fleet_e2e_steps, run_lanes, E2eTiming, ScheduleMode};
 pub use timeline::{Timeline, TimelineEvent};

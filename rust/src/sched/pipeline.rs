@@ -22,6 +22,7 @@ use crate::engine::{kernel_label, normalized_adjacencies, EngineBuilder, SpmmKer
 use crate::graph::{Cbsr, Csr, EdgeType, HeteroGraph, NodeType};
 use crate::sparse::drelu;
 use crate::tensor::Matrix;
+use crate::util::pool::{bounded_map, join_all};
 use crate::util::rng::Rng;
 use std::sync::Arc;
 
@@ -39,6 +40,43 @@ impl ScheduleMode {
             ScheduleMode::Parallel => "parallel",
         }
     }
+}
+
+/// Run one closure per lane under a schedule mode: `Sequential` executes
+/// them in lane order on the caller's thread, `Parallel` gives each lane a
+/// dedicated thread (the §3.4 cudaStream analog). Results come back in lane
+/// order either way, so callers are mode-oblivious.
+///
+/// This is the one lane-scheduling primitive in the crate: `run_e2e_step`
+/// drives its three edge-type lanes through it, `HeteroConv` uses it for
+/// the model's aggregations, and fleet workers compose it with
+/// [`crate::util::pool::bounded_map`] for graph-level × edge-level
+/// parallelism (see [`run_fleet_e2e_steps`]).
+pub fn run_lanes<T, F>(mode: ScheduleMode, tasks: Vec<F>) -> Vec<T>
+where
+    T: Send,
+    F: FnOnce() -> T + Send,
+{
+    match mode {
+        ScheduleMode::Sequential => tasks.into_iter().map(|t| t()).collect(),
+        ScheduleMode::Parallel => join_all(tasks),
+    }
+}
+
+/// One e2e step per subgraph, spread over a bounded worker pool — the
+/// fleet rig: graph-level parallelism stacked on the per-step edge lanes.
+/// Results come back in subgraph order regardless of `workers`.
+pub fn run_fleet_e2e_steps(
+    graphs: &[HeteroGraph],
+    dim: usize,
+    engine: &EngineBuilder,
+    mode: ScheduleMode,
+    workers: usize,
+    seed: u64,
+) -> Vec<E2eTiming> {
+    bounded_map(graphs.len(), workers, |i| {
+        run_e2e_step(&graphs[i], dim, engine, mode, seed.wrapping_add(i as u64))
+    })
 }
 
 /// Timing result of one e2e step.
@@ -183,31 +221,17 @@ pub fn run_e2e_step(
     ];
     let mut lane_phases = vec![(0.0, 0.0, 0.0); 3];
     let mut outputs: Vec<Matrix> = Vec::with_capacity(3);
-    match mode {
-        ScheduleMode::Sequential => {
-            for (i, input) in inputs.iter().enumerate() {
-                let (phases, h) = run_lane(i, input, &tl);
-                lane_phases[i] = phases;
-                outputs.push(h);
-            }
-        }
-        ScheduleMode::Parallel => {
-            let results = std::thread::scope(|scope| {
-                let handles: Vec<_> = inputs
-                    .iter()
-                    .enumerate()
-                    .map(|(i, input)| {
-                        let tl = &tl;
-                        scope.spawn(move || run_lane(i, input, tl))
-                    })
-                    .collect();
-                handles.into_iter().map(|h| h.join().unwrap()).collect::<Vec<_>>()
-            });
-            for (i, (phases, h)) in results.into_iter().enumerate() {
-                lane_phases[i] = phases;
-                outputs.push(h);
-            }
-        }
+    let tasks: Vec<_> = inputs
+        .iter()
+        .enumerate()
+        .map(|(i, input)| {
+            let tl = &tl;
+            move || run_lane(i, input, tl)
+        })
+        .collect();
+    for (i, (phases, h)) in run_lanes(mode, tasks).into_iter().enumerate() {
+        lane_phases[i] = phases;
+        outputs.push(h);
     }
     // Final merge (eq. 8) — the only cross-lane dependency.
     let (merged, _mask) = outputs[0].max_merge(&outputs[1]);
@@ -300,6 +324,35 @@ mod tests {
             assert!(*i > 0.0 && *f >= 0.0 && *b >= 0.0);
         }
         assert_eq!(t.engine, "DR-SpMM");
+    }
+
+    #[test]
+    fn run_lanes_preserves_order_in_both_modes() {
+        for mode in [ScheduleMode::Sequential, ScheduleMode::Parallel] {
+            let tasks: Vec<_> = (0..5).map(|i| move || i * 10).collect();
+            assert_eq!(run_lanes(mode, tasks), vec![0, 10, 20, 30, 40], "{}", mode.name());
+        }
+    }
+
+    #[test]
+    fn fleet_e2e_steps_cover_every_subgraph() {
+        let g = test_graph(300);
+        let subs = crate::graph::partition::partition(&g, 3);
+        for workers in [1, 4] {
+            let timings = run_fleet_e2e_steps(
+                &subs,
+                16,
+                &EngineBuilder::dr(4, 4),
+                ScheduleMode::Sequential,
+                workers,
+                11,
+            );
+            assert_eq!(timings.len(), subs.len());
+            for t in &timings {
+                assert!(t.total > 0.0);
+                assert_eq!(t.lane_phases.len(), 3);
+            }
+        }
     }
 
     #[test]

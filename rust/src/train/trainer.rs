@@ -11,6 +11,7 @@
 use super::metrics::EvalScores;
 use crate::datagen::Dataset;
 use crate::engine::{Engine, EngineBuilder};
+use crate::fleet::{Fleet, FleetSpec};
 use crate::nn::model::{homogenize, HomoView};
 use crate::nn::{mse, Adam, DrCircuitGnn, HomoGnn, HomoKind};
 use crate::util::rng::Rng;
@@ -108,6 +109,64 @@ impl Trainer {
                 epoch_losses.push(avg);
                 if cfg.log_every > 0 && epoch % cfg.log_every == 0 {
                     crate::info!("epoch {epoch:3}: loss {avg:.6}");
+                }
+            }
+        });
+
+        let (test_scores, per_graph_scores) = Self::eval_dr(&mut model, test, &builder);
+        (
+            model,
+            TrainReport {
+                epoch_losses,
+                test_scores,
+                per_graph_scores,
+                train_seconds: secs,
+                params,
+            },
+        )
+    }
+
+    /// Train DR-CircuitGNN in fleet mode: one [`Fleet`] per design, one
+    /// optimizer step per design per epoch over the deterministically
+    /// reduced design gradient (vs. [`Trainer::train_dr`]'s one step per
+    /// graph — fleet mode is gradient accumulation across a design's
+    /// subgraphs, executed concurrently).
+    ///
+    /// Loss curves are identical for every worker count of `spec` — the
+    /// reduction happens in subgraph index order regardless of which worker
+    /// finished first (asserted in `tests/integration_fleet.rs`).
+    pub fn train_dr_fleet(
+        train: &Dataset,
+        test: &Dataset,
+        engine: &EngineBuilder,
+        cfg: &TrainConfig,
+        spec: &FleetSpec,
+    ) -> (DrCircuitGnn, TrainReport) {
+        let mut rng = Rng::new(cfg.seed);
+        let first = train.graphs().next().expect("empty training set");
+        let (dc, dn) = (first.x_cell.cols, first.x_net.cols);
+        let mut model = DrCircuitGnn::new(dc, dn, cfg.hidden, &mut rng);
+        let params = model.numel();
+        let mut opt = Adam::new(cfg.lr, cfg.weight_decay);
+
+        // One fleet per design: subgraphs resolved through the shared plan
+        // cache, so content-identical partitions plan Alg. 1 stage 1 once.
+        let builder = engine.clone().parallel(cfg.parallel);
+        let fleet_builder = Fleet::builder(builder.clone()).spec(spec);
+        let fleets: Vec<Fleet> =
+            train.designs.iter().map(|(_, gs)| fleet_builder.build(gs)).collect();
+
+        let mut epoch_losses = Vec::with_capacity(cfg.epochs);
+        let (_, secs) = time_it(|| {
+            for epoch in 0..cfg.epochs {
+                let mut epoch_loss = 0f64;
+                for fleet in &fleets {
+                    epoch_loss += fleet.step(&mut model, &mut opt).loss;
+                }
+                let avg = epoch_loss / fleets.len().max(1) as f64;
+                epoch_losses.push(avg);
+                if cfg.log_every > 0 && epoch % cfg.log_every == 0 {
+                    crate::info!("[fleet {}] epoch {epoch:3}: loss {avg:.6}", spec.describe());
                 }
             }
         });
@@ -268,6 +327,37 @@ mod tests {
         for (a, b) in r1.epoch_losses.iter().zip(&r2.epoch_losses) {
             assert!((a - b).abs() < 1e-9, "parallel changed numerics: {a} vs {b}");
         }
+    }
+
+    #[test]
+    fn fleet_training_loss_curve_is_worker_count_invariant() {
+        let (train, test) = tiny_sets();
+        let mut cfg = fast_cfg();
+        cfg.epochs = 3;
+        let one = FleetSpec::parse("1").unwrap();
+        let four = FleetSpec::parse("4").unwrap();
+        let (_m1, r1) =
+            Trainer::train_dr_fleet(&train, &test, &EngineBuilder::dr(4, 4), &cfg, &one);
+        let (_m2, r2) =
+            Trainer::train_dr_fleet(&train, &test, &EngineBuilder::dr(4, 4), &cfg, &four);
+        assert_eq!(r1.epoch_losses.len(), 3);
+        for (a, b) in r1.epoch_losses.iter().zip(&r2.epoch_losses) {
+            assert!((a - b).abs() < 1e-9, "workers changed numerics: {a} vs {b}");
+        }
+        assert!(r1.test_scores.rmse.is_finite());
+    }
+
+    #[test]
+    fn fleet_training_descends() {
+        let (train, test) = tiny_sets();
+        let spec = FleetSpec::parse("2x2").unwrap();
+        let (_m, report) =
+            Trainer::train_dr_fleet(&train, &test, &EngineBuilder::dr(4, 4), &fast_cfg(), &spec);
+        assert!(
+            report.epoch_losses.last().unwrap() < &report.epoch_losses[0],
+            "{:?}",
+            report.epoch_losses
+        );
     }
 
     #[test]

@@ -182,6 +182,49 @@ impl<T> Copy for SendPtr<T> {}
 unsafe impl<T> Send for SendPtr<T> {}
 unsafe impl<T> Sync for SendPtr<T> {}
 
+/// Run `n` independent tasks on at most `workers` threads, collecting
+/// results in task order. Tasks are pulled from a shared atomic cursor
+/// (dynamic assignment — skewed task costs don't tail-lag a static stride),
+/// but because each task's output is written to its own slot, the result is
+/// identical for every worker count. This is the fleet's substrate: one
+/// task per subgraph, graph-level parallelism on top of the kernels' own
+/// `parallel_for` and the §3.4 edge lanes.
+pub fn bounded_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let workers = workers.clamp(1, n.max(1));
+    if workers <= 1 {
+        for (i, slot) in out.iter_mut().enumerate() {
+            *slot = Some(f(i));
+        }
+    } else {
+        let cursor = AtomicUsize::new(0);
+        let out_ptr = SendPtr(out.as_mut_ptr());
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                let f = &f;
+                let cursor = &cursor;
+                scope.spawn(move || {
+                    let p = out_ptr;
+                    loop {
+                        let i = cursor.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        // SAFETY: the cursor hands each index to exactly
+                        // one worker, so every slot is written once.
+                        unsafe { *p.0.add(i) = Some(f(i)) };
+                    }
+                });
+            }
+        });
+    }
+    out.into_iter().map(|x| x.expect("bounded_map: unfilled slot")).collect()
+}
+
 /// Run a set of independent closures concurrently, one thread each
 /// (the CPU-side "three threads for three subgraphs" of paper Fig. 9b).
 pub fn join_all<T: Send, F: FnOnce() -> T + Send>(tasks: Vec<F>) -> Vec<T> {
@@ -230,6 +273,16 @@ mod tests {
     fn join_all_returns_in_order() {
         let results = join_all(vec![|| 1, || 2, || 3]);
         assert_eq!(results, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn bounded_map_matches_sequential_for_any_worker_count() {
+        let want: Vec<usize> = (0..97).map(|i| i * i).collect();
+        for workers in [1, 2, 3, 8, 200] {
+            let got = bounded_map(97, workers, |i| i * i);
+            assert_eq!(got, want, "workers={workers}");
+        }
+        assert!(bounded_map(0, 4, |i| i).is_empty());
     }
 
     #[test]

@@ -1,0 +1,237 @@
+//! Integration: the fleet subsystem — batched multi-subgraph training.
+//!
+//! Acceptance (ISSUE 2):
+//! * fleet(N workers) ≡ sequential training on the seed designs — loss
+//!   curves match within 1e-6 for every worker count, including more
+//!   workers than subgraphs;
+//! * the shared plan cache plans once per *unique* subgraph adjacency
+//!   (content-hash keyed), and a mutated adjacency invalidates the hash.
+
+use dr_circuitgnn::datagen::mini_circuitnet;
+use dr_circuitgnn::engine::{plan_counters, EngineBuilder};
+use dr_circuitgnn::fleet::{Fleet, FleetSpec};
+use dr_circuitgnn::graph::partition::partition;
+use dr_circuitgnn::nn::{mse, Adam, DrCircuitGnn};
+use dr_circuitgnn::train::{TrainConfig, Trainer};
+use dr_circuitgnn::util::rng::Rng;
+use std::sync::Mutex;
+
+/// The plan counters are process-global; tests in this binary run on
+/// threads, so exact-count assertions take this lock (same convention as
+/// `tests/integration_engine.rs`).
+static COUNTER_GUARD: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    COUNTER_GUARD.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn fast_cfg(epochs: usize) -> TrainConfig {
+    TrainConfig {
+        epochs,
+        lr: 5e-3,
+        weight_decay: 0.0,
+        hidden: 16,
+        seed: 1,
+        parallel: false,
+        log_every: 0,
+    }
+}
+
+/// Acceptance: fleet(N workers) produces the same loss curve as sequential
+/// (1-worker) execution on the seed designs, within 1e-6, for worker
+/// counts below, at and above the subgraph count.
+#[test]
+fn fleet_loss_curves_match_sequential_on_seed_designs() {
+    let _g = lock();
+    let (train, test) = mini_circuitnet(6, 0.02, 11);
+    let cfg = fast_cfg(4);
+    let (_m, sequential) = Trainer::train_dr_fleet(
+        &train,
+        &test,
+        &EngineBuilder::dr(4, 4),
+        &cfg,
+        &FleetSpec::parse("1").unwrap(),
+    );
+    for spec in ["2", "4", "32"] {
+        let (_m, fleet) = Trainer::train_dr_fleet(
+            &train,
+            &test,
+            &EngineBuilder::dr(4, 4),
+            &cfg,
+            &FleetSpec::parse(spec).unwrap(),
+        );
+        assert_eq!(fleet.epoch_losses.len(), sequential.epoch_losses.len());
+        for (epoch, (a, b)) in
+            fleet.epoch_losses.iter().zip(&sequential.epoch_losses).enumerate()
+        {
+            assert!(
+                (a - b).abs() < 1e-6,
+                "spec {spec}, epoch {epoch}: fleet {a} vs sequential {b}"
+            );
+        }
+    }
+}
+
+/// The same guarantee at the gradient level, against a hand-written
+/// single-engine sequential reference (no fleet machinery at all).
+#[test]
+fn fleet_gradients_match_handwritten_sequential_reference() {
+    let _g = lock();
+    let (train, _test) = mini_circuitnet(3, 0.02, 7);
+    let graphs = &train.designs[0].1;
+    let mut rng = Rng::new(3);
+    let g0 = &graphs[0];
+    let model = DrCircuitGnn::new(g0.x_cell.cols, g0.x_net.cols, 16, &mut rng);
+
+    // Reference: sequential loop, one engine at a time, grads summed in
+    // subgraph order with cell-share scaling.
+    let builder = EngineBuilder::dr(4, 4);
+    let total_cells: usize = graphs.iter().map(|g| g.n_cells).sum();
+    let mut ref_grads: Vec<dr_circuitgnn::tensor::Matrix> = Vec::new();
+    let mut ref_loss = 0f64;
+    for g in graphs {
+        let engine = builder.build(g);
+        let mut replica = model.clone();
+        let pred = replica.forward(&engine, g);
+        let (loss, dp) = mse(&pred, &g.y_cell);
+        let w = g.n_cells as f32 / total_cells as f32;
+        replica.backward(&engine, &dp.scale(w));
+        ref_loss += w as f64 * loss as f64;
+        let grads: Vec<_> = replica.params_mut().iter().map(|p| p.grad.clone()).collect();
+        if ref_grads.is_empty() {
+            ref_grads = grads;
+        } else {
+            for (a, b) in ref_grads.iter_mut().zip(&grads) {
+                a.add_inplace(b);
+            }
+        }
+    }
+
+    for workers in [1, 3, 8] {
+        let fleet = Fleet::builder(builder.clone()).workers(workers).build(graphs);
+        let got = fleet.gradients(&model);
+        assert!((got.loss - ref_loss).abs() < 1e-6, "workers {workers}");
+        assert_eq!(got.grads.len(), ref_grads.len());
+        for (pi, (a, b)) in got.grads.iter().zip(&ref_grads).enumerate() {
+            for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+                assert!(
+                    (x - y).abs() < 1e-6,
+                    "workers {workers}, param {pi}, idx {i}: {x} vs {y}"
+                );
+            }
+        }
+    }
+}
+
+/// Fleet steps advance the model identically for any worker count.
+#[test]
+fn fleet_steps_update_identically_across_worker_counts() {
+    let _g = lock();
+    let (train, _test) = mini_circuitnet(3, 0.02, 9);
+    let graphs = &train.designs[0].1;
+    let mut rng = Rng::new(5);
+    let g0 = &graphs[0];
+    let model0 = DrCircuitGnn::new(g0.x_cell.cols, g0.x_net.cols, 12, &mut rng);
+    let run = |workers: usize| {
+        let fleet =
+            Fleet::builder(EngineBuilder::dr(3, 3)).workers(workers).parts(2).build(graphs);
+        let mut model = model0.clone();
+        let mut opt = Adam::new(1e-2, 0.0);
+        (0..5).map(|_| fleet.step(&mut model, &mut opt).loss).collect::<Vec<f64>>()
+    };
+    let base = run(1);
+    for workers in [2, 7] {
+        let losses = run(workers);
+        for (a, b) in losses.iter().zip(&base) {
+            assert!((a - b).abs() < 1e-6, "workers {workers}: {a} vs {b}");
+        }
+    }
+}
+
+/// Acceptance: two content-identical subgraphs in a fleet trigger exactly
+/// one plan (3 kernel plans, one per edge type); mutating an adjacency
+/// invalidates the content hash and re-plans.
+#[test]
+fn plan_cache_plans_once_per_unique_subgraph() {
+    let _g = lock();
+    let (train, _test) = mini_circuitnet(2, 0.02, 13);
+    let graphs = &train.designs[0].1;
+    let g = &graphs[0];
+
+    // A design with a duplicated subgraph: same adjacency, new features.
+    let mut twin = g.clone();
+    twin.x_cell = twin.x_cell.scale(0.5);
+    assert_eq!(twin.adjacency_hash(), g.adjacency_hash());
+    let design = vec![g.clone(), twin];
+
+    let c0 = plan_counters();
+    let fleet = Fleet::builder(EngineBuilder::dr(4, 4)).workers(2).build(&design);
+    let built = plan_counters().since(&c0);
+    assert_eq!(fleet.n_subgraphs(), 2);
+    assert_eq!(fleet.cache_stats().unique(), 1, "one unique adjacency");
+    assert_eq!(fleet.cache_stats().hits, 1);
+    assert_eq!(built.plans, 3, "exactly one plan per edge type for the pair");
+    assert_eq!(built.cscs, 3);
+
+    // Mutating the adjacency invalidates the hash: the fleet re-plans.
+    let mut mutated = g.clone();
+    mutated.near.values[0] += 1.0;
+    assert_ne!(mutated.adjacency_hash(), g.adjacency_hash());
+    let design = vec![g.clone(), mutated];
+    let c1 = plan_counters();
+    let fleet = Fleet::builder(EngineBuilder::dr(4, 4)).build(&design);
+    let built = plan_counters().since(&c1);
+    assert_eq!(fleet.cache_stats().unique(), 2, "mutated adjacency must miss");
+    assert_eq!(built.plans, 6, "3 plans per unique subgraph");
+}
+
+/// Plan construction happens only at fleet build, never during steps.
+#[test]
+fn fleet_steps_build_no_plans() {
+    let _g = lock();
+    let (train, _test) = mini_circuitnet(2, 0.02, 17);
+    let graphs = &train.designs[0].1;
+    let fleet = Fleet::builder(EngineBuilder::dr(4, 4)).workers(2).build(graphs);
+    let mut rng = Rng::new(1);
+    let g0 = &graphs[0];
+    let mut model = DrCircuitGnn::new(g0.x_cell.cols, g0.x_net.cols, 8, &mut rng);
+    let mut opt = Adam::new(1e-3, 0.0);
+    let c0 = plan_counters();
+    for _ in 0..3 {
+        fleet.step(&mut model, &mut opt);
+    }
+    let during = plan_counters().since(&c0);
+    assert_eq!(during.plans, 0, "fleet steps must reuse cached plans: {during:?}");
+}
+
+/// Edge cases: a single-subgraph fleet and re-partitioning with more parts
+/// than cells both work, and partition counts compose with worker counts.
+#[test]
+fn fleet_edge_cases_single_subgraph_and_overpartition() {
+    let _g = lock();
+    let (train, _test) = mini_circuitnet(2, 0.02, 19);
+    let g = train.designs[0].1[0].clone();
+    let mut rng = Rng::new(2);
+    let model = DrCircuitGnn::new(g.x_cell.cols, g.x_net.cols, 8, &mut rng);
+
+    // parts = 1: the fleet is the graph itself.
+    let single = Fleet::builder(EngineBuilder::dr(3, 3)).parts(1).workers(4).build(
+        std::slice::from_ref(&g),
+    );
+    assert_eq!(single.n_subgraphs(), 1);
+    let lone = single.gradients(&model);
+    assert!(lone.loss.is_finite());
+
+    // More workers than subgraphs: the pool clamps, the reduction stays
+    // in subgraph order, results are identical.
+    let parts = partition(&g, 8);
+    assert!(!parts.is_empty() && parts.len() <= 8);
+    let a = Fleet::builder(EngineBuilder::dr(3, 3)).workers(1).build(&parts);
+    let b = Fleet::builder(EngineBuilder::dr(3, 3)).workers(64).build(&parts);
+    let ga = a.gradients(&model);
+    let gb = b.gradients(&model);
+    assert!((ga.loss - gb.loss).abs() < 1e-9);
+    for (x, y) in ga.grads.iter().zip(&gb.grads) {
+        assert_eq!(x.data, y.data);
+    }
+}

@@ -17,8 +17,8 @@ fn have_artifacts() -> bool {
 
 #[test]
 fn pjrt_cpu_client_initialises() {
-    // Without the `pjrt` cargo feature the stub client reports itself
-    // unavailable; that is the expected (skipping) behaviour on CI.
+    // Without the `xla-backend` cargo feature the stub client reports
+    // itself unavailable; that is the expected (skipping) behaviour on CI.
     match Runtime::cpu() {
         Ok(rt) => {
             assert!(rt.device_count() >= 1);

@@ -3,14 +3,20 @@
 //! Each property runs across seeded random graphs/matrices with sizes
 //! growing over the run, and reports a replayable seed on failure.
 
-use dr_circuitgnn::engine::{AggCache, EngineBuilder};
+use dr_circuitgnn::engine::{
+    registry, AggCache, EngineBuilder, Gradient, KernelSpec, REGISTRY,
+};
+use dr_circuitgnn::fleet::Fleet;
+use dr_circuitgnn::graph::partition::partition;
 use dr_circuitgnn::graph::{Cbsr, Csr, EdgeType, HeteroGraph};
+use dr_circuitgnn::nn::{mse, DrCircuitGnn};
 use dr_circuitgnn::sparse::{
     dr_spmm, dr_spmm_bwd, drelu, spmm_csr, spmm_csr_bwd, spmm_dense_ref, spmm_gnna, DegreeBuckets,
     GnnaConfig,
 };
 use dr_circuitgnn::tensor::{matmul, matmul_a_bt, matmul_at_b, Matrix};
 use dr_circuitgnn::util::proptest::{check, prop_allclose, Gen};
+use std::sync::Arc;
 
 fn random_csr(g: &mut Gen, rows: usize, cols: usize, max_deg: usize) -> Csr {
     let mut t = Vec::new();
@@ -236,6 +242,191 @@ fn prop_engine_kernels_match_dense_reference() {
                 let want = spmm_dense_ref(&adj, &src);
                 prop_allclose(&got.data, &want.data, 1e-3, 1e-3)
                     .map_err(|m| format!("{name}/{} fwd: {m}", e.name()))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Finite-difference check of every registered kernel's backward pass.
+///
+/// Iterates the registry itself (skipping the `auto` policy, which resolves
+/// to one of the concrete entries), so a new `KernelEntry` + impl inherits
+/// this correctness gate with no test changes. The kernels are linear in
+/// their source operand, so central differences are exact up to f32
+/// rounding:
+/// * dense-source kernels are perturbed in `x` and checked against the
+///   dense gradient;
+/// * sparsified-source kernels (`needs_sparsified`) are perturbed in the
+///   CBSR values — the operand Alg. 2 actually differentiates — and
+///   checked against the compressed gradient.
+#[test]
+fn prop_registry_kernel_backwards_match_finite_differences() {
+    check("kernel bwd≡FD", 20, 0xFD01, |g| {
+        let rows = g.sized(2, 30);
+        let cols = g.sized(2, 30);
+        let d = g.sized(2, 16);
+        let adj = random_csr(g, rows, cols, 4);
+        let x = Matrix::from_vec(cols, d, g.normal_vec(cols * d));
+        let dy = Matrix::from_vec(rows, d, g.normal_vec(rows * d));
+        let k = g.usize_in(1, d);
+        let gnna_cfg = GnnaConfig::default();
+        let h = 0.5f32; // linear in the source ⇒ any step is exact
+        // Weighted output functional f(src) = Σ dy ⊙ forward(src),
+        // accumulated in f64 so FD error stays at product-rounding level.
+        let f_of = |y: &Matrix| -> f64 {
+            y.data.iter().zip(&dy.data).map(|(a, b)| (a * b) as f64).sum()
+        };
+        for entry in REGISTRY {
+            if entry.spec == KernelSpec::Auto {
+                continue;
+            }
+            let kernel = registry::instantiate(entry.spec, EdgeType::Near, &adj, &gnna_cfg);
+            let plan = kernel.plan(adj.clone());
+            if kernel.needs_sparsified() {
+                let cbsr = Arc::new(drelu(&x, k));
+                let (_, cache) = kernel.forward(&plan, &x, Some(&cbsr));
+                let grad = match kernel.backward(&plan, &dy, &cache) {
+                    Gradient::Compressed(c) => c,
+                    Gradient::Dense(_) => {
+                        return Err(format!("{}: expected compressed gradient", entry.name))
+                    }
+                };
+                for i in probe_indices(g, cbsr.values.len()) {
+                    let mut plus = (*cbsr).clone();
+                    plus.values[i] += h;
+                    let mut minus = (*cbsr).clone();
+                    minus.values[i] -= h;
+                    let (yp, _) = kernel.forward(&plan, &x, Some(&Arc::new(plus)));
+                    let (ym, _) = kernel.forward(&plan, &x, Some(&Arc::new(minus)));
+                    let fd = ((f_of(&yp) - f_of(&ym)) / (2.0 * h as f64)) as f32;
+                    let got = grad.values[i];
+                    if (fd - got).abs() > 1e-2 + 1e-2 * got.abs() {
+                        return Err(format!(
+                            "{} value[{i}]: FD {fd} vs backward {got}",
+                            entry.name
+                        ));
+                    }
+                }
+            } else {
+                let (_, cache) = kernel.forward(&plan, &x, None);
+                let grad = kernel.backward(&plan, &dy, &cache).into_dense();
+                for i in probe_indices(g, x.data.len()) {
+                    let mut plus = x.clone();
+                    plus.data[i] += h;
+                    let mut minus = x.clone();
+                    minus.data[i] -= h;
+                    let (yp, _) = kernel.forward(&plan, &plus, None);
+                    let (ym, _) = kernel.forward(&plan, &minus, None);
+                    let fd = ((f_of(&yp) - f_of(&ym)) / (2.0 * h as f64)) as f32;
+                    let got = grad.data[i];
+                    if (fd - got).abs() > 1e-2 + 1e-2 * got.abs() {
+                        return Err(format!(
+                            "{} x[{i}]: FD {fd} vs backward {got}",
+                            entry.name
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Up to 24 probe indices over `[0, n)` (all of them when n ≤ 24).
+fn probe_indices(g: &mut Gen, n: usize) -> Vec<usize> {
+    if n == 0 {
+        Vec::new()
+    } else if n <= 24 {
+        (0..n).collect()
+    } else {
+        (0..24).map(|_| g.rng.below(n)).collect()
+    }
+}
+
+/// Fleet-parallel training must equal single-engine-sequential training:
+/// for any partition count and any worker count (including 1 and more
+/// workers than subgraphs), the fleet's loss and reduced gradients match a
+/// plain sequential loop over the same subgraphs within 1e-6.
+#[test]
+fn prop_fleet_gradients_equal_sequential_for_any_partition_and_worker_count() {
+    check("fleet≡sequential", 12, 0xF1EE7, |g| {
+        let d = 6usize;
+        let mut hg = random_heterograph(g, d);
+        hg.y_cell = Matrix::from_vec(hg.n_cells, 1, g.normal_vec(hg.n_cells));
+        let parts = g.usize_in(1, 4);
+        let workers = *g.pick(&[1usize, 2, 3, 16]);
+        let kernel = *g.pick(&["csr", "dr", "gnna"]);
+        let builder = EngineBuilder::default().kernel(kernel).k_cell(3).k_net(3);
+
+        let subgraphs = partition(&hg, parts);
+        let mut rng = dr_circuitgnn::util::rng::Rng::new(0xAB ^ g.case as u64);
+        let model = DrCircuitGnn::new(d, d, 8, &mut rng);
+
+        // Single-engine-sequential reference over the same subgraphs.
+        let total_cells: usize = subgraphs.iter().map(|s| s.n_cells).sum();
+        let mut ref_loss = 0f64;
+        let mut ref_grads: Vec<Matrix> = Vec::new();
+        for s in &subgraphs {
+            let engine = builder.build(s);
+            let mut replica = model.clone();
+            let pred = replica.forward(&engine, s);
+            let (loss, dp) = mse(&pred, &s.y_cell);
+            let w = s.n_cells as f32 / total_cells as f32;
+            replica.backward(&engine, &dp.scale(w));
+            ref_loss += w as f64 * loss as f64;
+            let grads: Vec<Matrix> =
+                replica.params_mut().iter().map(|p| p.grad.clone()).collect();
+            if ref_grads.is_empty() {
+                ref_grads = grads;
+            } else {
+                for (a, b) in ref_grads.iter_mut().zip(&grads) {
+                    a.add_inplace(b);
+                }
+            }
+        }
+
+        let fleet = Fleet::builder(builder).workers(workers).build(&subgraphs);
+        let got = fleet.gradients(&model);
+        if (got.loss - ref_loss).abs() > 1e-6 {
+            return Err(format!(
+                "parts {parts} workers {workers} {kernel}: loss {} vs {ref_loss}",
+                got.loss
+            ));
+        }
+        if got.grads.len() != ref_grads.len() {
+            return Err("gradient structure mismatch".into());
+        }
+        for (pi, (a, b)) in got.grads.iter().zip(&ref_grads).enumerate() {
+            prop_allclose(&a.data, &b.data, 1e-6, 1e-6)
+                .map_err(|m| format!("parts {parts} workers {workers} param {pi}: {m}"))?;
+        }
+        Ok(())
+    });
+}
+
+/// Worker count never changes fleet numerics — bit-identical gradients.
+#[test]
+fn prop_fleet_worker_count_invariance_is_exact() {
+    check("fleet workers exact", 10, 0xF1EE8, |g| {
+        let d = 6usize;
+        let mut hg = random_heterograph(g, d);
+        hg.y_cell = Matrix::from_vec(hg.n_cells, 1, g.normal_vec(hg.n_cells));
+        let subgraphs = partition(&hg, g.usize_in(1, 3));
+        let mut rng = dr_circuitgnn::util::rng::Rng::new(0xCD ^ g.case as u64);
+        let model = DrCircuitGnn::new(d, d, 8, &mut rng);
+        let builder = EngineBuilder::dr(3, 3);
+        let base = Fleet::builder(builder.clone()).workers(1).build(&subgraphs).gradients(&model);
+        for workers in [2, 9] {
+            let fleet = Fleet::builder(builder.clone()).workers(workers).build(&subgraphs);
+            let got = fleet.gradients(&model);
+            if got.loss != base.loss {
+                return Err(format!("workers {workers}: loss {} vs {}", got.loss, base.loss));
+            }
+            for (a, b) in got.grads.iter().zip(&base.grads) {
+                if a.data != b.data {
+                    return Err(format!("workers {workers}: gradient bits differ"));
+                }
             }
         }
         Ok(())
