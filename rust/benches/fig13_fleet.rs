@@ -20,7 +20,7 @@ use dr_circuitgnn::datagen::{generate_design, table1_designs};
 use dr_circuitgnn::engine::{plan_counters, EngineBuilder};
 use dr_circuitgnn::fleet::Fleet;
 use dr_circuitgnn::nn::{Adam, DrCircuitGnn};
-use dr_circuitgnn::util::pool::num_threads;
+use dr_circuitgnn::util::pool::{num_threads, peak_workers, reset_peak_workers};
 use dr_circuitgnn::util::rng::Rng;
 
 fn main() {
@@ -67,9 +67,10 @@ fn main() {
     let mut worker_counts = vec![1usize, 2, 4, 8];
     worker_counts.retain(|&w| w == 1 || w <= 2 * num_threads());
 
+    let budget = num_threads();
     let mut t = Table::new(
         &format!("fleet step time vs workers ({}, {} subgraphs)", spec.name, n_subgraphs),
-        &["workers", "median step ms", "speedup vs 1", "step loss"],
+        &["workers", "median step ms", "speedup vs 1", "step loss", "peak thr / budget"],
     );
     let mut base_ms = 0f64;
     let mut base_loss = f64::NAN;
@@ -84,6 +85,7 @@ fn main() {
 
         let mut samples = Vec::with_capacity(reps);
         let mut loss = f64::NAN;
+        reset_peak_workers();
         for _ in 0..reps {
             // Fresh model/optimizer per rep: every worker count times the
             // exact same first step and must produce the same loss.
@@ -97,6 +99,14 @@ fn main() {
         }
         samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let median = samples[samples.len() / 2];
+        // Budget utilization: spawned workers + the driving thread. The
+        // cooperative budget guarantees this never exceeds the root cap,
+        // whatever worker count × lanes × kernel mix ran above.
+        let peak = peak_workers() + 1;
+        assert!(
+            peak <= budget,
+            "thread budget violated: {peak} live threads against a budget of {budget}"
+        );
         if workers == 1 {
             base_ms = median;
             base_loss = loss;
@@ -111,11 +121,14 @@ fn main() {
             format!("{:.1}", median * 1e3),
             fmt_speedup(base_ms, median),
             format!("{loss:.6}"),
+            format!("{peak}/{budget}"),
         ]);
     }
     t.print();
     println!(
         "deterministic reduction: identical step loss at every worker count \
-         (asserted); graph-level workers × §3.4 edge lanes active"
+         (asserted); graph-level workers × §3.4 edge lanes active, all \
+         leasing one root budget of {budget} (peak ≤ budget asserted — \
+         oversized worker counts borrow threads, they don't oversubscribe)"
     );
 }

@@ -36,6 +36,12 @@ pub struct Config {
     pub parallel: bool,
     /// Batched multi-subgraph execution (`--fleet`, `fleet`).
     pub fleet: FleetSpec,
+    /// Root thread budget (`--threads`, `threads`): the single cap that
+    /// fleet workers × §3.4 edge lanes × kernel `parallel_for` subdivide
+    /// ([`crate::util::pool::Budget`]). `None` = `DRCG_THREADS` env var or
+    /// the machine's available parallelism. Applied once at startup via
+    /// [`crate::util::pool::set_root_threads`] (first use wins).
+    pub threads: Option<usize>,
     pub dim: usize,
     // paths
     pub artifacts_dir: PathBuf,
@@ -57,6 +63,7 @@ impl Default for Config {
             kernel: KernelSpec::Dr,
             parallel: true,
             fleet: FleetSpec::Off,
+            threads: None,
             dim: 64,
             artifacts_dir: PathBuf::from("artifacts"),
             out_dir: PathBuf::from("out"),
@@ -108,6 +115,9 @@ impl Config {
         if let Some(v) = f.get("fleet") {
             self.fleet = FleetSpec::parse(v).map_err(|e| format!("fleet: {e}"))?;
         }
+        if let Some(v) = f.get_usize("threads") {
+            self.threads = Some(v?);
+        }
         if let Some(v) = f.get("paths.artifacts") {
             self.artifacts_dir = PathBuf::from(v);
         }
@@ -140,6 +150,11 @@ impl Config {
         if let Some(v) = a.get("fleet") {
             self.fleet = FleetSpec::parse(v).map_err(|e| format!("--fleet: {e}"))?;
         }
+        if let Some(v) = a.get("threads") {
+            let t: usize =
+                v.parse().map_err(|_| format!("--threads: expected integer, got '{v}'"))?;
+            self.threads = Some(t);
+        }
         if let Some(v) = a.get("artifacts") {
             self.artifacts_dir = PathBuf::from(v);
         }
@@ -160,6 +175,9 @@ impl Config {
             if k == 0 || k > self.hidden {
                 return Err(format!("{name} must be in [1, hidden], got {k}"));
             }
+        }
+        if self.threads == Some(0) {
+            return Err("threads must be ≥ 1 (omit it for auto)".into());
         }
         Ok(())
     }
@@ -255,6 +273,29 @@ mod tests {
         let args = Args::default().parse(&raw(&["--fleet", "lots"])).unwrap();
         let err = Config::resolve(&args).unwrap_err();
         assert!(err.contains("<workers>"), "{err}");
+    }
+
+    #[test]
+    fn threads_parsed_and_validated() {
+        // Unset = auto (DRCG_THREADS / available parallelism).
+        assert_eq!(Config::default().threads, None);
+        // CLI surface.
+        let args = Args::default().parse(&raw(&["--threads", "3"])).unwrap();
+        let cfg = Config::resolve(&args).unwrap();
+        assert_eq!(cfg.threads, Some(3));
+        // File surface, overridden by CLI (precedence).
+        let mut cfg = Config::default();
+        let f = ConfigFile::parse("threads = 8").unwrap();
+        cfg.apply_file(&f).unwrap();
+        assert_eq!(cfg.threads, Some(8));
+        let args = Args::default().parse(&raw(&["--threads", "2"])).unwrap();
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.threads, Some(2));
+        // Zero and junk rejected loudly.
+        let args = Args::default().parse(&raw(&["--threads", "0"])).unwrap();
+        assert!(Config::resolve(&args).unwrap_err().contains("threads"));
+        let args = Args::default().parse(&raw(&["--threads", "many"])).unwrap();
+        assert!(Config::resolve(&args).unwrap_err().contains("--threads"));
     }
 
     #[test]

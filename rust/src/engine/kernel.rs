@@ -151,6 +151,11 @@ impl Gradient {
 ///
 /// `forward` computes `Y = Ā · X` and `backward` computes `dX = Āᵀ · dY`,
 /// both against a [`KernelPlan`] the same kernel built via `plan()`.
+/// Implementations parallelize through [`crate::util::pool`], which sizes
+/// every dispatch to the calling thread's ambient
+/// [`crate::util::pool::Budget`] — a kernel running inside a fleet worker
+/// or a §3.4 edge lane consumes that scope's thread share, never the whole
+/// machine, and its output is bit-identical for any budget.
 pub trait SpmmKernel: Send + Sync + std::fmt::Debug {
     /// Canonical registry name (`"csr"`, `"gnna"`, `"dr"`).
     fn name(&self) -> &'static str;

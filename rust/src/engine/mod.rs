@@ -16,6 +16,11 @@
 //!   plans every kernel exactly once.
 //! * [`auto`] — the Fig. 4 selection policy (`"auto"`).
 //!
+//! Threading: the engine never spawns threads of its own — kernel
+//! dispatches and the §3.4 parallel lanes all draw on the calling thread's
+//! cooperative budget ([`crate::util::pool::Budget`]), so stacking the
+//! engine under fleet workers cannot oversubscribe the machine.
+//!
 //! ```no_run
 //! # use dr_circuitgnn::engine::Engine;
 //! # use dr_circuitgnn::graph::EdgeType;

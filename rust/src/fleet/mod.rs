@@ -13,13 +13,21 @@
 //!   gradient reduction**: per-subgraph gradients are reduced in subgraph
 //!   index order, so losses and gradients are bit-identical for every
 //!   worker count (the `fleet(N) ≡ sequential` guarantee asserted in
-//!   `tests/integration_fleet.rs` and `tests/proptests.rs`);
+//!   `tests/integration_fleet.rs` and `tests/proptests.rs`). Bit-exactness
+//!   holds for kernels whose accumulation is scheduling-independent (csr,
+//!   dr — each output row written by one thread); the GNNA analog's
+//!   shared evil rows accumulate through atomic f32 adds whose order can
+//!   vary, so its guarantee is within-tolerance, not bitwise;
 //! * [`FleetSpec`] — the single parse point for `--fleet` / `fleet`
 //!   settings, mirroring the engine's kernel registry.
 //!
 //! Inside each worker the §3.4 edge-level lanes still apply (the engine's
 //! `parallel` flag, dispatched via [`crate::sched::run_lanes`]), giving the
-//! graph-level × edge-level parallelism of Fig. 9b. See `docs/FLEET.md`.
+//! graph-level × edge-level parallelism of Fig. 9b — but the levels
+//! **share one thread budget** ([`crate::util::pool::Budget`]): `step`
+//! leases `min(workers, budget)` shares, every worker's lanes and kernels
+//! inherit that worker's share, so total live threads never exceed the
+//! root budget however high `--fleet` is set. See `docs/FLEET.md`.
 
 pub mod cache;
 pub mod spec;
@@ -50,8 +58,11 @@ impl FleetBuilder {
         FleetBuilder { engine, workers: 1, parts: None }
     }
 
-    /// Worker-pool width for per-subgraph steps. More workers than
-    /// subgraphs is fine — the pool clamps. Results never depend on this.
+    /// Worker-pool width for per-subgraph steps. This is a *request*: the
+    /// pool clamps it to the subgraph count and leases it against the
+    /// ambient thread budget at run time (see [`Fleet::effective_workers`]).
+    /// More workers than subgraphs or than the budget is fine. Results
+    /// never depend on this.
     pub fn workers(mut self, workers: usize) -> FleetBuilder {
         self.workers = workers.max(1);
         self
@@ -155,8 +166,20 @@ impl<'a> Fleet<'a> {
         self.units.len()
     }
 
+    /// The *requested* worker-pool width.
     pub fn workers(&self) -> usize {
         self.workers
+    }
+
+    /// The concurrency a `step`/`gradients` call gets right now: the
+    /// requested width leased against the subgraph count and the caller's
+    /// ambient thread budget ([`crate::util::pool::Budget::current`]).
+    /// Purely informational (the pool re-leases on every call) — useful
+    /// for logs and the fig13 sweep's budget-utilization column.
+    pub fn effective_workers(&self) -> usize {
+        let (conc, _) = crate::util::pool::Budget::current()
+            .lease(self.workers.clamp(1, self.units.len().max(1)));
+        conc
     }
 
     /// Plan-cache statistics of the build (`unique()` = engines planned).
@@ -182,6 +205,13 @@ impl<'a> Fleet<'a> {
     /// reduced in subgraph index order. The per-subgraph prediction
     /// gradient is scaled by the subgraph's cell share so the summed
     /// gradient is the gradient of the design-wide cell MSE.
+    ///
+    /// Threading: `bounded_map` leases the requested `workers` against the
+    /// ambient thread budget and installs an equal share as each worker's
+    /// ambient budget — the worker's edge lanes and kernel `parallel_for`
+    /// calls subdivide that share, so `--fleet 8` on an 8-thread budget
+    /// runs 8×1-thread workers, not 8×3×8 runnable threads. Budgets change
+    /// scheduling only; gradients stay bit-identical.
     pub fn gradients(&self, model: &DrCircuitGnn) -> FleetGradients {
         let per_unit: Vec<(Vec<Matrix>, f32)> =
             bounded_map(self.units.len(), self.workers, |i| {
@@ -265,6 +295,11 @@ mod tests {
         );
         assert_eq!(fleet.n_subgraphs(), 4);
         assert_eq!(fleet.workers(), 2);
+        // Requested workers lease against the ambient budget.
+        crate::util::pool::Budget::new(1)
+            .with(|| assert_eq!(fleet.effective_workers(), 1));
+        crate::util::pool::Budget::new(16)
+            .with(|| assert_eq!(fleet.effective_workers(), 2));
         let w: f32 = fleet.units.iter().map(|u| u.weight).sum();
         assert!((w - 1.0).abs() < 1e-6);
         let ids: Vec<usize> = fleet.subgraphs().map(|s| s.id).collect();

@@ -21,7 +21,11 @@ pub enum FleetSpec {
     /// Fleet training: concurrent per-subgraph steps with deterministic
     /// gradient reduction.
     On {
-        /// Worker-pool width (≥ 1). Results are worker-count invariant.
+        /// Worker-pool width (≥ 1). A request, not a thread grant: at run
+        /// time the pool leases it against the root thread budget
+        /// (`--threads` / `DRCG_THREADS`, see [`crate::util::pool::Budget`]),
+        /// so oversized values cannot oversubscribe the machine. Results
+        /// are worker-count invariant either way.
         workers: usize,
         /// Optional re-partitioning of each input graph.
         parts: Option<usize>,

@@ -43,6 +43,7 @@ fn main() {
         .declare("parallel", "enable §3.4 parallel schedule", false)
         .declare("sequential", "disable §3.4 parallel schedule", false)
         .declare("fleet", "fleet mode: off | <workers> | <workers>x<parts>", true)
+        .declare("threads", "root thread budget (default: DRCG_THREADS or all cores)", true)
         .declare("artifacts", "artifacts directory", true)
         .declare("log", "log level: debug|info|warn|error", true)
         .parse(&raw)
@@ -64,6 +65,15 @@ fn main() {
             std::process::exit(2);
         }
     };
+    // The one budget root: every nesting level (fleet workers × §3.4 edge
+    // lanes × kernel parallel_for) subdivides this cap. Must be installed
+    // before any parallel work reads it (first use wins).
+    if let Some(t) = cfg.threads {
+        if let Err(e) = dr_circuitgnn::util::pool::set_root_threads(t) {
+            eprintln!("--threads: {e}");
+            std::process::exit(2);
+        }
+    }
     let code = match cmd {
         "gen-data" => cmd_gen_data(&cfg),
         "train" => cmd_train(&cfg, &args),

@@ -12,7 +12,10 @@
 //! kernel per edge type (cuSPARSE-analog / GNNA-analog / DR-SpMM, possibly
 //! mixed), the shared D-ReLU sparsification per node type, and the §3.4
 //! parallel mode that runs the three edge-type aggregations concurrently —
-//! the cudaStream analog (see also [`crate::sched`]).
+//! the cudaStream analog (see also [`crate::sched`]). The lanes and the
+//! kernels inside them draw on the caller's cooperative thread budget
+//! ([`crate::util::pool::Budget`]): inside a fleet worker this layer uses
+//! that worker's share, and results are bit-identical for any budget.
 
 use super::gcn::GraphConv;
 use super::sage::SageConv;
@@ -214,6 +217,34 @@ mod tests {
             let (a2, b2) = par.backward(&par_engine, &dyc, &dyn_);
             assert_eq!(a1.data, a2.data);
             assert_eq!(b1.data, b2.data);
+        }
+    }
+
+    /// Constraining the thread budget reschedules the lanes/kernels but
+    /// must not change a single bit of the outputs or gradients.
+    #[test]
+    fn forward_backward_bitwise_invariant_under_budget() {
+        use crate::util::pool::Budget;
+        let g = toy();
+        let mut rng = Rng::new(8);
+        let layer0 = HeteroConv::new(4, 4, 5, &mut rng);
+        let engine = EngineBuilder::dr(2, 2).parallel(true).build(&g);
+        let dyc = Matrix::ones(3, 5);
+        let dyn_ = Matrix::ones(2, 5);
+        let mut full = layer0.clone();
+        let (yc_full, yn_full) = full.forward(&engine, &g.x_cell, &g.x_net);
+        let (dc_full, dn_full) = full.backward(&engine, &dyc, &dyn_);
+        for budget in [1, 2] {
+            let mut constrained = layer0.clone();
+            let ((yc, yn), (dc, dn)) = Budget::new(budget).with(|| {
+                let fwd = constrained.forward(&engine, &g.x_cell, &g.x_net);
+                let bwd = constrained.backward(&engine, &dyc, &dyn_);
+                (fwd, bwd)
+            });
+            assert_eq!(yc.data, yc_full.data, "budget={budget}");
+            assert_eq!(yn.data, yn_full.data, "budget={budget}");
+            assert_eq!(dc.data, dc_full.data, "budget={budget}");
+            assert_eq!(dn.data, dn_full.data, "budget={budget}");
         }
     }
 

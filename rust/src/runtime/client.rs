@@ -115,7 +115,7 @@ mod imp {
                 "PJRT support not compiled in — rebuild with `--features pjrt` \
                  for the scaffolding, plus vendored xla-rs and \
                  `--features xla-backend` for the real client"
-            )
+            );
         }
 
         pub fn platform(&self) -> String {

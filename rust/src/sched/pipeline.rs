@@ -43,9 +43,14 @@ impl ScheduleMode {
 }
 
 /// Run one closure per lane under a schedule mode: `Sequential` executes
-/// them in lane order on the caller's thread, `Parallel` gives each lane a
-/// dedicated thread (the §3.4 cudaStream analog). Results come back in lane
-/// order either way, so callers are mode-oblivious.
+/// them in lane order on the caller's thread, `Parallel` runs them
+/// concurrently (the §3.4 cudaStream analog) on the caller's share of the
+/// cooperative thread budget — [`crate::util::pool::join_all`] leases the
+/// ambient [`crate::util::pool::Budget`] across the lanes, and each lane's
+/// kernels inherit the remainder, so fleet workers × lanes × kernel
+/// `parallel_for` subdivide one allowance instead of multiplying. Results
+/// come back in lane order either way, so callers are mode-oblivious, and
+/// outputs are bit-identical for any budget.
 ///
 /// This is the one lane-scheduling primitive in the crate: `run_e2e_step`
 /// drives its three edge-type lanes through it, `HeteroConv` uses it for
@@ -65,7 +70,10 @@ where
 
 /// One e2e step per subgraph, spread over a bounded worker pool — the
 /// fleet rig: graph-level parallelism stacked on the per-step edge lanes.
-/// Results come back in subgraph order regardless of `workers`.
+/// `workers` is a request: the pool leases `min(workers, budget)` shares
+/// of the ambient thread budget and each worker's lanes/kernels run inside
+/// its share. Results come back in subgraph order regardless of `workers`
+/// or budget.
 pub fn run_fleet_e2e_steps(
     graphs: &[HeteroGraph],
     dim: usize,
@@ -142,6 +150,27 @@ fn run_lane(
     ((t_init, t_fwd, t_bwd), h)
 }
 
+/// Activation stage for one node type (paper Fig. 5).
+///
+/// Sparsifying consumers share one CBSR built by D-ReLU from the **raw
+/// pre-activation** values (D-ReLU replaces ReLU for those lanes, §3.1);
+/// if any consumer is dense, `x` is additionally ReLU-activated in place —
+/// dense lanes must always read activated features, regardless of what
+/// other lanes consuming the same node type need. The CBSR is computed
+/// first so both views derive from the same pre-activation input.
+pub(crate) fn activate(
+    x: &mut Matrix,
+    k: usize,
+    sparsified: bool,
+    dense: bool,
+) -> Option<Arc<Cbsr>> {
+    let cbsr = sparsified.then(|| Arc::new(drelu(x, k.clamp(1, x.cols))));
+    if dense {
+        x.map_inplace(|v| v.max(0.0));
+    }
+    cbsr
+}
+
 /// Run one end-to-end step over a graph's three subgraphs.
 ///
 /// `dim` is the embedding width; random embeddings/gradients stand in for
@@ -168,31 +197,31 @@ pub fn run_e2e_step(
     let k_pinned = engine.resolve_kernel(EdgeType::Pinned, &pinned);
     let k_pins = engine.resolve_kernel(EdgeType::Pins, &pins);
     let engine_label = kernel_label([&*k_near, &*k_pins, &*k_pinned]);
-    // Which node types need D-ReLU sparsification (per consuming kernel).
+    // Per-node-type consumer mix: which lanes read the D-ReLU CBSR and
+    // which read the dense tensor. `x_cell` feeds both `near` and `pins`,
+    // so a mixed engine (e.g. `near=dr,pins=csr`) needs both forms.
     let cell_sparsified = k_near.needs_sparsified() || k_pins.needs_sparsified();
+    let cell_dense = !k_near.needs_sparsified() || !k_pins.needs_sparsified();
     let net_sparsified = k_pinned.needs_sparsified();
+    let net_dense = !k_pinned.needs_sparsified();
 
     let tl = Timeline::new();
     let t0 = std::time::Instant::now();
 
-    // Activation stage (paper Fig. 5): dense lanes run plain ReLU, DR
-    // lanes run D-ReLU once per node type — the CBSR (values + indices)
-    // is then shared by every consuming edge lane, forward and backward.
+    // Activation stage (paper Fig. 5): one activation per node type —
+    // D-ReLU → CBSR shared by every sparsifying consumer, in-place ReLU
+    // for dense consumers. A mixed consumer set gets both, so a dense
+    // lane never reads raw pre-activation features just because a sibling
+    // lane sparsifies the same node type.
     let (cbsr_cell, cbsr_net) = tl.record(3, "act", || {
-        let cbsr_cell = if cell_sparsified {
-            let k = engine.k_for(NodeType::Cell).clamp(1, dim);
-            Some(Arc::new(drelu(&x_cell, k)))
-        } else {
-            x_cell.map_inplace(|v| v.max(0.0));
-            None
-        };
-        let cbsr_net = if net_sparsified {
-            let k = engine.k_for(NodeType::Net).clamp(1, dim);
-            Some(Arc::new(drelu(&x_net, k)))
-        } else {
-            x_net.map_inplace(|v| v.max(0.0));
-            None
-        };
+        let cbsr_cell = activate(
+            &mut x_cell,
+            engine.k_for(NodeType::Cell),
+            cell_sparsified,
+            cell_dense,
+        );
+        let cbsr_net =
+            activate(&mut x_net, engine.k_for(NodeType::Net), net_sparsified, net_dense);
         (cbsr_cell, cbsr_net)
     });
 
@@ -353,6 +382,62 @@ mod tests {
                 assert_eq!(t.lane_phases.len(), 3);
             }
         }
+    }
+
+    /// Mixed-engine activation: a node type that is sparsified for one
+    /// consumer (near=dr) but read densely by another (pins=csr) must hand
+    /// the dense lane **activated** features — the historical bug left
+    /// `x_cell` raw whenever any consumer sparsified it.
+    #[test]
+    fn mixed_engine_activation_feeds_dense_lanes_relu() {
+        let mut rng = Rng::new(11);
+        let x0 = Matrix::randn(40, 8, 1.0, &mut rng);
+        assert!(x0.data.iter().any(|&v| v < 0.0), "input must contain negatives");
+
+        // Mixed consumers (sparsified + dense), the near=dr / pins=csr case.
+        let mut x_mixed = x0.clone();
+        let cbsr = activate(&mut x_mixed, 3, true, true).expect("sparsified ⇒ CBSR");
+        // The CBSR is D-ReLU of the raw pre-activation input…
+        let reference = drelu(&x0, 3);
+        assert_eq!(cbsr.values, reference.values);
+        assert_eq!(cbsr.indices, reference.indices);
+        // …and the dense view is bit-identical to the pure-dense path.
+        let mut x_dense = x0.clone();
+        assert!(activate(&mut x_dense, 3, false, true).is_none());
+        assert_eq!(x_mixed.data, x_dense.data);
+        assert!(x_mixed.data.iter().all(|&v| v >= 0.0), "dense view must be activated");
+        assert_ne!(x_mixed.data, x0.data, "raw features must not reach dense lanes");
+
+        // All-sparsified consumers: D-ReLU *is* the activation, the dense
+        // tensor stays untouched (no lane reads it).
+        let mut x_dr = x0.clone();
+        assert!(activate(&mut x_dr, 3, true, false).is_some());
+        assert_eq!(x_dr.data, x0.data);
+    }
+
+    /// Lane-level parity: the csr `pins` lane of a mixed engine computes
+    /// exactly what it computes in an all-dense engine, because both read
+    /// the same ReLU-activated features.
+    #[test]
+    fn mixed_engine_dense_lane_matches_pure_dense_engine() {
+        let g = test_graph(300);
+        let [_, pins, _] = normalized_adjacencies(&g);
+        let kernel = EngineBuilder::csr().resolve_kernel(EdgeType::Pins, &pins);
+        let plan = kernel.plan(pins.clone());
+        let mut rng = Rng::new(7);
+        let x0 = Matrix::randn(g.n_cells, 16, 1.0, &mut rng);
+
+        // Mixed engine: the cell type is sparsified for near=dr AND kept
+        // dense for pins=csr.
+        let mut x_mixed = x0.clone();
+        let _cbsr = activate(&mut x_mixed, 4, true, true);
+        let (h_mixed, _) = kernel.forward(&plan, &x_mixed, None);
+
+        // Pure-dense reference.
+        let mut x_ref = x0.clone();
+        let _ = activate(&mut x_ref, 4, false, true);
+        let (h_ref, _) = kernel.forward(&plan, &x_ref, None);
+        assert_eq!(h_mixed.data, h_ref.data);
     }
 
     #[test]

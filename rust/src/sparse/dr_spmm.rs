@@ -7,7 +7,11 @@
 //! Scheduling follows Alg. 1 stage 2: rows are processed in degree-bucket
 //! order with a dynamic dispatch grain per bucket (evil rows go one-by-one,
 //! cheap rows in large blocks), eliminating the tail-lag a static
-//! row→worker mapping suffers on power-law graphs.
+//! row→worker mapping suffers on power-law graphs. Each bucket dispatch
+//! sizes itself to the ambient [`crate::util::pool::Budget`] under the
+//! pool's one grain-aware cutoff rule — tiny cheap buckets run inline,
+//! while even a two-row evil bucket (grain 1) earns two threads — and
+//! nested schedulers (fleet workers × edge lanes) never oversubscribe.
 
 use crate::graph::{Cbsr, Csr};
 use crate::tensor::Matrix;

@@ -7,6 +7,11 @@
 //! gradient, so the kernel gathers exactly `k` of `D` columns per edge.
 //! The compressed gradient comes back in CBSR layout aligned with the
 //! forward activation, ready for the D-ReLU backward mask.
+//!
+//! Parallelism comes from `parallel_for_dynamic`, which sizes itself to
+//! the caller's ambient thread [`crate::util::pool::Budget`] — inside a
+//! fleet worker or an edge lane this kernel uses that scope's share, not
+//! the whole machine.
 
 use crate::graph::{Cbsr, Csc};
 use crate::tensor::Matrix;

@@ -165,7 +165,8 @@ mod tests {
     fn dense_round_trip_is_masked_input() {
         let mut rng = Rng::new(3);
         let x = Matrix::randn(10, 16, 1.0, &mut rng);
-        let c = drelu(&x, 4);
+        let k = 4;
+        let c = drelu(&x, k);
         let d = c.to_dense();
         for r in 0..10 {
             for col in 0..16 {
@@ -174,7 +175,13 @@ mod tests {
                     assert_eq!(v, x.at(r, col));
                 }
             }
-            assert_eq!(d.row(r).iter().filter(|&&v| v != 0.0).count().min(4), 4.min(4));
+            // Exactly k entries are kept per row; the dense round trip
+            // shows k nonzeros except where a *kept* value is itself 0.0
+            // (D-ReLU is a ranking filter — zeros can rank in the top k).
+            assert_eq!(c.row_values(r).len(), k);
+            let kept_zeros = c.row_values(r).iter().filter(|&&v| v == 0.0).count();
+            let nonzeros = d.row(r).iter().filter(|&&v| v != 0.0).count();
+            assert_eq!(nonzeros, k - kept_zeros, "row {r}");
         }
     }
 

@@ -4,6 +4,8 @@
 //! one output row per work unit, dense `D`-wide inner accumulation, static
 //! row→worker chunking. No sparsity awareness in the embedding, no degree
 //! awareness in the schedule — exactly what the paper baselines against.
+//! Worker counts come from the ambient thread
+//! [`crate::util::pool::Budget`] (the caller's share, not the machine).
 
 use crate::graph::{Csc, Csr};
 use crate::tensor::Matrix;

@@ -11,7 +11,10 @@
 //! lanes occupy issue slots), and multi-group rows accumulate through
 //! atomic f32 CAS. On the low-degree `pins`/`pinned` matrices most slots
 //! are padding — the same under-utilisation that makes GNNA lose to
-//! cuSPARSE on heterogeneous circuit graphs (paper Table 3).
+//! cuSPARSE on heterogeneous circuit graphs (paper Table 3). Group
+//! dispatch draws threads from the ambient
+//! [`crate::util::pool::Budget`], so nested schedulers (fleet × lanes)
+//! never multiply its worker count.
 
 use crate::graph::{Csc, Csr};
 use crate::tensor::Matrix;

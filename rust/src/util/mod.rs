@@ -3,9 +3,9 @@
 //! The offline build environment provides no `rayon`, `clap`, `serde`,
 //! `criterion` or `proptest`, so this module implements the minimal
 //! equivalents the rest of the crate needs: a counter-based RNG, a scoped
-//! thread pool with `parallel_for`, wall-clock timing statistics, a leveled
-//! logger, a CLI argument parser, a TOML-subset config reader and a tiny
-//! property-testing harness.
+//! thread pool with `parallel_for` behind a cooperative thread [`Budget`],
+//! wall-clock timing statistics, a leveled logger, a CLI argument parser,
+//! a TOML-subset config reader and a tiny property-testing harness.
 
 pub mod cli;
 pub mod configfile;
@@ -16,6 +16,6 @@ pub mod proptest;
 pub mod rng;
 pub mod timer;
 
-pub use pool::{num_threads, parallel_for, parallel_map};
+pub use pool::{num_threads, parallel_for, parallel_map, Budget};
 pub use rng::Rng;
 pub use timer::Stopwatch;

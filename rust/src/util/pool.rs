@@ -1,4 +1,5 @@
-//! Minimal data-parallel substrate (rayon is unavailable offline).
+//! Minimal data-parallel substrate (rayon is unavailable offline) with a
+//! **cooperative thread budget**.
 //!
 //! `parallel_for` splits an index range into contiguous chunks executed on
 //! scoped OS threads; `parallel_map` collects per-index results. Both fall
@@ -8,30 +9,292 @@
 //! This is also the substrate the §3.4 scheduler builds on: the "CPU
 //! multi-thread initialization" side of the paper maps to scoped threads
 //! here, while the cudaStream analog lives in [`crate::sched`].
+//!
+//! # The thread budget
+//!
+//! The paper's §3.4 speedups come from *controlled* concurrency — a fixed
+//! set of threads feeding a fixed set of streams — but naive nesting
+//! multiplies thread counts at every level: fleet workers × edge lanes ×
+//! kernel `parallel_for` can put `W × 3 × num_threads()` runnable threads
+//! behind `num_threads()` cores, destroying the overlap it was meant to
+//! buy. The fix is a cooperative [`Budget`]:
+//!
+//! * The **root budget** is [`num_threads`] (`DRCG_THREADS`, the
+//!   `--threads` flag via [`set_root_threads`], or the machine's available
+//!   parallelism). It is initialized exactly once per process — the first
+//!   read freezes it.
+//! * Every primitive in this module consults the **ambient budget** of its
+//!   calling thread ([`Budget::current`], a thread-local; unset ⇒ root)
+//!   instead of the global `num_threads()`.
+//! * A primitive running on a thread with budget `b` uses at most `b`
+//!   threads *total*: it spawns `w − 1` workers and the calling thread
+//!   itself runs the remaining share (callers participate, they never idle
+//!   behind their own children). The `w` participants split the budget
+//!   exactly — `⌊b/w⌋` each, the `b mod w` leftover threads going to the
+//!   first participants — so nested primitives subdivide the same
+//!   allowance rather than re-expanding to `num_threads()`, and no thread
+//!   of the budget is stranded.
+//!
+//! By induction, a tree of nested primitives rooted at a thread with
+//! budget `b` keeps at most `b − 1` spawned threads live at any instant
+//! (the participant shares sum to `b`, and each participant's subtree
+//! spawns at most its share minus the participant itself), i.e. at most
+//! `b` runnable threads counting the root caller. The live/peak counters ([`live_workers`],
+//! [`peak_workers`]) instrument exactly this invariant; it is asserted in
+//! `tests/thread_budget.rs` for fleet × lanes × kernels under every kernel
+//! mix. Budgets change scheduling only — every primitive writes each
+//! result to a caller-indexed slot, so outputs are bit-identical for any
+//! budget (the `fleet(N) ≡ sequential` guarantee survives).
 
+use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-/// Number of worker threads to use (can be overridden with the
-/// `DRCG_THREADS` environment variable; defaults to available parallelism).
+/// The process-wide root thread budget. `0` = not yet initialized.
+static ROOT_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Root thread budget: the total number of threads the process may keep
+/// runnable, counting the calling thread.
+///
+/// Resolution order: [`set_root_threads`] (the `--threads` flag) if it ran
+/// first, else the `DRCG_THREADS` environment variable, else the machine's
+/// available parallelism. The first read **freezes** the value for the
+/// process lifetime — this is the budget root's initialization, so a
+/// later `DRCG_THREADS` change or `set_root_threads` call cannot
+/// retroactively resize budgets already handed out.
+///
+/// Panics if `DRCG_THREADS` is set but is not a positive integer: a
+/// mistyped cap silently falling back to all cores is exactly the
+/// oversubscription bug the budget exists to prevent.
 pub fn num_threads() -> usize {
-    static CACHED: AtomicUsize = AtomicUsize::new(0);
-    let cached = CACHED.load(Ordering::Relaxed);
+    let cached = ROOT_THREADS.load(Ordering::Acquire);
     if cached != 0 {
         return cached;
     }
-    let n = std::env::var("DRCG_THREADS")
-        .ok()
-        .and_then(|s| s.parse::<usize>().ok())
-        .filter(|&n| n > 0)
-        .unwrap_or_else(|| {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
-        });
-    CACHED.store(n, Ordering::Relaxed);
-    n
+    let n = root_from_env();
+    // First initializer wins. Racing initializers compute the same value,
+    // so the losing store is harmless.
+    match ROOT_THREADS.compare_exchange(0, n, Ordering::AcqRel, Ordering::Acquire) {
+        Ok(_) => n,
+        Err(existing) => existing,
+    }
 }
 
-/// Threshold below which parallel dispatch is not worth a thread spawn.
+fn root_from_env() -> usize {
+    match std::env::var("DRCG_THREADS") {
+        Ok(s) => match s.trim().parse::<usize>() {
+            Ok(n) if n > 0 => n,
+            _ => panic!(
+                "DRCG_THREADS must be a positive integer, got '{s}' \
+                 (unset it to use the machine's available parallelism)"
+            ),
+        },
+        Err(std::env::VarError::NotUnicode(_)) => {
+            panic!("DRCG_THREADS must be valid unicode")
+        }
+        Err(std::env::VarError::NotPresent) => {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        }
+    }
+}
+
+/// Set the root thread budget programmatically (the `--threads` flag).
+///
+/// Must run before the root budget's first read ([`num_threads`]); the
+/// budget initializes once and first-use wins. Returns `Err` when `n` is
+/// zero or the root was already initialized to a different value —
+/// callers should surface that loudly rather than proceed with a budget
+/// the user didn't ask for.
+pub fn set_root_threads(n: usize) -> Result<(), String> {
+    if n == 0 {
+        return Err("thread budget must be ≥ 1".to_string());
+    }
+    match ROOT_THREADS.compare_exchange(0, n, Ordering::AcqRel, Ordering::Acquire) {
+        Ok(_) => Ok(()),
+        Err(existing) if existing == n => Ok(()),
+        Err(existing) => Err(format!(
+            "root thread budget already initialized to {existing} (first use wins); \
+             set it before any parallel work runs"
+        )),
+    }
+}
+
+thread_local! {
+    /// Ambient budget of the current thread. `0` = unset ⇒ root budget.
+    static AMBIENT: Cell<usize> = const { Cell::new(0) };
+}
+
+/// A cooperative thread allowance: how many threads the current scope may
+/// keep runnable, *counting the thread that holds it*.
+///
+/// Parents split their budget across concurrent children ([`Budget::lease`])
+/// and the primitives in this module install each child's share as that
+/// worker thread's ambient budget, so nesting levels — fleet workers, §3.4
+/// edge lanes, kernel `parallel_for` — subdivide one allowance instead of
+/// multiplying. See the module docs for the invariant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Budget(usize);
+
+impl Budget {
+    /// A budget of `threads` (clamped to ≥ 1: a thread can always run its
+    /// own work inline).
+    pub fn new(threads: usize) -> Budget {
+        Budget(threads.max(1))
+    }
+
+    /// The process root budget ([`num_threads`]).
+    pub fn root() -> Budget {
+        Budget(num_threads())
+    }
+
+    /// The calling thread's ambient budget. Threads that no pool primitive
+    /// spawned (the main thread, test-harness threads) default to the root
+    /// budget; pool workers carry the share their parent leased to them.
+    pub fn current() -> Budget {
+        AMBIENT.with(|c| match c.get() {
+            0 => Budget::root(),
+            n => Budget(n),
+        })
+    }
+
+    /// Number of threads this budget allows (≥ 1).
+    pub fn threads(self) -> usize {
+        self.0
+    }
+
+    /// Split the budget across up to `children` concurrent participants:
+    /// returns `(concurrency, floor share)` with
+    /// `concurrency × share.threads() ≤ self.threads()`. Concurrency never
+    /// exceeds the budget; each share is ≥ 1. The primitives hand the
+    /// `threads mod concurrency` leftover out via [`Budget::share_of`], so
+    /// no thread of the budget is stranded — the floor share returned here
+    /// is the *minimum* any participant gets.
+    pub fn lease(self, children: usize) -> (usize, Budget) {
+        let conc = self.0.min(children.max(1));
+        (conc, Budget(self.0 / conc))
+    }
+
+    /// Ambient share of participant `i` of `workers`: `⌊b/w⌋`, plus one of
+    /// the `b mod w` leftover threads for the first participants, so the
+    /// shares sum to exactly the budget instead of stranding the
+    /// remainder (e.g. a budget of 8 split 5 ways hands out 2,2,2,1,1).
+    fn share_of(self, workers: usize, i: usize) -> Budget {
+        let w = workers.max(1);
+        Budget((self.0 / w + usize::from(i < self.0 % w)).max(1))
+    }
+
+    /// Run `f` with this budget installed as the calling thread's ambient
+    /// budget, restoring the previous ambient afterwards (also on panic).
+    pub fn with<R>(self, f: impl FnOnce() -> R) -> R {
+        struct Restore(usize);
+        impl Drop for Restore {
+            fn drop(&mut self) {
+                AMBIENT.with(|c| c.set(self.0));
+            }
+        }
+        let prev = AMBIENT.with(|c| c.replace(self.0));
+        let _restore = Restore(prev);
+        f()
+    }
+
+    /// Worker count for an `n`-element data-parallel dispatch: 1 (inline)
+    /// below the given sequential cutoff, else `min(budget, n)`.
+    fn workers_for(self, n: usize, cutoff: usize) -> usize {
+        if n < cutoff {
+            1
+        } else {
+            self.0.min(n)
+        }
+    }
+
+}
+
+/// The budget layer's one documented sequential-cutoff rule.
+///
+/// Static chunking ([`parallel_for`] / [`parallel_for_chunks`]) runs
+/// inline below `SEQ_CUTOFF` indices. The grained dynamic primitives
+/// ([`parallel_for_dynamic`] / [`parallel_for_dynamic_order`]) share the
+/// same rule scaled by [`grained_cutoff`]: `grain` is the scheduler's
+/// per-item cost hint (small grain ⇒ expensive items — the DR-SpMM evil
+/// rows are dispatched one-by-one precisely because each is worth a
+/// thread), so the inline threshold shrinks with it,
+/// `min(SEQ_CUTOFF, 2·grain)`. Historically the two dynamic primitives
+/// disagreed (`parallel_for_dynamic` ignored grain in its cutoff); both
+/// now go through [`grained_cutoff`]. Task-level primitives
+/// ([`bounded_map`], [`join_all`]) have no cutoff — their items are whole
+/// subgraph steps or edge lanes, always worth a thread when the budget
+/// allows one.
 const SEQ_CUTOFF: usize = 256;
+
+/// Sequential cutoff for a grained dynamic dispatch (see [`SEQ_CUTOFF`]):
+/// at least two items so a lone item never pays a spawn.
+fn grained_cutoff(grain: usize) -> usize {
+    SEQ_CUTOFF.min(grain.saturating_mul(2)).max(2)
+}
+
+// ---------------------------------------------------------------------------
+// Thread accounting
+// ---------------------------------------------------------------------------
+
+/// Live worker threads spawned by this module (process-wide).
+static LIVE_WORKERS: AtomicUsize = AtomicUsize::new(0);
+/// High-water mark of [`LIVE_WORKERS`] since the last reset.
+static PEAK_WORKERS: AtomicUsize = AtomicUsize::new(0);
+
+/// Worker threads this module currently keeps alive, process-wide. The
+/// initiating (caller) threads are not counted — they participate in the
+/// work instead of idling, so `live_workers() + 1 ≤ budget` whenever a
+/// single budget tree is running.
+pub fn live_workers() -> usize {
+    LIVE_WORKERS.load(Ordering::SeqCst)
+}
+
+/// High-water mark of [`live_workers`] since the last
+/// [`reset_peak_workers`]. Process-global: meaningful only while one
+/// budget tree runs at a time (see `tests/thread_budget.rs`, which
+/// serializes for exactly this reason).
+pub fn peak_workers() -> usize {
+    PEAK_WORKERS.load(Ordering::SeqCst)
+}
+
+/// Reset the peak to the current live count.
+pub fn reset_peak_workers() {
+    PEAK_WORKERS.store(LIVE_WORKERS.load(Ordering::SeqCst), Ordering::SeqCst);
+}
+
+/// RAII live/peak bookkeeping for one spawned worker thread.
+struct WorkerGuard;
+
+impl WorkerGuard {
+    fn enter() -> WorkerGuard {
+        let live = LIVE_WORKERS.fetch_add(1, Ordering::SeqCst) + 1;
+        PEAK_WORKERS.fetch_max(live, Ordering::SeqCst);
+        WorkerGuard
+    }
+}
+
+impl Drop for WorkerGuard {
+    fn drop(&mut self) {
+        LIVE_WORKERS.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Spawn one accounted worker carrying `share` as its ambient budget.
+fn spawn_worker<'scope, 'env, F>(
+    scope: &'scope std::thread::Scope<'scope, 'env>,
+    share: Budget,
+    f: F,
+) where
+    F: FnOnce() + Send + 'scope,
+{
+    scope.spawn(move || {
+        let _live = WorkerGuard::enter();
+        share.with(f);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Data-parallel primitives
+// ---------------------------------------------------------------------------
 
 /// Run `f(i)` for every `i in 0..n`, in parallel chunks.
 ///
@@ -50,6 +313,8 @@ where
 
 /// Run `f(lo, hi)` over a contiguous partition of `0..n`. This is the
 /// building block used by the kernels: each worker owns `[lo, hi)` rows.
+/// Uses at most the ambient [`Budget`] worth of threads, caller included
+/// (the caller runs the first chunk itself).
 pub fn parallel_for_chunks<F>(n: usize, f: F)
 where
     F: Fn(usize, usize) + Sync,
@@ -57,23 +322,40 @@ where
     if n == 0 {
         return;
     }
-    let workers = num_threads().min(n);
-    if workers <= 1 || n < SEQ_CUTOFF {
+    let budget = Budget::current();
+    let workers = budget.workers_for(n, SEQ_CUTOFF);
+    if workers <= 1 {
         f(0, n);
         return;
     }
     let chunk = n.div_ceil(workers);
     std::thread::scope(|scope| {
-        for w in 0..workers {
+        for w in 1..workers {
             let lo = w * chunk;
             let hi = ((w + 1) * chunk).min(n);
             if lo >= hi {
                 break;
             }
             let f = &f;
-            scope.spawn(move || f(lo, hi));
+            spawn_worker(scope, budget.share_of(workers, w), move || f(lo, hi));
         }
+        // Caller participates: chunk 0 runs here, under its own share, so
+        // total runnable threads never exceed the budget.
+        budget.share_of(workers, 0).with(|| f(0, chunk.min(n)));
     });
+}
+
+/// Pull blocks of `grain` indices from a shared cursor until `0..n` drains.
+fn drain_indices<F: Fn(usize)>(cursor: &AtomicUsize, n: usize, grain: usize, f: &F) {
+    loop {
+        let lo = cursor.fetch_add(grain, Ordering::Relaxed);
+        if lo >= n {
+            break;
+        }
+        for i in lo..(lo + grain).min(n) {
+            f(i);
+        }
+    }
 }
 
 /// Work-stealing-ish dynamic scheduling: workers pull blocks of `grain`
@@ -87,35 +369,50 @@ where
     if n == 0 {
         return;
     }
-    let workers = num_threads().min(n);
-    if workers <= 1 || n < SEQ_CUTOFF {
+    let grain = grain.max(1);
+    let budget = Budget::current();
+    // No more participants than there are grain blocks to pull — extra
+    // workers would spawn only to find the cursor drained, and their
+    // shares are better spent widening the real participants.
+    let workers = budget.workers_for(n, grained_cutoff(grain)).min(n.div_ceil(grain));
+    if workers <= 1 {
         for i in 0..n {
             f(i);
         }
         return;
     }
-    let grain = grain.max(1);
     let cursor = AtomicUsize::new(0);
     std::thread::scope(|scope| {
-        for _ in 0..workers {
+        for w in 1..workers {
             let f = &f;
             let cursor = &cursor;
-            scope.spawn(move || loop {
-                let lo = cursor.fetch_add(grain, Ordering::Relaxed);
-                if lo >= n {
-                    break;
-                }
-                let hi = (lo + grain).min(n);
-                for i in lo..hi {
-                    f(i);
-                }
+            spawn_worker(scope, budget.share_of(workers, w), move || {
+                drain_indices(cursor, n, grain, f)
             });
         }
+        budget.share_of(workers, 0).with(|| drain_indices(&cursor, n, grain, &f));
     });
 }
 
+/// Pull blocks of `grain` items from a shared cursor until `items` drains.
+fn drain_items<T, F: Fn(&T)>(cursor: &AtomicUsize, items: &[T], grain: usize, f: &F) {
+    let n = items.len();
+    loop {
+        let lo = cursor.fetch_add(grain, Ordering::Relaxed);
+        if lo >= n {
+            break;
+        }
+        for it in &items[lo..(lo + grain).min(n)] {
+            f(it);
+        }
+    }
+}
+
 /// Dynamic scheduling over an explicit item slice (used by the DR-SpMM
-/// degree-bucket schedule: items are row ids in bucket order).
+/// degree-bucket schedule: items are row ids in bucket order). Shares the
+/// one documented cutoff rule ([`SEQ_CUTOFF`] / [`grained_cutoff`]) with
+/// [`parallel_for_dynamic`]: a two-row evil bucket (grain 1) still earns
+/// two threads, a tiny cheap bucket runs inline.
 pub fn parallel_for_dynamic_order<T: Sync, F>(items: &[T], grain: usize, f: F)
 where
     F: Fn(&T) + Sync,
@@ -124,29 +421,26 @@ where
     if n == 0 {
         return;
     }
-    let workers = num_threads().min(n);
-    if workers <= 1 || n < SEQ_CUTOFF.min(grain * 2) {
+    let grain = grain.max(1);
+    let budget = Budget::current();
+    // See parallel_for_dynamic: participants capped at the block count.
+    let workers = budget.workers_for(n, grained_cutoff(grain)).min(n.div_ceil(grain));
+    if workers <= 1 {
         for it in items {
             f(it);
         }
         return;
     }
-    let grain = grain.max(1);
     let cursor = AtomicUsize::new(0);
     std::thread::scope(|scope| {
-        for _ in 0..workers {
+        for w in 1..workers {
             let f = &f;
             let cursor = &cursor;
-            scope.spawn(move || loop {
-                let lo = cursor.fetch_add(grain, Ordering::Relaxed);
-                if lo >= n {
-                    break;
-                }
-                for it in &items[lo..(lo + grain).min(n)] {
-                    f(it);
-                }
+            spawn_worker(scope, budget.share_of(workers, w), move || {
+                drain_items(cursor, items, grain, f)
             });
         }
+        budget.share_of(workers, 0).with(|| drain_items(&cursor, items, grain, &f));
     });
 }
 
@@ -182,56 +476,96 @@ impl<T> Copy for SendPtr<T> {}
 unsafe impl<T> Send for SendPtr<T> {}
 unsafe impl<T> Sync for SendPtr<T> {}
 
-/// Run `n` independent tasks on at most `workers` threads, collecting
-/// results in task order. Tasks are pulled from a shared atomic cursor
-/// (dynamic assignment — skewed task costs don't tail-lag a static stride),
-/// but because each task's output is written to its own slot, the result is
-/// identical for every worker count. This is the fleet's substrate: one
-/// task per subgraph, graph-level parallelism on top of the kernels' own
-/// `parallel_for` and the §3.4 edge lanes.
+/// Run `n` independent tasks on at most `workers` threads (further capped
+/// by the ambient [`Budget`]), collecting results in task order. Tasks are
+/// pulled from a shared atomic cursor (dynamic assignment — skewed task
+/// costs don't tail-lag a static stride), but because each task's output
+/// is written to its own slot, the result is identical for every worker
+/// count and every budget. This is the fleet's substrate: one task per
+/// subgraph, graph-level parallelism on top of the kernels' own
+/// `parallel_for` and the §3.4 edge lanes — each participant inherits an
+/// equal share of the caller's budget, so the levels never multiply.
 pub fn bounded_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
 where
     T: Send,
     F: Fn(usize) -> T + Sync,
 {
     let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
-    let workers = workers.clamp(1, n.max(1));
+    let budget = Budget::current();
+    let (workers, _) = budget.lease(workers.clamp(1, n.max(1)));
     if workers <= 1 {
+        // Sequential: each task in turn keeps the caller's whole budget.
         for (i, slot) in out.iter_mut().enumerate() {
             *slot = Some(f(i));
         }
     } else {
         let cursor = AtomicUsize::new(0);
         let out_ptr = SendPtr(out.as_mut_ptr());
-        std::thread::scope(|scope| {
-            for _ in 0..workers {
-                let f = &f;
-                let cursor = &cursor;
-                scope.spawn(move || {
-                    let p = out_ptr;
-                    loop {
-                        let i = cursor.fetch_add(1, Ordering::Relaxed);
-                        if i >= n {
-                            break;
-                        }
-                        // SAFETY: the cursor hands each index to exactly
-                        // one worker, so every slot is written once.
-                        unsafe { *p.0.add(i) = Some(f(i)) };
-                    }
-                });
+        let drain = || {
+            let p = out_ptr;
+            loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                // SAFETY: the cursor hands each index to exactly one
+                // participant, so every slot is written once.
+                unsafe { *p.0.add(i) = Some(f(i)) };
             }
+        };
+        std::thread::scope(|scope| {
+            for w in 1..workers {
+                spawn_worker(scope, budget.share_of(workers, w), &drain);
+            }
+            budget.share_of(workers, 0).with(&drain);
         });
     }
     out.into_iter().map(|x| x.expect("bounded_map: unfilled slot")).collect()
 }
 
-/// Run a set of independent closures concurrently, one thread each
-/// (the CPU-side "three threads for three subgraphs" of paper Fig. 9b).
+/// Run a set of independent closures concurrently (the CPU-side "three
+/// threads for three subgraphs" of paper Fig. 9b), at most the ambient
+/// [`Budget`] of them at a time — the §3.4 edge lanes draw from the same
+/// allowance as everything else. Results come back in task order for any
+/// budget; with a budget of 1 every task runs inline on the caller.
 pub fn join_all<T: Send, F: FnOnce() -> T + Send>(tasks: Vec<F>) -> Vec<T> {
+    let n = tasks.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let budget = Budget::current();
+    let (conc, _) = budget.lease(n);
+    if conc <= 1 {
+        // Sequential: each task in turn keeps the caller's whole budget.
+        return tasks.into_iter().map(|t| t()).collect();
+    }
+    let mut slots: Vec<Option<F>> = tasks.into_iter().map(Some).collect();
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let cursor = AtomicUsize::new(0);
+    let task_ptr = SendPtr(slots.as_mut_ptr());
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    let drain = || {
+        let tp = task_ptr;
+        let op = out_ptr;
+        loop {
+            let i = cursor.fetch_add(1, Ordering::Relaxed);
+            if i >= n {
+                break;
+            }
+            // SAFETY: the cursor hands each index to exactly one
+            // participant: the task is taken once, its slot written once.
+            let task = unsafe { (*tp.0.add(i)).take().expect("join_all: task reused") };
+            let result = task();
+            unsafe { *op.0.add(i) = Some(result) };
+        }
+    };
     std::thread::scope(|scope| {
-        let handles: Vec<_> = tasks.into_iter().map(|t| scope.spawn(t)).collect();
-        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
-    })
+        for w in 1..conc {
+            spawn_worker(scope, budget.share_of(conc, w), &drain);
+        }
+        budget.share_of(conc, 0).with(&drain);
+    });
+    out.into_iter().map(|x| x.expect("join_all: unfilled slot")).collect()
 }
 
 #[cfg(test)]
@@ -270,9 +604,29 @@ mod tests {
     }
 
     #[test]
+    fn dynamic_order_visits_all_once() {
+        let items: Vec<usize> = (0..5_000).collect();
+        let flags: Vec<AtomicU64> = items.iter().map(|_| AtomicU64::new(0)).collect();
+        parallel_for_dynamic_order(&items, 16, |&i| {
+            flags[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(flags.iter().all(|f| f.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
     fn join_all_returns_in_order() {
         let results = join_all(vec![|| 1, || 2, || 3]);
         assert_eq!(results, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn join_all_order_for_many_tasks_and_any_budget() {
+        let want: Vec<usize> = (0..37).collect();
+        for b in [1, 2, 3, 64] {
+            let tasks: Vec<_> = (0..37).map(|i| move || i).collect();
+            let got = Budget::new(b).with(|| join_all(tasks));
+            assert_eq!(got, want, "budget={b}");
+        }
     }
 
     #[test]
@@ -292,5 +646,111 @@ mod tests {
             seen.fetch_add((hi - lo) as u64, Ordering::Relaxed);
         });
         assert_eq!(seen.load(Ordering::Relaxed), 1_000);
+    }
+
+    /// The one cutoff rule: grain scales the dynamic primitives' inline
+    /// threshold (small grain = expensive items ⇒ parallelize earlier),
+    /// and both dynamic primitives agree on it.
+    #[test]
+    fn grained_cutoff_scales_with_item_cost() {
+        assert_eq!(grained_cutoff(1), 2); // evil rows: ≥ 2 earn threads
+        assert_eq!(grained_cutoff(8), 16);
+        assert_eq!(grained_cutoff(128), SEQ_CUTOFF);
+        assert_eq!(grained_cutoff(usize::MAX), SEQ_CUTOFF); // no overflow
+        // grain=1, n=4 (far below SEQ_CUTOFF) must still go parallel when
+        // the budget allows it: with budget 4 each item may land on a
+        // distinct participant, and all items run exactly once.
+        let flags: Vec<AtomicU64> = (0..4).map(|_| AtomicU64::new(0)).collect();
+        Budget::new(4).with(|| {
+            parallel_for_dynamic(4, 1, |i| {
+                flags[i].fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert!(flags.iter().all(|f| f.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn lease_arithmetic_never_exceeds_budget() {
+        for threads in 1..=16usize {
+            for children in 0..=20usize {
+                let (conc, share) = Budget::new(threads).lease(children);
+                assert!(conc >= 1 && conc <= threads);
+                assert!(conc <= children.max(1));
+                assert!(share.threads() >= 1);
+                assert!(
+                    conc * share.threads() <= threads,
+                    "budget {threads} × {children}: {conc} × {}",
+                    share.threads()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ambient_budget_nests_and_restores() {
+        let outer = Budget::current();
+        Budget::new(5).with(|| {
+            assert_eq!(Budget::current().threads(), 5);
+            Budget::new(2).with(|| assert_eq!(Budget::current().threads(), 2));
+            assert_eq!(Budget::current().threads(), 5);
+        });
+        assert_eq!(Budget::current(), outer);
+    }
+
+    /// Budget 1 must degenerate every primitive to inline execution on the
+    /// calling thread — no spawns at all (`DRCG_THREADS=1` semantics).
+    #[test]
+    fn budget_one_degenerates_every_primitive_to_inline() {
+        Budget::new(1).with(|| {
+            let me = std::thread::current().id();
+            let on_caller = |ok: bool| assert!(ok, "work left the calling thread");
+            parallel_for(10_000, |_| on_caller(std::thread::current().id() == me));
+            parallel_for_chunks(10_000, |_, _| on_caller(std::thread::current().id() == me));
+            parallel_for_dynamic(10_000, 16, |_| on_caller(std::thread::current().id() == me));
+            let items: Vec<u32> = (0..2_000).collect();
+            parallel_for_dynamic_order(&items, 1, |_| {
+                on_caller(std::thread::current().id() == me)
+            });
+            let v = bounded_map(9, 8, |i| {
+                on_caller(std::thread::current().id() == me);
+                i
+            });
+            assert_eq!(v, (0..9).collect::<Vec<_>>());
+            let tasks: Vec<_> = (0..4)
+                .map(|i| {
+                    move || {
+                        on_caller(std::thread::current().id() == me);
+                        i * 3
+                    }
+                })
+                .collect();
+            assert_eq!(join_all(tasks), vec![0, 3, 6, 9]);
+        });
+    }
+
+    /// Nested primitives subdivide the parent's budget: a worker of a
+    /// 4-thread `bounded_map` sees an ambient share of 1, not the root.
+    #[test]
+    fn workers_inherit_their_share() {
+        Budget::new(4).with(|| {
+            let shares = bounded_map(4, 4, |_| Budget::current().threads());
+            assert_eq!(shares, vec![1; 4]);
+            let shares = bounded_map(2, 2, |_| Budget::current().threads());
+            assert_eq!(shares, vec![2; 2]);
+        });
+        // A non-dividing budget distributes its remainder instead of
+        // stranding it: 5 across 2 participants is {3, 2} (which tasks a
+        // participant drains is scheduling-dependent, so only the share
+        // *values* are deterministic).
+        Budget::new(5).with(|| {
+            let shares = bounded_map(2, 2, |_| Budget::current().threads());
+            assert!(shares.iter().all(|&s| s == 2 || s == 3), "{shares:?}");
+        });
+        for b in 1..=9usize {
+            for w in 1..=b {
+                let total: usize = (0..w).map(|i| Budget::new(b).share_of(w, i).threads()).sum();
+                assert_eq!(total, b, "shares must sum to the budget ({b} across {w})");
+            }
+        }
     }
 }

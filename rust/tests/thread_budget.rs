@@ -1,0 +1,211 @@
+//! Thread-accounting suite for the cooperative budget
+//! (`util::pool::Budget`): fleet workers × §3.4 edge lanes × kernel
+//! `parallel_for` must never keep more threads live than the root budget,
+//! for any worker count, schedule mode or kernel mix — and a budget of 1
+//! must degenerate every primitive to inline execution.
+//!
+//! This is its own test binary (= its own process) on purpose: the
+//! live/peak worker counters are process-global, so the tests serialize
+//! through a file-local mutex and no other binary's threads can interfere
+//! (sibling binaries run as separate processes).
+//!
+//! CI additionally runs this suite and `integration_fleet` under
+//! `DRCG_THREADS=2` — a deliberately starved root budget — to prove the
+//! fleet's determinism and the budget invariant hold when leases are tight.
+
+use dr_circuitgnn::datagen::{generate_graph, GraphSpec};
+use dr_circuitgnn::engine::{Engine, EngineBuilder};
+use dr_circuitgnn::fleet::Fleet;
+use dr_circuitgnn::graph::{EdgeType, HeteroGraph};
+use dr_circuitgnn::nn::DrCircuitGnn;
+use dr_circuitgnn::sched::{run_fleet_e2e_steps, run_lanes, ScheduleMode};
+use dr_circuitgnn::util::pool::{
+    self, bounded_map, join_all, live_workers, num_threads, parallel_for, peak_workers,
+    reset_peak_workers, Budget,
+};
+use dr_circuitgnn::util::rng::Rng;
+use std::sync::Mutex;
+
+/// Serializes the tests: the peak counter is process-global.
+static ACCOUNTING_GUARD: Mutex<()> = Mutex::new(());
+
+fn guard() -> std::sync::MutexGuard<'static, ()> {
+    ACCOUNTING_GUARD.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Big enough that every kernel's row dispatch clears the sequential
+/// cutoff (256) — otherwise the budget has nothing to constrain.
+fn test_graph(n_cells: usize, seed: u64) -> HeteroGraph {
+    let mut rng = Rng::new(seed);
+    generate_graph(
+        &GraphSpec {
+            n_cells,
+            n_nets: n_cells / 2,
+            target_near: n_cells * 10,
+            target_pins: n_cells,
+            d_cell: 6,
+            d_net: 6,
+        },
+        0,
+        &mut rng,
+    )
+}
+
+/// The kernel mixes the acceptance criterion names: pure DR / GNNA / CSR
+/// plus a mixed per-edge engine.
+fn engine_mixes() -> Vec<(&'static str, EngineBuilder)> {
+    vec![
+        ("dr", EngineBuilder::dr(4, 4).parallel(true)),
+        ("csr", Engine::builder().kernel("csr").parallel(true)),
+        ("gnna", Engine::builder().kernel("gnna").parallel(true)),
+        (
+            "mixed",
+            EngineBuilder::csr()
+                .kernel_for(EdgeType::Near, "dr")
+                .kernel_for(EdgeType::Pinned, "gnna")
+                .k_cell(4)
+                .parallel(true),
+        ),
+    ]
+}
+
+/// Fleet × parallel lanes × kernels: peak live threads (spawned workers
+/// plus the driving thread) must stay within the ambient budget for every
+/// kernel mix and every budget, including budgets far below the requested
+/// worker count.
+#[test]
+fn fleet_lanes_kernels_never_exceed_budget() {
+    let _serial = guard();
+    let graphs: Vec<HeteroGraph> = (0..5).map(|i| test_graph(500, 20 + i)).collect();
+    // Few graphs + large budget pushes the surplus down into lanes and
+    // kernels (three-level nesting); many graphs + small budget starves
+    // the lower levels. The invariant must hold across the whole grid.
+    for n_graphs in [1usize, 2, 5] {
+        for budget in [1usize, 2, 3, 8] {
+            for (name, engine) in engine_mixes() {
+                let gs = &graphs[..n_graphs];
+                assert_eq!(live_workers(), 0, "leaked workers before {name}/{budget}");
+                reset_peak_workers();
+                let timings = Budget::new(budget).with(|| {
+                    run_fleet_e2e_steps(gs, 32, &engine, ScheduleMode::Parallel, 8, 42)
+                });
+                assert_eq!(timings.len(), gs.len());
+                assert_eq!(live_workers(), 0, "leaked workers after {name}/{budget}");
+                let peak = peak_workers();
+                assert!(
+                    peak + 1 <= budget,
+                    "budget violated: kernel={name} graphs={n_graphs} \
+                     budget={budget} peak spawned={peak}"
+                );
+            }
+        }
+    }
+}
+
+/// With a budget ≥ 2 the fleet really does go concurrent — the accounting
+/// must observe at least one spawned worker (guards against the counters
+/// silently measuring nothing).
+#[test]
+fn accounting_observes_spawned_workers() {
+    let _serial = guard();
+    let graphs: Vec<HeteroGraph> = (0..4).map(|i| test_graph(300, 50 + i)).collect();
+    reset_peak_workers();
+    Budget::new(4).with(|| {
+        run_fleet_e2e_steps(
+            &graphs,
+            16,
+            &EngineBuilder::dr(4, 4),
+            ScheduleMode::Sequential,
+            4,
+            7,
+        )
+    });
+    // bounded_map leases min(4 workers, 4 graphs, budget 4) = 4
+    // participants = caller + 3 spawned.
+    assert!(peak_workers() >= 1, "no worker was ever observed live");
+    assert!(peak_workers() + 1 <= 4, "peak {} exceeds the budget of 4", peak_workers());
+}
+
+/// Fleet training under a constrained budget: bit-identical gradients and
+/// losses (the `fleet(N) ≡ sequential` guarantee survives any budget), and
+/// the budget invariant holds through model forward/backward, not just the
+/// e2e rig.
+#[test]
+fn fleet_gradients_bitwise_invariant_and_within_budget() {
+    let _serial = guard();
+    let g = test_graph(300, 3);
+    let fleet = Fleet::builder(EngineBuilder::dr(4, 4).parallel(true))
+        .parts(4)
+        .workers(8)
+        .build(std::slice::from_ref(&g));
+    let mut rng = Rng::new(5);
+    let model = DrCircuitGnn::new(6, 6, 8, &mut rng);
+    let base = fleet.gradients(&model); // unconstrained reference
+    for budget in [1usize, 2, 4] {
+        reset_peak_workers();
+        let got = Budget::new(budget).with(|| fleet.gradients(&model));
+        assert!(
+            peak_workers() + 1 <= budget,
+            "budget={budget} peak spawned={}",
+            peak_workers()
+        );
+        assert_eq!(got.loss, base.loss, "budget={budget}");
+        assert_eq!(got.subgraph_losses, base.subgraph_losses, "budget={budget}");
+        assert_eq!(got.grads.len(), base.grads.len());
+        for (a, b) in got.grads.iter().zip(&base.grads) {
+            assert_eq!(a.data, b.data, "budget={budget}");
+        }
+    }
+}
+
+/// `DRCG_THREADS=1` semantics: a budget of 1 degenerates every layer —
+/// pool primitives, lanes, kernels, the fleet — to inline execution with
+/// zero spawned threads.
+#[test]
+fn budget_of_one_spawns_nothing_anywhere() {
+    let _serial = guard();
+    assert_eq!(live_workers(), 0);
+    reset_peak_workers();
+    let before = peak_workers();
+    Budget::new(1).with(|| {
+        parallel_for(50_000, |_| {});
+        let v = bounded_map(6, 6, |i| i);
+        assert_eq!(v, (0..6).collect::<Vec<_>>());
+        let lanes = run_lanes(ScheduleMode::Parallel, vec![|| 1, || 2, || 3]);
+        assert_eq!(lanes, vec![1, 2, 3]);
+        let tasks: Vec<_> = (0..3).map(|i| move || i).collect();
+        assert_eq!(join_all(tasks), vec![0, 1, 2]);
+        let g = test_graph(400, 9);
+        let t = run_fleet_e2e_steps(
+            std::slice::from_ref(&g),
+            16,
+            &EngineBuilder::dr(4, 4),
+            ScheduleMode::Parallel,
+            4,
+            1,
+        );
+        assert_eq!(t.len(), 1);
+    });
+    assert_eq!(peak_workers(), before, "budget 1 must never spawn a thread");
+    assert_eq!(live_workers(), 0);
+}
+
+/// The root budget initializes exactly once (first use wins) and honors
+/// `DRCG_THREADS` — the CI lane that sets `DRCG_THREADS=2` exercises the
+/// env path end to end.
+#[test]
+fn root_budget_initializes_once_and_honors_env() {
+    let _serial = guard();
+    let n = num_threads();
+    assert!(n >= 1);
+    if let Ok(s) = std::env::var("DRCG_THREADS") {
+        assert_eq!(n, s.trim().parse::<usize>().unwrap(), "root must equal DRCG_THREADS");
+    }
+    assert_eq!(Budget::root().threads(), n);
+    // Re-initializing to the same value is idempotent; a different value
+    // is rejected loudly instead of silently resizing live budgets.
+    assert!(pool::set_root_threads(n).is_ok());
+    let err = pool::set_root_threads(n + 1).unwrap_err();
+    assert!(err.contains("already initialized"), "{err}");
+    assert_eq!(num_threads(), n);
+}
