@@ -36,6 +36,7 @@ fn main() {
         hidden: 64,
         seed: 2,
         parallel: false,
+        epoch_pipeline: false,
         log_every: 0,
     };
 

@@ -46,6 +46,7 @@ fn main() {
         hidden: 64,
         seed: 1,
         parallel: false,
+        epoch_pipeline: false,
         log_every: 0,
     };
     let mut homo_scores = Vec::new();
@@ -76,6 +77,7 @@ fn main() {
         hidden: 64,
         seed: 1,
         parallel: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) > 1,
+        epoch_pipeline: false,
         log_every: 0,
     };
     let (_m, r) = Trainer::train_dr(&train, &test, &EngineBuilder::dr(8, 8), &dr_cfg);

@@ -36,6 +36,11 @@ pub struct Config {
     pub parallel: bool,
     /// Batched multi-subgraph execution (`--fleet`, `fleet`).
     pub fleet: FleetSpec,
+    /// Fleet-level epoch pipelining (`--epoch-pipeline on|off`,
+    /// `epoch_pipeline`): overlap design N+1's prepare stage with design
+    /// N's execute + optimizer step. Requires fleet mode; results are
+    /// bit-identical to the serial epoch schedule.
+    pub epoch_pipeline: bool,
     /// Root thread budget (`--threads`, `threads`): the single cap that
     /// fleet workers × §3.4 edge lanes × kernel `parallel_for` subdivide
     /// ([`crate::util::pool::Budget`]). `None` = `DRCG_THREADS` env var or
@@ -63,6 +68,7 @@ impl Default for Config {
             kernel: KernelSpec::Dr,
             parallel: true,
             fleet: FleetSpec::Off,
+            epoch_pipeline: false,
             threads: None,
             dim: 64,
             artifacts_dir: PathBuf::from("artifacts"),
@@ -115,6 +121,10 @@ impl Config {
         if let Some(v) = f.get("fleet") {
             self.fleet = FleetSpec::parse(v).map_err(|e| format!("fleet: {e}"))?;
         }
+        if let Some(v) = f.get("epoch_pipeline") {
+            self.epoch_pipeline =
+                parse_on_off(v).map_err(|e| format!("epoch_pipeline: {e}"))?;
+        }
         if let Some(v) = f.get_usize("threads") {
             self.threads = Some(v?);
         }
@@ -150,6 +160,10 @@ impl Config {
         if let Some(v) = a.get("fleet") {
             self.fleet = FleetSpec::parse(v).map_err(|e| format!("--fleet: {e}"))?;
         }
+        if let Some(v) = a.get("epoch-pipeline") {
+            self.epoch_pipeline =
+                parse_on_off(v).map_err(|e| format!("--epoch-pipeline: {e}"))?;
+        }
         if let Some(v) = a.get("threads") {
             let t: usize =
                 v.parse().map_err(|_| format!("--threads: expected integer, got '{v}'"))?;
@@ -179,6 +193,13 @@ impl Config {
         if self.threads == Some(0) {
             return Err("threads must be ≥ 1 (omit it for auto)".into());
         }
+        if self.epoch_pipeline && !self.fleet.is_on() {
+            return Err(
+                "epoch-pipeline requires fleet mode (--fleet <workers>[x<parts>]); \
+                 the pipeline overlaps one design's prepare with another's execute"
+                    .into(),
+            );
+        }
         Ok(())
     }
 
@@ -198,6 +219,17 @@ impl Config {
         } else {
             ScheduleMode::Sequential
         }
+    }
+}
+
+/// Parse an `on|off` toggle (the `--epoch-pipeline` grammar; `true`/
+/// `false` and `1`/`0` accepted as aliases so the config-file boolean
+/// style works on the CLI too). The single parse point for the flag.
+fn parse_on_off(s: &str) -> Result<bool, String> {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "on" | "true" | "1" => Ok(true),
+        "off" | "false" | "0" => Ok(false),
+        other => Err(format!("expected on|off, got '{other}'")),
     }
 }
 
@@ -273,6 +305,40 @@ mod tests {
         let args = Args::default().parse(&raw(&["--fleet", "lots"])).unwrap();
         let err = Config::resolve(&args).unwrap_err();
         assert!(err.contains("<workers>"), "{err}");
+    }
+
+    #[test]
+    fn epoch_pipeline_parsed_and_gated_on_fleet() {
+        // Defaults off.
+        assert!(!Config::default().epoch_pipeline);
+        // CLI surface: requires fleet mode.
+        let args = Args::default()
+            .parse(&raw(&["--fleet", "4", "--epoch-pipeline", "on"]))
+            .unwrap();
+        let cfg = Config::resolve(&args).unwrap();
+        assert!(cfg.epoch_pipeline);
+        let args = Args::default()
+            .parse(&raw(&["--fleet", "4", "--epoch-pipeline", "off"]))
+            .unwrap();
+        assert!(!Config::resolve(&args).unwrap().epoch_pipeline);
+        // Without fleet mode the flag is rejected loudly.
+        let args = Args::default().parse(&raw(&["--epoch-pipeline", "on"])).unwrap();
+        let err = Config::resolve(&args).unwrap_err();
+        assert!(err.contains("fleet"), "{err}");
+        // Junk rejected with the grammar.
+        let args = Args::default()
+            .parse(&raw(&["--fleet", "2", "--epoch-pipeline", "maybe"]))
+            .unwrap();
+        let err = Config::resolve(&args).unwrap_err();
+        assert!(err.contains("on|off"), "{err}");
+        // File surface (boolean-ish), overridden by CLI.
+        let mut cfg = Config::default();
+        let f = ConfigFile::parse("fleet = \"2\"\nepoch_pipeline = \"on\"").unwrap();
+        cfg.apply_file(&f).unwrap();
+        assert!(cfg.epoch_pipeline);
+        let args = Args::default().parse(&raw(&["--epoch-pipeline", "off"])).unwrap();
+        cfg.apply_args(&args).unwrap();
+        assert!(!cfg.epoch_pipeline);
     }
 
     #[test]

@@ -100,8 +100,10 @@ fn label_from_names(names: [(&str, &str); 3]) -> String {
 
 /// Reusable engine configuration. One builder can `build()` an [`Engine`]
 /// per graph of a dataset; the kernel choices, K values and schedule mode
-/// are shared, the plans are per graph.
-#[derive(Clone, Debug)]
+/// are shared, the plans are per graph. Equality is structural over the
+/// whole configuration — the fleet's shared plan cache uses it to refuse
+/// serving engines planned under different settings.
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct EngineBuilder {
     default: KernelSpec,
     per_edge: [Option<KernelSpec>; 3],

@@ -33,6 +33,13 @@ impl CacheStats {
     pub fn lookups(&self) -> usize {
         self.hits + self.misses
     }
+
+    /// Lookups recorded after the `earlier` snapshot (counters are
+    /// monotone). Lets a fleet built through a *shared* cache report its
+    /// own hits/misses rather than the cache's lifetime totals.
+    pub fn since(&self, earlier: &CacheStats) -> CacheStats {
+        CacheStats { hits: self.hits - earlier.hits, misses: self.misses - earlier.misses }
+    }
 }
 
 /// Content-addressed engine cache used while building a fleet.
@@ -63,6 +70,25 @@ impl PlanCache {
 
     pub fn stats(&self) -> CacheStats {
         self.stats
+    }
+
+    /// Diagnostic signature of the builder this cache plans with (the
+    /// full configuration, Debug-rendered).
+    pub fn signature(&self) -> String {
+        format!("{:?}", self.builder)
+    }
+
+    /// Whether this cache was created from (a clone of) `builder`.
+    ///
+    /// Cached engines embed the builder's kernel choices, K values and
+    /// schedule mode, so a cache shared across designs (the epoch
+    /// pipeline's prepare stage) must only serve fleets built from the
+    /// same configuration — `FleetBuilder::build_with_cache` checks this
+    /// and panics on a mismatch instead of silently handing out engines
+    /// planned under different settings. Structural equality, no
+    /// allocation.
+    pub fn compatible_with(&self, builder: &EngineBuilder) -> bool {
+        self.builder == *builder
     }
 }
 
@@ -117,6 +143,24 @@ mod tests {
         let eb = cache.engine_for(&b);
         assert!(!Arc::ptr_eq(&ea, &eb));
         assert_eq!(cache.stats().unique(), 2);
+    }
+
+    #[test]
+    fn stats_since_and_signature() {
+        let mut cache = PlanCache::new(EngineBuilder::dr(2, 2));
+        let a = toy(0.0);
+        cache.engine_for(&a);
+        let snap = cache.stats();
+        cache.engine_for(&a); // hit
+        let mut b = toy(0.0);
+        b.near.values[0] = 0.25; // miss
+        cache.engine_for(&b);
+        assert_eq!(cache.stats().since(&snap), CacheStats { hits: 1, misses: 1 });
+        // Compatibility separates configurations, not instances.
+        assert!(cache.compatible_with(&EngineBuilder::dr(2, 2)));
+        assert!(!cache.compatible_with(&EngineBuilder::csr()));
+        assert!(!cache.compatible_with(&EngineBuilder::dr(2, 3)), "K is part of the config");
+        assert_eq!(cache.signature(), PlanCache::new(EngineBuilder::dr(2, 2)).signature());
     }
 
     #[test]

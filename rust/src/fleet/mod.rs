@@ -8,12 +8,19 @@
 //! * [`Fleet`] / [`FleetBuilder`] — one engine per subgraph of a design,
 //!   built through a [`PlanCache`] keyed by adjacency content-hash so
 //!   content-identical subgraphs plan once (Alg. 1 stage 1 deduplicated);
-//! * [`Fleet::step`] — one training step over all subgraphs on a bounded
-//!   worker pool ([`crate::util::pool::bounded_map`]), with **deterministic
-//!   gradient reduction**: per-subgraph gradients are reduced in subgraph
-//!   index order, so losses and gradients are bit-identical for every
-//!   worker count (the `fleet(N) ≡ sequential` guarantee asserted in
-//!   `tests/integration_fleet.rs` and `tests/proptests.rs`). Bit-exactness
+//! * [`Fleet::step`] — one training step over all subgraphs, split into
+//!   two explicit stages: a pure-CPU **prepare** stage ([`Fleet::prepare`]
+//!   → [`StagedDesign`]: feature staging; plan resolution happens at build
+//!   through the cache) that reads *no* model or optimizer state, and an
+//!   **execute** stage ([`Fleet::execute`]: SpMM lanes + backward on a
+//!   bounded worker pool, **deterministic gradient reduction** in subgraph
+//!   index order, optimizer update). Losses and gradients are
+//!   bit-identical for every worker count (the `fleet(N) ≡ sequential`
+//!   guarantee asserted in `tests/integration_fleet.rs` and
+//!   `tests/proptests.rs`), and the stage split lets
+//!   [`crate::sched::run_epoch_pipeline`] overlap design N+1's prepare
+//!   with design N's execute without changing a bit (gated by
+//!   `tests/integration_golden.rs`). Bit-exactness
 //!   holds for kernels whose accumulation is scheduling-independent (csr,
 //!   dr — each output row written by one thread); the GNNA analog's
 //!   shared evil rows accumulate through atomic f32 adds whose order can
@@ -38,10 +45,16 @@ pub use spec::FleetSpec;
 use crate::engine::{Engine, EngineBuilder};
 use crate::graph::{partition_with_map, HeteroGraph};
 use crate::nn::{mse, Adam, DrCircuitGnn};
+use crate::sched::{pipeline_will_overlap, run_epoch_pipeline, PipelineRun, ScheduleMode};
 use crate::tensor::Matrix;
 use crate::util::pool::bounded_map;
 use std::borrow::Cow;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Monotone source of fleet identity stamps (see [`Fleet`] / the
+/// [`StagedDesign`] mix-up check in [`Fleet::gradients_staged`]).
+static FLEET_STAMP: AtomicU64 = AtomicU64::new(0);
 
 /// Reusable fleet configuration: an engine configuration plus the fleet
 /// shape (worker count, optional re-partitioning). One builder can `build`
@@ -84,13 +97,37 @@ impl FleetBuilder {
     }
 
     /// Build a fleet over a design's graphs: optionally re-partition, then
-    /// resolve one engine per subgraph through the shared plan cache.
+    /// resolve one engine per subgraph through a fresh plan cache.
     ///
     /// Without re-partitioning the fleet *borrows* the input graphs (no
     /// duplication of the dataset's adjacencies/features — a design-scale
     /// training run holds one copy); with `parts` set, the freshly cut
     /// subgraphs are owned and get fleet-wide ids.
     pub fn build<'a>(&self, graphs: &'a [HeteroGraph]) -> Fleet<'a> {
+        let mut cache = PlanCache::new(self.engine.clone());
+        self.build_with_cache(graphs, &mut cache)
+    }
+
+    /// [`FleetBuilder::build`] against a caller-owned, possibly *shared*
+    /// [`PlanCache`]: content-identical subgraphs plan once **across
+    /// designs**, not just within one. This is what the epoch-pipelined
+    /// trainer uses — every design's fleet resolves through one cache, so
+    /// design N+1's prepare stage skips Alg. 1 stage 1 for any adjacency
+    /// an earlier design already planned.
+    ///
+    /// The cache must have been created from the same engine configuration
+    /// (`PlanCache::compatible_with`); a mismatch panics rather than
+    /// serving engines planned under different kernels/K/schedule
+    /// settings. `Fleet::cache_stats` reports only this build's lookups.
+    pub fn build_with_cache<'a>(
+        &self,
+        graphs: &'a [HeteroGraph],
+        cache: &mut PlanCache,
+    ) -> Fleet<'a> {
+        assert!(
+            cache.compatible_with(&self.engine),
+            "shared plan cache built from a different engine configuration"
+        );
         let subgraphs: Vec<Cow<'a, HeteroGraph>> = match self.parts {
             None => graphs.iter().map(Cow::Borrowed).collect(),
             Some(p) => {
@@ -106,7 +143,7 @@ impl FleetBuilder {
         };
         assert!(!subgraphs.is_empty(), "fleet needs at least one subgraph");
         let total_cells: usize = subgraphs.iter().map(|g| g.n_cells).sum();
-        let mut cache = PlanCache::new(self.engine.clone());
+        let before = cache.stats();
         let units = subgraphs
             .into_iter()
             .map(|g| {
@@ -115,7 +152,12 @@ impl FleetBuilder {
                 FleetUnit { graph: g, engine, weight }
             })
             .collect();
-        Fleet { units, workers: self.workers, cache_stats: cache.stats() }
+        Fleet {
+            units,
+            workers: self.workers,
+            cache_stats: cache.stats().since(&before),
+            stamp: FLEET_STAMP.fetch_add(1, Ordering::Relaxed),
+        }
     }
 }
 
@@ -135,6 +177,11 @@ pub struct Fleet<'a> {
     units: Vec<FleetUnit<'a>>,
     workers: usize,
     cache_stats: CacheStats,
+    /// Process-unique build identity: a [`StagedDesign`] carries the stamp
+    /// of the fleet that prepared it, so executing it against a *different*
+    /// fleet (even one with the same subgraph count) fails loudly instead
+    /// of silently training on the wrong design's features.
+    stamp: u64,
 }
 
 /// The fleet gradient of one model state: per-subgraph losses plus the
@@ -154,6 +201,52 @@ pub struct FleetGradients {
 pub struct FleetStep {
     pub loss: f64,
     pub subgraph_losses: Vec<f64>,
+}
+
+/// One subgraph's staged inputs: deep copies of the features and labels
+/// the execute stage reads — the §3.4 host-side init (data loading /
+/// memory allocation / transfer) made explicit. Copies are exact, so
+/// executing on them is bit-identical to executing on the graph.
+struct StagedUnit {
+    x_cell: Matrix,
+    x_net: Matrix,
+    y_cell: Matrix,
+}
+
+/// The output of [`Fleet::prepare`]: everything CPU-side a step needs that
+/// does **not** depend on the model or optimizer. Produced by the prepare
+/// stage (possibly on another thread, overlapping an earlier design's
+/// execute), consumed by [`Fleet::execute`].
+///
+/// The no-weight-reads invariant: building a `StagedDesign` touches only
+/// dataset state (graphs, engines, plans) — never `DrCircuitGnn`
+/// parameters or `Adam` state. D-ReLU row masks are *not* staged because
+/// they are functions of the hidden activations, i.e. of the weights
+/// (§3.1: D-ReLU is the model's activation); they are built inside
+/// execute, which is exactly why overlapping design N+1's prepare with
+/// design N's optimizer step cannot change a single bit.
+pub struct StagedDesign {
+    /// Stamp of the fleet that prepared this design (mix-up guard).
+    stamp: u64,
+    n_subgraphs: usize,
+    /// `Some` = thread-decoupling deep copies ([`Fleet::prepare`], for the
+    /// pipelined schedule where prepare runs on another thread); `None` =
+    /// the zero-cost in-place handle ([`Fleet::prepare_in_place`], for
+    /// same-thread schedules — execute reads the graphs directly). Both
+    /// are bit-identical: the copies exist to decouple threads, not to
+    /// change semantics.
+    copies: Option<Vec<StagedUnit>>,
+}
+
+impl StagedDesign {
+    pub fn n_subgraphs(&self) -> usize {
+        self.n_subgraphs
+    }
+
+    /// Whether this design carries staged copies (vs the in-place handle).
+    pub fn is_copied(&self) -> bool {
+        self.copies.is_some()
+    }
 }
 
 impl<'a> Fleet<'a> {
@@ -197,7 +290,48 @@ impl<'a> Fleet<'a> {
         &self.units[i].engine
     }
 
-    /// Compute the fleet gradient without applying an update.
+    /// **Prepare stage** of a step: stage every subgraph's inputs (deep
+    /// feature/label copies — the §3.4 host-side init analog) on the
+    /// bounded worker pool. Pure CPU work over dataset state only: no
+    /// model parameter or optimizer state is read, so a `StagedDesign`
+    /// for design N+1 can be built *while design N executes* (the epoch
+    /// pipeline, [`crate::sched::run_epoch_pipeline`]) without changing
+    /// any result bit. Plan resolution — the other weight-independent
+    /// cost — happens at fleet build time through the [`PlanCache`];
+    /// the epoch-pipelined trainer places that build inside the prepare
+    /// stage too (lazy first-epoch builds against a shared cache).
+    pub fn prepare(&self) -> StagedDesign {
+        let units = bounded_map(self.units.len(), self.workers, |i| {
+            let g = self.units[i].graph.as_ref();
+            StagedUnit {
+                x_cell: g.x_cell.clone(),
+                x_net: g.x_net.clone(),
+                y_cell: g.y_cell.clone(),
+            }
+        });
+        StagedDesign { stamp: self.stamp, n_subgraphs: self.units.len(), copies: Some(units) }
+    }
+
+    /// Zero-cost staged handle for **same-thread** schedules: execute
+    /// reads the graphs in place instead of copies. The sequential epoch
+    /// schedule uses this — its prepare and execute share the caller, so
+    /// there is no thread boundary for copies to decouple and staging
+    /// would be pure overhead. Bit-identical to [`Fleet::prepare`].
+    pub fn prepare_in_place(&self) -> StagedDesign {
+        StagedDesign { stamp: self.stamp, n_subgraphs: self.units.len(), copies: None }
+    }
+
+    /// Compute the fleet gradient without applying an update. This is the
+    /// *fused* path: producer and consumer are the same thread, so the
+    /// inputs are read from the graphs in place — no staging copy is paid
+    /// (the staged path exists for the epoch pipeline, where prepare runs
+    /// on another thread; both are bit-identical because staged inputs are
+    /// exact copies, asserted in `prepare_execute_split_matches_fused_step`).
+    pub fn gradients(&self, model: &DrCircuitGnn) -> FleetGradients {
+        self.gradients_impl(None, model)
+    }
+
+    /// Compute the fleet gradient over previously staged inputs.
     ///
     /// Each subgraph runs forward + backward on a model replica (engines
     /// and kernels are deterministic, so replicas on worker threads give
@@ -212,16 +346,46 @@ impl<'a> Fleet<'a> {
     /// calls subdivide that share, so `--fleet 8` on an 8-thread budget
     /// runs 8×1-thread workers, not 8×3×8 runnable threads. Budgets change
     /// scheduling only; gradients stay bit-identical.
-    pub fn gradients(&self, model: &DrCircuitGnn) -> FleetGradients {
+    pub fn gradients_staged(
+        &self,
+        staged: &StagedDesign,
+        model: &DrCircuitGnn,
+    ) -> FleetGradients {
+        assert_eq!(
+            staged.stamp, self.stamp,
+            "staged design was prepared by a different fleet"
+        );
+        self.gradients_impl(staged.copies.as_deref(), model)
+    }
+
+    /// The one gradient computation behind both input paths: staged copies
+    /// (epoch pipeline) or the graphs in place (fused `step`/`gradients`
+    /// and the in-place staged handle). Copies are exact, so the two paths
+    /// are bit-identical.
+    fn gradients_impl(
+        &self,
+        staged: Option<&[StagedUnit]>,
+        model: &DrCircuitGnn,
+    ) -> FleetGradients {
         let per_unit: Vec<(Vec<Matrix>, f32)> =
             bounded_map(self.units.len(), self.workers, |i| {
                 let unit = &self.units[i];
+                let (x_cell, x_net, y_cell) = match staged {
+                    Some(units) => {
+                        let su = &units[i];
+                        (&su.x_cell, &su.x_net, &su.y_cell)
+                    }
+                    None => {
+                        let g = unit.graph.as_ref();
+                        (&g.x_cell, &g.x_net, &g.y_cell)
+                    }
+                };
                 let mut replica = model.clone();
                 // The clone carries the caller's accumulated grads; drop
                 // them so the reduction sees this subgraph's alone.
                 Adam::zero_grad(&mut replica.params_mut());
-                let pred = replica.forward(&unit.engine, &unit.graph);
-                let (loss, dp) = mse(&pred, &unit.graph.y_cell);
+                let pred = replica.forward_on(&unit.engine, x_cell, x_net);
+                let (loss, dp) = mse(&pred, y_cell);
                 replica.backward(&unit.engine, &dp.scale(unit.weight));
                 let grads = replica
                     .params_mut()
@@ -250,10 +414,17 @@ impl<'a> Fleet<'a> {
         FleetGradients { loss, subgraph_losses, grads: grads.unwrap_or_default() }
     }
 
-    /// One fleet training step: compute the design gradient (concurrently,
-    /// deterministically reduced) and apply one optimizer update.
-    pub fn step(&self, model: &mut DrCircuitGnn, opt: &mut Adam) -> FleetStep {
-        let FleetGradients { loss, subgraph_losses, grads } = self.gradients(model);
+    /// Apply one optimizer update from an already-reduced fleet gradient
+    /// (the tail of the execute stage, split out so harnesses — the golden
+    /// trace generator, the proptests — can observe the gradient between
+    /// reduction and update).
+    pub fn apply_update(
+        &self,
+        model: &mut DrCircuitGnn,
+        opt: &mut Adam,
+        gradients: FleetGradients,
+    ) -> FleetStep {
+        let FleetGradients { loss, subgraph_losses, grads } = gradients;
         let mut params = model.params_mut();
         assert_eq!(params.len(), grads.len(), "fleet gradient structure mismatch");
         for (p, g) in params.iter_mut().zip(grads) {
@@ -262,6 +433,132 @@ impl<'a> Fleet<'a> {
         opt.step(&mut params);
         Adam::zero_grad(&mut params);
         FleetStep { loss, subgraph_losses }
+    }
+
+    /// **Execute stage** of a step: forward + backward over the staged
+    /// inputs (SpMM lanes, deterministic subgraph-index-order reduction)
+    /// plus the optimizer update. This is the only stage that reads or
+    /// writes model/optimizer state.
+    pub fn execute(
+        &self,
+        staged: &StagedDesign,
+        model: &mut DrCircuitGnn,
+        opt: &mut Adam,
+    ) -> FleetStep {
+        let gradients = self.gradients_staged(staged, model);
+        self.apply_update(model, opt, gradients)
+    }
+
+    /// One fleet training step — semantically [`Fleet::prepare`] then
+    /// [`Fleet::execute`], fused: because both stages run on the caller,
+    /// the staging copy is skipped and the inputs are read in place
+    /// (bit-identical to the staged path — copies are exact; asserted in
+    /// `prepare_execute_split_matches_fused_step`). The epoch pipeline
+    /// runs the two stages explicitly with prepare shifted one design
+    /// ahead; that is also bit-identical because prepare reads nothing
+    /// execute writes.
+    pub fn step(&self, model: &mut DrCircuitGnn, opt: &mut Adam) -> FleetStep {
+        let gradients = self.gradients_impl(None, model);
+        self.apply_update(model, opt, gradients)
+    }
+}
+
+/// The one per-design epoch driver every epoch schedule goes through —
+/// the trainer's fleet mode (serial *and* pipelined), the
+/// `fig13_fleet` epoch sweep, the golden-trace harness, and the
+/// pipeline proptests all run this exact layout, so a scheduler change
+/// cannot drift between what ships and what the gates test.
+///
+/// One fleet per design, built **lazily inside the prepare stage** on the
+/// design's first visit, through a single [`PlanCache`] shared across all
+/// designs (content-identical subgraphs of different designs plan Alg. 1
+/// stage 1 once). Epochs run through
+/// [`crate::sched::run_epoch_pipeline`]:
+///
+/// * [`ScheduleMode::Sequential`] — the serial reference: prepare and
+///   execute inline, in design order;
+/// * [`ScheduleMode::Parallel`] — design N+1's prepare (lazy build +
+///   feature staging) on a leased budget share while design N executes on
+///   the caller.
+///
+/// `execute` always runs on the calling thread in design order, and
+/// prepare reads no model/optimizer state, so both modes produce
+/// bit-identical results (gated by `tests/integration_golden.rs`).
+pub struct FleetPipeline<'a> {
+    builder: FleetBuilder,
+    designs: Vec<&'a [HeteroGraph]>,
+    cache: Mutex<PlanCache>,
+    fleets: Vec<OnceLock<Fleet<'a>>>,
+}
+
+impl<'a> FleetPipeline<'a> {
+    /// One fleet configuration over a list of designs (each a slice of
+    /// subgraphs). Nothing is planned yet — builds happen lazily in the
+    /// prepare stage of each design's first epoch.
+    pub fn new(builder: FleetBuilder, designs: Vec<&'a [HeteroGraph]>) -> FleetPipeline<'a> {
+        let cache = Mutex::new(PlanCache::new(builder.engine.clone()));
+        let fleets = designs.iter().map(|_| OnceLock::new()).collect();
+        FleetPipeline { builder, designs, cache, fleets }
+    }
+
+    pub fn n_designs(&self) -> usize {
+        self.designs.len()
+    }
+
+    /// The (lazily built) fleet for a design, if its first prepare ran.
+    pub fn fleet(&self, d: usize) -> Option<&Fleet<'a>> {
+        self.fleets[d].get()
+    }
+
+    /// Force every per-design fleet build now (through the shared cache).
+    /// The serial trainer calls this before its timed epoch loop so
+    /// Alg. 1 stage 1 planning stays out of `train_seconds` (the same
+    /// measurement boundary `train_dr` uses); the pipelined schedule
+    /// skips it — overlapping epoch-0 planning with execution is part of
+    /// what it buys and measures.
+    pub fn build_all(&self) {
+        for d in 0..self.designs.len() {
+            self.fleets[d].get_or_init(|| {
+                self.builder.build_with_cache(self.designs[d], &mut self.cache.lock().unwrap())
+            });
+        }
+    }
+
+    /// Run one epoch under `mode`; `execute(d, fleet, staged)` is called
+    /// on the calling thread, in design order.
+    ///
+    /// Feature copies ([`Fleet::prepare`]) are staged only when the
+    /// pipeline will genuinely overlap — they exist to decouple the
+    /// prepare worker from the executing caller. Whenever the schedule
+    /// runs inline (sequential mode, a single design, or a 1-thread
+    /// budget degenerating the parallel mode), execute gets the zero-cost
+    /// in-place handle ([`Fleet::prepare_in_place`]) instead — same
+    /// thread, nothing to decouple, no copy paid. Bit-identical either
+    /// way.
+    pub fn run_epoch<R, E>(&self, mode: ScheduleMode, mut execute: E) -> PipelineRun<R>
+    where
+        E: FnMut(usize, &Fleet<'a>, &StagedDesign) -> R,
+    {
+        let stage_copies = pipeline_will_overlap(self.designs.len(), mode);
+        run_epoch_pipeline(
+            self.designs.len(),
+            mode,
+            |d| {
+                let fleet = self.fleets[d].get_or_init(|| {
+                    self.builder
+                        .build_with_cache(self.designs[d], &mut self.cache.lock().unwrap())
+                });
+                if stage_copies {
+                    fleet.prepare()
+                } else {
+                    fleet.prepare_in_place()
+                }
+            },
+            |d, staged| {
+                let fleet = self.fleets[d].get().expect("prepared before execute");
+                execute(d, fleet, &staged)
+            },
+        )
     }
 }
 
@@ -341,6 +638,130 @@ mod tests {
             last = fleet.step(&mut model, &mut opt).loss;
         }
         assert!(last < first.loss, "{} -> {last}", first.loss);
+    }
+
+    /// The stage split is behavior-preserving: running prepare and execute
+    /// explicitly (as the epoch pipeline does) updates the model exactly
+    /// like the fused `step`, and a staged design prepared *before* other
+    /// steps mutate the model still executes identically — prepare holds
+    /// no weight-derived state.
+    #[test]
+    fn prepare_execute_split_matches_fused_step() {
+        let g = test_graph(100, 4);
+        let fleet = Fleet::builder(EngineBuilder::dr(3, 3)).parts(3).workers(2).build(
+            std::slice::from_ref(&g),
+        );
+        let mut rng = Rng::new(9);
+        let model0 = DrCircuitGnn::new(6, 6, 8, &mut rng);
+
+        let mut fused = model0.clone();
+        let mut fused_opt = Adam::new(5e-3, 0.0);
+        let fused_losses: Vec<f64> =
+            (0..3).map(|_| fleet.step(&mut fused, &mut fused_opt).loss).collect();
+
+        let mut staged_model = model0.clone();
+        let mut staged_opt = Adam::new(5e-3, 0.0);
+        // Stage once up front: the inputs are model-independent, so one
+        // staging is valid for every subsequent execute.
+        let staged = fleet.prepare();
+        assert_eq!(staged.n_subgraphs(), 3);
+        assert!(staged.is_copied());
+        let staged_losses: Vec<f64> = (0..3)
+            .map(|_| fleet.execute(&staged, &mut staged_model, &mut staged_opt).loss)
+            .collect();
+        assert_eq!(fused_losses, staged_losses);
+
+        // The zero-cost in-place handle (the sequential schedule's staged
+        // design) is a third bit-identical route to the same updates.
+        let mut inplace_model = model0.clone();
+        let mut inplace_opt = Adam::new(5e-3, 0.0);
+        let handle = fleet.prepare_in_place();
+        assert_eq!(handle.n_subgraphs(), 3);
+        assert!(!handle.is_copied());
+        let inplace_losses: Vec<f64> = (0..3)
+            .map(|_| fleet.execute(&handle, &mut inplace_model, &mut inplace_opt).loss)
+            .collect();
+        assert_eq!(fused_losses, inplace_losses);
+        let mut a = fused;
+        let mut b = staged_model;
+        for (pa, pb) in a.params_mut().iter().zip(b.params_mut().iter()) {
+            assert_eq!(pa.value.data, pb.value.data);
+        }
+    }
+
+    /// A staged design is bound to the fleet that prepared it: executing
+    /// it against a different fleet — even one with the same subgraph
+    /// count and shapes — must fail loudly, not train on wrong features.
+    #[test]
+    #[should_panic(expected = "prepared by a different fleet")]
+    fn staged_design_rejects_foreign_fleet() {
+        let g = test_graph(80, 21);
+        let builder = Fleet::builder(EngineBuilder::dr(3, 3)).parts(2);
+        let a = builder.build(std::slice::from_ref(&g));
+        let b = builder.build(std::slice::from_ref(&g));
+        let mut rng = Rng::new(1);
+        let model = DrCircuitGnn::new(6, 6, 8, &mut rng);
+        let staged = a.prepare();
+        let _ = b.gradients_staged(&staged, &model);
+    }
+
+    /// Both FleetPipeline modes produce bit-identical losses and build
+    /// each design's fleet exactly once (lazily, via the shared cache).
+    #[test]
+    fn fleet_pipeline_modes_are_bit_identical() {
+        let g0 = test_graph(90, 30);
+        let g1 = test_graph(110, 31);
+        let designs = [vec![g0], vec![g1]];
+        let mut rng = Rng::new(2);
+        let model0 = DrCircuitGnn::new(6, 6, 8, &mut rng);
+        let run = |mode: ScheduleMode| {
+            let pipeline = FleetPipeline::new(
+                Fleet::builder(EngineBuilder::dr(3, 3)).parts(2).workers(2),
+                designs.iter().map(|gs| gs.as_slice()).collect(),
+            );
+            assert_eq!(pipeline.n_designs(), 2);
+            assert!(pipeline.fleet(0).is_none(), "builds must be lazy");
+            let mut model = model0.clone();
+            let mut opt = Adam::new(5e-3, 0.0);
+            let mut losses = Vec::new();
+            for _ in 0..3 {
+                let run = pipeline.run_epoch(mode, |_, fleet, staged| {
+                    fleet.execute(staged, &mut model, &mut opt).loss
+                });
+                losses.extend(run.results);
+            }
+            assert_eq!(pipeline.fleet(0).unwrap().n_subgraphs(), 2);
+            losses
+        };
+        let serial = run(ScheduleMode::Sequential);
+        let piped = run(ScheduleMode::Parallel);
+        assert_eq!(serial, piped);
+    }
+
+    #[test]
+    fn shared_cache_dedupes_across_designs() {
+        let g = test_graph(120, 6);
+        let builder = Fleet::builder(EngineBuilder::dr(3, 3)).parts(2);
+        let mut cache = PlanCache::new(EngineBuilder::dr(3, 3));
+        // Two "designs" over the same graph: identical partitions, so the
+        // second build must be all cache hits.
+        let first = builder.build_with_cache(std::slice::from_ref(&g), &mut cache);
+        let second = builder.build_with_cache(std::slice::from_ref(&g), &mut cache);
+        assert_eq!(first.cache_stats().lookups(), 2);
+        assert_eq!(second.cache_stats().misses, 0, "cross-design reuse");
+        assert_eq!(second.cache_stats().hits, 2);
+        for i in 0..second.n_subgraphs() {
+            assert!(Arc::ptr_eq(first.engine(i), second.engine(i)));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "different engine configuration")]
+    fn shared_cache_rejects_mismatched_configuration() {
+        let g = test_graph(60, 8);
+        let mut cache = PlanCache::new(EngineBuilder::csr());
+        let _ = Fleet::builder(EngineBuilder::dr(3, 3))
+            .build_with_cache(std::slice::from_ref(&g), &mut cache);
     }
 
     #[test]

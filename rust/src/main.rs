@@ -43,6 +43,11 @@ fn main() {
         .declare("parallel", "enable §3.4 parallel schedule", false)
         .declare("sequential", "disable §3.4 parallel schedule", false)
         .declare("fleet", "fleet mode: off | <workers> | <workers>x<parts>", true)
+        .declare(
+            "epoch-pipeline",
+            "on | off: overlap design N+1's prepare with design N's step (fleet mode)",
+            true,
+        )
         .declare("threads", "root thread budget (default: DRCG_THREADS or all cores)", true)
         .declare("artifacts", "artifacts directory", true)
         .declare("log", "log level: debug|info|warn|error", true)
@@ -155,16 +160,30 @@ fn cmd_train(cfg: &Config, args: &Args) -> i32 {
         hidden: cfg.hidden,
         seed: cfg.seed,
         parallel: cfg.parallel,
+        epoch_pipeline: cfg.epoch_pipeline,
         log_every: 5,
     };
     let model_kind = args.get_or("model", "dr").to_string();
     let (scores, secs, params) = if model_kind == "dr" {
         let (_, report) = if cfg.fleet.is_on() {
-            dr_circuitgnn::info!("fleet mode: {}", cfg.fleet.describe());
+            dr_circuitgnn::info!(
+                "fleet mode: {}{}",
+                cfg.fleet.describe(),
+                if cfg.epoch_pipeline { ", epoch pipeline on" } else { "" }
+            );
             Trainer::train_dr_fleet(&train, &test, &cfg.engine_builder(), &tc, &cfg.fleet)
         } else {
             Trainer::train_dr(&train, &test, &cfg.engine_builder(), &tc)
         };
+        if !report.epoch_overlap.is_empty() {
+            let best = report.epoch_overlap.iter().cloned().fold(0.0, f64::max);
+            let mean = report.epoch_overlap.iter().sum::<f64>()
+                / report.epoch_overlap.len() as f64;
+            dr_circuitgnn::info!(
+                "epoch pipeline overlap: mean {mean:.2}×, best {best:.2}× \
+                 (prepare stage overlapped with execute; 1.0 = fully serial)"
+            );
+        }
         (report.test_scores, report.train_seconds, report.params)
     } else if cfg.fleet.is_on() {
         eprintln!("--fleet applies to the DR model only (got --model {model_kind})");

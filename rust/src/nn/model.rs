@@ -57,8 +57,18 @@ impl DrCircuitGnn {
     /// This keeps pure-CSR/GNNA and pure-DR engines on their paper paths
     /// and gives mixed per-edge engines the right activation per tensor.
     pub fn forward(&mut self, engine: &Engine, g: &HeteroGraph) -> Matrix {
-        let xc0 = self.lin_cell.forward(&g.x_cell);
-        let xn0 = self.lin_net.forward(&g.x_net);
+        self.forward_on(engine, &g.x_cell, &g.x_net)
+    }
+
+    /// Forward on explicit input features (the graph's raw `x_cell`/`x_net`
+    /// or bit-identical staged copies of them). This is the entry the fleet
+    /// epoch pipeline's execute stage uses: the prepare stage deep-copies
+    /// the features (§3.4 host-side init), and because a copy is exact the
+    /// prediction is bit-identical to [`DrCircuitGnn::forward`] on the
+    /// graph itself.
+    pub fn forward_on(&mut self, engine: &Engine, x_cell: &Matrix, x_net: &Matrix) -> Matrix {
+        let xc0 = self.lin_cell.forward(x_cell);
+        let xn0 = self.lin_net.forward(x_net);
         let (c1, n1) = self.conv1.forward(engine, &xc0, &xn0);
         let c1a = if engine.sparsifies(NodeType::Cell) {
             c1

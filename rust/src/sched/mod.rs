@@ -15,9 +15,19 @@
 //!
 //! [`timeline`] captures per-lane events to render Fig. 9-style charts and
 //! compute the Fig. 12 savings breakdown.
+//!
+//! On top of the per-step lanes sits the **epoch pipeline**
+//! ([`run_epoch_pipeline`]): a two-stage prepare/execute schedule that
+//! overlaps design N+1's CPU-side preparation (plan resolution, feature
+//! staging) with design N's execute + optimizer step — the fleet-level
+//! extension of the same §3.4 overlap, bit-identical to the sequential
+//! schedule because prepare reads no state execute writes.
 
 pub mod pipeline;
 pub mod timeline;
 
-pub use pipeline::{run_e2e_step, run_fleet_e2e_steps, run_lanes, E2eTiming, ScheduleMode};
+pub use pipeline::{
+    pipeline_will_overlap, run_e2e_step, run_epoch_pipeline, run_fleet_e2e_steps, run_lanes,
+    E2eTiming, PipelineRun, ScheduleMode, EXECUTE_LANE, PREPARE_LANE,
+};
 pub use timeline::{Timeline, TimelineEvent};

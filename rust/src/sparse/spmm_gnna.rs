@@ -22,7 +22,7 @@ use crate::util::pool::{parallel_for_dynamic, SendPtr};
 use std::sync::atomic::{AtomicU32, Ordering};
 
 /// GNNAdvisor runtime parameters (its "2D workload management").
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct GnnaConfig {
     /// Neighbor-group size (warp slots per group).
     pub group_size: usize,

@@ -48,6 +48,7 @@
 
 use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
 
 /// The process-wide root thread budget. `0` = not yet initialized.
 static ROOT_THREADS: AtomicUsize = AtomicUsize::new(0);
@@ -177,7 +178,9 @@ impl Budget {
     /// the `b mod w` leftover threads for the first participants, so the
     /// shares sum to exactly the budget instead of stranding the
     /// remainder (e.g. a budget of 8 split 5 ways hands out 2,2,2,1,1).
-    fn share_of(self, workers: usize, i: usize) -> Budget {
+    /// Crate-visible so the scheduler's epoch pipeline can hand its two
+    /// stages the same shares the data-parallel primitives would.
+    pub(crate) fn share_of(self, workers: usize, i: usize) -> Budget {
         let w = workers.max(1);
         Budget((self.0 / w + usize::from(i < self.0 % w)).max(1))
     }
@@ -279,7 +282,9 @@ impl Drop for WorkerGuard {
 }
 
 /// Spawn one accounted worker carrying `share` as its ambient budget.
-fn spawn_worker<'scope, 'env, F>(
+/// Crate-visible so long-lived stage workers (the epoch pipeline's prepare
+/// thread) participate in the same live/peak accounting as pool workers.
+pub(crate) fn spawn_worker<'scope, 'env, F>(
     scope: &'scope std::thread::Scope<'scope, 'env>,
     share: Budget,
     f: F,
@@ -568,6 +573,103 @@ pub fn join_all<T: Send, F: FnOnce() -> T + Send>(tasks: Vec<F>) -> Vec<T> {
     out.into_iter().map(|x| x.expect("join_all: unfilled slot")).collect()
 }
 
+// ---------------------------------------------------------------------------
+// Stage handoff
+// ---------------------------------------------------------------------------
+
+/// A single-slot blocking handoff between one producer and one consumer —
+/// the substrate of the scheduler's epoch pipeline
+/// ([`crate::sched::run_epoch_pipeline`]).
+///
+/// The slot holds at most one value: [`Handoff::put`] blocks while it is
+/// full, [`Handoff::take`] blocks while it is empty. Together with the
+/// producer computing its *next* value while the previous one sits in the
+/// slot, this double-buffers the stream — the producer side keeps at most
+/// two values alive (one in the slot, one in flight; plus whatever the
+/// consumer still holds of the value it took), bounding memory however
+/// far the producer could otherwise run ahead.
+///
+/// Both sides [`Handoff::close`] the slot when they finish *or unwind*:
+/// a closed slot makes `put` return the value back (`Err`) and `take`
+/// return `None`, so a panicking stage wakes its peer instead of
+/// deadlocking it. Thread accounting is the caller's job — the pipeline
+/// spawns its producer through [`spawn_worker`] on a leased
+/// [`Budget`] share.
+pub struct Handoff<T> {
+    slot: Mutex<HandoffSlot<T>>,
+    cond: Condvar,
+}
+
+struct HandoffSlot<T> {
+    value: Option<T>,
+    closed: bool,
+}
+
+impl<T> Default for Handoff<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> Handoff<T> {
+    pub fn new() -> Handoff<T> {
+        Handoff {
+            slot: Mutex::new(HandoffSlot { value: None, closed: false }),
+            cond: Condvar::new(),
+        }
+    }
+
+    /// Block until the slot is free, then deposit `v`. Returns `Err(v)` if
+    /// the handoff was closed (the consumer is gone — stop producing).
+    pub fn put(&self, v: T) -> Result<(), T> {
+        let mut slot = self.slot.lock().unwrap();
+        loop {
+            if slot.closed {
+                return Err(v);
+            }
+            if slot.value.is_none() {
+                slot.value = Some(v);
+                self.cond.notify_all();
+                return Ok(());
+            }
+            slot = self.cond.wait(slot).unwrap();
+        }
+    }
+
+    /// Block until a value arrives, then take it. Returns `None` once the
+    /// handoff is closed *and* drained (the producer is gone).
+    pub fn take(&self) -> Option<T> {
+        let mut slot = self.slot.lock().unwrap();
+        loop {
+            if let Some(v) = slot.value.take() {
+                self.cond.notify_all();
+                return Some(v);
+            }
+            if slot.closed {
+                return None;
+            }
+            slot = self.cond.wait(slot).unwrap();
+        }
+    }
+
+    /// Close the handoff, waking any blocked peer. Values already in the
+    /// slot stay takeable (close-then-drain); new `put`s are refused.
+    pub fn close(&self) {
+        self.slot.lock().unwrap().closed = true;
+        self.cond.notify_all();
+    }
+}
+
+/// RAII closer: closes the handoff when dropped — including on unwind, so
+/// a panicking pipeline stage releases its blocked peer.
+pub struct HandoffCloser<'a, T>(pub &'a Handoff<T>);
+
+impl<T> Drop for HandoffCloser<'_, T> {
+    fn drop(&mut self) {
+        self.0.close();
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -752,5 +854,57 @@ mod tests {
                 assert_eq!(total, b, "shares must sum to the budget ({b} across {w})");
             }
         }
+    }
+
+    #[test]
+    fn handoff_passes_values_in_order() {
+        let h = Handoff::new();
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                for i in 0..100 {
+                    h.put(i).expect("consumer alive");
+                }
+                h.close();
+            });
+            let mut got = Vec::new();
+            while let Some(v) = h.take() {
+                got.push(v);
+            }
+            assert_eq!(got, (0..100).collect::<Vec<_>>());
+        });
+    }
+
+    #[test]
+    fn handoff_close_drains_pending_value_then_ends() {
+        let h = Handoff::new();
+        h.put(7).unwrap();
+        h.close();
+        assert_eq!(h.take(), Some(7), "close-then-drain keeps the slot value");
+        assert_eq!(h.take(), None);
+        assert_eq!(h.put(8), Err(8), "closed handoff refuses new values");
+    }
+
+    #[test]
+    fn handoff_closer_releases_blocked_producer_on_consumer_exit() {
+        let h: Handoff<usize> = Handoff::new();
+        std::thread::scope(|s| {
+            let producer = s.spawn(|| {
+                let _close = HandoffCloser(&h);
+                let mut sent = 0usize;
+                for i in 0.. {
+                    if h.put(i).is_err() {
+                        break; // consumer closed — stop, don't deadlock
+                    }
+                    sent += 1;
+                }
+                sent
+            });
+            {
+                let _close = HandoffCloser(&h);
+                assert_eq!(h.take(), Some(0)); // take one, then "die"
+            }
+            let sent = producer.join().unwrap();
+            assert!(sent >= 1, "producer must have delivered the taken value");
+        });
     }
 }

@@ -33,6 +33,7 @@ fn fast_cfg(epochs: usize) -> TrainConfig {
         hidden: 16,
         seed: 1,
         parallel: false,
+        epoch_pipeline: false,
         log_every: 0,
     }
 }

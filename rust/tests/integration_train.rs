@@ -14,6 +14,7 @@ fn cfg(epochs: usize) -> TrainConfig {
         hidden: 24,
         seed: 3,
         parallel: false,
+        epoch_pipeline: false,
         log_every: 0,
     }
 }
