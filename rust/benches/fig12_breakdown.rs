@@ -14,13 +14,15 @@
 //! depending on topology); the parallel scheme averages a further 49.6%.
 
 use dr_circuitgnn::bench::workloads::{bench_reps, bench_scale};
-use dr_circuitgnn::bench::Table;
+use dr_circuitgnn::bench::{write_bench_json, Json, Table};
 use dr_circuitgnn::datagen::generate_design;
 use dr_circuitgnn::engine::{plan_counters, Engine, EngineBuilder};
+use dr_circuitgnn::fleet::PlanCache;
 use dr_circuitgnn::graph::{EdgeType, HeteroGraph};
 use dr_circuitgnn::sched::{run_e2e_step, ScheduleMode};
 use dr_circuitgnn::util::math::mean;
 use dr_circuitgnn::util::rng::Rng;
+use std::time::Instant;
 
 fn main() {
     let scale = bench_scale();
@@ -86,6 +88,49 @@ fn main() {
         steps
     );
 
+    // --- Plan-store cold/warm sweep: the same 9 graphs through a
+    // disk-backed cache twice. The cold pass builds and persists every
+    // plan; the warm pass (a fresh cache over the same directory) loads
+    // them all — zero Alg. 1 stage 1 plan builds, asserted against both
+    // the cache's own stats and the engine's global plan counters.
+    let store_dir = std::env::temp_dir().join(format!("drcg-fig12-store-{}", std::process::id()));
+    std::fs::create_dir_all(&store_dir).expect("create plan-store dir");
+    let (cold_secs, warm_secs) = {
+        let cold_cache = PlanCache::backed_by(EngineBuilder::dr(8, 8), &store_dir)
+            .expect("open plan store");
+        let t0 = Instant::now();
+        for g in &graphs {
+            let _ = cold_cache.engine_for(g);
+        }
+        let cold_secs = t0.elapsed().as_secs_f64();
+        let cold = cold_cache.stats();
+        assert_eq!(cold.misses, graphs.len(), "cold pass builds every plan");
+        assert_eq!(cold.disk_stores, graphs.len(), "cold pass persists every plan");
+        assert_eq!(cold.disk_loads, 0);
+
+        let warm_cache = PlanCache::backed_by(EngineBuilder::dr(8, 8), &store_dir)
+            .expect("reopen plan store");
+        let c2 = plan_counters();
+        let t0 = Instant::now();
+        for g in &graphs {
+            let _ = warm_cache.engine_for(g);
+        }
+        let warm_secs = t0.elapsed().as_secs_f64();
+        let warm = warm_cache.stats();
+        assert_eq!(warm.disk_loads, graphs.len(), "warm pass loads every plan");
+        assert_eq!(warm.misses, 0, "warm pass builds nothing cold");
+        let rebuilt = plan_counters().since(&c2);
+        assert_eq!(rebuilt.plans, 0, "warm loads register zero plan builds");
+        (cold_secs, warm_secs)
+    };
+    std::fs::remove_dir_all(&store_dir).ok();
+    println!(
+        "plan store: cold pass {:.1}ms (build + persist), warm pass {:.1}ms (load), {:.2}x",
+        cold_secs * 1e3,
+        warm_secs * 1e3,
+        cold_secs / warm_secs.max(1e-12)
+    );
+
     let median = |g: &HeteroGraph, engine: &EngineBuilder, mode: ScheduleMode| {
         let mut s: Vec<f64> =
             (0..reps).map(|r| run_e2e_step(g, dim, engine, mode, 7 + r as u64).total).collect();
@@ -99,6 +144,7 @@ fn main() {
     );
     let mut kernel_savings = Vec::new();
     let mut parallel_savings = Vec::new();
+    let mut json_graphs = Vec::new();
     let csr = EngineBuilder::csr();
     let dr = EngineBuilder::dr(8, 8);
     for (i, g) in graphs.iter().enumerate() {
@@ -109,6 +155,15 @@ fn main() {
         let p_sav = (kernel_only - combined) / base; // additional saving from parallelism
         kernel_savings.push(k_sav);
         parallel_savings.push(p_sav);
+        json_graphs.push(
+            Json::obj()
+                .set("graph", format!("graph{i}"))
+                .set("baseline_s", base)
+                .set("dr_sequential_s", kernel_only)
+                .set("dr_parallel_s", combined)
+                .set("kernel_saving", k_sav)
+                .set("parallel_saving", p_sav),
+        );
         t.row(&[
             format!("graph{i}"),
             format!("{:.1}", base * 1e3),
@@ -129,4 +184,28 @@ fn main() {
     ]);
     t.print();
     println!("paper: DR-ReLU avg 19.3% (range 9–39%), parallel avg 49.6%");
+
+    let json = Json::obj()
+        .set("bench", "fig12_breakdown")
+        .set("scale", scale)
+        .set("reps", reps)
+        .set("dim", dim)
+        .set(
+            "plan_cache",
+            Json::obj()
+                .set("plans_built_once", built.plans)
+                .set("plans_built_during_steps", during_steps.plans)
+                .set("steps_per_graph", steps),
+        )
+        .set(
+            "plan_store",
+            Json::obj()
+                .set("cold_pass_s", cold_secs)
+                .set("warm_pass_s", warm_secs)
+                .set("speedup", cold_secs / warm_secs.max(1e-12)),
+        )
+        .set("graphs", Json::arr(json_graphs))
+        .set("avg_kernel_saving", mean(&kernel_savings))
+        .set("avg_parallel_saving", mean(&parallel_savings));
+    write_bench_json("fig12_breakdown", &json);
 }

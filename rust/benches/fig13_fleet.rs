@@ -15,7 +15,7 @@
 //! `DRCG_BENCH_REPS` as usual).
 
 use dr_circuitgnn::bench::workloads::{bench_reps, bench_scale};
-use dr_circuitgnn::bench::{fmt_speedup, Table};
+use dr_circuitgnn::bench::{fmt_speedup, write_bench_json, Json, Table};
 use dr_circuitgnn::datagen::{generate_design, table1_designs};
 use dr_circuitgnn::engine::{plan_counters, EngineBuilder};
 use dr_circuitgnn::fleet::{Fleet, FleetPipeline};
@@ -76,6 +76,7 @@ fn main() {
     );
     let mut base_ms = 0f64;
     let mut base_loss = f64::NAN;
+    let mut json_sweep = Vec::new();
     for &workers in &worker_counts {
         let c1 = plan_counters();
         let fleet = Fleet::builder(EngineBuilder::dr(8, 8).parallel(true))
@@ -118,6 +119,15 @@ fn main() {
                 "worker count changed numerics: {loss} vs {base_loss}"
             );
         }
+        json_sweep.push(
+            Json::obj()
+                .set("workers", workers)
+                .set("median_step_s", median)
+                .set("speedup", base_ms / median.max(1e-12))
+                .set("step_loss", loss)
+                .set("peak_threads", peak)
+                .set("budget", budget),
+        );
         t.row(&[
             workers.to_string(),
             format!("{:.1}", median * 1e3),
@@ -134,7 +144,23 @@ fn main() {
          oversized worker counts borrow threads, they don't oversubscribe)"
     );
 
-    epoch_pipeline_sweep(scale, reps.clamp(2, 4));
+    let epoch_json = epoch_pipeline_sweep(scale, reps.clamp(2, 4));
+    let json = Json::obj()
+        .set("bench", "fig13_fleet")
+        .set("scale", scale)
+        .set("reps", reps)
+        .set("design", spec.name.clone())
+        .set("subgraphs", n_subgraphs)
+        .set("unique_adjacencies", unique)
+        .set(
+            "plan_cache",
+            Json::obj()
+                .set("plans_built", built.plans)
+                .set("hits", fleet1.cache_stats().hits),
+        )
+        .set("worker_sweep", Json::arr(json_sweep))
+        .set("epoch_pipeline", epoch_json);
+    write_bench_json("fig13_fleet", &json);
 }
 
 /// Pipelined-vs-serial epoch sweep (ISSUE 5): train over all three Table-1
@@ -145,7 +171,7 @@ fn main() {
 /// design N+1's Alg. 1 stage 1 planning + feature staging with design N's
 /// execute + optimizer step. Losses are asserted bitwise identical; the
 /// timeline's overlap factor is asserted > 1 on multi-core machines.
-fn epoch_pipeline_sweep(scale: f64, epochs: usize) {
+fn epoch_pipeline_sweep(scale: f64, epochs: usize) -> Json {
     let designs: Vec<Vec<HeteroGraph>> =
         table1_designs(scale).iter().map(generate_design).collect();
     let n_designs = designs.len();
@@ -230,4 +256,11 @@ fn epoch_pipeline_sweep(scale: f64, epochs: usize) {
         "epoch pipeline: losses bit-identical to the serial schedule (asserted); \
          overlap factor {best_overlap:.2} = prepare/execute busy time over makespan"
     );
+    Json::obj()
+        .set("designs", n_designs)
+        .set("epochs", epochs)
+        .set("serial_median_epoch_s", median(&serial_epoch_s))
+        .set("pipelined_median_epoch_s", median(&piped_epoch_s))
+        .set("best_overlap", best_overlap)
+        .set("losses_bit_identical", true)
 }

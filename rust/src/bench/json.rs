@@ -1,0 +1,225 @@
+//! Machine-readable bench artifacts (serde is unavailable offline).
+//!
+//! Benches print ASCII tables for humans; this module writes the same
+//! numbers as `BENCH_<name>.json` so plotting and regression scripts can
+//! consume them without scraping tables. The value model is the minimal
+//! JSON subset the benches need — objects, arrays, strings, numbers,
+//! booleans — with deterministic key order (insertion order) so reruns of
+//! a deterministic bench produce byte-identical files.
+
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+/// A JSON value. Build with the `From` impls and [`Json::obj`] /
+/// [`Json::arr`]; render with [`Json::render`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    /// Insertion-ordered, so output is deterministic.
+    Obj(Vec<(String, Json)>),
+}
+
+impl From<bool> for Json {
+    fn from(v: bool) -> Json {
+        Json::Bool(v)
+    }
+}
+impl From<f64> for Json {
+    fn from(v: f64) -> Json {
+        Json::Num(v)
+    }
+}
+impl From<usize> for Json {
+    fn from(v: usize) -> Json {
+        Json::Num(v as f64)
+    }
+}
+impl From<&str> for Json {
+    fn from(v: &str) -> Json {
+        Json::Str(v.to_string())
+    }
+}
+impl From<String> for Json {
+    fn from(v: String) -> Json {
+        Json::Str(v)
+    }
+}
+impl<T: Into<Json>> From<Vec<T>> for Json {
+    fn from(v: Vec<T>) -> Json {
+        Json::Arr(v.into_iter().map(Into::into).collect())
+    }
+}
+
+impl Json {
+    /// Empty object; chain [`Json::set`].
+    pub fn obj() -> Json {
+        Json::Obj(Vec::new())
+    }
+
+    pub fn arr(items: Vec<Json>) -> Json {
+        Json::Arr(items)
+    }
+
+    /// Insert (or replace) a key. Panics on non-objects — a bench bug.
+    pub fn set(mut self, key: &str, value: impl Into<Json>) -> Json {
+        match &mut self {
+            Json::Obj(entries) => {
+                let value = value.into();
+                if let Some(e) = entries.iter_mut().find(|(k, _)| k == key) {
+                    e.1 = value;
+                } else {
+                    entries.push((key.to_string(), value));
+                }
+                self
+            }
+            other => panic!("Json::set on non-object {other:?}"),
+        }
+    }
+
+    /// Render as compact JSON. Non-finite numbers become `null` (JSON has
+    /// no NaN/Inf); integral floats print without a fraction so counts
+    /// stay readable.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(x) => {
+                if !x.is_finite() {
+                    out.push_str("null");
+                } else if *x == x.trunc() && x.abs() < 1e15 {
+                    let _ = write!(out, "{}", *x as i64);
+                } else {
+                    let _ = write!(out, "{x}");
+                }
+            }
+            Json::Str(s) => {
+                out.push('"');
+                for c in s.chars() {
+                    match c {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\r' => out.push_str("\\r"),
+                        '\t' => out.push_str("\\t"),
+                        c if (c as u32) < 0x20 => {
+                            let _ = write!(out, "\\u{:04x}", c as u32);
+                        }
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+            }
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(entries) => {
+                out.push('{');
+                for (i, (k, v)) in entries.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    Json::Str(k.clone()).write(out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+/// Where bench JSON lands: `$DRCG_BENCH_JSON_DIR` if set, else the
+/// current directory.
+pub fn bench_json_dir() -> PathBuf {
+    std::env::var_os("DRCG_BENCH_JSON_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("."))
+}
+
+/// Write `value` as `BENCH_<name>.json` under [`bench_json_dir`] and
+/// report where it went. Failures warn but don't kill the bench — the
+/// table already printed.
+pub fn write_bench_json(name: &str, value: &Json) -> Option<PathBuf> {
+    let path = bench_json_dir().join(format!("BENCH_{name}.json"));
+    write_bench_json_to(&path, value)
+}
+
+fn write_bench_json_to(path: &Path, value: &Json) -> Option<PathBuf> {
+    let mut text = value.render();
+    text.push('\n');
+    match std::fs::write(path, text) {
+        Ok(()) => {
+            println!("bench json: {}", path.display());
+            Some(path.to_path_buf())
+        }
+        Err(e) => {
+            crate::warn!("bench json write to {} failed: {e}", path.display());
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_the_subset_compactly() {
+        let j = Json::obj()
+            .set("name", "fig12")
+            .set("reps", 5usize)
+            .set("ok", true)
+            .set("median", 0.25)
+            .set("series", vec![1.0, 2.5])
+            .set("none", Json::Null);
+        assert_eq!(
+            j.render(),
+            r#"{"name":"fig12","reps":5,"ok":true,"median":0.25,"series":[1,2.5],"none":null}"#
+        );
+    }
+
+    #[test]
+    fn escapes_strings_and_maps_nonfinite_to_null() {
+        let j = Json::arr(vec![
+            Json::from("a\"b\\c\nd"),
+            Json::Num(f64::NAN),
+            Json::Num(f64::INFINITY),
+        ]);
+        assert_eq!(j.render(), r#"["a\"b\\c\nd",null,null]"#);
+    }
+
+    #[test]
+    fn set_replaces_existing_keys_in_place() {
+        let j = Json::obj().set("k", 1usize).set("other", 2usize).set("k", 3usize);
+        assert_eq!(j.render(), r#"{"k":3,"other":2}"#);
+    }
+
+    #[test]
+    fn writes_a_bench_file() {
+        let dir = std::env::temp_dir()
+            .join(format!("drcg-json-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_demo.json");
+        let j = Json::obj().set("x", 1usize);
+        let written = write_bench_json_to(&path, &j).unwrap();
+        assert_eq!(std::fs::read_to_string(written).unwrap(), "{\"x\":1}\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

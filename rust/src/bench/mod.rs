@@ -2,10 +2,15 @@
 //!
 //! * [`measure`] — warmup + repeated timing with robust statistics.
 //! * [`Table`] — aligned ASCII table printer for the paper-figure benches.
+//! * [`json`] — machine-readable `BENCH_<name>.json` artifacts next to the
+//!   tables (`DRCG_BENCH_JSON_DIR` overrides the destination).
 //! * [`workloads`] — shared workload builders (the three Table-1 designs at
 //!   a bench-friendly scale, plus embedding/gradient generators).
 
+pub mod json;
 pub mod workloads;
+
+pub use json::{write_bench_json, Json};
 
 use crate::util::timer::TimingStats;
 

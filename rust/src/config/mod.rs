@@ -51,6 +51,22 @@ pub struct Config {
     // paths
     pub artifacts_dir: PathBuf,
     pub out_dir: PathBuf,
+    /// Persistent plan store directory (`--plan-store`,
+    /// `paths.plan_store`): kernel plans and K profiles are loaded from /
+    /// stored to it keyed by adjacency content-hash + engine signature,
+    /// warm-starting Alg. 1 stage 1 across process restarts. `None` =
+    /// in-memory cache only.
+    pub plan_store: Option<PathBuf>,
+    // serve
+    /// Jobs file for serve mode (`--serve <path>`): one
+    /// `design=… key=value…` job per line. `Some` selects the serve
+    /// subcommand's workload.
+    pub serve_jobs: Option<PathBuf>,
+    /// Serve worker threads (`--serve-workers`, `serve.workers`).
+    pub serve_workers: usize,
+    /// Serve queue capacity (`--queue-cap`, `serve.queue_cap`);
+    /// producers block when the queue is full.
+    pub queue_cap: usize,
 }
 
 impl Default for Config {
@@ -73,6 +89,10 @@ impl Default for Config {
             dim: 64,
             artifacts_dir: PathBuf::from("artifacts"),
             out_dir: PathBuf::from("out"),
+            plan_store: None,
+            serve_jobs: None,
+            serve_workers: 2,
+            queue_cap: 16,
         }
     }
 }
@@ -134,6 +154,14 @@ impl Config {
         if let Some(v) = f.get("paths.out") {
             self.out_dir = PathBuf::from(v);
         }
+        if let Some(v) = f.get("paths.plan_store") {
+            self.plan_store = Some(PathBuf::from(v));
+        }
+        if let Some(v) = f.get("serve.jobs") {
+            self.serve_jobs = Some(PathBuf::from(v));
+        }
+        take!(self.serve_workers, get_usize, "serve.workers");
+        take!(self.queue_cap, get_usize, "serve.queue_cap");
         Ok(())
     }
 
@@ -175,6 +203,14 @@ impl Config {
         if let Some(v) = a.get("out") {
             self.out_dir = PathBuf::from(v);
         }
+        if let Some(v) = a.get("plan-store") {
+            self.plan_store = Some(PathBuf::from(v));
+        }
+        if let Some(v) = a.get("serve") {
+            self.serve_jobs = Some(PathBuf::from(v));
+        }
+        self.serve_workers = a.get_usize("serve-workers", self.serve_workers)?;
+        self.queue_cap = a.get_usize("queue-cap", self.queue_cap)?;
         Ok(())
     }
 
@@ -192,6 +228,12 @@ impl Config {
         }
         if self.threads == Some(0) {
             return Err("threads must be ≥ 1 (omit it for auto)".into());
+        }
+        if self.serve_workers == 0 {
+            return Err("serve-workers must be ≥ 1".into());
+        }
+        if self.queue_cap == 0 {
+            return Err("queue-cap must be ≥ 1".into());
         }
         if self.epoch_pipeline && !self.fleet.is_on() {
             return Err(
@@ -362,6 +404,47 @@ mod tests {
         assert!(Config::resolve(&args).unwrap_err().contains("threads"));
         let args = Args::default().parse(&raw(&["--threads", "many"])).unwrap();
         assert!(Config::resolve(&args).unwrap_err().contains("--threads"));
+    }
+
+    #[test]
+    fn plan_store_and_serve_surfaces() {
+        // Defaults: no store, no serve jobs, 2 workers, 16 capacity.
+        let cfg = Config::default();
+        assert_eq!(cfg.plan_store, None);
+        assert_eq!(cfg.serve_jobs, None);
+        assert_eq!(cfg.serve_workers, 2);
+        assert_eq!(cfg.queue_cap, 16);
+        // CLI surface.
+        let args = Args::default()
+            .parse(&raw(&[
+                "--plan-store", "/tmp/plans", "--serve", "jobs.txt",
+                "--serve-workers", "4", "--queue-cap", "8",
+            ]))
+            .unwrap();
+        let cfg = Config::resolve(&args).unwrap();
+        assert_eq!(cfg.plan_store, Some(PathBuf::from("/tmp/plans")));
+        assert_eq!(cfg.serve_jobs, Some(PathBuf::from("jobs.txt")));
+        assert_eq!(cfg.serve_workers, 4);
+        assert_eq!(cfg.queue_cap, 8);
+        // File surface, overridden by CLI (precedence).
+        let mut cfg = Config::default();
+        let f = ConfigFile::parse(
+            "[paths]\nplan_store = \"store\"\n[serve]\nworkers = 3\nqueue_cap = 5\njobs = \"j.txt\"",
+        )
+        .unwrap();
+        cfg.apply_file(&f).unwrap();
+        assert_eq!(cfg.plan_store, Some(PathBuf::from("store")));
+        assert_eq!(cfg.serve_workers, 3);
+        assert_eq!(cfg.queue_cap, 5);
+        assert_eq!(cfg.serve_jobs, Some(PathBuf::from("j.txt")));
+        let args = Args::default().parse(&raw(&["--serve-workers", "1"])).unwrap();
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.serve_workers, 1);
+        // Zeroes rejected loudly.
+        let args = Args::default().parse(&raw(&["--serve-workers", "0"])).unwrap();
+        assert!(Config::resolve(&args).unwrap_err().contains("serve-workers"));
+        let args = Args::default().parse(&raw(&["--queue-cap", "0"])).unwrap();
+        assert!(Config::resolve(&args).unwrap_err().contains("queue-cap"));
     }
 
     #[test]

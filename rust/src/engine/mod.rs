@@ -15,6 +15,9 @@
 //!   adjacencies, resolves `"auto"` against their degree profiles, and
 //!   plans every kernel exactly once.
 //! * [`auto`] — the Fig. 4 selection policy (`"auto"`).
+//! * [`planstore`] — versioned on-disk plans keyed by adjacency content
+//!   hash + builder signature, so warm restarts skip Alg. 1 stage 1
+//!   entirely (see `docs/SERVE.md`).
 //!
 //! Threading: the engine never spawns threads of its own — kernel
 //! dispatches and the §3.4 parallel lanes all draw on the calling thread's
@@ -37,6 +40,7 @@
 
 pub mod auto;
 pub mod kernel;
+pub mod planstore;
 pub mod registry;
 
 pub use auto::{auto_select, AutoDecision};
@@ -44,6 +48,7 @@ pub use kernel::{
     plan_counters, AggCache, CsrKernel, DrKernel, GnnaKernel, GnnaPlan, Gradient, KernelPlan,
     PlanCounters, SpmmKernel,
 };
+pub use planstore::{KProfileRecord, PlanStore};
 pub use registry::{known_names, KernelEntry, KernelSpec, REGISTRY};
 
 use crate::graph::{Cbsr, Csr, EdgeType, HeteroGraph, NodeType};

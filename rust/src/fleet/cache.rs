@@ -10,66 +10,217 @@
 //! on the adjacency. Any mutation of an edge, weight or shape changes the
 //! hash and therefore misses the cache (verified in
 //! `tests/integration_fleet.rs` via `engine::plan_counters`).
+//!
+//! The cache is **internally synchronized**: `engine_for(&self)` takes a
+//! shared reference, so serve workers and
+//! [`FleetPipeline`](crate::fleet::FleetPipeline) share one
+//! `Arc<PlanCache>` without an external mutex. The entry map holds one
+//! `OnceLock` cell per adjacency hash — distinct adjacencies plan
+//! concurrently, racing requests for the same adjacency coalesce onto a
+//! single build.
+//!
+//! With [`PlanCache::backed_by`], misses first consult a persistent
+//! [`PlanStore`]: hash-matching plans load from disk (zero plan builds)
+//! and freshly planned engines are written back, so a later process
+//! warm-starts Alg. 1 stage 1 for free. Corrupted or stale files are
+//! logged loudly and rebuilt cold — never silently trusted.
 
-use crate::engine::{Engine, EngineBuilder};
+use crate::engine::{Engine, EngineBuilder, PlanStore};
 use crate::graph::HeteroGraph;
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
 
-/// Hit/miss counters of a [`PlanCache`]; `misses` equals the number of
-/// unique adjacencies planned.
+/// Lookup counters of a [`PlanCache`].
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct CacheStats {
+    /// Lookups served from memory.
     pub hits: usize,
+    /// Lookups that built a fresh plan (cold).
     pub misses: usize,
+    /// Lookups served by deserializing a stored plan (warm, zero builds).
+    pub disk_loads: usize,
+    /// Freshly built plans persisted to the backing store.
+    pub disk_stores: usize,
 }
 
 impl CacheStats {
-    /// Unique engines built (one per distinct adjacency).
+    /// Unique engines materialised (one per distinct adjacency), whether
+    /// built cold or loaded from the store.
     pub fn unique(&self) -> usize {
-        self.misses
+        self.misses + self.disk_loads
     }
 
     pub fn lookups(&self) -> usize {
-        self.hits + self.misses
+        self.hits + self.misses + self.disk_loads
     }
 
     /// Lookups recorded after the `earlier` snapshot (counters are
     /// monotone). Lets a fleet built through a *shared* cache report its
     /// own hits/misses rather than the cache's lifetime totals.
     pub fn since(&self, earlier: &CacheStats) -> CacheStats {
-        CacheStats { hits: self.hits - earlier.hits, misses: self.misses - earlier.misses }
+        CacheStats {
+            hits: self.hits - earlier.hits,
+            misses: self.misses - earlier.misses,
+            disk_loads: self.disk_loads - earlier.disk_loads,
+            disk_stores: self.disk_stores - earlier.disk_stores,
+        }
+    }
+
+    /// Sum of two deltas (aggregating per-fleet or per-job stats).
+    pub fn plus(&self, other: &CacheStats) -> CacheStats {
+        CacheStats {
+            hits: self.hits + other.hits,
+            misses: self.misses + other.misses,
+            disk_loads: self.disk_loads + other.disk_loads,
+            disk_stores: self.disk_stores + other.disk_stores,
+        }
+    }
+
+    /// Fold one traced lookup into a local tally. Concurrent users of a
+    /// shared cache count their own lookups this way instead of diffing
+    /// the global stats, which would attribute other threads' traffic.
+    pub fn record(&mut self, lookup: Lookup) {
+        match lookup {
+            Lookup::Hit => self.hits += 1,
+            Lookup::Loaded => self.disk_loads += 1,
+            Lookup::Built { stored } => {
+                self.misses += 1;
+                if stored {
+                    self.disk_stores += 1;
+                }
+            }
+        }
     }
 }
 
-/// Content-addressed engine cache used while building a fleet.
+/// How one [`PlanCache::engine_for_traced`] lookup was satisfied.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Lookup {
+    /// Served from memory.
+    Hit,
+    /// Deserialized from the backing store (zero plan builds).
+    Loaded,
+    /// Built cold; `stored` says whether it was persisted to the store.
+    Built { stored: bool },
+}
+
+/// Content-addressed engine cache used while building fleets and serving
+/// jobs. Internally synchronized — share it as `Arc<PlanCache>`.
 pub struct PlanCache {
     builder: EngineBuilder,
-    entries: HashMap<u64, Arc<Engine>>,
-    stats: CacheStats,
+    store: Option<PlanStore>,
+    entries: Mutex<HashMap<u64, Arc<OnceLock<(Arc<Engine>, Lookup)>>>>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+    disk_loads: AtomicUsize,
+    disk_stores: AtomicUsize,
 }
 
 impl PlanCache {
     pub fn new(builder: EngineBuilder) -> PlanCache {
-        PlanCache { builder, entries: HashMap::new(), stats: CacheStats::default() }
+        PlanCache {
+            builder,
+            store: None,
+            entries: Mutex::new(HashMap::new()),
+            hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+            disk_loads: AtomicUsize::new(0),
+            disk_stores: AtomicUsize::new(0),
+        }
+    }
+
+    /// A cache whose misses read from / write to a persistent [`PlanStore`]
+    /// at `dir` (created if absent). Stored plans are keyed by adjacency
+    /// hash plus the builder's configuration signature, so one directory
+    /// can back many configurations.
+    pub fn backed_by(builder: EngineBuilder, dir: &Path) -> Result<PlanCache, String> {
+        let store = PlanStore::open(dir, &builder)?;
+        let mut cache = PlanCache::new(builder);
+        cache.store = Some(store);
+        Ok(cache)
+    }
+
+    /// The backing store, when this cache was created with
+    /// [`backed_by`](Self::backed_by).
+    pub fn store(&self) -> Option<&PlanStore> {
+        self.store.as_ref()
     }
 
     /// The engine for a subgraph: cached when a content-identical adjacency
-    /// was already planned, freshly planned (and cached) otherwise.
-    pub fn engine_for(&mut self, g: &HeteroGraph) -> Arc<Engine> {
+    /// was already materialised, loaded from the backing store when a
+    /// hash-matching plan is on disk, freshly planned (and persisted)
+    /// otherwise.
+    pub fn engine_for(&self, g: &HeteroGraph) -> Arc<Engine> {
+        self.engine_for_traced(g).0
+    }
+
+    /// [`engine_for`](Self::engine_for) plus how this lookup was satisfied.
+    pub fn engine_for_traced(&self, g: &HeteroGraph) -> (Arc<Engine>, Lookup) {
         let key = g.adjacency_hash();
-        if let Some(engine) = self.entries.get(&key) {
-            self.stats.hits += 1;
-            return Arc::clone(engine);
+        let cell = {
+            let mut map = self.entries.lock().unwrap_or_else(|e| e.into_inner());
+            Arc::clone(map.entry(key).or_default())
+        };
+        // Materialise outside the map lock: distinct adjacencies plan in
+        // parallel; racing requests for the same one coalesce on the cell.
+        let mut initialized_here = false;
+        let (engine, first_lookup) = cell.get_or_init(|| {
+            initialized_here = true;
+            self.materialise(g)
+        });
+        let lookup = if initialized_here {
+            *first_lookup
+        } else {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            Lookup::Hit
+        };
+        (Arc::clone(engine), lookup)
+    }
+
+    /// Load-or-build on a confirmed in-memory miss, updating the global
+    /// counters for the outcome.
+    fn materialise(&self, g: &HeteroGraph) -> (Arc<Engine>, Lookup) {
+        if let Some(store) = &self.store {
+            // The effective builder applies a measured §4.3 K profile when
+            // one is stored — identically for loads and cold builds, so
+            // warm and cold runs stay bit-identical.
+            let eff = store.effective_builder(&self.builder, g);
+            match store.load(g, &eff) {
+                Ok(Some(engine)) => {
+                    self.disk_loads.fetch_add(1, Ordering::Relaxed);
+                    return (Arc::new(engine), Lookup::Loaded);
+                }
+                Ok(None) => {}
+                Err(e) => crate::warn!("{e}; rebuilding cold"),
+            }
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            let engine = Arc::new(eff.build(g));
+            let stored = match store.store(g, &engine) {
+                Ok(_) => {
+                    self.disk_stores.fetch_add(1, Ordering::Relaxed);
+                    true
+                }
+                Err(e) => {
+                    crate::warn!("{e}; plan stays in-memory only");
+                    false
+                }
+            };
+            (engine, Lookup::Built { stored })
+        } else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            (Arc::new(self.builder.build(g)), Lookup::Built { stored: false })
         }
-        self.stats.misses += 1;
-        let engine = Arc::new(self.builder.build(g));
-        self.entries.insert(key, Arc::clone(&engine));
-        engine
     }
 
     pub fn stats(&self) -> CacheStats {
-        self.stats
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            disk_loads: self.disk_loads.load(Ordering::Relaxed),
+            disk_stores: self.disk_stores.load(Ordering::Relaxed),
+        }
     }
 
     /// Diagnostic signature of the builder this cache plans with (the
@@ -78,15 +229,20 @@ impl PlanCache {
         format!("{:?}", self.builder)
     }
 
+    /// The configuration this cache plans with.
+    pub fn builder(&self) -> &EngineBuilder {
+        &self.builder
+    }
+
     /// Whether this cache was created from (a clone of) `builder`.
     ///
     /// Cached engines embed the builder's kernel choices, K values and
     /// schedule mode, so a cache shared across designs (the epoch
-    /// pipeline's prepare stage) must only serve fleets built from the
-    /// same configuration — `FleetBuilder::build_with_cache` checks this
-    /// and panics on a mismatch instead of silently handing out engines
-    /// planned under different settings. Structural equality, no
-    /// allocation.
+    /// pipeline's prepare stage, the serve loop) must only serve fleets
+    /// built from the same configuration — `FleetBuilder::build_with_cache`
+    /// checks this and panics on a mismatch instead of silently handing
+    /// out engines planned under different settings. Structural equality,
+    /// no allocation.
     pub fn compatible_with(&self, builder: &EngineBuilder) -> bool {
         self.builder == *builder
     }
@@ -98,6 +254,7 @@ mod tests {
     use crate::graph::partition::partition;
     use crate::graph::Csr;
     use crate::tensor::Matrix;
+    use std::path::PathBuf;
 
     fn toy(seed_val: f32) -> HeteroGraph {
         let near = Csr::from_triplets(
@@ -121,21 +278,29 @@ mod tests {
         }
     }
 
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("drcg-cache-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
     #[test]
     fn identical_adjacencies_share_one_engine() {
-        let mut cache = PlanCache::new(EngineBuilder::dr(2, 2));
+        let cache = PlanCache::new(EngineBuilder::dr(2, 2));
         let a = toy(0.0);
         let b = toy(5.0); // different features, same adjacency
-        let ea = cache.engine_for(&a);
-        let eb = cache.engine_for(&b);
+        let (ea, la) = cache.engine_for_traced(&a);
+        let (eb, lb) = cache.engine_for_traced(&b);
         assert!(Arc::ptr_eq(&ea, &eb));
-        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 1 });
+        assert_eq!(la, Lookup::Built { stored: false });
+        assert_eq!(lb, Lookup::Hit);
+        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 1, ..Default::default() });
         assert_eq!(cache.stats().unique(), 1);
     }
 
     #[test]
     fn mutated_adjacency_misses() {
-        let mut cache = PlanCache::new(EngineBuilder::csr());
+        let cache = PlanCache::new(EngineBuilder::csr());
         let a = toy(0.0);
         let mut b = toy(0.0);
         b.near.values[0] = 0.5;
@@ -147,7 +312,7 @@ mod tests {
 
     #[test]
     fn stats_since_and_signature() {
-        let mut cache = PlanCache::new(EngineBuilder::dr(2, 2));
+        let cache = PlanCache::new(EngineBuilder::dr(2, 2));
         let a = toy(0.0);
         cache.engine_for(&a);
         let snap = cache.stats();
@@ -155,7 +320,10 @@ mod tests {
         let mut b = toy(0.0);
         b.near.values[0] = 0.25; // miss
         cache.engine_for(&b);
-        assert_eq!(cache.stats().since(&snap), CacheStats { hits: 1, misses: 1 });
+        assert_eq!(
+            cache.stats().since(&snap),
+            CacheStats { hits: 1, misses: 1, ..Default::default() }
+        );
         // Compatibility separates configurations, not instances.
         assert!(cache.compatible_with(&EngineBuilder::dr(2, 2)));
         assert!(!cache.compatible_with(&EngineBuilder::csr()));
@@ -171,10 +339,71 @@ mod tests {
         let subs = partition(&g, 2);
         assert_eq!(subs.len(), 2);
         assert_eq!(subs[0].adjacency_hash(), subs[1].adjacency_hash());
-        let mut cache = PlanCache::new(EngineBuilder::dr(2, 2));
+        let cache = PlanCache::new(EngineBuilder::dr(2, 2));
         for s in &subs {
             cache.engine_for(s);
         }
-        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 1 });
+        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 1, ..Default::default() });
+    }
+
+    #[test]
+    fn shared_reference_works_across_threads() {
+        let cache = Arc::new(PlanCache::new(EngineBuilder::dr(2, 2)));
+        let g = toy(0.0);
+        let engines: Vec<_> = std::thread::scope(|s| {
+            (0..4)
+                .map(|_| {
+                    let cache = Arc::clone(&cache);
+                    let g = g.clone();
+                    s.spawn(move || cache.engine_for(&g))
+                })
+                .collect::<Vec<_>>()
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .collect()
+        });
+        // Racing lookups coalesce: one build, everyone shares the result.
+        assert!(engines.windows(2).all(|w| Arc::ptr_eq(&w[0], &w[1])));
+        let stats = cache.stats();
+        assert_eq!(stats.misses, 1);
+        assert_eq!(stats.hits, 3);
+    }
+
+    #[test]
+    fn backed_cache_stores_then_loads() {
+        let dir = tmp_dir("warm");
+        let g = toy(0.0);
+        let builder = EngineBuilder::dr(2, 2);
+
+        let cold = PlanCache::backed_by(builder.clone(), &dir).unwrap();
+        let (_, lookup) = cold.engine_for_traced(&g);
+        assert_eq!(lookup, Lookup::Built { stored: true });
+        assert_eq!(
+            cold.stats(),
+            CacheStats { misses: 1, disk_stores: 1, ..Default::default() }
+        );
+
+        // A fresh cache over the same directory warm-starts: disk load,
+        // zero cold builds.
+        let warm = PlanCache::backed_by(builder, &dir).unwrap();
+        let (_, lookup) = warm.engine_for_traced(&g);
+        assert_eq!(lookup, Lookup::Loaded);
+        assert_eq!(warm.stats(), CacheStats { disk_loads: 1, ..Default::default() });
+        assert_eq!(warm.stats().unique(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn record_tallies_lookups() {
+        let mut local = CacheStats::default();
+        local.record(Lookup::Hit);
+        local.record(Lookup::Loaded);
+        local.record(Lookup::Built { stored: true });
+        local.record(Lookup::Built { stored: false });
+        assert_eq!(
+            local,
+            CacheStats { hits: 1, misses: 2, disk_loads: 1, disk_stores: 1 }
+        );
+        assert_eq!(local.plus(&local).lookups(), 8);
     }
 }

@@ -39,7 +39,7 @@
 pub mod cache;
 pub mod spec;
 
-pub use cache::{CacheStats, PlanCache};
+pub use cache::{CacheStats, Lookup, PlanCache};
 pub use spec::FleetSpec;
 
 use crate::engine::{Engine, EngineBuilder};
@@ -50,7 +50,7 @@ use crate::tensor::Matrix;
 use crate::util::pool::bounded_map;
 use std::borrow::Cow;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::{Arc, OnceLock};
 
 /// Monotone source of fleet identity stamps (see [`Fleet`] / the
 /// [`StagedDesign`] mix-up check in [`Fleet::gradients_staged`]).
@@ -104,25 +104,29 @@ impl FleetBuilder {
     /// training run holds one copy); with `parts` set, the freshly cut
     /// subgraphs are owned and get fleet-wide ids.
     pub fn build<'a>(&self, graphs: &'a [HeteroGraph]) -> Fleet<'a> {
-        let mut cache = PlanCache::new(self.engine.clone());
-        self.build_with_cache(graphs, &mut cache)
+        let cache = PlanCache::new(self.engine.clone());
+        self.build_with_cache(graphs, &cache)
     }
 
     /// [`FleetBuilder::build`] against a caller-owned, possibly *shared*
     /// [`PlanCache`]: content-identical subgraphs plan once **across
     /// designs**, not just within one. This is what the epoch-pipelined
-    /// trainer uses — every design's fleet resolves through one cache, so
-    /// design N+1's prepare stage skips Alg. 1 stage 1 for any adjacency
-    /// an earlier design already planned.
+    /// trainer and the serve loop use — every design's fleet resolves
+    /// through one cache, so design N+1's prepare stage skips Alg. 1
+    /// stage 1 for any adjacency an earlier design (or job) already
+    /// planned. The cache is internally synchronized; concurrent builds
+    /// through one cache are fine.
     ///
     /// The cache must have been created from the same engine configuration
     /// (`PlanCache::compatible_with`); a mismatch panics rather than
     /// serving engines planned under different kernels/K/schedule
-    /// settings. `Fleet::cache_stats` reports only this build's lookups.
+    /// settings. `Fleet::cache_stats` reports only this build's lookups
+    /// (tallied per lookup, not diffed from the global counters — exact
+    /// even when other threads use the cache concurrently).
     pub fn build_with_cache<'a>(
         &self,
         graphs: &'a [HeteroGraph],
-        cache: &mut PlanCache,
+        cache: &PlanCache,
     ) -> Fleet<'a> {
         assert!(
             cache.compatible_with(&self.engine),
@@ -143,11 +147,12 @@ impl FleetBuilder {
         };
         assert!(!subgraphs.is_empty(), "fleet needs at least one subgraph");
         let total_cells: usize = subgraphs.iter().map(|g| g.n_cells).sum();
-        let before = cache.stats();
+        let mut cache_stats = CacheStats::default();
         let units = subgraphs
             .into_iter()
             .map(|g| {
-                let engine = cache.engine_for(&g);
+                let (engine, lookup) = cache.engine_for_traced(&g);
+                cache_stats.record(lookup);
                 let weight = g.n_cells as f32 / total_cells.max(1) as f32;
                 FleetUnit { graph: g, engine, weight }
             })
@@ -155,7 +160,7 @@ impl FleetBuilder {
         Fleet {
             units,
             workers: self.workers,
-            cache_stats: cache.stats().since(&before),
+            cache_stats,
             stamp: FLEET_STAMP.fetch_add(1, Ordering::Relaxed),
         }
     }
@@ -487,7 +492,7 @@ impl<'a> Fleet<'a> {
 pub struct FleetPipeline<'a> {
     builder: FleetBuilder,
     designs: Vec<&'a [HeteroGraph]>,
-    cache: Mutex<PlanCache>,
+    cache: Arc<PlanCache>,
     fleets: Vec<OnceLock<Fleet<'a>>>,
 }
 
@@ -496,13 +501,36 @@ impl<'a> FleetPipeline<'a> {
     /// subgraphs). Nothing is planned yet — builds happen lazily in the
     /// prepare stage of each design's first epoch.
     pub fn new(builder: FleetBuilder, designs: Vec<&'a [HeteroGraph]>) -> FleetPipeline<'a> {
-        let cache = Mutex::new(PlanCache::new(builder.engine.clone()));
+        let cache = Arc::new(PlanCache::new(builder.engine.clone()));
+        Self::with_cache(builder, designs, cache)
+    }
+
+    /// [`FleetPipeline::new`] over a caller-owned cache — possibly
+    /// disk-backed ([`PlanCache::backed_by`]) and possibly shared with
+    /// other pipelines or serve jobs running concurrently. The cache is
+    /// internally synchronized; it must have been created from the same
+    /// engine configuration (panics otherwise, like
+    /// [`FleetBuilder::build_with_cache`]).
+    pub fn with_cache(
+        builder: FleetBuilder,
+        designs: Vec<&'a [HeteroGraph]>,
+        cache: Arc<PlanCache>,
+    ) -> FleetPipeline<'a> {
+        assert!(
+            cache.compatible_with(&builder.engine),
+            "shared plan cache built from a different engine configuration"
+        );
         let fleets = designs.iter().map(|_| OnceLock::new()).collect();
         FleetPipeline { builder, designs, cache, fleets }
     }
 
     pub fn n_designs(&self) -> usize {
         self.designs.len()
+    }
+
+    /// The shared plan cache this pipeline resolves engines through.
+    pub fn cache(&self) -> &Arc<PlanCache> {
+        &self.cache
     }
 
     /// The (lazily built) fleet for a design, if its first prepare ran.
@@ -518,9 +546,8 @@ impl<'a> FleetPipeline<'a> {
     /// what it buys and measures.
     pub fn build_all(&self) {
         for d in 0..self.designs.len() {
-            self.fleets[d].get_or_init(|| {
-                self.builder.build_with_cache(self.designs[d], &mut self.cache.lock().unwrap())
-            });
+            self.fleets[d]
+                .get_or_init(|| self.builder.build_with_cache(self.designs[d], &self.cache));
         }
     }
 
@@ -544,10 +571,8 @@ impl<'a> FleetPipeline<'a> {
             self.designs.len(),
             mode,
             |d| {
-                let fleet = self.fleets[d].get_or_init(|| {
-                    self.builder
-                        .build_with_cache(self.designs[d], &mut self.cache.lock().unwrap())
-                });
+                let fleet = self.fleets[d]
+                    .get_or_init(|| self.builder.build_with_cache(self.designs[d], &self.cache));
                 if stage_copies {
                     fleet.prepare()
                 } else {
@@ -742,11 +767,11 @@ mod tests {
     fn shared_cache_dedupes_across_designs() {
         let g = test_graph(120, 6);
         let builder = Fleet::builder(EngineBuilder::dr(3, 3)).parts(2);
-        let mut cache = PlanCache::new(EngineBuilder::dr(3, 3));
+        let cache = PlanCache::new(EngineBuilder::dr(3, 3));
         // Two "designs" over the same graph: identical partitions, so the
         // second build must be all cache hits.
-        let first = builder.build_with_cache(std::slice::from_ref(&g), &mut cache);
-        let second = builder.build_with_cache(std::slice::from_ref(&g), &mut cache);
+        let first = builder.build_with_cache(std::slice::from_ref(&g), &cache);
+        let second = builder.build_with_cache(std::slice::from_ref(&g), &cache);
         assert_eq!(first.cache_stats().lookups(), 2);
         assert_eq!(second.cache_stats().misses, 0, "cross-design reuse");
         assert_eq!(second.cache_stats().hits, 2);
@@ -759,9 +784,9 @@ mod tests {
     #[should_panic(expected = "different engine configuration")]
     fn shared_cache_rejects_mismatched_configuration() {
         let g = test_graph(60, 8);
-        let mut cache = PlanCache::new(EngineBuilder::csr());
+        let cache = PlanCache::new(EngineBuilder::csr());
         let _ = Fleet::builder(EngineBuilder::dr(3, 3))
-            .build_with_cache(std::slice::from_ref(&g), &mut cache);
+            .build_with_cache(std::slice::from_ref(&g), &cache);
     }
 
     #[test]

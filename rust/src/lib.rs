@@ -24,6 +24,13 @@
 //! execution: one engine per subgraph of a design (deduplicated through a
 //! content-hash plan cache), per-subgraph train steps on a bounded worker
 //! pool, and deterministic gradient reduction. See `docs/FLEET.md`.
+//!
+//! Two persistence/serving layers close the loop from benchmark binary to
+//! resident system: [`engine::PlanStore`] persists kernel plans (and
+//! measured K profiles) to disk keyed by adjacency content-hash +
+//! engine-configuration signature, so a restarted process warm-starts
+//! Alg. 1 stage 1; and the [`serve`] subsystem runs a bounded job queue
+//! over one shared disk-backed plan cache. See `docs/SERVE.md`.
 
 pub mod bench;
 pub mod config;
@@ -34,6 +41,7 @@ pub mod graph;
 pub mod nn;
 pub mod runtime;
 pub mod sched;
+pub mod serve;
 pub mod sparse;
 pub mod tensor;
 pub mod train;

@@ -5,25 +5,35 @@
 //!                style statistics and Fig.-4 degree histograms.
 //!   train      — train DR-CircuitGNN (or a homogeneous baseline) on
 //!                Mini-CircuitNet; report Table-2 metrics.
-//!   profile-k  — the §4.3 preprocessing pass: per-subgraph optimal K.
+//!   profile-k  — the §4.3 preprocessing pass: per-subgraph optimal K
+//!                (persisted to `--plan-store` for the auto policy).
+//!   serve      — resident serve loop: jobs from `--serve <file>` through
+//!                a bounded queue over one shared plan cache.
 //!   e2e        — one end-to-end step per Table-1 graph under each engine
 //!                and schedule; report Table-3 style speedups.
 //!   runtime    — inspect and smoke-run AOT artifacts via PJRT.
+//!
+//! `--plan-store <dir>` (train / profile-k / serve) persists kernel plans
+//! and K profiles keyed by adjacency content-hash + engine signature, so
+//! a second run warm-starts Alg. 1 stage 1 from disk.
 //!
 //! Run `dr-circuitgnn help` for options.
 
 use dr_circuitgnn::bench::{fmt_speedup, Table};
 use dr_circuitgnn::config::Config;
 use dr_circuitgnn::datagen::{self, mini_circuitnet, table1_designs};
-use dr_circuitgnn::engine::{auto_select, EngineBuilder};
+use dr_circuitgnn::engine::{auto_select, EngineBuilder, PlanStore};
+use dr_circuitgnn::fleet::{CacheStats, PlanCache};
 use dr_circuitgnn::graph::stats::{degree_report, ImbalanceStats};
 use dr_circuitgnn::nn::HomoKind;
 use dr_circuitgnn::runtime::{ArtifactRegistry, Runtime};
 use dr_circuitgnn::sched::{run_e2e_step, ScheduleMode};
+use dr_circuitgnn::serve::{parse_jobs, ServeConfig, Server};
 use dr_circuitgnn::sparse::GnnaConfig;
 use dr_circuitgnn::train::{kprofile, TrainConfig, Trainer};
 use dr_circuitgnn::util::cli::Args;
 use dr_circuitgnn::util::logger;
+use std::sync::Arc;
 
 fn main() {
     let raw: Vec<String> = std::env::args().skip(1).collect();
@@ -49,6 +59,10 @@ fn main() {
             true,
         )
         .declare("threads", "root thread budget (default: DRCG_THREADS or all cores)", true)
+        .declare("plan-store", "persistent plan store directory (warm-starts Alg. 1 stage 1)", true)
+        .declare("serve", "jobs file for serve mode (one design=… job per line)", true)
+        .declare("serve-workers", "concurrent serve job workers (default 2)", true)
+        .declare("queue-cap", "serve queue capacity (default 16)", true)
         .declare("artifacts", "artifacts directory", true)
         .declare("log", "log level: debug|info|warn|error", true)
         .parse(&raw)
@@ -83,12 +97,13 @@ fn main() {
         "gen-data" => cmd_gen_data(&cfg),
         "train" => cmd_train(&cfg, &args),
         "profile-k" => cmd_profile_k(&cfg),
+        "serve" => cmd_serve(&cfg),
         "e2e" => cmd_e2e(&cfg),
         "runtime" => cmd_runtime(&cfg),
         _ => {
             println!(
                 "dr-circuitgnn — heterogeneous circuit GNN training acceleration\n\n\
-                 commands: gen-data | train | profile-k | e2e | runtime\n\n{}",
+                 commands: gen-data | train | profile-k | serve | e2e | runtime\n\n{}",
                 args.usage("dr-circuitgnn <command>")
             );
             0
@@ -165,16 +180,34 @@ fn cmd_train(cfg: &Config, args: &Args) -> i32 {
     };
     let model_kind = args.get_or("model", "dr").to_string();
     let (scores, secs, params) = if model_kind == "dr" {
+        // All DR paths run through one plan cache (disk-backed when
+        // --plan-store is set) so warm starts and cache traffic are
+        // observable regardless of fleet mode.
+        let cache = match make_cache(cfg) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("--plan-store: {e}");
+                return 1;
+            }
+        };
         let (_, report) = if cfg.fleet.is_on() {
             dr_circuitgnn::info!(
                 "fleet mode: {}{}",
                 cfg.fleet.describe(),
                 if cfg.epoch_pipeline { ", epoch pipeline on" } else { "" }
             );
-            Trainer::train_dr_fleet(&train, &test, &cfg.engine_builder(), &tc, &cfg.fleet)
+            Trainer::train_dr_fleet_cached(
+                &train,
+                &test,
+                &cfg.engine_builder(),
+                &tc,
+                &cfg.fleet,
+                &cache,
+            )
         } else {
-            Trainer::train_dr(&train, &test, &cfg.engine_builder(), &tc)
+            Trainer::train_dr_cached(&train, &test, &cfg.engine_builder(), &tc, &cache)
         };
+        print_plan_line(&report.plan_cache);
         if !report.epoch_overlap.is_empty() {
             let best = report.epoch_overlap.iter().cloned().fold(0.0, f64::max);
             let mean = report.epoch_overlap.iter().sum::<f64>()
@@ -220,16 +253,60 @@ fn cmd_train(cfg: &Config, args: &Args) -> i32 {
     0
 }
 
+/// The one plan cache a command multiplexes through: disk-backed when
+/// `--plan-store` is set, in-memory otherwise. Built over the config's
+/// engine builder so every cached trainer call is plan-compatible.
+fn make_cache(cfg: &Config) -> Result<Arc<PlanCache>, String> {
+    let builder = cfg.engine_builder();
+    Ok(Arc::new(match &cfg.plan_store {
+        Some(dir) => PlanCache::backed_by(builder, dir)?,
+        None => PlanCache::new(builder),
+    }))
+}
+
+/// Stable, machine-greppable warm-start summary (CI asserts the second
+/// `--plan-store` run reports `0 plans built cold`).
+fn print_plan_line(stats: &CacheStats) {
+    println!(
+        "plan store: {} plans built cold, {} loaded warm, {} memory hits, {} persisted",
+        stats.misses, stats.disk_loads, stats.hits, stats.disk_stores
+    );
+}
+
 fn cmd_profile_k(cfg: &Config) -> i32 {
+    let store = match &cfg.plan_store {
+        Some(dir) => match PlanStore::open(dir, &cfg.engine_builder()) {
+            Ok(s) => Some(s),
+            Err(e) => {
+                eprintln!("--plan-store: {e}");
+                return 1;
+            }
+        },
+        None => None,
+    };
     let designs = table1_designs(cfg.scale);
     let mut t = Table::new(
         &format!("§4.3 optimal-K profile (dim {})", cfg.dim),
         &["design", "graph", "edge", "best-K", "timings (k: ms)"],
     );
+    let mut persisted = 0usize;
     for spec in &designs {
         let graphs = datagen::generate_design(spec);
         for g in &graphs {
             let profiles = kprofile::profile_optimal_k(g, cfg.dim, 3, cfg.seed);
+            if let Some(store) = &store {
+                // Persist the measured profile keyed by adjacency hash;
+                // the plan cache's `auto` policy reads it back on the
+                // next cold build or warm load of this graph.
+                let rec = kprofile::to_record(&profiles);
+                match store.store_profile(g.adjacency_hash(), &rec) {
+                    Ok(_) => persisted += 1,
+                    Err(e) => {
+                        eprintln!("profile store failed: {e}");
+                        return 1;
+                    }
+                }
+            }
             for p in &profiles {
                 let detail = p
                     .timings
@@ -248,6 +325,87 @@ fn cmd_profile_k(cfg: &Config) -> i32 {
         }
     }
     t.print();
+    if let Some(store) = &store {
+        println!("K profiles: {persisted} persisted to {}", store.dir().display());
+    }
+    0
+}
+
+fn cmd_serve(cfg: &Config) -> i32 {
+    let jobs_path = match &cfg.serve_jobs {
+        Some(p) => p,
+        None => {
+            eprintln!("serve requires --serve <jobs-file> (one design=… job per line)");
+            return 2;
+        }
+    };
+    let text = match std::fs::read_to_string(jobs_path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("cannot read {}: {e}", jobs_path.display());
+            return 1;
+        }
+    };
+    let jobs = match parse_jobs(&text) {
+        Ok(j) => j,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let cache = match make_cache(cfg) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("--plan-store: {e}");
+            return 1;
+        }
+    };
+    // The design catalog the service holds resident: the Mini-CircuitNet
+    // training split, addressed by design name from job lines.
+    let (train, _test) = mini_circuitnet(cfg.n_designs, cfg.scale, cfg.seed);
+    dr_circuitgnn::info!(
+        "serving {} jobs over {} designs ({} workers, queue cap {})",
+        jobs.len(),
+        train.designs.len(),
+        cfg.serve_workers,
+        cfg.queue_cap
+    );
+    let server = Server::new(&train.designs, cache);
+    let serve_cfg = ServeConfig { workers: cfg.serve_workers, queue_cap: cfg.queue_cap };
+    let report = match server.run(&jobs, &serve_cfg) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("serve failed: {e}");
+            return 1;
+        }
+    };
+    let mut t = Table::new(
+        &format!("serve report — {} jobs, {} workers", report.results.len(), report.workers),
+        &["job", "design", "epochs", "seed", "queue-s", "train-s", "MAE", "cold", "warm", "hits"],
+    );
+    for r in &report.results {
+        t.row(&[
+            r.id.to_string(),
+            r.job.design.clone(),
+            r.job.epochs.to_string(),
+            r.job.seed.to_string(),
+            format!("{:.3}", r.queue_seconds),
+            format!("{:.3}", r.train_seconds),
+            format!("{:.3}", r.report.test_scores.mae),
+            r.cache.misses.to_string(),
+            r.cache.disk_loads.to_string(),
+            r.cache.hits.to_string(),
+        ]);
+    }
+    t.print();
+    println!(
+        "served {} jobs in {:.2}s ({} workers, warm rate {:.0}%)",
+        report.results.len(),
+        report.wall_seconds,
+        report.workers,
+        report.warm_rate() * 100.0
+    );
+    print_plan_line(&report.cache);
     0
 }
 

@@ -1,0 +1,177 @@
+//! Job descriptions for the serve loop.
+//!
+//! A jobs file is plain text, one job per line, `key=value` pairs
+//! separated by whitespace — the same philosophy as the key=value config
+//! files [`crate::config`] reads: no new dependency for a format this
+//! small, and every key mirrors a CLI flag so a job line reads like a
+//! `train` invocation.
+//!
+//! ```text
+//! # design is the only required key; the rest default like `train`.
+//! design=riscv_core epochs=8 seed=7
+//! design=dsp_block  epochs=4 hidden=16 fleet=2x2
+//! ```
+
+use crate::fleet::FleetSpec;
+use crate::train::TrainConfig;
+
+/// One (design, model-config) unit of work.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobSpec {
+    /// Catalog design name this job trains on.
+    pub design: String,
+    pub epochs: usize,
+    pub lr: f32,
+    pub weight_decay: f32,
+    pub hidden: usize,
+    pub seed: u64,
+    /// Fleet schedule for the job's subgraphs (`"1"` = one worker).
+    pub fleet: FleetSpec,
+}
+
+impl Default for JobSpec {
+    fn default() -> JobSpec {
+        JobSpec {
+            design: String::new(),
+            epochs: 5,
+            lr: 2e-4,
+            weight_decay: 1e-5,
+            hidden: 32,
+            seed: 42,
+            fleet: FleetSpec::On { workers: 1, parts: None },
+        }
+    }
+}
+
+impl JobSpec {
+    /// Parse one jobs-file line. `Ok(None)` for blank lines and `#`
+    /// comments; `Err` names the offending key so a typo in a 50-line
+    /// jobs file is findable.
+    pub fn parse(line: &str) -> Result<Option<JobSpec>, String> {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            return Ok(None);
+        }
+        let mut job = JobSpec::default();
+        for tok in line.split_whitespace() {
+            let (key, val) = tok
+                .split_once('=')
+                .ok_or_else(|| format!("expected key=value, got `{tok}`"))?;
+            match key {
+                "design" => job.design = val.to_string(),
+                "epochs" => job.epochs = parse_num(key, val)?,
+                "lr" => job.lr = parse_num(key, val)?,
+                "weight-decay" | "weight_decay" => {
+                    job.weight_decay = parse_num(key, val)?;
+                }
+                "hidden" => job.hidden = parse_num(key, val)?,
+                "seed" => job.seed = parse_num(key, val)?,
+                "fleet" => {
+                    job.fleet =
+                        FleetSpec::parse(val).map_err(|e| format!("fleet: {e}"))?;
+                }
+                other => return Err(format!("unknown job key `{other}`")),
+            }
+        }
+        if job.design.is_empty() {
+            return Err("job line is missing `design=`".to_string());
+        }
+        if job.epochs == 0 {
+            return Err("epochs must be ≥ 1".to_string());
+        }
+        Ok(Some(job))
+    }
+
+    /// The [`TrainConfig`] this job trains under. Serve jobs always run
+    /// the serial (deterministic-by-construction) epoch schedule; graph
+    /// parallelism is the engine builder's choice, shared across jobs so
+    /// every job is plan-compatible with the one shared cache.
+    pub fn train_config(&self, parallel: bool) -> TrainConfig {
+        TrainConfig {
+            epochs: self.epochs,
+            lr: self.lr,
+            weight_decay: self.weight_decay,
+            hidden: self.hidden,
+            seed: self.seed,
+            parallel,
+            epoch_pipeline: false,
+            log_every: 0,
+        }
+    }
+}
+
+/// Parse a whole jobs file; errors are prefixed with their line number.
+pub fn parse_jobs(text: &str) -> Result<Vec<JobSpec>, String> {
+    let mut jobs = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if let Some(job) =
+            JobSpec::parse(line).map_err(|e| format!("jobs file line {}: {e}", i + 1))?
+        {
+            jobs.push(job);
+        }
+    }
+    if jobs.is_empty() {
+        return Err("jobs file contains no jobs".to_string());
+    }
+    Ok(jobs)
+}
+
+fn parse_num<T: std::str::FromStr>(key: &str, val: &str) -> Result<T, String> {
+    val.parse().map_err(|_| format!("{key}: invalid value `{val}`"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_fill_unset_keys() {
+        let job = JobSpec::parse("design=alpha").unwrap().unwrap();
+        assert_eq!(job.design, "alpha");
+        assert_eq!(job.epochs, 5);
+        assert_eq!(job.hidden, 32);
+        assert_eq!(job.seed, 42);
+        assert_eq!(job.fleet, FleetSpec::On { workers: 1, parts: None });
+    }
+
+    #[test]
+    fn explicit_keys_override_defaults() {
+        let job = JobSpec::parse("design=b epochs=8 lr=0.001 weight-decay=0 hidden=16 seed=7 fleet=2x2")
+            .unwrap()
+            .unwrap();
+        assert_eq!(job.epochs, 8);
+        assert_eq!(job.lr, 0.001);
+        assert_eq!(job.weight_decay, 0.0);
+        assert_eq!(job.hidden, 16);
+        assert_eq!(job.seed, 7);
+        assert_eq!(job.fleet, FleetSpec::On { workers: 2, parts: Some(2) });
+    }
+
+    #[test]
+    fn comments_and_blanks_are_skipped() {
+        assert_eq!(JobSpec::parse("").unwrap(), None);
+        assert_eq!(JobSpec::parse("   ").unwrap(), None);
+        assert_eq!(JobSpec::parse("# design=ghost").unwrap(), None);
+    }
+
+    #[test]
+    fn bad_lines_error_loudly() {
+        assert!(JobSpec::parse("epochs=3").unwrap_err().contains("design"));
+        assert!(JobSpec::parse("design=a epochs=zero").unwrap_err().contains("epochs"));
+        assert!(JobSpec::parse("design=a turbo=1").unwrap_err().contains("turbo"));
+        assert!(JobSpec::parse("design=a epochs").unwrap_err().contains("key=value"));
+        assert!(JobSpec::parse("design=a epochs=0").unwrap_err().contains("≥ 1"));
+    }
+
+    #[test]
+    fn jobs_file_reports_line_numbers() {
+        let text = "design=a\n\n# comment\ndesign=b epochs=2\n";
+        let jobs = parse_jobs(text).unwrap();
+        assert_eq!(jobs.len(), 2);
+        assert_eq!(jobs[1].design, "b");
+
+        let err = parse_jobs("design=a\nnonsense\n").unwrap_err();
+        assert!(err.contains("line 2"), "{err}");
+        assert!(parse_jobs("# only comments\n").unwrap_err().contains("no jobs"));
+    }
+}

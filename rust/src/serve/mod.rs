@@ -1,0 +1,346 @@
+//! Long-running serve loop: from benchmark binary to traffic-serving
+//! system.
+//!
+//! The trainer and benches run one (design, model-config) pair and exit —
+//! every invocation pays Alg. 1 stage 1 planning from scratch. This
+//! subsystem keeps the process resident and treats training requests as
+//! *jobs*:
+//!
+//! * **Admission** — jobs enter a bounded MPMC [`queue::Queue`]; producers
+//!   block when the backlog is full, so a burst degrades latency, not
+//!   memory.
+//! * **Multiplexing** — all jobs share one [`PlanCache`] (optionally
+//!   disk-backed via [`crate::engine::PlanStore`]), so the second job on a
+//!   design reuses the first job's engines, and a `--plan-store` makes
+//!   even the *first* job warm across process restarts.
+//! * **Fairness** — `workers` OS threads pop jobs FIFO under equal
+//!   [`Budget`] shares: a long job occupies one worker's share, never the
+//!   whole machine, and queue order bounds every job's wait by the jobs
+//!   ahead of it. No job starves.
+//! * **Determinism** — each job trains with its own seeded RNG through
+//!   [`Trainer::train_dr_fleet_cached`]; engines are read-only at forward
+//!   time, so a job's [`TrainReport`] is bit-identical to a standalone run
+//!   of the same spec regardless of worker count, budget, or queue
+//!   interleaving (gated by `tests/integration_serve.rs`).
+//!
+//! See `docs/SERVE.md` for the full walkthrough.
+
+pub mod job;
+pub mod queue;
+
+pub use job::{parse_jobs, JobSpec};
+pub use queue::Queue;
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::fleet::{CacheStats, PlanCache};
+use crate::graph::HeteroGraph;
+use crate::train::{TrainReport, Trainer};
+use crate::util::pool::Budget;
+
+/// Serve-loop shape: worker threads and queue capacity.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// Concurrent job workers (clamped to ≥ 1). Each gets an equal share
+    /// of the ambient [`Budget`].
+    pub workers: usize,
+    /// Queue capacity; producers block (admission control) when full.
+    pub queue_cap: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig { workers: 2, queue_cap: 16 }
+    }
+}
+
+/// Outcome of one job: the training report plus serve-side timings.
+#[derive(Clone, Debug)]
+pub struct JobResult {
+    /// Position of the job in the submitted jobs list (results are
+    /// returned sorted by this id, whatever order workers finished in).
+    pub id: usize,
+    pub job: JobSpec,
+    /// Seconds between enqueue and a worker picking the job up.
+    pub queue_seconds: f64,
+    /// Seconds the job spent training.
+    pub train_seconds: f64,
+    /// Seconds between enqueue and completion.
+    pub total_seconds: f64,
+    /// This job's plan-cache traffic (`hits` = engines another job or
+    /// graph already materialised; `misses` = cold plan builds;
+    /// `disk_loads` = warm loads from the backing store).
+    pub cache: CacheStats,
+    pub report: TrainReport,
+}
+
+/// Whole-run summary returned by [`Server::run`].
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    /// Per-job results, sorted by job id.
+    pub results: Vec<JobResult>,
+    /// Wall-clock seconds for the whole run (enqueue of the first job to
+    /// completion of the last).
+    pub wall_seconds: f64,
+    /// Cache traffic across the whole run (delta over the shared cache,
+    /// so pre-warmed entries from before the run don't count).
+    pub cache: CacheStats,
+    /// Worker threads actually spawned (≤ `ServeConfig::workers`, capped
+    /// by the ambient budget's concurrency lease).
+    pub workers: usize,
+}
+
+impl ServeReport {
+    /// Fraction of engine lookups served without building a plan
+    /// (memory hits + disk loads over all lookups).
+    pub fn warm_rate(&self) -> f64 {
+        let lookups = self.cache.lookups();
+        if lookups == 0 {
+            return 0.0;
+        }
+        (self.cache.hits + self.cache.disk_loads) as f64 / lookups as f64
+    }
+}
+
+/// A resident training service over a fixed design catalog and one shared
+/// plan cache.
+pub struct Server<'a> {
+    catalog: &'a [(String, Vec<HeteroGraph>)],
+    cache: Arc<PlanCache>,
+}
+
+/// What travels through the queue: (job id, spec, enqueue instant).
+type Queued = (usize, JobSpec, Instant);
+
+impl<'a> Server<'a> {
+    /// A server over `catalog` designs, multiplexing every job through
+    /// `cache`. The cache's engine configuration is the server's: jobs
+    /// choose training hyper-parameters, not kernels, so all jobs stay
+    /// plan-compatible with the shared cache.
+    pub fn new(catalog: &'a [(String, Vec<HeteroGraph>)], cache: Arc<PlanCache>) -> Server<'a> {
+        Server { catalog, cache }
+    }
+
+    /// The shared plan cache (e.g. to snapshot [`PlanCache::stats`]).
+    pub fn cache(&self) -> &Arc<PlanCache> {
+        &self.cache
+    }
+
+    /// Run `jobs` to completion and return per-job results sorted by job
+    /// id. Jobs naming a design the catalog lacks are rejected up front —
+    /// before any work starts — so a typo'd jobs file fails fast instead
+    /// of half-running.
+    pub fn run(&self, jobs: &[JobSpec], cfg: &ServeConfig) -> Result<ServeReport, String> {
+        for (i, job) in jobs.iter().enumerate() {
+            if !self.catalog.iter().any(|(name, _)| *name == job.design) {
+                return Err(format!(
+                    "job {} requests unknown design `{}` (catalog: {})",
+                    i,
+                    job.design,
+                    self.catalog
+                        .iter()
+                        .map(|(n, _)| n.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                ));
+            }
+        }
+        if jobs.is_empty() {
+            return Err("no jobs to serve".to_string());
+        }
+
+        // One single-design Dataset per catalog entry, built once and
+        // shared by reference across every job that names it.
+        let datasets: Vec<crate::datagen::Dataset> = self
+            .catalog
+            .iter()
+            .map(|(name, graphs)| crate::datagen::Dataset {
+                name: name.clone(),
+                designs: vec![(name.clone(), graphs.clone())],
+            })
+            .collect();
+
+        let stats_before = self.cache.stats();
+        let queue: Queue<Queued> = Queue::bounded(cfg.queue_cap);
+        let results: Mutex<Vec<JobResult>> = Mutex::new(Vec::with_capacity(jobs.len()));
+
+        // Equal budget shares per worker: concurrency never exceeds the
+        // ambient budget, and each worker's jobs run under `share`, so
+        // nested fleet/engine parallelism stays within its lane.
+        let (workers, share) = Budget::current().lease(cfg.workers.max(1));
+
+        let started = Instant::now();
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                let queue = &queue;
+                let results = &results;
+                let datasets = &datasets;
+                s.spawn(move || {
+                    share.with(|| {
+                        while let Some((id, job, enqueued)) = queue.pop() {
+                            let queue_seconds = enqueued.elapsed().as_secs_f64();
+                            let result =
+                                self.run_job(id, job, queue_seconds, enqueued, datasets);
+                            results.lock().unwrap().push(result);
+                        }
+                    })
+                });
+            }
+            // The caller's thread is the producer: push FIFO, blocking
+            // when the queue is full (admission control), then close so
+            // workers drain the backlog and exit.
+            for (id, job) in jobs.iter().enumerate() {
+                queue
+                    .push((id, job.clone(), Instant::now()))
+                    .map_err(|_| "job queue closed before all jobs were admitted")
+                    .expect("serve queue closed early");
+            }
+            queue.close();
+        });
+        let wall_seconds = started.elapsed().as_secs_f64();
+
+        let mut results = results.into_inner().unwrap();
+        results.sort_by_key(|r| r.id);
+        Ok(ServeReport {
+            results,
+            wall_seconds,
+            cache: self.cache.stats().since(&stats_before),
+            workers,
+        })
+    }
+
+    fn run_job(
+        &self,
+        id: usize,
+        job: JobSpec,
+        queue_seconds: f64,
+        enqueued: Instant,
+        datasets: &[crate::datagen::Dataset],
+    ) -> JobResult {
+        let dataset = datasets
+            .iter()
+            .find(|d| d.name == job.design)
+            .expect("designs validated before enqueue");
+        let builder = self.cache.builder().clone();
+        let cfg = job.train_config(builder.is_parallel());
+        let t0 = Instant::now();
+        let (_model, report) = Trainer::train_dr_fleet_cached(
+            dataset,
+            dataset,
+            &builder,
+            &cfg,
+            &job.fleet,
+            &self.cache,
+        );
+        let train_seconds = t0.elapsed().as_secs_f64();
+        JobResult {
+            id,
+            job,
+            queue_seconds,
+            train_seconds,
+            total_seconds: enqueued.elapsed().as_secs_f64(),
+            cache: report.plan_cache,
+            report,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::EngineBuilder;
+    use crate::util::rng::Rng;
+
+    fn catalog() -> Vec<(String, Vec<HeteroGraph>)> {
+        let mut rng = Rng::new(11);
+        let spec = crate::datagen::GraphSpec {
+            n_cells: 40,
+            n_nets: 16,
+            target_near: 240,
+            target_pins: 64,
+            d_cell: 6,
+            d_net: 6,
+        };
+        ["alpha", "beta"]
+            .iter()
+            .enumerate()
+            .map(|(i, name)| {
+                let graphs = (0..2)
+                    .map(|j| crate::datagen::generate_graph(&spec, i * 10 + j, &mut rng))
+                    .collect();
+                (name.to_string(), graphs)
+            })
+            .collect()
+    }
+
+    fn jobs() -> Vec<JobSpec> {
+        parse_jobs(
+            "design=alpha epochs=2 seed=1\n\
+             design=beta epochs=2 seed=2\n\
+             design=alpha epochs=2 seed=3 hidden=16\n",
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn serve_matches_standalone_runs_bitwise() {
+        let catalog = catalog();
+        let jobs = jobs();
+        let builder = EngineBuilder::csr();
+
+        let served = {
+            let server = Server::new(&catalog, Arc::new(PlanCache::new(builder.clone())));
+            server
+                .run(&jobs, &ServeConfig { workers: 2, queue_cap: 2 })
+                .unwrap()
+        };
+        assert_eq!(served.results.len(), jobs.len());
+
+        for (i, r) in served.results.iter().enumerate() {
+            assert_eq!(r.id, i, "results sorted by job id");
+            // Standalone: same spec, fresh cache, direct trainer call.
+            let dataset = crate::datagen::Dataset {
+                name: jobs[i].design.clone(),
+                designs: vec![catalog
+                    .iter()
+                    .find(|(n, _)| *n == jobs[i].design)
+                    .cloned()
+                    .unwrap()],
+            };
+            let cache = Arc::new(PlanCache::new(builder.clone()));
+            let cfg = jobs[i].train_config(builder.is_parallel());
+            let (_m, standalone) = Trainer::train_dr_fleet_cached(
+                &dataset,
+                &dataset,
+                &builder,
+                &cfg,
+                &jobs[i].fleet,
+                &cache,
+            );
+            assert_eq!(
+                r.report.epoch_losses, standalone.epoch_losses,
+                "job {i} diverged from its standalone run"
+            );
+            assert_eq!(r.report.test_scores.mae, standalone.test_scores.mae);
+        }
+
+        // Three jobs over two designs × two graphs: the shared cache
+        // materialises 4 engines; the repeat-design job hits memory.
+        assert_eq!(served.cache.unique(), 4);
+        assert!(served.cache.hits > 0, "repeat design should hit the cache");
+        assert_eq!(served.cache.disk_loads, 0, "no store attached");
+        assert!(served.warm_rate() > 0.0);
+    }
+
+    #[test]
+    fn unknown_design_is_rejected_before_any_work() {
+        let catalog = catalog();
+        let server = Server::new(&catalog, Arc::new(PlanCache::new(EngineBuilder::csr())));
+        let jobs = parse_jobs("design=ghost\n").unwrap();
+        let err = server.run(&jobs, &ServeConfig::default()).unwrap_err();
+        assert!(err.contains("ghost"), "{err}");
+        assert!(err.contains("alpha"), "error lists the catalog: {err}");
+        assert_eq!(server.cache().stats().lookups(), 0);
+    }
+}

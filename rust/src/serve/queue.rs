@@ -1,0 +1,198 @@
+//! Bounded MPMC job queue for the serve loop.
+//!
+//! A deliberately small Condvar queue (in the spirit of
+//! [`crate::util::pool::Handoff`], which carries exactly one item between
+//! the scheduler's two pipeline lanes): a `Mutex<VecDeque>` with one
+//! condvar for consumers and one for producers. Producers block while the
+//! queue is at capacity — admission control, so a burst of jobs cannot
+//! balloon memory — and consumers block while it is empty. `close()`
+//! drains gracefully: producers are refused immediately, consumers keep
+//! popping until the backlog is empty and then observe `None`.
+//!
+//! FIFO order is guaranteed for the queue itself; with several workers the
+//! *completion* order is of course up to the scheduler, which is why
+//! [`super::ServeReport`] sorts results by job id.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+struct State<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// Bounded multi-producer multi-consumer FIFO queue.
+pub struct Queue<T> {
+    cap: usize,
+    state: Mutex<State<T>>,
+    /// Signalled when an item is pushed or the queue is closed.
+    not_empty: Condvar,
+    /// Signalled when an item is popped or the queue is closed.
+    not_full: Condvar,
+}
+
+impl<T> Queue<T> {
+    /// A queue holding at most `cap` items (clamped to ≥ 1).
+    pub fn bounded(cap: usize) -> Queue<T> {
+        Queue {
+            cap: cap.max(1),
+            state: Mutex::new(State { items: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+        }
+    }
+
+    /// Capacity the queue was built with.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Items currently queued (racy by nature; for reporting only).
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Block until there is room, then enqueue `v`. Returns `Err(v)` if
+    /// the queue was closed — the item is handed back so the producer can
+    /// report it as rejected rather than silently dropped.
+    pub fn push(&self, v: T) -> Result<(), T> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.closed {
+                return Err(v);
+            }
+            if st.items.len() < self.cap {
+                st.items.push_back(v);
+                drop(st);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            st = self.not_full.wait(st).unwrap();
+        }
+    }
+
+    /// Block until an item is available and dequeue it. Returns `None`
+    /// once the queue is closed *and* drained — the worker shutdown
+    /// signal.
+    pub fn pop(&self) -> Option<T> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(v) = st.items.pop_front() {
+                drop(st);
+                self.not_full.notify_one();
+                return Some(v);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Close the queue: future `push`es fail, `pop` drains the backlog
+    /// then returns `None`. Idempotent.
+    pub fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        drop(st);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn fifo_single_threaded() {
+        let q = Queue::bounded(4);
+        for i in 0..4 {
+            q.push(i).unwrap();
+        }
+        assert_eq!(q.len(), 4);
+        for i in 0..4 {
+            assert_eq!(q.pop(), Some(i));
+        }
+        q.close();
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn close_drains_backlog_then_stops() {
+        let q = Queue::bounded(8);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        q.close();
+        assert_eq!(q.push(3), Err(3));
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None);
+        assert_eq!(q.pop(), None); // idempotent after drain
+    }
+
+    #[test]
+    fn bounded_push_blocks_until_a_pop_frees_a_slot() {
+        let q = Queue::bounded(1);
+        q.push(0usize).unwrap();
+        let produced = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                // Blocks: queue is full until the main thread pops.
+                q.push(1).unwrap();
+                produced.store(1, Ordering::SeqCst);
+                q.push(2).unwrap();
+                produced.store(2, Ordering::SeqCst);
+                q.close();
+            });
+            assert_eq!(q.pop(), Some(0));
+            assert_eq!(q.pop(), Some(1));
+            assert_eq!(q.pop(), Some(2));
+            assert_eq!(q.pop(), None);
+        });
+        assert_eq!(produced.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn many_producers_many_consumers_lose_nothing() {
+        let q = Queue::bounded(2);
+        let total: usize = 4 * 25;
+        let sum = AtomicUsize::new(0);
+        let popped = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for p in 0..4 {
+                let q = &q;
+                s.spawn(move || {
+                    for i in 0..25 {
+                        q.push(p * 25 + i).unwrap();
+                    }
+                });
+            }
+            let consumers: Vec<_> = (0..3)
+                .map(|_| {
+                    s.spawn(|| {
+                        while let Some(v) = q.pop() {
+                            sum.fetch_add(v, Ordering::SeqCst);
+                            popped.fetch_add(1, Ordering::SeqCst);
+                        }
+                    })
+                })
+                .collect();
+            // Producers run to completion before close() so no push fails.
+            while popped.load(Ordering::SeqCst) < total {
+                std::thread::yield_now();
+            }
+            q.close();
+            for c in consumers {
+                c.join().unwrap();
+            }
+        });
+        assert_eq!(popped.load(Ordering::SeqCst), total);
+        assert_eq!(sum.load(Ordering::SeqCst), (0..total).sum::<usize>());
+    }
+}

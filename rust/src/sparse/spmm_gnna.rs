@@ -98,6 +98,29 @@ impl NeighborGroups {
     pub fn is_empty(&self) -> bool {
         self.groups.is_empty()
     }
+
+    /// Group size this schedule was tiled with (must match the executing
+    /// [`GnnaConfig`]; `spmm_groups_core` asserts it).
+    pub fn group_size(&self) -> usize {
+        self.group_size
+    }
+
+    /// Flatten the schedule into `(row, start, len, shared)` tuples for
+    /// serialization (the plan store writes these verbatim).
+    pub fn export(&self) -> Vec<(u32, u32, u32, bool)> {
+        self.groups.iter().map(|g| (g.row, g.start, g.len, g.shared)).collect()
+    }
+
+    /// Rebuild a schedule from [`export`](Self::export)ed tuples. The caller
+    /// is responsible for pairing it with the same `group_size` config it
+    /// was built under; the execute path re-checks that invariant.
+    pub fn from_parts(group_size: usize, parts: &[(u32, u32, u32, bool)]) -> NeighborGroups {
+        let groups = parts
+            .iter()
+            .map(|&(row, start, len, shared)| Group { row, start, len, shared })
+            .collect();
+        NeighborGroups { groups, group_size }
+    }
 }
 
 /// Forward: `Y = A · X` with neighbor-group scheduling (builds the group
@@ -317,6 +340,22 @@ mod tests {
         let x = Matrix::ones(2, 3);
         let schedule = NeighborGroups::build(&a, &GnnaConfig { group_size: 4, dim_worker: 8 });
         spmm_gnna_planned(&a, &x, &GnnaConfig::default(), &schedule);
+    }
+
+    #[test]
+    fn export_round_trips_and_executes_identically() {
+        let mut rng = Rng::new(6);
+        let a = random_csr(25, 20, 12, &mut rng);
+        let x = Matrix::randn(20, 10, 1.0, &mut rng);
+        let cfg = GnnaConfig { group_size: 8, dim_worker: 8 };
+        let schedule = NeighborGroups::build(&a, &cfg);
+        let rebuilt = NeighborGroups::from_parts(schedule.group_size(), &schedule.export());
+        assert_eq!(rebuilt.len(), schedule.len());
+        assert_eq!(rebuilt.group_size(), cfg.group_size);
+        assert_eq!(rebuilt.export(), schedule.export());
+        let y1 = spmm_gnna_planned(&a, &x, &cfg, &schedule);
+        let y2 = spmm_gnna_planned(&a, &x, &cfg, &rebuilt);
+        assert_eq!(y1.data, y2.data);
     }
 
     #[test]

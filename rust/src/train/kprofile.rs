@@ -14,7 +14,7 @@
 //! that care about accuracy (Fig. 10 shows scores stable across K, so the
 //! default profile is pure speed).
 
-use crate::engine::{AggCache, DrKernel, SpmmKernel};
+use crate::engine::{AggCache, DrKernel, KProfileRecord, SpmmKernel};
 use crate::graph::{Csr, EdgeType, HeteroGraph};
 use crate::sparse::drelu;
 use crate::tensor::Matrix;
@@ -86,24 +86,26 @@ pub fn profile_optimal_k(g: &HeteroGraph, dim: usize, reps: usize, seed: u64) ->
     ]
 }
 
+/// Package a graph's three per-edge profiles as the persistable record the
+/// plan store reads and writes (`kprof-<adjhash>.txt`); the record owns
+/// the K-selection rule ([`KProfileRecord::type_ks`]) so profiling runs
+/// and warm loads resolve `auto` K values identically.
+pub fn to_record(profiles: &[KProfile; 3]) -> KProfileRecord {
+    KProfileRecord {
+        dim: profiles[0].dim,
+        edges: [
+            (profiles[0].best_k, profiles[0].timings.clone()),
+            (profiles[1].best_k, profiles[1].timings.clone()),
+            (profiles[2].best_k, profiles[2].timings.clone()),
+        ],
+    }
+}
+
 /// Map the three per-edge optima to the two per-node-type Ks used by the
 /// engine: cell-source edges are near & pins; net-source is pinned.
+/// Delegates to [`KProfileRecord::type_ks`] — the single selection rule.
 pub fn to_type_ks(profiles: &[KProfile; 3]) -> (usize, usize) {
-    let near = &profiles[0];
-    let pins = &profiles[1];
-    let pinned = &profiles[2];
-    // Cell embeddings feed near and pins: take the faster joint choice
-    // (geometric-mean time across the two edges per candidate K).
-    let mut best = (near.best_k, f64::INFINITY);
-    for &(k, t_near) in &near.timings {
-        if let Some(&(_, t_pins)) = pins.timings.iter().find(|&&(kk, _)| kk == k) {
-            let joint = (t_near * t_pins).sqrt();
-            if joint < best.1 {
-                best = (k, joint);
-            }
-        }
-    }
-    (best.0, pinned.best_k)
+    to_record(profiles).type_ks()
 }
 
 #[cfg(test)]
@@ -148,5 +150,10 @@ mod tests {
         let (k_cell, k_net) = to_type_ks(&profiles);
         assert!(candidate_ks(16).contains(&k_cell));
         assert!(candidate_ks(16).contains(&k_net));
+        // The persistable record carries the same data and rule.
+        let rec = to_record(&profiles);
+        assert_eq!(rec.dim, 16);
+        assert_eq!(rec.edges[2].0, profiles[2].best_k);
+        assert_eq!(rec.type_ks(), (k_cell, k_net));
     }
 }

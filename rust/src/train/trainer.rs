@@ -11,12 +11,13 @@
 use super::metrics::EvalScores;
 use crate::datagen::Dataset;
 use crate::engine::{Engine, EngineBuilder};
-use crate::fleet::{Fleet, FleetPipeline, FleetSpec};
+use crate::fleet::{CacheStats, Fleet, FleetPipeline, FleetSpec, PlanCache};
 use crate::nn::model::{homogenize, HomoView};
 use crate::nn::{mse, Adam, DrCircuitGnn, HomoGnn, HomoKind};
 use crate::sched::ScheduleMode;
 use crate::util::rng::Rng;
 use crate::util::timer::time_it;
+use std::sync::Arc;
 
 /// Training configuration.
 #[derive(Clone, Debug)]
@@ -73,6 +74,12 @@ pub struct TrainReport {
     /// trainer; > 1 means design N+1's prepare genuinely overlapped
     /// design N's execute in that epoch. Empty for every other mode.
     pub epoch_overlap: Vec<f64>,
+    /// Plan-cache lookups this run performed while building its training
+    /// engines (`unique()` = engines materialised; `misses` = Alg. 1
+    /// stage 1 plans built cold, `disk_loads` = warm loads from a
+    /// `--plan-store`). Zero for the homogeneous baselines, which have no
+    /// engine layer.
+    pub plan_cache: CacheStats,
 }
 
 pub struct Trainer;
@@ -85,6 +92,23 @@ impl Trainer {
         engine: &EngineBuilder,
         cfg: &TrainConfig,
     ) -> (DrCircuitGnn, TrainReport) {
+        let cache = PlanCache::new(engine.clone().parallel(cfg.parallel));
+        Self::train_dr_cached(train, test, engine, cfg, &cache)
+    }
+
+    /// [`Trainer::train_dr`] with every engine resolved through a
+    /// caller-owned [`PlanCache`] — possibly disk-backed
+    /// ([`PlanCache::backed_by`]), so a warm restart builds zero Alg. 1
+    /// stage 1 plans. Test-set engines resolve through the same cache, so
+    /// the warm-start property covers evaluation too. The cache must have
+    /// been created from `engine` with `cfg.parallel` applied.
+    pub fn train_dr_cached(
+        train: &Dataset,
+        test: &Dataset,
+        engine: &EngineBuilder,
+        cfg: &TrainConfig,
+        cache: &PlanCache,
+    ) -> (DrCircuitGnn, TrainReport) {
         let mut rng = Rng::new(cfg.seed);
         // Raw feature dims from the first graph.
         let first = train.graphs().next().expect("empty training set");
@@ -93,13 +117,27 @@ impl Trainer {
         let params = model.numel();
         let mut opt = Adam::new(cfg.lr, cfg.weight_decay);
 
-        // Plan every graph once (paper Alg. 1 stage 1): normalisation, CSC
-        // transposition and kernel schedules are paid here, never per step.
         let builder = engine.clone().parallel(cfg.parallel);
-        let engines: Vec<Vec<Engine>> = train
+        assert!(
+            cache.compatible_with(&builder),
+            "plan cache built from a different engine configuration"
+        );
+        // Resolve every graph's engine once (paper Alg. 1 stage 1):
+        // normalisation, CSC transposition and kernel schedules are paid
+        // here — or loaded from the backing store — never per step.
+        let mut plan_cache = CacheStats::default();
+        let engines: Vec<Vec<Arc<Engine>>> = train
             .designs
             .iter()
-            .map(|(_, gs)| gs.iter().map(|g| builder.build(g)).collect())
+            .map(|(_, gs)| {
+                gs.iter()
+                    .map(|g| {
+                        let (eng, lookup) = cache.engine_for_traced(g);
+                        plan_cache.record(lookup);
+                        eng
+                    })
+                    .collect()
+            })
             .collect();
 
         let mut epoch_losses = Vec::with_capacity(cfg.epochs);
@@ -127,7 +165,7 @@ impl Trainer {
             }
         });
 
-        let (test_scores, per_graph_scores) = Self::eval_dr(&mut model, test, &builder);
+        let (test_scores, per_graph_scores) = Self::eval_dr_cached(&mut model, test, cache);
         (
             model,
             TrainReport {
@@ -137,6 +175,7 @@ impl Trainer {
                 train_seconds: secs,
                 params,
                 epoch_overlap: Vec::new(),
+                plan_cache,
             },
         )
     }
@@ -170,6 +209,26 @@ impl Trainer {
         cfg: &TrainConfig,
         spec: &FleetSpec,
     ) -> (DrCircuitGnn, TrainReport) {
+        let cache = Arc::new(PlanCache::new(engine.clone().parallel(cfg.parallel)));
+        Self::train_dr_fleet_cached(train, test, engine, cfg, spec, &cache)
+    }
+
+    /// [`Trainer::train_dr_fleet`] over a caller-owned, possibly shared
+    /// and/or disk-backed [`PlanCache`]. This is the serve loop's job
+    /// body: every concurrent job resolves through one cross-design cache,
+    /// and because fleet execution is bit-identical for any worker
+    /// count/budget and the cache returns the same planned engines
+    /// regardless of who triggered the build, a job's report equals the
+    /// standalone run's bit for bit. The cache must have been created from
+    /// `engine` with `cfg.parallel` applied (panics otherwise).
+    pub fn train_dr_fleet_cached(
+        train: &Dataset,
+        test: &Dataset,
+        engine: &EngineBuilder,
+        cfg: &TrainConfig,
+        spec: &FleetSpec,
+        cache: &Arc<PlanCache>,
+    ) -> (DrCircuitGnn, TrainReport) {
         let mut rng = Rng::new(cfg.seed);
         let first = train.graphs().next().expect("empty training set");
         let (dc, dn) = (first.x_cell.cols, first.x_net.cols);
@@ -178,7 +237,7 @@ impl Trainer {
         let mut opt = Adam::new(cfg.lr, cfg.weight_decay);
 
         let builder = engine.clone().parallel(cfg.parallel);
-        let fleet_builder = Fleet::builder(builder.clone()).spec(spec);
+        let fleet_builder = Fleet::builder(builder).spec(spec);
         let design_graphs: Vec<&[crate::graph::HeteroGraph]> =
             train.designs.iter().map(|(_, gs)| gs.as_slice()).collect();
         let n_designs = design_graphs.len();
@@ -190,7 +249,7 @@ impl Trainer {
         // features only. The two modes differ *only* in where prepare
         // runs — execute owns the model/optimizer on this thread either
         // way, so loss curves are bit-identical.
-        let pipeline = FleetPipeline::new(fleet_builder, design_graphs);
+        let pipeline = FleetPipeline::with_cache(fleet_builder, design_graphs, Arc::clone(cache));
         let mode = if cfg.epoch_pipeline {
             ScheduleMode::Parallel
         } else {
@@ -231,7 +290,13 @@ impl Trainer {
             }
         });
 
-        let (test_scores, per_graph_scores) = Self::eval_dr(&mut model, test, &builder);
+        // This run's share of the shared cache's lookups: summed from the
+        // per-fleet tallies (exact under concurrent cache users — see
+        // `FleetBuilder::build_with_cache`).
+        let plan_cache = (0..pipeline.n_designs())
+            .filter_map(|d| pipeline.fleet(d))
+            .fold(CacheStats::default(), |acc, f| acc.plus(&f.cache_stats()));
+        let (test_scores, per_graph_scores) = Self::eval_dr_cached(&mut model, test, cache);
         (
             model,
             TrainReport {
@@ -241,6 +306,7 @@ impl Trainer {
                 train_seconds: secs,
                 params,
                 epoch_overlap,
+                plan_cache,
             },
         )
     }
@@ -251,10 +317,21 @@ impl Trainer {
         data: &Dataset,
         engine: &EngineBuilder,
     ) -> (EvalScores, Vec<EvalScores>) {
+        Self::eval_dr_cached(model, data, &PlanCache::new(engine.clone()))
+    }
+
+    /// [`Trainer::eval_dr`] resolving test-graph engines through a plan
+    /// cache, so evaluation shares plans with training (and with the
+    /// backing store, when present).
+    pub fn eval_dr_cached(
+        model: &mut DrCircuitGnn,
+        data: &Dataset,
+        cache: &PlanCache,
+    ) -> (EvalScores, Vec<EvalScores>) {
         let mut per_graph = Vec::new();
         for (_, graphs) in &data.designs {
             for g in graphs {
-                let eng = engine.build(g);
+                let eng = cache.engine_for(g);
                 let pred = model.forward(&eng, g);
                 per_graph.push(EvalScores::compute(&pred.data, &g.y_cell.data));
             }
@@ -315,6 +392,7 @@ impl Trainer {
                 train_seconds: secs,
                 params,
                 epoch_overlap: Vec::new(),
+                plan_cache: CacheStats::default(),
             },
         )
     }
@@ -469,6 +547,40 @@ mod tests {
             Trainer::train_dr_fleet(&train, &test, &EngineBuilder::dr(4, 4), &cfg, &spec)
         });
         assert_eq!(wide.epoch_losses, starved.epoch_losses);
+    }
+
+    #[test]
+    fn cached_trainers_match_uncached_and_report_cache_stats() {
+        let (train, test) = tiny_sets();
+        let mut cfg = fast_cfg();
+        cfg.epochs = 2;
+        let engine = EngineBuilder::dr(4, 4);
+        let (_, base) = Trainer::train_dr(&train, &test, &engine, &cfg);
+        assert!(base.plan_cache.unique() > 0, "training must materialise engines");
+        assert_eq!(base.plan_cache.disk_loads, 0, "no store configured");
+
+        let spec = FleetSpec::parse("2").unwrap();
+        let cache = Arc::new(PlanCache::new(engine.clone()));
+        let (_, cached) =
+            Trainer::train_dr_fleet_cached(&train, &test, &engine, &cfg, &spec, &cache);
+        let (_, fresh) = Trainer::train_dr_fleet(&train, &test, &engine, &cfg, &spec);
+        assert_eq!(cached.epoch_losses, fresh.epoch_losses);
+        assert_eq!(cached.plan_cache, fresh.plan_cache);
+        assert!(cached.plan_cache.unique() > 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "different engine configuration")]
+    fn cached_trainer_rejects_mismatched_cache() {
+        let (train, test) = tiny_sets();
+        let cache = PlanCache::new(EngineBuilder::csr());
+        let _ = Trainer::train_dr_cached(
+            &train,
+            &test,
+            &EngineBuilder::dr(4, 4),
+            &fast_cfg(),
+            &cache,
+        );
     }
 
     #[test]

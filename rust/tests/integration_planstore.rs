@@ -1,0 +1,304 @@
+//! Integration: the persistent plan store (ISSUE 6) — warm starts must be
+//! bit-identical to cold builds, corruption must be loud-then-cold, and
+//! training through a disk-backed [`PlanCache`] must not move a single
+//! bit whether the store is present, absent, or corrupted.
+
+use dr_circuitgnn::datagen::{generate_graph, Dataset, GraphSpec};
+use dr_circuitgnn::engine::{plan_counters, Engine, EngineBuilder, PlanStore};
+use dr_circuitgnn::fleet::{FleetSpec, PlanCache};
+use dr_circuitgnn::graph::{EdgeType, HeteroGraph};
+use dr_circuitgnn::sparse::GnnaConfig;
+use dr_circuitgnn::tensor::Matrix;
+use dr_circuitgnn::train::{TrainConfig, Trainer};
+use dr_circuitgnn::util::proptest::check;
+use dr_circuitgnn::util::rng::Rng;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+/// The plan counters are process-global; tests in this binary run on
+/// threads, so tests asserting exact counter deltas serialize through
+/// this lock.
+static COUNTER_GUARD: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    COUNTER_GUARD.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("drcg-it-planstore-{}-{tag}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn graph(seed: u64, n_cells: usize, n_nets: usize) -> HeteroGraph {
+    let mut rng = Rng::new(seed);
+    let spec = GraphSpec {
+        n_cells,
+        n_nets,
+        target_near: n_cells * 6,
+        target_pins: n_nets * 4,
+        d_cell: 6,
+        d_net: 6,
+    };
+    generate_graph(&spec, 0, &mut rng)
+}
+
+/// Forward every edge type through both engines with the same inputs and
+/// assert bit-identical aggregates — the plan/execute contract a
+/// round-tripped plan must honour.
+fn assert_execute_identical(a: &Engine, b: &Engine, g: &HeteroGraph, seed: u64) {
+    let mut rng = Rng::new(seed);
+    for e in EdgeType::ALL {
+        assert_eq!(a.kernel_name(e), b.kernel_name(e), "kernel drift on {}", e.name());
+        let x = Matrix::randn(g.adj(e).cols, 8, 1.0, &mut rng);
+        let src = e.endpoints().0;
+        let prep_a = a.sparsify(&x, src);
+        let prep_b = b.sparsify(&x, src);
+        let (ha, _) = a.aggregate_with(e, &x, prep_a.as_ref());
+        let (hb, _) = b.aggregate_with(e, &x, prep_b.as_ref());
+        let bits_a: Vec<u32> = ha.data.iter().map(|v| v.to_bits()).collect();
+        let bits_b: Vec<u32> = hb.data.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(bits_a, bits_b, "aggregate diverged on {}", e.name());
+    }
+}
+
+/// Round-trip property across every kernel family and random topologies:
+/// store a built engine, load it back, and the loaded engine must execute
+/// bit-identically — with zero Alg. 1 stage 1 plan builds on the load.
+#[test]
+fn proptest_roundtrip_executes_bit_identically() {
+    let _g = lock();
+    let dir = tmp_dir("proptest");
+    check("planstore-roundtrip", 12, 0xD5C6, |gen| {
+        let n_cells = gen.sized(20, 80);
+        let n_nets = gen.sized(8, 30);
+        let g = graph(gen.rng.next_u64(), n_cells, n_nets);
+        let builder = match gen.usize_in(0, 3) {
+            0 => EngineBuilder::csr(),
+            1 => EngineBuilder::gnna(GnnaConfig::default()),
+            2 => EngineBuilder::dr(4, 4),
+            _ => EngineBuilder::auto(),
+        }
+        .parallel(gen.bool());
+        let store = PlanStore::open(&dir, &builder).map_err(|e| e.to_string())?;
+        let built = builder.build(&g);
+        store.store(&g, &built).map_err(|e| e.to_string())?;
+
+        let before = plan_counters();
+        let loaded = store
+            .load(&g, &builder)
+            .map_err(|e| e.to_string())?
+            .ok_or("stored plan not found on load")?;
+        let during = plan_counters().since(&before);
+        if during.plans != 0 || during.cscs != 0 || during.buckets != 0 || during.groups != 0 {
+            return Err(format!("warm load built plans: {during:?}"));
+        }
+        assert_execute_identical(&built, &loaded, &g, gen.rng.next_u64());
+        Ok(())
+    });
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A plan file renamed onto another adjacency's key must be rejected
+/// loudly — content addressing is verified on load, never trusted from
+/// the filename.
+#[test]
+fn hash_mismatch_is_rejected_loudly() {
+    let _g = lock();
+    let dir = tmp_dir("hash-mismatch");
+    let builder = EngineBuilder::dr(4, 4);
+    let store = PlanStore::open(&dir, &builder).unwrap();
+    let g1 = graph(1, 40, 16);
+    let g2 = graph(2, 40, 16);
+    store.store(&g1, &builder.build(&g1)).unwrap();
+    // Masquerade g1's plan as g2's.
+    std::fs::copy(
+        store.plan_path(g1.adjacency_hash()),
+        store.plan_path(g2.adjacency_hash()),
+    )
+    .unwrap();
+    let err = store.load(&g2, &builder).unwrap_err();
+    assert!(err.contains("adjacency hash"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+fn corrupt_one_plan_file(dir: &Path) -> PathBuf {
+    let path = std::fs::read_dir(dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .find(|p| p.extension().is_some_and(|x| x == "plan"))
+        .expect("a .plan file to corrupt");
+    let mut bytes = std::fs::read(&path).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xFF;
+    std::fs::write(&path, &bytes).unwrap();
+    path
+}
+
+/// Corruption through the cache: the backed cache must detect the bad
+/// file (checksum), rebuild cold, and re-persist — the store heals, and
+/// the rebuilt engine matches a never-corrupted build bit for bit.
+#[test]
+fn corrupted_store_rebuilds_cold_and_heals() {
+    let _g = lock();
+    let dir = tmp_dir("corrupt-heal");
+    let builder = EngineBuilder::dr(4, 4);
+    let g = graph(7, 40, 16);
+
+    let cold = PlanCache::backed_by(builder.clone(), &dir).unwrap();
+    let reference = cold.engine_for(&g);
+    assert_eq!(cold.stats().disk_stores, 1);
+
+    corrupt_one_plan_file(&dir);
+
+    let healed = PlanCache::backed_by(builder.clone(), &dir).unwrap();
+    let rebuilt = healed.engine_for(&g);
+    let s = healed.stats();
+    assert_eq!(s.disk_loads, 0, "corrupted file must not load");
+    assert_eq!(s.misses, 1, "must rebuild cold");
+    assert_eq!(s.disk_stores, 1, "must re-persist the healed plan");
+    assert_execute_identical(&reference, &rebuilt, &g, 99);
+
+    // And the store is healed: a third cache loads warm.
+    let warm = PlanCache::backed_by(builder, &dir).unwrap();
+    let loaded = warm.engine_for(&g);
+    assert_eq!(warm.stats().disk_loads, 1);
+    assert_eq!(warm.stats().misses, 0);
+    assert_execute_identical(&reference, &loaded, &g, 100);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Truncated files are rejected the same way — loudly, then cold.
+#[test]
+fn truncated_store_rebuilds_cold() {
+    let _g = lock();
+    let dir = tmp_dir("truncate");
+    let builder = EngineBuilder::gnna(GnnaConfig::default());
+    let g = graph(3, 40, 16);
+    let store = PlanStore::open(&dir, &builder).unwrap();
+    store.store(&g, &builder.build(&g)).unwrap();
+    let path = store.plan_path(g.adjacency_hash());
+    let bytes = std::fs::read(&path).unwrap();
+    std::fs::write(&path, &bytes[..bytes.len() / 3]).unwrap();
+    assert!(store.load(&g, &builder).is_err(), "truncated plan must error");
+
+    let cache = PlanCache::backed_by(builder, &dir).unwrap();
+    let _ = cache.engine_for(&g);
+    assert_eq!(cache.stats().misses, 1);
+    assert_eq!(cache.stats().disk_stores, 1);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+fn four_graph_dataset() -> Dataset {
+    Dataset {
+        name: "planstore-it".into(),
+        designs: vec![
+            ("d0".into(), vec![graph(10, 36, 14), graph(11, 44, 18)]),
+            ("d1".into(), vec![graph(12, 40, 16), graph(13, 48, 20)]),
+        ],
+    }
+}
+
+fn train_once(cache: &Arc<PlanCache>, data: &Dataset) -> Vec<f64> {
+    let cfg = TrainConfig {
+        epochs: 2,
+        lr: 2e-4,
+        weight_decay: 1e-5,
+        hidden: 16,
+        seed: 42,
+        parallel: false,
+        epoch_pipeline: false,
+        log_every: 0,
+    };
+    let spec = FleetSpec::parse("2").unwrap();
+    let (_m, report) =
+        Trainer::train_dr_fleet_cached(data, data, cache.builder(), &cfg, &spec, cache);
+    report.epoch_losses
+}
+
+/// The acceptance gate: training traces are bit-identical with the store
+/// off, cold, warm, and corrupted — and the warm run performs zero
+/// Alg. 1 stage 1 plan builds, by both the cache's stats and the
+/// engine's global counters.
+#[test]
+fn training_is_bit_identical_across_store_states() {
+    let _g = lock();
+    let dir = tmp_dir("train-states");
+    let data = four_graph_dataset();
+    let builder = EngineBuilder::dr(4, 4);
+
+    // Store off: plain in-memory cache.
+    let off = Arc::new(PlanCache::new(builder.clone()));
+    let losses_off = train_once(&off, &data);
+    assert_eq!(off.stats().disk_loads + off.stats().disk_stores, 0);
+
+    // Cold: backed cache over an empty directory builds and persists.
+    let cold = Arc::new(PlanCache::backed_by(builder.clone(), &dir).unwrap());
+    let losses_cold = train_once(&cold, &data);
+    assert_eq!(cold.stats().misses, 4, "four unique adjacencies built cold");
+    assert_eq!(cold.stats().disk_stores, 4);
+    assert_eq!(cold.stats().disk_loads, 0);
+
+    // Warm: a fresh process-equivalent (new cache, same dir) loads all
+    // four plans and builds none — zero stage-1 plan work end to end.
+    let warm = Arc::new(PlanCache::backed_by(builder.clone(), &dir).unwrap());
+    let before = plan_counters();
+    let losses_warm = train_once(&warm, &data);
+    let during = plan_counters().since(&before);
+    assert_eq!(warm.stats().disk_loads, 4, "every plan loaded warm");
+    assert_eq!(warm.stats().misses, 0, "zero plans built cold on the warm run");
+    assert_eq!(during.plans, 0, "global counters agree: zero plan builds");
+    assert_eq!(during.cscs + during.buckets + during.groups, 0);
+
+    // Corrupted: flip a byte in one plan; the run must warn, rebuild that
+    // plan cold, and still produce the identical trace.
+    corrupt_one_plan_file(&dir);
+    let hurt = Arc::new(PlanCache::backed_by(builder, &dir).unwrap());
+    let losses_hurt = train_once(&hurt, &data);
+    assert_eq!(hurt.stats().misses, 1, "exactly the corrupted plan rebuilds");
+    assert_eq!(hurt.stats().disk_loads, 3);
+
+    let bits = |xs: &[f64]| xs.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+    assert_eq!(bits(&losses_off), bits(&losses_cold), "store-on changed numerics");
+    assert_eq!(bits(&losses_off), bits(&losses_warm), "warm start changed numerics");
+    assert_eq!(bits(&losses_off), bits(&losses_hurt), "corruption recovery changed numerics");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// K profiles persisted by profile-k must round-trip bit-exactly and only
+/// influence `auto`-kernel builds (explicit kernel choices keep their
+/// explicitly-configured K values).
+#[test]
+fn persisted_k_profiles_feed_only_auto_builds() {
+    let _g = lock();
+    let dir = tmp_dir("kprof");
+    let g = graph(21, 40, 16);
+    let auto = EngineBuilder::auto().k_cell(8).k_net(8);
+    let store = PlanStore::open(&dir, &auto).unwrap();
+    let rec = dr_circuitgnn::engine::KProfileRecord {
+        dim: 16,
+        edges: [
+            (4, vec![(2, 3e-3), (4, 1e-3), (8, 2e-3)]),
+            (4, vec![(2, 2e-3), (4, 1e-3), (8, 4e-3)]),
+            (2, vec![(2, 1e-3), (4, 5e-3), (8, 6e-3)]),
+        ],
+    };
+    store.store_profile(g.adjacency_hash(), &rec).unwrap();
+    let back = store.load_profile(g.adjacency_hash()).unwrap().unwrap();
+    assert_eq!(back.dim, rec.dim);
+    assert_eq!(back.type_ks(), rec.type_ks());
+
+    // Auto builds pick the measured Ks up through the store…
+    let eff = store.effective_builder(&auto, &g);
+    let (kc, kn) = rec.type_ks();
+    assert_eq!(eff.k_for(dr_circuitgnn::graph::NodeType::Cell), kc);
+    assert_eq!(eff.k_for(dr_circuitgnn::graph::NodeType::Net), kn);
+    // …explicit kernel choices don't.
+    let explicit = EngineBuilder::dr(8, 8);
+    let store2 = PlanStore::open(&dir, &explicit).unwrap();
+    store2.store_profile(g.adjacency_hash(), &rec).unwrap();
+    let eff2 = store2.effective_builder(&explicit, &g);
+    assert_eq!(eff2.k_for(dr_circuitgnn::graph::NodeType::Cell), 8);
+    std::fs::remove_dir_all(&dir).ok();
+}

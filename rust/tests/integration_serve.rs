@@ -1,0 +1,145 @@
+//! Integration: the serve loop (ISSUE 6) — N jobs through the bounded
+//! queue must produce bit-identical per-job reports to N standalone runs,
+//! at every worker count, under a starved thread budget, and with the
+//! plan store attached.
+
+use dr_circuitgnn::datagen::{generate_graph, GraphSpec};
+use dr_circuitgnn::engine::EngineBuilder;
+use dr_circuitgnn::fleet::PlanCache;
+use dr_circuitgnn::graph::HeteroGraph;
+use dr_circuitgnn::serve::{parse_jobs, JobSpec, ServeConfig, ServeReport, Server};
+use dr_circuitgnn::util::pool::Budget;
+use dr_circuitgnn::util::rng::Rng;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn catalog() -> Vec<(String, Vec<HeteroGraph>)> {
+    let mut rng = Rng::new(5);
+    ["alpha", "beta", "gamma"]
+        .iter()
+        .enumerate()
+        .map(|(i, name)| {
+            let spec = GraphSpec {
+                n_cells: 36 + 4 * i,
+                n_nets: 14 + 2 * i,
+                target_near: 220,
+                target_pins: 60,
+                d_cell: 6,
+                d_net: 6,
+            };
+            let graphs = (0..2).map(|j| generate_graph(&spec, j, &mut rng)).collect();
+            (name.to_string(), graphs)
+        })
+        .collect()
+}
+
+fn jobs() -> Vec<JobSpec> {
+    parse_jobs(
+        "design=alpha epochs=2 seed=1\n\
+         design=beta  epochs=2 seed=2 hidden=16\n\
+         design=gamma epochs=3 seed=3\n\
+         design=alpha epochs=2 seed=4 fleet=2\n\
+         design=beta  epochs=2 seed=5\n",
+    )
+    .unwrap()
+}
+
+fn run(catalog: &[(String, Vec<HeteroGraph>)], workers: usize, queue_cap: usize) -> ServeReport {
+    let cache = Arc::new(PlanCache::new(EngineBuilder::dr(4, 4)));
+    let server = Server::new(catalog, cache);
+    server.run(&jobs(), &ServeConfig { workers, queue_cap }).unwrap()
+}
+
+fn trace(report: &ServeReport) -> Vec<(usize, Vec<u64>, u64)> {
+    report
+        .results
+        .iter()
+        .map(|r| {
+            (
+                r.id,
+                r.report.epoch_losses.iter().map(|v| v.to_bits()).collect(),
+                r.report.test_scores.mae.to_bits(),
+            )
+        })
+        .collect()
+}
+
+/// The determinism gate: any worker count and queue depth produces the
+/// same bits as the single-worker (fully sequential) reference — job
+/// interleaving over the shared cache must never leak between jobs.
+#[test]
+fn concurrent_serving_matches_sequential_bitwise() {
+    let catalog = catalog();
+    let reference = trace(&run(&catalog, 1, 16));
+    assert_eq!(reference.len(), 5);
+    for workers in [2usize, 4] {
+        for queue_cap in [1usize, 16] {
+            let got = trace(&run(&catalog, workers, queue_cap));
+            assert_eq!(
+                got, reference,
+                "{workers} workers / queue cap {queue_cap} diverged from sequential"
+            );
+        }
+    }
+}
+
+/// Same gate under a starved two-thread budget — the CI
+/// `DRCG_THREADS=2` lane runs this file, so fairness degradation
+/// (workers sharing one lease) must not move a bit either.
+#[test]
+fn starved_budget_serving_matches_sequential_bitwise() {
+    let catalog = catalog();
+    let reference = trace(&run(&catalog, 1, 16));
+    let starved = Budget::new(2).with(|| trace(&run(&catalog, 4, 2)));
+    assert_eq!(starved, reference, "starved budget diverged from sequential");
+}
+
+/// FIFO admission + fair workers: every job completes exactly once,
+/// results come back sorted by id, and the shared cache dedupes repeat
+/// designs across jobs.
+#[test]
+fn all_jobs_complete_once_and_share_the_cache() {
+    let catalog = catalog();
+    let report = run(&catalog, 3, 2);
+    let ids: Vec<usize> = report.results.iter().map(|r| r.id).collect();
+    assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+    assert!(report.workers >= 1 && report.workers <= 3);
+    // 3 designs × 2 graphs = 6 unique engines; 5 jobs over them.
+    assert_eq!(report.cache.unique(), 6);
+    assert!(report.cache.hits > 0, "repeat designs must hit the shared cache");
+    for r in &report.results {
+        assert!(r.total_seconds >= r.train_seconds);
+        assert!(r.queue_seconds >= 0.0);
+        assert_eq!(r.report.epoch_losses.len(), r.job.epochs);
+    }
+}
+
+/// Serve over a disk-backed cache: a second server over the same store
+/// directory warm-starts every plan — zero cold builds across the whole
+/// run — and still reproduces the first run's bits.
+#[test]
+fn serve_warm_starts_from_a_plan_store() {
+    let dir: PathBuf =
+        std::env::temp_dir().join(format!("drcg-it-serve-store-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let catalog = catalog();
+
+    let cold = {
+        let cache = Arc::new(PlanCache::backed_by(EngineBuilder::dr(4, 4), &dir).unwrap());
+        let server = Server::new(&catalog, cache);
+        server.run(&jobs(), &ServeConfig { workers: 2, queue_cap: 4 }).unwrap()
+    };
+    assert_eq!(cold.cache.misses, 6, "cold serve builds every unique plan");
+    assert_eq!(cold.cache.disk_stores, 6);
+
+    let warm = {
+        let cache = Arc::new(PlanCache::backed_by(EngineBuilder::dr(4, 4), &dir).unwrap());
+        let server = Server::new(&catalog, cache);
+        server.run(&jobs(), &ServeConfig { workers: 2, queue_cap: 4 }).unwrap()
+    };
+    assert_eq!(warm.cache.misses, 0, "warm serve builds zero plans cold");
+    assert_eq!(warm.cache.disk_loads, 6, "every plan loads from the store");
+    assert!(warm.warm_rate() > 0.99, "all lookups warm: {}", warm.warm_rate());
+    assert_eq!(trace(&warm), trace(&cold), "warm start changed serve numerics");
+    std::fs::remove_dir_all(&dir).ok();
+}
