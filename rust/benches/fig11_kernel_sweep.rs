@@ -13,7 +13,7 @@
 //! (square, dense); speedup decays toward K = dim; backward ≥ forward.
 
 use dr_circuitgnn::bench::workloads::{bench_reps, bench_scale, embedding, table1_graphs};
-use dr_circuitgnn::bench::{measure, Table};
+use dr_circuitgnn::bench::{measure, write_bench_json, Json, Table};
 use dr_circuitgnn::engine::{AggCache, EngineBuilder};
 use dr_circuitgnn::graph::EdgeType;
 use dr_circuitgnn::sparse::GnnaConfig;
@@ -25,6 +25,17 @@ fn main() {
     let ks = [2usize, 4, 8, 16, 32, 64];
     println!("Fig. 11 — kernel sweep (scale {scale}, reps {reps})");
 
+    // One JSON row per (design, graph, dim, edge, kernel[, K]) measurement.
+    let mut json_rows: Vec<Json> = Vec::new();
+    let row_base = |design: &str, gid: usize, dim: usize, edge: EdgeType, kernel: &str| {
+        Json::obj()
+            .set("design", design)
+            .set("graph", gid)
+            .set("dim", dim)
+            .set("edge", edge.name())
+            .set("kernel", kernel)
+    };
+
     for dim in [64usize, 128] {
         // Collect per-edge-type speedups for the summary.
         let mut sum_fwd_csr: Vec<f64> = Vec::new();
@@ -35,6 +46,8 @@ fn main() {
             for g in &graphs {
                 let csr = EngineBuilder::csr().build(g);
                 let gnna = EngineBuilder::gnna(GnnaConfig::default()).build(g);
+                let ell = EngineBuilder::default().kernel("ell").build(g);
+                let bcsr = EngineBuilder::default().kernel("bcsr").build(g);
                 // One DR engine per K, planned once per graph (not per edge).
                 let dr_engines: Vec<_> = ks
                     .iter()
@@ -46,6 +59,14 @@ fn main() {
                     &[
                         "edge", "K", "DR fwd ms", "DR bwd ms", "fwd/cuSP", "bwd/cuSP",
                         "fwd/GNNA", "bwd/GNNA",
+                    ],
+                );
+                // Dense-layout backends are K-independent: one row per edge.
+                let mut tb = Table::new(
+                    &format!("{name} graph {} dim {dim} — dense-layout baselines", g.id),
+                    &[
+                        "edge", "ELL fwd ms", "ELL bwd ms", "BCSR fwd ms", "BCSR bwd ms",
+                        "ELL fwd/cuSP", "BCSR fwd/cuSP",
                     ],
                 );
                 for edge in [EdgeType::Near, EdgeType::Pins, EdgeType::Pinned] {
@@ -76,6 +97,47 @@ fn main() {
                         ))
                     })
                     .median;
+                    let t_ell_f = measure(1, reps, || {
+                        std::hint::black_box(ell.aggregate_with(edge, &x, None))
+                    })
+                    .median;
+                    let t_ell_b = measure(1, reps, || {
+                        std::hint::black_box(ell.aggregate_backward_raw(edge, &dy, &AggCache::None))
+                    })
+                    .median;
+                    let t_bcsr_f = measure(1, reps, || {
+                        std::hint::black_box(bcsr.aggregate_with(edge, &x, None))
+                    })
+                    .median;
+                    let t_bcsr_b = measure(1, reps, || {
+                        std::hint::black_box(bcsr.aggregate_backward_raw(
+                            edge,
+                            &dy,
+                            &AggCache::None,
+                        ))
+                    })
+                    .median;
+                    tb.row(&[
+                        edge.name().to_string(),
+                        format!("{:.3}", t_ell_f * 1e3),
+                        format!("{:.3}", t_ell_b * 1e3),
+                        format!("{:.3}", t_bcsr_f * 1e3),
+                        format!("{:.3}", t_bcsr_b * 1e3),
+                        format!("{:.2}x", t_csr_f / t_ell_f),
+                        format!("{:.2}x", t_csr_f / t_bcsr_f),
+                    ]);
+                    for (kernel, tf, tbwd) in [
+                        ("csr", t_csr_f, t_csr_b),
+                        ("gnna", t_gnna_f, t_gnna_b),
+                        ("ell", t_ell_f, t_ell_b),
+                        ("bcsr", t_bcsr_f, t_bcsr_b),
+                    ] {
+                        json_rows.push(
+                            row_base(&name, g.id, dim, edge, kernel)
+                                .set("fwd_ms", tf * 1e3)
+                                .set("bwd_ms", tbwd * 1e3),
+                        );
+                    }
                     for (k, dr) in &dr_engines {
                         let k = *k;
                         // D-ReLU runs once outside the timed region, like
@@ -100,6 +162,14 @@ fn main() {
                             format!("{:.2}x", t_gnna_f / t_f),
                             format!("{:.2}x", t_gnna_b / t_b),
                         ]);
+                        json_rows.push(
+                            row_base(&name, g.id, dim, edge, "dr")
+                                .set("k", k)
+                                .set("fwd_ms", t_f * 1e3)
+                                .set("bwd_ms", t_b * 1e3)
+                                .set("fwd_speedup_vs_csr", t_csr_f / t_f)
+                                .set("bwd_speedup_vs_csr", t_csr_b / t_b),
+                        );
                         if k <= 8 {
                             sum_fwd_csr.push(t_csr_f / t_f);
                             sum_bwd_csr.push(t_csr_b / t_b);
@@ -109,6 +179,7 @@ fn main() {
                     }
                 }
                 t.print();
+                tb.print();
             }
         }
         println!(
@@ -120,4 +191,12 @@ fn main() {
         );
         println!("paper: dim 64 best 3.21x/3.51x vs cuSPARSE, 2.75x/4.09x vs GNNA (fwd/bwd)\n");
     }
+
+    let json = Json::obj()
+        .set("scale", scale)
+        .set("reps", reps)
+        .set("ks", ks.to_vec())
+        .set("kernels", vec!["csr", "gnna", "ell", "bcsr", "dr"])
+        .set("rows", Json::arr(json_rows));
+    write_bench_json("fig11_kernel_sweep", &json);
 }

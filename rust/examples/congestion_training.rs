@@ -11,7 +11,7 @@
 
 use dr_circuitgnn::datagen::{generate_graph, GraphSpec};
 use dr_circuitgnn::nn::{Adam, Param};
-use dr_circuitgnn::runtime::{pad_graph, ArtifactRegistry, Bucket, Runtime};
+use dr_circuitgnn::runtime::{pad_graph, pad_graph_strict, ArtifactRegistry, Bucket, Runtime};
 use dr_circuitgnn::tensor::Matrix;
 use dr_circuitgnn::train::metrics::EvalScores;
 use dr_circuitgnn::util::rng::Rng;
@@ -89,7 +89,15 @@ fn main() -> anyhow::Result<()> {
             i,
             &mut rng,
         );
-        let p = pad_graph(&g, bucket)?;
+        // Training must not drop edges: prefer strict padding, and fall
+        // back to lossy padding loudly if the bucket is too narrow.
+        let p = match pad_graph_strict(&g, bucket) {
+            Ok(p) => p,
+            Err(e) => {
+                println!("graph {i}: strict padding rejected ({e}); falling back to lossy pad");
+                pad_graph(&g, bucket)?
+            }
+        };
         let total_slots: usize = p.graph_tensors.iter().map(|m| m.data.len()).sum();
         println!(
             "graph {i}: {} cells, {} nets, ELL truncated {}/{} slots",

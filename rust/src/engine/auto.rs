@@ -27,6 +27,17 @@ pub const EVIL_ROW_IMBALANCE: f64 = 4.0;
 /// per-edge k-sparse saving; plain row-parallel CSR is the cheapest choice.
 pub const DR_MIN_AVG_DEGREE: f64 = 2.0;
 
+/// max/avg degree ratio at or below which the profile is uniform enough
+/// for ELL: the width cap (2× avg) covers every row, so the dense slot
+/// loop is branch-free with bounded padding and an empty overflow list.
+pub const ELL_MAX_IMBALANCE: f64 = 1.5;
+
+/// Average degree from which blocked-CSR's row-block × feature-tile reuse
+/// beats plain group scheduling on balanced-but-not-uniform rows: a warp's
+/// worth of neighbors per row means each hot `X` row is re-read often
+/// enough that keeping it cache-resident pays.
+pub const BCSR_MIN_AVG_DEGREE: f64 = WARP_SIZE as f64;
+
 /// One auto-selection outcome, with the rationale for logs and tables.
 #[derive(Clone, Debug)]
 pub struct AutoDecision {
@@ -64,6 +75,25 @@ pub fn auto_select(adj: &Csr, edge: EdgeType) -> AutoDecision {
                 "imbalance {:.1} > {EVIL_ROW_IMBALANCE}: evil rows need the \
                  degree-bucketed dynamic schedule",
                 s.imbalance
+            ),
+        )
+    } else if s.imbalance <= ELL_MAX_IMBALANCE {
+        (
+            KernelSpec::Ell,
+            format!(
+                "avg degree {:.1}, imbalance {:.1} <= {ELL_MAX_IMBALANCE}: low-variance \
+                 dense profile; width-capped ELL padding is bounded and the dense \
+                 slot loop is branch-free",
+                s.avg_degree, s.imbalance
+            ),
+        )
+    } else if s.avg_degree >= BCSR_MIN_AVG_DEGREE {
+        (
+            KernelSpec::Bcsr,
+            format!(
+                "avg degree {:.1} >= {BCSR_MIN_AVG_DEGREE}, imbalance {:.1}: wide \
+                 balanced rows; row-block x feature-tile keeps hot X rows in cache",
+                s.avg_degree, s.imbalance
             ),
         )
     } else {
@@ -111,10 +141,32 @@ mod tests {
     }
 
     #[test]
-    fn dense_balanced_rows_get_gnna() {
+    fn uniform_dense_rows_get_ell() {
+        // Zero-variance degree profile: the ELL width cap covers every
+        // row, so the branch-free dense loop wins.
         let adj = graph_with_degrees(&[40; 16]);
         let d = auto_select(&adj, EdgeType::Near);
+        assert_eq!(d.spec, KernelSpec::Ell, "{}", d.reason);
+        assert!(d.reason.contains("ELL") || d.reason.contains("low-variance"), "{}", d.reason);
+    }
+
+    #[test]
+    fn dense_varied_rows_still_get_gnna() {
+        // avg 16.25, max 30 → imbalance ≈ 1.85: too varied for ELL, too
+        // narrow for BCSR, not skewed enough for DR buckets.
+        let adj = graph_with_degrees(&[10, 20, 10, 20, 30, 10, 20, 10]);
+        let d = auto_select(&adj, EdgeType::Near);
         assert_eq!(d.spec, KernelSpec::Gnna, "{}", d.reason);
+    }
+
+    #[test]
+    fn wide_balanced_rows_get_bcsr() {
+        // avg 65, max 100 → imbalance ≈ 1.54: past the ELL uniformity bar
+        // but wide enough that cache tiling pays.
+        let adj = graph_with_degrees(&[30, 100, 30, 100]);
+        let d = auto_select(&adj, EdgeType::Near);
+        assert_eq!(d.spec, KernelSpec::Bcsr, "{}", d.reason);
+        assert!(d.reason.contains("cache"), "{}", d.reason);
     }
 
     #[test]

@@ -12,8 +12,9 @@
 
 use crate::graph::{Cbsr, Csc, Csr};
 use crate::sparse::{
-    dr_spmm, dr_spmm_bwd, spmm_csr, spmm_csr_bwd, spmm_gnna_bwd_planned, spmm_gnna_planned,
-    DegreeBuckets, GnnaConfig, NeighborGroups,
+    dr_spmm, dr_spmm_bwd, spmm_bcsr, spmm_bcsr_bwd, spmm_csr, spmm_csr_bwd, spmm_ell,
+    spmm_gnna_bwd_planned, spmm_gnna_planned, BlockSchedule, DegreeBuckets, EllLayout, GnnaConfig,
+    NeighborGroups,
 };
 use crate::tensor::Matrix;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -23,6 +24,8 @@ static PLANS_BUILT: AtomicUsize = AtomicUsize::new(0);
 static CSCS_BUILT: AtomicUsize = AtomicUsize::new(0);
 static BUCKETS_BUILT: AtomicUsize = AtomicUsize::new(0);
 static GROUPS_BUILT: AtomicUsize = AtomicUsize::new(0);
+static ELLS_BUILT: AtomicUsize = AtomicUsize::new(0);
+static BLOCKS_BUILT: AtomicUsize = AtomicUsize::new(0);
 
 /// Snapshot of the process-wide plan-construction counters.
 ///
@@ -40,6 +43,10 @@ pub struct PlanCounters {
     pub buckets: usize,
     /// Neighbor-group schedules built (GNNA plans; counts fwd+bwd as one).
     pub groups: usize,
+    /// ELL slot layouts built (ELL plans).
+    pub ells: usize,
+    /// Blocked-CSR schedules built (BCSR plans; counts fwd+bwd as one).
+    pub blocks: usize,
 }
 
 impl PlanCounters {
@@ -50,6 +57,8 @@ impl PlanCounters {
             cscs: self.cscs - earlier.cscs,
             buckets: self.buckets - earlier.buckets,
             groups: self.groups - earlier.groups,
+            ells: self.ells - earlier.ells,
+            blocks: self.blocks - earlier.blocks,
         }
     }
 }
@@ -61,6 +70,8 @@ pub fn plan_counters() -> PlanCounters {
         cscs: CSCS_BUILT.load(Ordering::Relaxed),
         buckets: BUCKETS_BUILT.load(Ordering::Relaxed),
         groups: GROUPS_BUILT.load(Ordering::Relaxed),
+        ells: ELLS_BUILT.load(Ordering::Relaxed),
+        blocks: BLOCKS_BUILT.load(Ordering::Relaxed),
     }
 }
 
@@ -80,6 +91,10 @@ pub struct KernelPlan {
     pub buckets: Option<DegreeBuckets>,
     /// GNNA-analog neighbor groups, forward and backward.
     pub gnna: Option<GnnaPlan>,
+    /// Width-capped lossless ELL slot layout (ELL kernel forward).
+    pub ell: Option<EllLayout>,
+    /// Blocked-CSR row-block × feature-tile schedule (BCSR kernel).
+    pub blocks: Option<BlockSchedule>,
 }
 
 /// The GNNA kernel's cached schedules: forward groups over the adjacency
@@ -98,7 +113,7 @@ impl KernelPlan {
         let csc = adj.to_csc();
         PLANS_BUILT.fetch_add(1, Ordering::Relaxed);
         CSCS_BUILT.fetch_add(1, Ordering::Relaxed);
-        KernelPlan { adj, csc, buckets: None, gnna: None }
+        KernelPlan { adj, csc, buckets: None, gnna: None, ell: None, blocks: None }
     }
 
     /// Add the DR-SpMM degree-bucket schedule.
@@ -116,6 +131,21 @@ impl KernelPlan {
         let bwd_groups = NeighborGroups::build_from_indptr(&self.csc.indptr, cfg);
         GROUPS_BUILT.fetch_add(1, Ordering::Relaxed);
         self.gnna = Some(GnnaPlan { fwd_groups, bwd_groups });
+        self
+    }
+
+    /// Add the width-capped lossless ELL slot layout (ELL kernel forward).
+    pub fn with_ell(mut self) -> KernelPlan {
+        let width = EllLayout::capped_width(&self.adj);
+        self.ell = Some(EllLayout::build(&self.adj, width));
+        ELLS_BUILT.fetch_add(1, Ordering::Relaxed);
+        self
+    }
+
+    /// Add the blocked-CSR row-block schedule (forward + backward).
+    pub fn with_blocks(mut self) -> KernelPlan {
+        self.blocks = Some(BlockSchedule::build(&self.adj, &self.csc));
+        BLOCKS_BUILT.fetch_add(1, Ordering::Relaxed);
         self
     }
 }
@@ -300,6 +330,76 @@ impl SpmmKernel for DrKernel {
     }
 }
 
+/// Width-capped lossless ELL: dense slot layout with a branch-free inner
+/// loop for low-variance degree profiles; edges past the cap run through
+/// the overflow side-list, so no edge is ever dropped.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EllKernel;
+
+impl SpmmKernel for EllKernel {
+    fn name(&self) -> &'static str {
+        "ell"
+    }
+
+    fn display_name(&self) -> &'static str {
+        "ELLPACK"
+    }
+
+    fn plan(&self, adj: Csr) -> KernelPlan {
+        KernelPlan::base(adj).with_ell()
+    }
+
+    fn forward(
+        &self,
+        plan: &KernelPlan,
+        x: &Matrix,
+        _prep: Option<&Arc<Cbsr>>,
+    ) -> (Matrix, AggCache) {
+        let ell = plan.ell.as_ref().expect("plan was not built by the ELL kernel");
+        (spmm_ell(ell, x), AggCache::None)
+    }
+
+    fn backward(&self, plan: &KernelPlan, dy: &Matrix, _cache: &AggCache) -> Gradient {
+        // The backward traversal is column-major either way; the SIMD'd
+        // CSC walk is the natural transpose of the ELL forward.
+        Gradient::Dense(spmm_csr_bwd(&plan.csc, dy))
+    }
+}
+
+/// Blocked-CSR: nnz-balanced row blocks × feature-dim tiles keep hot `X`
+/// rows cache-resident across a block. Bit-identical to the CSR baseline.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BcsrKernel;
+
+impl SpmmKernel for BcsrKernel {
+    fn name(&self) -> &'static str {
+        "bcsr"
+    }
+
+    fn display_name(&self) -> &'static str {
+        "Blocked-CSR"
+    }
+
+    fn plan(&self, adj: Csr) -> KernelPlan {
+        KernelPlan::base(adj).with_blocks()
+    }
+
+    fn forward(
+        &self,
+        plan: &KernelPlan,
+        x: &Matrix,
+        _prep: Option<&Arc<Cbsr>>,
+    ) -> (Matrix, AggCache) {
+        let sched = plan.blocks.as_ref().expect("plan was not built by the BCSR kernel");
+        (spmm_bcsr(&plan.adj, x, sched), AggCache::None)
+    }
+
+    fn backward(&self, plan: &KernelPlan, dy: &Matrix, _cache: &AggCache) -> Gradient {
+        let sched = plan.blocks.as_ref().expect("plan was not built by the BCSR kernel");
+        Gradient::Dense(spmm_bcsr_bwd(&plan.csc, dy, sched))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -325,6 +425,8 @@ mod tests {
         let kernels: Vec<Box<dyn SpmmKernel>> = vec![
             Box::new(CsrKernel),
             Box::new(GnnaKernel::new(GnnaConfig::default())),
+            Box::new(EllKernel),
+            Box::new(BcsrKernel),
         ];
         let reference = spmm_csr(&a, &x);
         for k in &kernels {
@@ -358,8 +460,49 @@ mod tests {
         assert!(p_csr.buckets.is_none() && p_csr.gnna.is_none());
         let p_gnna = GnnaKernel::default().plan(a.clone());
         assert!(p_gnna.buckets.is_none() && p_gnna.gnna.is_some());
-        let p_dr = DrKernel.plan(a);
+        let p_dr = DrKernel.plan(a.clone());
         assert!(p_dr.buckets.is_some() && p_dr.gnna.is_none());
+        let p_ell = EllKernel.plan(a.clone());
+        assert!(p_ell.ell.is_some() && p_ell.blocks.is_none() && p_ell.buckets.is_none());
+        let p_bcsr = BcsrKernel.plan(a);
+        assert!(p_bcsr.blocks.is_some() && p_bcsr.ell.is_none() && p_bcsr.gnna.is_none());
+    }
+
+    #[test]
+    fn bcsr_is_bitwise_csr_through_the_trait() {
+        let mut rng = Rng::new(5);
+        let a = random_csr(40, 30, 6, &mut rng);
+        let x = Matrix::randn(30, 20, 1.0, &mut rng);
+        let dy = Matrix::randn(40, 20, 1.0, &mut rng);
+        let csr_plan = CsrKernel.plan(a.clone());
+        let bcsr_plan = BcsrKernel.plan(a);
+        let (want, _) = CsrKernel.forward(&csr_plan, &x, None);
+        let (got, _) = BcsrKernel.forward(&bcsr_plan, &x, None);
+        assert_eq!(got.data, want.data);
+        let want_dx = CsrKernel.backward(&csr_plan, &dy, &AggCache::None).into_dense();
+        let got_dx = BcsrKernel.backward(&bcsr_plan, &dy, &AggCache::None).into_dense();
+        assert_eq!(got_dx.data, want_dx.data);
+    }
+
+    #[test]
+    fn ell_plan_is_lossless_even_with_hub_rows() {
+        // One 40-neighbor hub among degree-2 rows: the capped width must
+        // push the hub's tail into the overflow list, not drop it.
+        let mut t: Vec<(usize, usize, f32)> =
+            (0..40usize).map(|c| (0usize, c, 0.5f32)).collect();
+        for r in 1..20usize {
+            t.push((r, r, 1.0));
+            t.push((r, r + 20, 1.0));
+        }
+        let a = Csr::from_triplets(20, 40, &t);
+        let plan = EllKernel.plan(a.clone());
+        let ell = plan.ell.as_ref().unwrap();
+        assert!(ell.width < 40, "cap must not follow the hub (got {})", ell.width);
+        assert!(ell.overflow_nnz() > 0);
+        let x = Matrix::ones(40, 8);
+        let (got, _) = EllKernel.forward(&plan, &x, None);
+        let want = spmm_csr(&a, &x);
+        crate::util::math::assert_allclose(&got.data, &want.data, 1e-6, 1e-6);
     }
 
     #[test]

@@ -45,8 +45,8 @@ pub mod registry;
 
 pub use auto::{auto_select, AutoDecision};
 pub use kernel::{
-    plan_counters, AggCache, CsrKernel, DrKernel, GnnaKernel, GnnaPlan, Gradient, KernelPlan,
-    PlanCounters, SpmmKernel,
+    plan_counters, AggCache, BcsrKernel, CsrKernel, DrKernel, EllKernel, GnnaKernel, GnnaPlan,
+    Gradient, KernelPlan, PlanCounters, SpmmKernel,
 };
 pub use planstore::{KProfileRecord, PlanStore};
 pub use registry::{known_names, KernelEntry, KernelSpec, REGISTRY};
@@ -211,6 +211,29 @@ impl EngineBuilder {
     /// The spec configured for an edge type (per-edge override or default).
     pub fn spec_for(&self, e: EdgeType) -> KernelSpec {
         self.per_edge[edge_index(e)].unwrap_or(self.default)
+    }
+
+    /// Explicit versioned configuration signature — the plan-store and
+    /// plan-cache key. Built field-by-field from the semantically relevant
+    /// state (NOT `format!("{self:?}")`: Debug-derive drift would silently
+    /// invalidate every stored plan, and a field missing from Debug could
+    /// alias two configurations). Two builders that resolve to the same
+    /// effective configuration (e.g. a per-edge override equal to the
+    /// default) produce the same signature. The exact string is pinned by
+    /// a golden test; bump the leading version tag on any change.
+    pub fn signature(&self) -> String {
+        format!(
+            "drcg-engine-config-v1 near={} pins={} pinned={} k_cell={} k_net={} \
+             gnna_group={} gnna_dim={} parallel={}",
+            self.spec_for(EdgeType::Near).name(),
+            self.spec_for(EdgeType::Pins).name(),
+            self.spec_for(EdgeType::Pinned).name(),
+            self.k_cell,
+            self.k_net,
+            self.gnna.group_size,
+            self.gnna.dim_worker,
+            self.parallel,
+        )
     }
 
     /// The D-ReLU K configured for a node type.
@@ -473,7 +496,7 @@ mod tests {
     #[test]
     fn aggregate_shapes_all_kernels() {
         let g = toy_graph();
-        for name in ["csr", "gnna", "dr"] {
+        for name in ["csr", "gnna", "dr", "ell", "bcsr"] {
             let eng = Engine::builder().kernel(name).k_cell(2).k_net(2).build(&g);
             let (h_near, _) = eng.aggregate(EdgeType::Near, &g.x_cell);
             assert_eq!((h_near.rows, h_near.cols), (3, 4), "{name}");
@@ -515,6 +538,68 @@ mod tests {
         assert!(eng.sparsify(&g.x_cell, NodeType::Cell).is_none());
         let net = eng.sparsify(&g.x_net, NodeType::Net).unwrap();
         assert_eq!(net.k, 2);
+    }
+
+    #[test]
+    fn signature_is_pinned_and_explicit() {
+        // Golden strings: any change to the signature scheme must be a
+        // loud, deliberate version bump — it invalidates on-disk plans.
+        assert_eq!(
+            EngineBuilder::default().signature(),
+            "drcg-engine-config-v1 near=dr pins=dr pinned=dr k_cell=8 k_net=8 \
+             gnna_group=32 gnna_dim=32 parallel=false"
+        );
+        assert_eq!(
+            EngineBuilder::dr(2, 4).parallel(true).signature(),
+            "drcg-engine-config-v1 near=dr pins=dr pinned=dr k_cell=2 k_net=4 \
+             gnna_group=32 gnna_dim=32 parallel=true"
+        );
+        assert_eq!(
+            Engine::builder().kernel("ell").kernel_for(EdgeType::Pins, "bcsr").signature(),
+            "drcg-engine-config-v1 near=ell pins=bcsr pinned=ell k_cell=8 k_net=8 \
+             gnna_group=32 gnna_dim=32 parallel=false"
+        );
+    }
+
+    #[test]
+    fn signature_ignores_representation_not_semantics() {
+        // A per-edge override equal to the default is the same effective
+        // configuration → same signature (Debug would disagree) ...
+        let plain = EngineBuilder::csr();
+        let aliased = EngineBuilder::csr().kernel_for(EdgeType::Near, "csr");
+        assert_ne!(format!("{plain:?}"), format!("{aliased:?}"));
+        assert_eq!(plain.signature(), aliased.signature());
+        // ... while every semantic field changes it.
+        let base = EngineBuilder::default();
+        for other in [
+            base.clone().kernel("ell"),
+            base.clone().kernel_spec_for(EdgeType::Pinned, KernelSpec::Bcsr),
+            base.clone().k_cell(3),
+            base.clone().k_net(5),
+            base.clone().gnna_config(GnnaConfig { group_size: 16, dim_worker: 32 }),
+            base.clone().parallel(true),
+        ] {
+            assert_ne!(base.signature(), other.signature());
+        }
+    }
+
+    #[test]
+    fn ell_and_bcsr_engines_match_csr_engine() {
+        let g = toy_graph();
+        let csr = EngineBuilder::csr().build(&g);
+        for name in ["ell", "bcsr"] {
+            let eng = Engine::builder().kernel(name).build(&g);
+            for e in EdgeType::ALL {
+                let x = g.src_features(e);
+                let (want, _) = csr.aggregate(e, x);
+                let (got, cache) = eng.aggregate(e, x);
+                assert_allclose(&got.data, &want.data, 1e-6, 1e-6);
+                let dy = Matrix::ones(want.rows, want.cols);
+                let gw = csr.aggregate_backward(e, &dy, &AggCache::None);
+                let gg = eng.aggregate_backward(e, &dy, &cache);
+                assert_allclose(&gg.data, &gw.data, 1e-6, 1e-6);
+            }
+        }
     }
 
     #[test]

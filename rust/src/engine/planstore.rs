@@ -13,10 +13,11 @@
 //!
 //! * One file per (adjacency, configuration):
 //!   `plan-<adjhash>-<sighash>.plan`. Little-endian, magic `DRCGPLAN`,
-//!   a format version, the builder's `Debug` signature verbatim, the three
-//!   per-edge records (resolved kernel name, normalised CSR, CSC, optional
-//!   degree buckets, optional neighbor groups), and a trailing FNV-1a
-//!   checksum over everything before it.
+//!   a format version, the builder's explicit versioned signature
+//!   ([`EngineBuilder::signature`]) verbatim, the three per-edge records
+//!   (resolved kernel name, normalised CSR, CSC, optional degree buckets,
+//!   optional neighbor groups, optional ELL layout, optional block
+//!   schedule), and a trailing FNV-1a checksum over everything before it.
 //! * Any mismatch — magic, version, signature, adjacency hash, checksum,
 //!   structural invariants, or a kernel name that no longer matches what
 //!   the builder resolves for that adjacency — is a **loud error**: the
@@ -36,14 +37,18 @@
 use super::{edge_index, Engine, EngineBuilder, GnnaPlan, KernelPlan, KernelSpec};
 use crate::graph::csr::{fnv_mix, FNV_OFFSET};
 use crate::graph::{Csc, Csr, EdgeType, HeteroGraph};
-use crate::sparse::{DegreeBuckets, NeighborGroups};
+use crate::sparse::{BlockSchedule, DegreeBuckets, EllLayout, NeighborGroups};
 use std::fs;
 use std::io::Write as _;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 const MAGIC: &[u8; 8] = b"DRCGPLAN";
-const VERSION: u32 = 1;
+/// v1: csr/gnna/dr payloads keyed by the builder's `Debug` string.
+/// v2: explicit [`EngineBuilder::signature`] keys + ELL layout and
+/// blocked-CSR schedule payloads. v1 files are rejected loudly (the caller
+/// rebuilds cold and overwrites them).
+const VERSION: u32 = 2;
 const PROFILE_MAGIC: &str = "DRCGKPROF v1";
 
 /// Unique suffix for temp files so concurrent writers never collide.
@@ -51,11 +56,12 @@ static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
 
 /// A directory of serialized plans for one engine configuration.
 ///
-/// The signature is the builder's full `Debug` rendering — the same
-/// structural identity [`PlanCache::compatible_with`]
-/// (crate::fleet::PlanCache::compatible_with) enforces — so plans built
-/// under different kernel choices, K values, GNNA parameters or schedule
-/// modes can never be confused, even in a shared directory.
+/// The signature is [`EngineBuilder::signature`] — an explicit versioned
+/// rendering of the semantically relevant builder state (never the `Debug`
+/// derive, whose field drift would silently invalidate or alias stores) —
+/// so plans built under different kernel choices, K values, GNNA
+/// parameters or schedule modes can never be confused, even in a shared
+/// directory.
 pub struct PlanStore {
     dir: PathBuf,
     signature: String,
@@ -67,7 +73,7 @@ impl PlanStore {
     pub fn open(dir: &Path, builder: &EngineBuilder) -> Result<PlanStore, String> {
         fs::create_dir_all(dir)
             .map_err(|e| format!("plan store: cannot create {}: {e}", dir.display()))?;
-        Ok(PlanStore { dir: dir.to_path_buf(), signature: format!("{builder:?}") })
+        Ok(PlanStore { dir: dir.to_path_buf(), signature: builder.signature() })
     }
 
     pub fn dir(&self) -> &Path {
@@ -149,6 +155,20 @@ impl PlanStore {
                     w.u8(1);
                     write_groups(&mut w, &gp.fwd_groups);
                     write_groups(&mut w, &gp.bwd_groups);
+                }
+                None => w.u8(0),
+            }
+            match &plan.ell {
+                Some(ell) => {
+                    w.u8(1);
+                    write_ell(&mut w, ell);
+                }
+                None => w.u8(0),
+            }
+            match &plan.blocks {
+                Some(b) => {
+                    w.u8(1);
+                    write_blocks(&mut w, b);
                 }
                 None => w.u8(0),
             }
@@ -265,6 +285,12 @@ impl PlanStore {
             } else {
                 None
             };
+            let ell = if r.u8()? == 1 { Some(read_ell(&mut r, &adj)?) } else { None };
+            let blocks = if r.u8()? == 1 {
+                Some(read_blocks(&mut r, adj.rows, adj.cols)?)
+            } else {
+                None
+            };
 
             // Re-resolve the kernel the builder would pick for this
             // adjacency today and require it to match what was stored —
@@ -288,6 +314,12 @@ impl PlanStore {
                 "gnna" if gnna.is_none() => {
                     return Err(format!("{}: GNNA plan is missing neighbor groups", e.name()))
                 }
+                "ell" if ell.is_none() => {
+                    return Err(format!("{}: ELL plan is missing the slot layout", e.name()))
+                }
+                "bcsr" if blocks.is_none() => {
+                    return Err(format!("{}: BCSR plan is missing the block schedule", e.name()))
+                }
                 _ => {}
             }
             if let Some(gp) = &gnna {
@@ -303,7 +335,7 @@ impl PlanStore {
             kernels.push(kernel);
             // Struct-literal reconstruction: deliberately bypasses
             // `KernelPlan::base` so warm loads register zero plan builds.
-            plans.push(KernelPlan { adj, csc, buckets, gnna });
+            plans.push(KernelPlan { adj, csc, buckets, gnna, ell, blocks });
         }
         if !r.is_empty() {
             return Err(format!("{} trailing bytes after the last edge record", r.remaining()));
@@ -696,6 +728,119 @@ fn write_groups(w: &mut Writer, g: &NeighborGroups) {
     }
 }
 
+fn write_ell(w: &mut Writer, ell: &EllLayout) {
+    w.u64(ell.rows as u64);
+    w.u64(ell.cols as u64);
+    w.u64(ell.width as u64);
+    w.u64(ell.idx.len() as u64);
+    for &i in &ell.idx {
+        w.u32(i);
+    }
+    w.u64(ell.val.len() as u64);
+    for &v in &ell.val {
+        w.u32(v.to_bits());
+    }
+    w.u64(ell.ofl_indptr.len() as u64);
+    for &p in &ell.ofl_indptr {
+        w.u64(p as u64);
+    }
+    w.u64(ell.ofl_indices.len() as u64);
+    for &i in &ell.ofl_indices {
+        w.u32(i);
+    }
+    w.u64(ell.ofl_values.len() as u64);
+    for &v in &ell.ofl_values {
+        w.u32(v.to_bits());
+    }
+}
+
+fn read_ell(r: &mut Reader, adj: &Csr) -> Result<EllLayout, String> {
+    let rows = r.u64()? as usize;
+    let cols = r.u64()? as usize;
+    let width = r.u64()? as usize;
+    let idx = r.u32s()?;
+    let val = r.f32s()?;
+    let ofl_indptr = r.u64s()?;
+    let ofl_indices = r.u32s()?;
+    let ofl_values = r.f32s()?;
+    if rows != adj.rows || cols != adj.cols {
+        return Err(format!(
+            "ELL: stored shape {rows}x{cols}, adjacency is {}x{}",
+            adj.rows, adj.cols
+        ));
+    }
+    let slots = rows.checked_mul(width).ok_or("ELL: rows * width overflows")?;
+    if idx.len() != slots || val.len() != slots {
+        return Err(format!(
+            "ELL: {rows}x{width} layout needs {slots} slots, stored {}/{}",
+            idx.len(),
+            val.len()
+        ));
+    }
+    if idx.iter().any(|&c| c as usize >= cols) {
+        return Err("ELL: slot index out of bounds".into());
+    }
+    if ofl_indptr.len() != rows + 1 || ofl_indptr.first() != Some(&0) {
+        return Err("ELL: overflow indptr malformed".into());
+    }
+    if ofl_indptr.windows(2).any(|w| w[0] > w[1]) {
+        return Err("ELL: overflow indptr is not monotone".into());
+    }
+    let ofl_nnz = *ofl_indptr.last().unwrap();
+    if ofl_indices.len() != ofl_nnz || ofl_values.len() != ofl_nnz {
+        return Err(format!(
+            "ELL: overflow indptr says {ofl_nnz} entries but arrays hold {}/{}",
+            ofl_indices.len(),
+            ofl_values.len()
+        ));
+    }
+    if ofl_indices.iter().any(|&c| c as usize >= cols) {
+        return Err("ELL: overflow index out of bounds".into());
+    }
+    // Losslessness cross-check: every edge past the width cap of each
+    // adjacency row must be in the overflow list, nothing more or less.
+    for row in 0..rows {
+        let want = adj.row_range(row).len().saturating_sub(width);
+        if ofl_indptr[row + 1] - ofl_indptr[row] != want {
+            return Err(format!(
+                "ELL: row {row} overflow holds {} edges, adjacency needs {want}",
+                ofl_indptr[row + 1] - ofl_indptr[row]
+            ));
+        }
+    }
+    Ok(EllLayout { rows, cols, width, idx, val, ofl_indptr, ofl_indices, ofl_values })
+}
+
+fn write_blocks(w: &mut Writer, b: &BlockSchedule) {
+    w.u64(b.tile as u64);
+    w.u64(b.fwd.len() as u64);
+    for &x in &b.fwd {
+        w.u32(x);
+    }
+    w.u64(b.bwd.len() as u64);
+    for &x in &b.bwd {
+        w.u32(x);
+    }
+}
+
+fn read_blocks(r: &mut Reader, fwd_rows: usize, bwd_rows: usize) -> Result<BlockSchedule, String> {
+    let tile = r.u64()? as usize;
+    if tile == 0 {
+        return Err("blocks: feature tile width is zero".into());
+    }
+    let fwd = r.u32s()?;
+    let bwd = r.u32s()?;
+    for (bounds, rows, what) in [(&fwd, fwd_rows, "fwd"), (&bwd, bwd_rows, "bwd")] {
+        if bounds.first() != Some(&0) || bounds.last().copied() != Some(rows as u32) {
+            return Err(format!("blocks: {what} bounds do not span 0..{rows}"));
+        }
+        if bounds.windows(2).any(|w| w[0] >= w[1]) {
+            return Err(format!("blocks: {what} bounds are not strictly increasing"));
+        }
+    }
+    Ok(BlockSchedule { fwd, bwd, tile })
+}
+
 fn read_groups(r: &mut Reader, nnz: usize) -> Result<NeighborGroups, String> {
     let group_size = r.u64()? as usize;
     if group_size == 0 {
@@ -766,6 +911,8 @@ mod tests {
             EngineBuilder::csr(),
             EngineBuilder::gnna(crate::sparse::GnnaConfig { group_size: 8, dim_worker: 8 }),
             EngineBuilder::dr(2, 2),
+            EngineBuilder::default().kernel("ell"),
+            EngineBuilder::default().kernel("bcsr"),
             EngineBuilder::auto(),
         ] {
             let store = PlanStore::open(&dir, &builder).unwrap();
@@ -842,6 +989,80 @@ mod tests {
         // Not even a header.
         fs::write(&path, b"oops").unwrap();
         assert!(store.load(&g, &builder).is_err());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn store_keys_on_the_explicit_builder_signature() {
+        let dir = tmp_dir("explicit-sig");
+        let builder = EngineBuilder::dr(2, 2);
+        let store = PlanStore::open(&dir, &builder).unwrap();
+        // The key is EngineBuilder::signature(), never the Debug string.
+        assert_eq!(store.signature(), builder.signature());
+        assert!(store.signature().starts_with("drcg-engine-config-v1 "));
+        assert_ne!(store.signature(), format!("{builder:?}"));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn old_format_version_is_rejected_loudly_then_rebuilds() {
+        let dir = tmp_dir("oldver");
+        let g = random_graph(19);
+        let builder = EngineBuilder::dr(2, 2);
+        let store = PlanStore::open(&dir, &builder).unwrap();
+        store.store(&g, &builder.build(&g)).unwrap();
+        let path = store.plan_path(g.adjacency_hash());
+        let mut bytes = fs::read(&path).unwrap();
+        // Rewrite the version field (bytes 8..12, after the magic) to the
+        // retired v1 and recompute the trailing checksum, simulating a
+        // store written by the previous format.
+        bytes[8..12].copy_from_slice(&1u32.to_le_bytes());
+        let body_len = bytes.len() - 8;
+        let sum = hash_bytes(&bytes[..body_len]);
+        bytes[body_len..].copy_from_slice(&sum.to_le_bytes());
+        fs::write(&path, &bytes).unwrap();
+        // Loud (names the versions), not a panic and not a silent miss...
+        let err = store.load(&g, &builder).unwrap_err();
+        assert!(err.contains("format version 1"), "unexpected error: {err}");
+        // ...then cold: rebuilding and re-storing restores warm loads.
+        store.store(&g, &builder.build(&g)).unwrap();
+        assert!(store.load(&g, &builder).unwrap().is_some());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn ell_and_bcsr_missing_payloads_are_rejected() {
+        // A stored ELL/BCSR record whose optional payload was stripped
+        // (all presence flags 0, checksum valid) must be rejected for the
+        // missing payload, never execute as a partial plan.
+        let dir = tmp_dir("payloads");
+        let g = random_graph(20);
+        for (name, needle) in [("ell", "slot layout"), ("bcsr", "block schedule")] {
+            let builder = EngineBuilder::default().kernel(name);
+            let store = PlanStore::open(&dir, &builder).unwrap();
+            let engine = builder.build(&g);
+            let mut w = Writer::new();
+            w.bytes(MAGIC);
+            w.u32(VERSION);
+            w.blob(store.signature().as_bytes());
+            w.u64(g.adjacency_hash());
+            w.u64(g.n_cells as u64);
+            w.u64(g.n_nets as u64);
+            for e in EdgeType::ALL {
+                let i = edge_index(e);
+                w.blob(engine.kernels[i].name().as_bytes());
+                write_csr(&mut w, &engine.plans[i].adj);
+                write_csc(&mut w, &engine.plans[i].csc);
+                for _ in 0..4 {
+                    w.u8(0); // buckets / gnna / ell / blocks all absent
+                }
+            }
+            let checksum = hash_bytes(&w.buf);
+            w.u64(checksum);
+            fs::write(store.plan_path(g.adjacency_hash()), &w.buf).unwrap();
+            let err = store.load(&g, &builder).unwrap_err();
+            assert!(err.contains(needle), "{name}: unexpected error: {err}");
+        }
         let _ = fs::remove_dir_all(&dir);
     }
 

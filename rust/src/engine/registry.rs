@@ -6,7 +6,7 @@
 //! vocabulary and its aliases live in exactly one table: [`REGISTRY`].
 
 use super::auto::auto_select;
-use super::kernel::{CsrKernel, DrKernel, GnnaKernel, SpmmKernel};
+use super::kernel::{BcsrKernel, CsrKernel, DrKernel, EllKernel, GnnaKernel, SpmmKernel};
 use crate::graph::{Csr, EdgeType};
 use crate::sparse::GnnaConfig;
 use std::sync::Arc;
@@ -22,8 +22,25 @@ pub enum KernelSpec {
     Gnna,
     /// D-ReLU + DR-SpMM (the paper's kernels).
     Dr,
+    /// Width-capped lossless ELL (dense slots + overflow side-list).
+    Ell,
+    /// Blocked-CSR (row blocks × feature-dim tiles).
+    Bcsr,
     /// Per-edge-type automatic selection from degree statistics.
     Auto,
+}
+
+impl KernelSpec {
+    /// Every variant, in registry order — the exhaustiveness tests pair
+    /// this with [`REGISTRY`] so a half-registered backend cannot land.
+    pub const ALL: &'static [KernelSpec] = &[
+        KernelSpec::Csr,
+        KernelSpec::Gnna,
+        KernelSpec::Dr,
+        KernelSpec::Ell,
+        KernelSpec::Bcsr,
+        KernelSpec::Auto,
+    ];
 }
 
 /// One registry row: canonical name, accepted aliases, one-line summary.
@@ -53,6 +70,18 @@ pub const REGISTRY: &[KernelEntry] = &[
         aliases: &["drspmm", "dr-spmm"],
         summary: "D-ReLU sparsification + DR-SpMM (the paper's kernels)",
         spec: KernelSpec::Dr,
+    },
+    KernelEntry {
+        name: "ell",
+        aliases: &["ellpack"],
+        summary: "width-capped lossless ELL: branch-free dense slots + overflow list",
+        spec: KernelSpec::Ell,
+    },
+    KernelEntry {
+        name: "bcsr",
+        aliases: &["blocked-csr", "blockedcsr"],
+        summary: "blocked-CSR: row blocks x feature tiles for L1/L2 reuse",
+        spec: KernelSpec::Bcsr,
     },
     KernelEntry {
         name: "auto",
@@ -89,6 +118,8 @@ impl KernelSpec {
             KernelSpec::Csr => "csr",
             KernelSpec::Gnna => "gnna",
             KernelSpec::Dr => "dr",
+            KernelSpec::Ell => "ell",
+            KernelSpec::Bcsr => "bcsr",
             KernelSpec::Auto => "auto",
         }
     }
@@ -99,6 +130,8 @@ impl KernelSpec {
             KernelSpec::Csr => "cuSPARSE",
             KernelSpec::Gnna => "GNNA",
             KernelSpec::Dr => "DR-SpMM",
+            KernelSpec::Ell => "ELLPACK",
+            KernelSpec::Bcsr => "Blocked-CSR",
             KernelSpec::Auto => "auto",
         }
     }
@@ -121,6 +154,8 @@ pub fn instantiate(
         KernelSpec::Csr => Arc::new(CsrKernel),
         KernelSpec::Gnna => Arc::new(GnnaKernel::new(*gnna)),
         KernelSpec::Dr => Arc::new(DrKernel),
+        KernelSpec::Ell => Arc::new(EllKernel),
+        KernelSpec::Bcsr => Arc::new(BcsrKernel),
         KernelSpec::Auto => unreachable!("auto_select returns a concrete spec"),
     }
 }
@@ -161,16 +196,45 @@ mod tests {
     }
 
     #[test]
+    fn registry_is_exhaustive_over_kernel_specs() {
+        // Every variant has exactly one registry row and vice versa, so a
+        // half-registered backend (variant without a row, or a row whose
+        // spec duplicates another's) cannot compile-and-pass.
+        assert_eq!(REGISTRY.len(), KernelSpec::ALL.len());
+        for spec in KernelSpec::ALL {
+            let rows: Vec<_> = REGISTRY.iter().filter(|e| e.spec == *spec).collect();
+            assert_eq!(rows.len(), 1, "{spec:?} must have exactly one registry row");
+            assert_eq!(rows[0].name, spec.name());
+        }
+        // Names and aliases are globally unique across the table.
+        let mut seen = std::collections::HashSet::new();
+        for entry in REGISTRY {
+            assert!(seen.insert(entry.name), "duplicate name '{}'", entry.name);
+            for alias in entry.aliases {
+                assert!(seen.insert(alias), "duplicate alias '{alias}'");
+            }
+        }
+    }
+
+    #[test]
+    fn new_backends_parse_and_round_trip() {
+        assert_eq!(KernelSpec::parse("ell").unwrap(), KernelSpec::Ell);
+        assert_eq!(KernelSpec::parse("ELLPACK").unwrap(), KernelSpec::Ell);
+        assert_eq!(KernelSpec::parse("bcsr").unwrap(), KernelSpec::Bcsr);
+        assert_eq!(KernelSpec::parse("blocked-csr").unwrap(), KernelSpec::Bcsr);
+        assert_eq!(KernelSpec::parse("blockedcsr").unwrap(), KernelSpec::Bcsr);
+    }
+
+    #[test]
     fn instantiate_concrete_specs() {
         let adj = Csr::from_triplets(2, 2, &[(0, 1, 1.0)]);
         let cfg = GnnaConfig::default();
-        for (spec, name) in [
-            (KernelSpec::Csr, "csr"),
-            (KernelSpec::Gnna, "gnna"),
-            (KernelSpec::Dr, "dr"),
-        ] {
+        // Every concrete spec instantiates a kernel whose name round-trips
+        // back through parse to the same spec.
+        for &spec in KernelSpec::ALL.iter().filter(|s| **s != KernelSpec::Auto) {
             let k = instantiate(spec, EdgeType::Near, &adj, &cfg);
-            assert_eq!(k.name(), name);
+            assert_eq!(k.name(), spec.name());
+            assert_eq!(KernelSpec::parse(k.name()).unwrap(), spec);
         }
         // Auto resolves to something concrete.
         let k = instantiate(KernelSpec::Auto, EdgeType::Pins, &adj, &cfg);

@@ -223,10 +223,11 @@ impl PlanCache {
         }
     }
 
-    /// Diagnostic signature of the builder this cache plans with (the
-    /// full configuration, Debug-rendered).
+    /// Configuration signature of the builder this cache plans with — the
+    /// explicit versioned [`EngineBuilder::signature`], the same key the
+    /// on-disk [`PlanStore`] files are named by.
     pub fn signature(&self) -> String {
-        format!("{:?}", self.builder)
+        self.builder.signature()
     }
 
     /// The configuration this cache plans with.

@@ -15,4 +15,4 @@ pub mod pad;
 
 pub use artifact::{ArtifactMeta, ArtifactRegistry};
 pub use client::{Executable, Runtime};
-pub use pad::{pad_graph, Bucket, PaddedGraph};
+pub use pad::{pad_graph, pad_graph_strict, Bucket, PaddedGraph};

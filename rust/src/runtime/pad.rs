@@ -7,6 +7,7 @@
 //! produces the cell mask used by the masked loss.
 
 use crate::graph::{Csr, HeteroGraph};
+use crate::sparse::EllLayout;
 use crate::tensor::Matrix;
 use anyhow::{bail, Result};
 
@@ -60,25 +61,26 @@ pub struct Ell {
 
 /// ELL-encode a CSR into `rows_cap × width`, truncating over-wide rows.
 /// Index slots of padding entries point at row 0 with value 0 (harmless).
+///
+/// Slot assignment is [`EllLayout::build`] — the same plan-time layout the
+/// `ell` registry kernel executes — so the padded artifact and the exact
+/// kernel agree on every kept slot; the layout's lossless overflow list is
+/// what a fixed-shape artifact cannot carry, so its size is reported as
+/// `truncated` (callers decide whether that is a warning or an error).
 pub fn to_ell(adj: &Csr, rows_cap: usize, width: usize) -> Result<Ell> {
     if adj.rows > rows_cap {
         bail!("adjacency rows {} exceed bucket capacity {}", adj.rows, rows_cap);
     }
+    let layout = EllLayout::build(adj, width);
     let mut idx = Matrix::zeros(rows_cap, width);
     let mut val = Matrix::zeros(rows_cap, width);
-    let mut truncated = 0usize;
     for r in 0..adj.rows {
-        let range = adj.row_range(r);
-        let deg = range.len();
-        if deg > width {
-            truncated += deg - width;
-        }
-        for (slot, p) in range.take(width).enumerate() {
-            *idx.at_mut(r, slot) = adj.indices[p] as f32;
-            *val.at_mut(r, slot) = adj.values[p];
+        for s in 0..width {
+            *idx.at_mut(r, s) = layout.idx[r * width + s] as f32;
+            *val.at_mut(r, s) = layout.val[r * width + s];
         }
     }
-    Ok(Ell { idx, val, truncated })
+    Ok(Ell { idx, val, truncated: layout.overflow_nnz() })
 }
 
 /// A heterograph padded into an artifact bucket, ready to feed PJRT.
@@ -102,6 +104,11 @@ pub struct PaddedGraph {
 ///
 /// Normalisation mirrors the training path: GCN-norm on `near`, row mean
 /// on `pins`/`pinned`.
+///
+/// **Lossy**: rows wider than the bucket are truncated, which changes
+/// numerics on the padded path. Every truncating adjacency is reported
+/// with a loud [`crate::warn!`]; training paths should call
+/// [`pad_graph_strict`] instead, which refuses to drop edges.
 pub fn pad_graph(g: &HeteroGraph, bucket: Bucket) -> Result<PaddedGraph> {
     if g.n_cells > bucket.n_cell || g.n_nets > bucket.n_net {
         bail!(
@@ -126,6 +133,23 @@ pub fn pad_graph(g: &HeteroGraph, bucket: Bucket) -> Result<PaddedGraph> {
     let pinned_t = to_ell(&pinned.transpose(), bucket.n_net, bucket.w_pins)?;
     let pins_f = to_ell(&pins, bucket.n_net, bucket.w_pins)?;
     let pins_t = to_ell(&pins.transpose(), bucket.n_cell, bucket.w_pinned)?;
+    for (name, ell, width) in [
+        ("near fwd", &near_f, bucket.w_near),
+        ("near transpose", &near_t, bucket.w_near),
+        ("pinned fwd", &pinned_f, bucket.w_pinned),
+        ("pinned transpose", &pinned_t, bucket.w_pins),
+        ("pins fwd", &pins_f, bucket.w_pins),
+        ("pins transpose", &pins_t, bucket.w_pinned),
+    ] {
+        if ell.truncated > 0 {
+            crate::warn!(
+                "pad_graph: {name} ELL truncated {} edge(s) at width {width} — \
+                 padded-path numerics will differ from the exact kernels \
+                 (use pad_graph_strict to reject instead)",
+                ell.truncated
+            );
+        }
+    }
     let truncated = near_f.truncated
         + near_t.truncated
         + pinned_f.truncated
@@ -161,6 +185,25 @@ pub fn pad_graph(g: &HeteroGraph, bucket: Bucket) -> Result<PaddedGraph> {
         real_cells: g.n_cells,
         real_nets: g.n_nets,
     })
+}
+
+/// Strict padding for training paths: identical to [`pad_graph`] except
+/// that any width-cap truncation is an **error** — training must not drop
+/// edges (silently changed numerics are how padded-path regressions hide).
+pub fn pad_graph_strict(g: &HeteroGraph, bucket: Bucket) -> Result<PaddedGraph> {
+    let p = pad_graph(g, bucket)?;
+    if p.truncated > 0 {
+        bail!(
+            "bucket too narrow: padding truncated {} edge(s) \
+             (widths near={} pins={} pinned={}); training must not drop edges — \
+             use a wider bucket, or pad_graph for lossy inference padding",
+            p.truncated,
+            bucket.w_near,
+            bucket.w_pins,
+            bucket.w_pinned
+        );
+    }
+    Ok(p)
 }
 
 #[cfg(test)]
@@ -239,6 +282,50 @@ mod tests {
         // Graph tensor shapes match the bucket.
         assert_eq!((p.graph_tensors[0].rows, p.graph_tensors[0].cols), (256, 64));
         assert_eq!((p.graph_tensors[8].rows, p.graph_tensors[8].cols), (128, 16));
+    }
+
+    #[test]
+    fn narrow_bucket_is_lossy_but_loud_and_strict_rejects() {
+        let g = small();
+        let mut b = bucket();
+        b.w_near = 2; // avg near degree ≈ 20 → guaranteed truncation
+        let p = pad_graph(&g, b).unwrap();
+        assert!(p.truncated > 0, "w_near=2 must truncate the near adjacency");
+        let err = pad_graph_strict(&g, b).unwrap_err().to_string();
+        assert!(err.contains("truncat"), "strict error must name truncation: {err}");
+        assert!(err.contains("near=2"), "strict error must report widths: {err}");
+    }
+
+    #[test]
+    fn strict_padding_succeeds_when_bucket_fits() {
+        // Handcrafted graph whose max degrees are known exactly, so the
+        // bucket provably covers every row.
+        let near = Csr::from_triplets(3, 3, &[(0, 1, 1.0), (1, 0, 1.0), (1, 2, 1.0), (2, 1, 1.0)]);
+        let pins = Csr::from_triplets(2, 3, &[(0, 0, 1.0), (0, 1, 1.0), (1, 2, 1.0)]);
+        let g = HeteroGraph {
+            id: 0,
+            n_cells: 3,
+            n_nets: 2,
+            pinned: pins.transpose(),
+            near,
+            pins,
+            x_cell: Matrix::zeros(3, 4),
+            x_net: Matrix::zeros(2, 4),
+            y_cell: Matrix::zeros(3, 1),
+        };
+        let b = Bucket {
+            n_cell: 4,
+            n_net: 4,
+            w_near: 2,
+            w_pins: 2,
+            w_pinned: 2,
+            hidden: 8,
+            k_cell: 2,
+            k_net: 2,
+        };
+        let p = pad_graph_strict(&g, b).unwrap();
+        assert_eq!(p.truncated, 0);
+        assert_eq!(p.graph_tensors.len(), 12);
     }
 
     #[test]

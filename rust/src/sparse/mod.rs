@@ -17,22 +17,43 @@
 //!   (Alg. 1 stage 2), and a column-major (CSC) backward that reuses the
 //!   forward CBSR indices (Alg. 2).
 //!
+//! * [`spmm_ell`] — **width-capped lossless ELL**: dense `rows × width`
+//!   slot layout with a branch-free inner loop and a CSR-style overflow
+//!   side-list for edges past the cap (generalizes the padded
+//!   `runtime::pad::to_ell` bucket layout without dropping edges).
+//! * [`spmm_bcsr`] / [`spmm_bcsr_bwd`] — **blocked CSR**: nnz-balanced
+//!   row blocks × feature-dim tiles so hot `X` rows stay in L1/L2 across
+//!   a block; bit-identical to the CSR baseline.
+//!
+//! The dense f32 rank-1 update shared by all of these lives in
+//! [`simd::axpy`] (4-lane feature-dim register blocking).
+//!
 //! These are the raw kernels; everything above this layer dispatches them
 //! through [`crate::engine`], which owns kernel selection (by name or
 //! per-edge-type `"auto"` policy) and the plan/execute split that caches
-//! the per-graph schedules ([`DegreeBuckets`], [`NeighborGroups`], CSC).
+//! the per-graph schedules ([`DegreeBuckets`], [`NeighborGroups`],
+//! [`EllLayout`], [`BlockSchedule`], CSC).
 
 pub mod dr_spmm;
 pub mod dr_spmm_bwd;
 pub mod drelu;
+pub mod simd;
+pub mod spmm_bcsr;
 pub mod spmm_csr;
+pub mod spmm_ell;
 pub mod spmm_gnna;
 pub mod warp;
 
 pub use dr_spmm::dr_spmm;
 pub use dr_spmm_bwd::{dr_spmm_bwd, dr_spmm_bwd_dense};
 pub use drelu::{drelu, drelu_backward};
+pub use simd::axpy;
+pub use spmm_bcsr::{
+    blocks_from_indptr, spmm_bcsr, spmm_bcsr_bwd, BlockSchedule, BCSR_FEATURE_TILE,
+    BCSR_TARGET_BLOCK_NNZ,
+};
 pub use spmm_csr::{spmm_csr, spmm_csr_bwd, spmm_dense_ref};
+pub use spmm_ell::{spmm_ell, EllLayout, ELL_WIDTH_CAP_FACTOR};
 pub use spmm_gnna::{
     spmm_gnna, spmm_gnna_bwd, spmm_gnna_bwd_planned, spmm_gnna_planned, GnnaConfig, NeighborGroups,
 };

@@ -1,0 +1,231 @@
+//! Blocked-CSR SpMM: row-block × feature-tile cache tiling.
+//!
+//! Plain row-parallel CSR streams `X` rows through cache once per output
+//! row: with wide feature dims, a popular source row is evicted between
+//! the destination rows that read it. This kernel tiles the computation in
+//! two dimensions instead:
+//!
+//! * **row blocks** — contiguous destination-row ranges balanced by nnz
+//!   (a block covers ≈ [`BCSR_TARGET_BLOCK_NNZ`] edges), so the `X` rows a
+//!   neighborhood-local block touches stay resident in L1/L2 while every
+//!   row of the block reads them;
+//! * **feature tiles** — the inner loops run [`BCSR_FEATURE_TILE`]-wide
+//!   column slices, bounding the working set per pass on wide embeddings.
+//!
+//! Each output element still accumulates its row's neighbors in CSR order
+//! (tiling splits the feature dimension, never one element's summation
+//! chain), so results are **bit-identical** to
+//! [`spmm_csr`](crate::sparse::spmm_csr)/[`spmm_csr_bwd`]
+//! (crate::sparse::spmm_csr_bwd) — asserted in the tests below. Blocks
+//! cover disjoint row ranges, so the dispatch needs no atomics; workers
+//! come from the ambient [`crate::util::pool::Budget`].
+
+use crate::graph::{Csc, Csr};
+use crate::sparse::simd::axpy;
+use crate::tensor::Matrix;
+use crate::util::pool::{parallel_for_dynamic, SendPtr};
+
+/// Edges per row block: sized so a block's source-row working set
+/// (≈ target_nnz distinct rows in the worst case, far fewer on
+/// neighborhood-local circuit graphs) fits mid-level cache.
+pub const BCSR_TARGET_BLOCK_NNZ: usize = 4096;
+
+/// Feature columns per inner tile (f32 lanes): 64 floats = 256 bytes per
+/// row slice, four cache lines — small enough that a block's slices of
+/// `Y` and the hot `X` rows coexist in L1.
+pub const BCSR_FEATURE_TILE: usize = 64;
+
+/// The blocked-CSR plan payload: nnz-balanced row-block boundaries for the
+/// forward (over the adjacency) and backward (over the CSC) traversals,
+/// plus the feature-tile width. Stored in the
+/// [`KernelPlan`](crate::engine::KernelPlan) and serialized by the plan
+/// store.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BlockSchedule {
+    /// Forward row-block boundaries: block `b` covers rows
+    /// `fwd[b]..fwd[b+1]`; `fwd[0] == 0`, `fwd.last() == adj.rows`.
+    pub fwd: Vec<u32>,
+    /// Backward column-block boundaries over the CSC (same convention).
+    pub bwd: Vec<u32>,
+    /// Feature-dimension tile width.
+    pub tile: usize,
+}
+
+impl BlockSchedule {
+    /// Build both traversal schedules for one adjacency.
+    pub fn build(adj: &Csr, csc: &Csc) -> BlockSchedule {
+        BlockSchedule {
+            fwd: blocks_from_indptr(&adj.indptr, BCSR_TARGET_BLOCK_NNZ),
+            bwd: blocks_from_indptr(&csc.indptr, BCSR_TARGET_BLOCK_NNZ),
+            tile: BCSR_FEATURE_TILE,
+        }
+    }
+}
+
+/// Split a pointered dimension into contiguous blocks of ≈ `target_nnz`
+/// edges (≥ 1 row each): a block closes as soon as it reaches the target,
+/// so hub-heavy stretches get short blocks and sparse stretches get long
+/// ones — the same load-balancing idea as DR's degree buckets, applied to
+/// contiguous ranges so cache locality survives.
+pub fn blocks_from_indptr(indptr: &[usize], target_nnz: usize) -> Vec<u32> {
+    let rows = indptr.len().saturating_sub(1);
+    let target = target_nnz.max(1);
+    let mut bounds = vec![0u32];
+    let mut start = 0usize;
+    for r in 0..rows {
+        if indptr[r + 1] - indptr[start] >= target {
+            bounds.push((r + 1) as u32);
+            start = r + 1;
+        }
+    }
+    if *bounds.last().unwrap() as usize != rows {
+        bounds.push(rows as u32);
+    }
+    bounds
+}
+
+/// Forward: `Y = A · X`, tiled rows × feature-dim per the schedule.
+pub fn spmm_bcsr(a: &Csr, x: &Matrix, sched: &BlockSchedule) -> Matrix {
+    assert_eq!(a.cols, x.rows, "spmm_bcsr: A cols {} vs X rows {}", a.cols, x.rows);
+    assert_eq!(
+        sched.fwd.last().copied().unwrap_or(0) as usize,
+        a.rows,
+        "spmm_bcsr: schedule covers {} rows, adjacency has {}",
+        sched.fwd.last().copied().unwrap_or(0),
+        a.rows
+    );
+    tiled_spmm(a.rows, &a.indptr, &a.indices, &a.values, x, &sched.fwd, sched.tile)
+}
+
+/// Backward: `dX = Aᵀ · dY` over the CSC columns, same tiling.
+pub fn spmm_bcsr_bwd(a_csc: &Csc, dy: &Matrix, sched: &BlockSchedule) -> Matrix {
+    assert_eq!(
+        a_csc.rows, dy.rows,
+        "spmm_bcsr_bwd: A rows {} vs dY rows {}",
+        a_csc.rows, dy.rows
+    );
+    assert_eq!(
+        sched.bwd.last().copied().unwrap_or(0) as usize,
+        a_csc.cols,
+        "spmm_bcsr_bwd: schedule covers {} cols, CSC has {}",
+        sched.bwd.last().copied().unwrap_or(0),
+        a_csc.cols
+    );
+    tiled_spmm(a_csc.cols, &a_csc.indptr, &a_csc.indices, &a_csc.values, dy, &sched.bwd, sched.tile)
+}
+
+/// The shared blocked kernel over raw pointered storage: one parallel work
+/// item per row block, feature tiles innermost-but-one so the block's hot
+/// `x` rows are re-read while still cached.
+fn tiled_spmm(
+    out_rows: usize,
+    indptr: &[usize],
+    indices: &[u32],
+    values: &[f32],
+    x: &Matrix,
+    bounds: &[u32],
+    tile: usize,
+) -> Matrix {
+    let d = x.cols;
+    let tile = tile.max(1);
+    let mut y = Matrix::zeros(out_rows, d);
+    let y_ptr = SendPtr(y.data.as_mut_ptr());
+    let n_blocks = bounds.len().saturating_sub(1);
+    parallel_for_dynamic(n_blocks, 1, |b| {
+        let (lo, hi) = (bounds[b] as usize, bounds[b + 1] as usize);
+        let yp = y_ptr;
+        let mut c0 = 0;
+        while c0 < d {
+            let c1 = (c0 + tile).min(d);
+            for i in lo..hi {
+                // SAFETY: rows [lo, hi) belong to block b alone.
+                let yrow = unsafe { std::slice::from_raw_parts_mut(yp.0.add(i * d), d) };
+                for p in indptr[i]..indptr[i + 1] {
+                    let j = indices[p] as usize;
+                    axpy(&mut yrow[c0..c1], values[p], &x.row(j)[c0..c1]);
+                }
+            }
+            c0 = c1;
+        }
+    });
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::spmm_csr::{spmm_csr, spmm_csr_bwd};
+    use crate::util::rng::Rng;
+
+    fn random_csr(rows: usize, cols: usize, max_deg: usize, rng: &mut Rng) -> Csr {
+        let mut t = Vec::new();
+        for r in 0..rows {
+            for _ in 0..rng.range(0, max_deg + 1) {
+                t.push((r, rng.below(cols), rng.uniform(0.5, 1.5)));
+            }
+        }
+        Csr::from_triplets(rows, cols, &t)
+    }
+
+    #[test]
+    fn blocks_partition_and_balance() {
+        // Degrees 10,10,10,1,1,1,1,1,1,10 with target 20.
+        let degs = [10usize, 10, 10, 1, 1, 1, 1, 1, 1, 10];
+        let mut indptr = vec![0usize];
+        for d in degs {
+            indptr.push(indptr.last().unwrap() + d);
+        }
+        let b = blocks_from_indptr(&indptr, 20);
+        assert_eq!(b.first(), Some(&0));
+        assert_eq!(b.last().copied(), Some(degs.len() as u32));
+        assert!(b.windows(2).all(|w| w[0] < w[1]), "blocks must be non-empty: {b:?}");
+        // Dense stretch closes at 20 edges after two rows; the sparse
+        // stretch runs until row 9's edges push it past the target.
+        assert_eq!(b, vec![0, 2, 10]);
+        // Degenerate shapes.
+        assert_eq!(blocks_from_indptr(&[0], 8), vec![0]);
+        assert_eq!(blocks_from_indptr(&[0, 0, 0], 8), vec![0, 2]);
+    }
+
+    #[test]
+    fn forward_and_backward_are_bitwise_csr() {
+        let mut rng = Rng::new(3);
+        for (m, n, d) in [(5, 7, 3), (40, 30, 16), (90, 80, 70), (64, 64, 130)] {
+            let a = random_csr(m, n, 6, &mut rng);
+            let csc = a.to_csc();
+            // Tiny block/tile sizes so the schedule actually splits.
+            let sched = BlockSchedule {
+                fwd: blocks_from_indptr(&a.indptr, 8),
+                bwd: blocks_from_indptr(&csc.indptr, 8),
+                tile: 5,
+            };
+            let x = Matrix::randn(n, d, 1.0, &mut rng);
+            assert_eq!(spmm_bcsr(&a, &x, &sched).data, spmm_csr(&a, &x).data);
+            let dy = Matrix::randn(m, d, 1.0, &mut rng);
+            assert_eq!(
+                spmm_bcsr_bwd(&csc, &dy, &sched).data,
+                spmm_csr_bwd(&csc, &dy).data
+            );
+        }
+    }
+
+    #[test]
+    fn default_schedule_covers_everything() {
+        let mut rng = Rng::new(4);
+        let a = random_csr(50, 40, 5, &mut rng);
+        let sched = BlockSchedule::build(&a, &a.to_csc());
+        assert_eq!(sched.fwd.last().copied(), Some(50));
+        assert_eq!(sched.bwd.last().copied(), Some(40));
+        let x = Matrix::randn(40, 12, 1.0, &mut rng);
+        assert_eq!(spmm_bcsr(&a, &x, &sched).data, spmm_csr(&a, &x).data);
+    }
+
+    #[test]
+    #[should_panic(expected = "spmm_bcsr")]
+    fn stale_schedule_panics() {
+        let a = random_csr(10, 10, 3, &mut Rng::new(5));
+        let other = random_csr(20, 10, 3, &mut Rng::new(6));
+        let sched = BlockSchedule::build(&other, &other.to_csc());
+        spmm_bcsr(&a, &Matrix::zeros(10, 4), &sched);
+    }
+}

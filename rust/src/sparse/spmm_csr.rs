@@ -8,6 +8,7 @@
 //! [`crate::util::pool::Budget`] (the caller's share, not the machine).
 
 use crate::graph::{Csc, Csr};
+use crate::sparse::simd::axpy;
 use crate::tensor::Matrix;
 use crate::util::pool::{parallel_for_chunks, SendPtr};
 
@@ -24,11 +25,7 @@ pub fn spmm_csr(a: &Csr, x: &Matrix) -> Matrix {
             let yrow = unsafe { std::slice::from_raw_parts_mut(yp.0.add(i * d), d) };
             for p in a.row_range(i) {
                 let j = a.indices[p] as usize;
-                let v = a.values[p];
-                let xrow = x.row(j);
-                for (yv, xv) in yrow.iter_mut().zip(xrow) {
-                    *yv += v * xv;
-                }
+                axpy(yrow, a.values[p], x.row(j));
             }
         }
     });
@@ -48,11 +45,7 @@ pub fn spmm_csr_bwd(a_csc: &Csc, dy: &Matrix) -> Matrix {
             let dxrow = unsafe { std::slice::from_raw_parts_mut(dp.0.add(j * d), d) };
             for p in a_csc.col_range(j) {
                 let i = a_csc.indices[p] as usize;
-                let v = a_csc.values[p];
-                let dyrow = dy.row(i);
-                for (o, g) in dxrow.iter_mut().zip(dyrow) {
-                    *o += v * g;
-                }
+                axpy(dxrow, a_csc.values[p], dy.row(i));
             }
         }
     });

@@ -1,0 +1,223 @@
+//! ELL (ELLPACK) SpMM: width-capped dense slot layout + lossless overflow.
+//!
+//! ELL stores each row's neighbors in a fixed number of dense slots
+//! (`rows × width` index/value arrays), so the inner loop is branch-free:
+//! every row executes the same `width` slot iterations, padding slots
+//! contribute `0 · x` — the Pallas/accelerator-style layout the AOT padded
+//! path (`runtime::pad::to_ell`) already feeds PJRT. The classic ELL
+//! failure mode is the width cap: a GPU bucket truncates over-wide rows,
+//! which silently drops edges. Training must not drop edges, so
+//! [`EllLayout`] generalizes the bucket layout into a **lossless** one: the
+//! dense part is capped near the average degree and everything beyond the
+//! cap goes to a CSR-style overflow side-list walked after the dense pass.
+//! On the low-variance dense profiles `auto` routes here (max ≈ avg), the
+//! overflow is empty and the whole matrix runs the branch-free loop.
+//!
+//! Numerics: each output element accumulates its row's neighbors in CSR
+//! order (dense slots are the row prefix, the overflow is the row tail), so
+//! ELL matches [`spmm_csr`](crate::sparse::spmm_csr) per element up to the
+//! sign of zero (padding slots add `±0.0`, which can turn an exact `-0.0`
+//! sum into `+0.0` but never changes a nonzero value).
+
+use crate::graph::Csr;
+use crate::sparse::simd::axpy;
+use crate::tensor::Matrix;
+use crate::util::pool::{parallel_for_chunks, SendPtr};
+
+/// Dense-slot cap as a multiple of the average degree: rows keep at most
+/// `ceil(ELL_WIDTH_CAP_FACTOR × avg_degree)` dense slots (at least 1), the
+/// rest overflows. At the `auto` policy's admission bound (max/avg ≤ 1.5)
+/// every row fits its dense slots, so padding waste is bounded by the cap
+/// factor and the overflow list stays empty.
+pub const ELL_WIDTH_CAP_FACTOR: f64 = 2.0;
+
+/// A width-capped, lossless ELL encoding of one adjacency.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EllLayout {
+    pub rows: usize,
+    pub cols: usize,
+    /// Dense slots per row (0 for an empty adjacency).
+    pub width: usize,
+    /// `rows × width` neighbor indices; padding slots point at column 0.
+    pub idx: Vec<u32>,
+    /// `rows × width` edge values; padding slots hold 0.0.
+    pub val: Vec<f32>,
+    /// CSR-style overflow row pointers (`rows + 1` entries) for edges
+    /// beyond `width` — the lossless tail of over-wide rows.
+    pub ofl_indptr: Vec<usize>,
+    pub ofl_indices: Vec<u32>,
+    pub ofl_values: Vec<f32>,
+}
+
+impl EllLayout {
+    /// The width the plan-time layout uses for an adjacency: the max degree,
+    /// capped near the average so one evil row cannot inflate every row's
+    /// slot count (its tail lands in the overflow list instead).
+    pub fn capped_width(adj: &Csr) -> usize {
+        let max_deg = adj.max_degree();
+        if max_deg == 0 {
+            return 0;
+        }
+        let cap = (adj.avg_degree() * ELL_WIDTH_CAP_FACTOR).ceil() as usize;
+        max_deg.min(cap.max(1))
+    }
+
+    /// Encode an adjacency at a given dense width. Every edge lands either
+    /// in a dense slot (the first `width` of its row, CSR order) or in the
+    /// overflow list (the rest of the row) — nothing is dropped.
+    pub fn build(adj: &Csr, width: usize) -> EllLayout {
+        let rows = adj.rows;
+        let mut idx = vec![0u32; rows * width];
+        let mut val = vec![0f32; rows * width];
+        let mut ofl_indptr = Vec::with_capacity(rows + 1);
+        let mut ofl_indices = Vec::new();
+        let mut ofl_values = Vec::new();
+        ofl_indptr.push(0);
+        for r in 0..rows {
+            for (slot, p) in adj.row_range(r).enumerate() {
+                if slot < width {
+                    idx[r * width + slot] = adj.indices[p];
+                    val[r * width + slot] = adj.values[p];
+                } else {
+                    ofl_indices.push(adj.indices[p]);
+                    ofl_values.push(adj.values[p]);
+                }
+            }
+            ofl_indptr.push(ofl_indices.len());
+        }
+        EllLayout {
+            rows,
+            cols: adj.cols,
+            width,
+            idx,
+            val,
+            ofl_indptr,
+            ofl_indices,
+            ofl_values,
+        }
+    }
+
+    /// Edges held in the overflow side-list (0 on low-variance profiles).
+    pub fn overflow_nnz(&self) -> usize {
+        self.ofl_indptr.last().copied().unwrap_or(0)
+    }
+}
+
+/// Forward: `Y = A · X` over the ELL layout — branch-free dense slots
+/// first, then the (usually empty) overflow tail per row.
+pub fn spmm_ell(ell: &EllLayout, x: &Matrix) -> Matrix {
+    assert_eq!(ell.cols, x.rows, "spmm_ell: A cols {} vs X rows {}", ell.cols, x.rows);
+    let d = x.cols;
+    let w = ell.width;
+    let mut y = Matrix::zeros(ell.rows, d);
+    let y_ptr = SendPtr(y.data.as_mut_ptr());
+    parallel_for_chunks(ell.rows, |lo, hi| {
+        let yp = y_ptr;
+        for i in lo..hi {
+            // SAFETY: row i written only by this worker's chunk.
+            let yrow = unsafe { std::slice::from_raw_parts_mut(yp.0.add(i * d), d) };
+            // Branch-free over the fixed slots: padding contributes 0 · x.
+            for s in 0..w {
+                let j = ell.idx[i * w + s] as usize;
+                axpy(yrow, ell.val[i * w + s], x.row(j));
+            }
+            for p in ell.ofl_indptr[i]..ell.ofl_indptr[i + 1] {
+                axpy(yrow, ell.ofl_values[p], x.row(ell.ofl_indices[p] as usize));
+            }
+        }
+    });
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::spmm_csr::{spmm_csr, spmm_dense_ref};
+    use crate::util::math::assert_allclose;
+    use crate::util::rng::Rng;
+
+    fn random_csr(rows: usize, cols: usize, max_deg: usize, rng: &mut Rng) -> Csr {
+        let mut t = Vec::new();
+        for r in 0..rows {
+            for _ in 0..rng.range(0, max_deg + 1) {
+                t.push((r, rng.below(cols), rng.uniform(0.5, 1.5)));
+            }
+        }
+        Csr::from_triplets(rows, cols, &t)
+    }
+
+    #[test]
+    fn layout_is_lossless_at_any_width() {
+        let mut rng = Rng::new(1);
+        let adj = random_csr(20, 15, 9, &mut rng);
+        for width in [0usize, 1, 2, 4, 9, 16] {
+            let ell = EllLayout::build(&adj, width);
+            let dense_kept: usize =
+                (0..adj.rows).map(|r| adj.row_range(r).len().min(width)).sum();
+            assert_eq!(dense_kept + ell.overflow_nnz(), adj.nnz(), "width {width}");
+            assert_eq!(ell.idx.len(), adj.rows * width);
+            assert_eq!(ell.ofl_indptr.len(), adj.rows + 1);
+        }
+    }
+
+    #[test]
+    fn capped_width_tracks_avg_not_hubs() {
+        // Uniform rows: width = the common degree, no overflow.
+        let uniform = Csr::from_triplets(
+            4,
+            8,
+            &(0..4usize)
+                .flat_map(|r| (0..3usize).map(move |c| (r, c, 1.0f32)))
+                .collect::<Vec<_>>(),
+        );
+        assert_eq!(EllLayout::capped_width(&uniform), 3);
+        assert_eq!(
+            EllLayout::build(&uniform, EllLayout::capped_width(&uniform)).overflow_nnz(),
+            0
+        );
+        // One hub row: cap stays near the average, the hub tail overflows.
+        let mut t: Vec<(usize, usize, f32)> =
+            (0..30usize).map(|c| (0usize, c, 1.0f32)).collect();
+        for r in 1..10 {
+            t.push((r, 0, 1.0));
+        }
+        let skewed = Csr::from_triplets(10, 30, &t);
+        let w = EllLayout::capped_width(&skewed);
+        assert!(w < 30, "cap must not follow the hub row (got {w})");
+        let ell = EllLayout::build(&skewed, w);
+        assert_eq!(ell.overflow_nnz(), 30 - w);
+        // Empty adjacency → zero width.
+        assert_eq!(EllLayout::capped_width(&Csr::from_triplets(3, 3, &[])), 0);
+    }
+
+    #[test]
+    fn forward_matches_csr_and_dense_reference() {
+        let mut rng = Rng::new(2);
+        for (m, n, d, w) in [(5, 7, 3, 2), (30, 25, 16, 4), (40, 40, 33, 6)] {
+            let a = random_csr(m, n, 8, &mut rng);
+            let x = Matrix::randn(n, d, 1.0, &mut rng);
+            let ell = EllLayout::build(&a, w);
+            let got = spmm_ell(&ell, &x);
+            assert_allclose(&got.data, &spmm_dense_ref(&a, &x).data, 1e-4, 1e-4);
+            assert_allclose(&got.data, &spmm_csr(&a, &x).data, 1e-6, 1e-6);
+        }
+    }
+
+    #[test]
+    fn empty_and_padded_rows_stay_zero() {
+        let a = Csr::from_triplets(3, 2, &[(0, 0, 2.0)]);
+        let ell = EllLayout::build(&a, EllLayout::capped_width(&a));
+        let x = Matrix::ones(2, 4);
+        let y = spmm_ell(&ell, &x);
+        assert_eq!(y.row(0), &[2.0, 2.0, 2.0, 2.0]);
+        assert_eq!(y.row(1), &[0.0; 4]);
+        assert_eq!(y.row(2), &[0.0; 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "spmm_ell")]
+    fn shape_mismatch_panics() {
+        let ell = EllLayout::build(&Csr::from_triplets(2, 3, &[]), 0);
+        spmm_ell(&ell, &Matrix::zeros(4, 2));
+    }
+}

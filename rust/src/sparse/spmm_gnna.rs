@@ -17,6 +17,7 @@
 //! never multiply its worker count.
 
 use crate::graph::{Csc, Csr};
+use crate::sparse::simd::axpy;
 use crate::tensor::Matrix;
 use crate::util::pool::{parallel_for_dynamic, SendPtr};
 use std::sync::atomic::{AtomicU32, Ordering};
@@ -181,9 +182,7 @@ fn spmm_groups_core(
             let mut c = 0;
             while c < d {
                 let hi = (c + cfg.dim_worker).min(d);
-                for cc in c..hi {
-                    partial[cc] += av * xrow[cc];
-                }
+                axpy(&mut partial[c..hi], av, &xrow[c..hi]);
                 c = hi;
             }
         }

@@ -26,9 +26,11 @@ fn registry_is_the_single_parse_point() {
     assert_eq!(KernelSpec::parse("cusparse").unwrap(), KernelSpec::Csr);
     assert_eq!(KernelSpec::parse("GNNAdvisor").unwrap(), KernelSpec::Gnna);
     assert_eq!(KernelSpec::parse("DR-SpMM").unwrap(), KernelSpec::Dr);
+    assert_eq!(KernelSpec::parse("ellpack").unwrap(), KernelSpec::Ell);
+    assert_eq!(KernelSpec::parse("blocked-csr").unwrap(), KernelSpec::Bcsr);
     assert_eq!(KernelSpec::parse("auto").unwrap(), KernelSpec::Auto);
     let err = KernelSpec::parse("nope").unwrap_err();
-    for name in ["csr", "gnna", "dr", "auto"] {
+    for name in ["csr", "gnna", "dr", "ell", "bcsr", "auto"] {
         assert!(err.contains(name), "{err}");
     }
 }
@@ -139,6 +141,53 @@ fn gnna_engine_plans_carry_group_schedules() {
     assert_eq!(built.groups, 3, "one fwd+bwd group schedule per edge type");
     assert_eq!(built.buckets, 0);
     assert_eq!(engine.describe(), "GNNA");
+}
+
+/// The PR-7 backends through the whole stack: plan-time payloads are
+/// built exactly once per graph, and a full model forward agrees with
+/// the CSR reference engine.
+#[test]
+fn ell_and_bcsr_engines_plan_once_and_match_csr() {
+    let _g = lock();
+    let designs = table1_designs(0.02);
+    let g = &generate_design(&designs[0])[0];
+
+    let c0 = plan_counters();
+    let ell = EngineBuilder::default().kernel("ell").build(g);
+    let built = plan_counters().since(&c0);
+    assert_eq!(built.plans, 3);
+    assert_eq!(built.ells, 3, "one ELL layout per edge type");
+    assert_eq!(built.blocks, 0, "no block schedules for an ELL engine");
+    assert_eq!(ell.describe(), "ELLPACK");
+
+    let c1 = plan_counters();
+    let bcsr = EngineBuilder::default().kernel("bcsr").build(g);
+    let built = plan_counters().since(&c1);
+    assert_eq!(built.plans, 3);
+    assert_eq!(built.blocks, 3, "one block schedule per edge type");
+    assert_eq!(built.ells, 0, "no ELL layouts for a BCSR engine");
+    assert_eq!(bcsr.describe(), "Blocked-CSR");
+
+    let csr = EngineBuilder::csr().build(g);
+    let mut rng = Rng::new(3);
+    let mut model = DrCircuitGnn::new(g.x_cell.cols, g.x_net.cols, 16, &mut rng);
+    let p_csr = model.forward(&csr, g);
+    let p_ell = model.forward(&ell, g);
+    let p_bcsr = model.forward(&bcsr, g);
+    assert_eq!(p_csr.data.len(), p_ell.data.len());
+    for i in 0..p_csr.data.len() {
+        assert!(
+            (p_csr.data[i] - p_ell.data[i]).abs() <= 1e-5,
+            "ell diverges from csr at {i}: {} vs {}",
+            p_ell.data[i],
+            p_csr.data[i]
+        );
+        assert_eq!(
+            p_csr.data[i].to_bits(),
+            p_bcsr.data[i].to_bits(),
+            "bcsr must be bitwise-identical to csr at {i}"
+        );
+    }
 }
 
 #[test]

@@ -226,7 +226,7 @@ fn prop_engine_kernels_match_dense_reference() {
         let d = g.sized(2, 24);
         let k = g.usize_in(1, d);
         let hg = random_heterograph(g, d);
-        for name in ["csr", "gnna", "dr"] {
+        for name in ["csr", "gnna", "dr", "ell", "bcsr"] {
             let eng = EngineBuilder::default()
                 .kernel(name)
                 .k_cell(k)
@@ -545,7 +545,7 @@ fn prop_engine_backward_gradients_agree() {
         let d = g.sized(2, 20);
         let k = g.usize_in(1, d);
         let hg = random_heterograph(g, d);
-        for name in ["csr", "gnna", "dr"] {
+        for name in ["csr", "gnna", "dr", "ell", "bcsr"] {
             let eng = EngineBuilder::default()
                 .kernel(name)
                 .k_cell(k)
