@@ -18,7 +18,7 @@ use dr_circuitgnn::bench::workloads::{bench_reps, bench_scale};
 use dr_circuitgnn::bench::{fmt_speedup, write_bench_json, Json, Table};
 use dr_circuitgnn::datagen::{generate_design, table1_designs};
 use dr_circuitgnn::engine::{plan_counters, EngineBuilder};
-use dr_circuitgnn::fleet::{Fleet, FleetPipeline};
+use dr_circuitgnn::fleet::{Fleet, FleetPipeline, FleetSpec};
 use dr_circuitgnn::graph::HeteroGraph;
 use dr_circuitgnn::nn::{Adam, DrCircuitGnn};
 use dr_circuitgnn::sched::ScheduleMode;
@@ -179,9 +179,25 @@ fn epoch_pipeline_sweep(scale: f64, epochs: usize) -> Json {
     let mut rng = Rng::new(7);
     let model0 = DrCircuitGnn::new(g0.x_cell.cols, g0.x_net.cols, 32, &mut rng);
 
+    // Partition requests are capped at each graph's cell count (the
+    // partitioner warns when it truncates); report the *effective* shape
+    // next to the requested one so sweep configs can't silently lie.
+    let spec = FleetSpec::parse("4x2").expect("static fleet spec");
+    let effective_subgraphs: usize = designs
+        .iter()
+        .flat_map(|gs| gs.iter())
+        .map(|g| spec.effective_parts(g.n_cells))
+        .sum();
+    println!(
+        "fleet spec '{}': effective shape {} subgraphs across {} designs",
+        spec.describe(),
+        effective_subgraphs,
+        n_designs
+    );
+
     let sweep = |mode: ScheduleMode| {
         let pipeline = FleetPipeline::new(
-            Fleet::builder(EngineBuilder::dr(8, 8).parallel(true)).workers(4),
+            Fleet::builder(EngineBuilder::dr(8, 8).parallel(true)).spec(&spec),
             designs.iter().map(|gs| gs.as_slice()).collect(),
         );
         let mut model = model0.clone();
@@ -259,6 +275,9 @@ fn epoch_pipeline_sweep(scale: f64, epochs: usize) -> Json {
     Json::obj()
         .set("designs", n_designs)
         .set("epochs", epochs)
+        .set("fleet_spec", spec.describe())
+        .set("requested_parts_per_graph", spec.parts().unwrap_or(1))
+        .set("effective_subgraphs", effective_subgraphs)
         .set("serial_median_epoch_s", median(&serial_epoch_s))
         .set("pipelined_median_epoch_s", median(&piped_epoch_s))
         .set("best_overlap", best_overlap)

@@ -1,0 +1,243 @@
+//! Seeded ECO (engineering change order) generator (ISSUE 8).
+//!
+//! Real ECOs are small, local edits to a placed design: a buffer inserted
+//! or removed (near edges appear/disappear), a net rewired to a different
+//! cell (one pin moves), a cell resized (its features change). This module
+//! synthesizes such edits against any generated heterograph as a
+//! [`DeltaPatch`], at a configurable churn rate, fully determined by a
+//! seed — the fig14 bench and the delta proptests replay identical ECOs
+//! on both the incremental and the from-scratch path.
+//!
+//! The generator preserves the graph's invariants by construction: near
+//! edits are mirrored (a symmetric near matrix stays symmetric), pin
+//! rewires move a pin rather than delete a net's last one, and every op
+//! targets a distinct edge (patches reject duplicate targets). The
+//! resulting patch always applies cleanly: `apply_delta(g, &generate_eco(
+//! g, &spec))` is `Ok` for every generated graph.
+
+use crate::graph::{Csr, DeltaPatch, EdgeType, HeteroGraph};
+use crate::util::rng::Rng;
+use std::collections::BTreeSet;
+
+/// Shape of a synthetic ECO.
+#[derive(Clone, Copy, Debug)]
+pub struct EcoSpec {
+    /// Approximate fraction of each adjacency's nonzeros the ECO touches
+    /// (split across removals, additions, rewires, and reweights). Typical
+    /// real-world churn is well under 1%; the fig14 sweep uses 0.2%–5%.
+    pub churn: f64,
+    /// Seed: equal specs generate equal patches on equal graphs.
+    pub seed: u64,
+}
+
+impl EcoSpec {
+    pub fn new(churn: f64, seed: u64) -> EcoSpec {
+        EcoSpec { churn, seed }
+    }
+}
+
+/// A random existing edge, uniform over nonzeros.
+fn pick_edge(adj: &Csr, rng: &mut Rng) -> Option<(usize, usize)> {
+    if adj.nnz() == 0 {
+        return None;
+    }
+    let q = rng.below(adj.nnz());
+    let r = adj.indptr.partition_point(|&p| p <= q) - 1;
+    Some((r, adj.indices[q] as usize))
+}
+
+/// Generate one ECO against `g`. See the module docs for the edit mix;
+/// `spec.churn` scales the op count, `spec.seed` fixes every choice.
+pub fn generate_eco(g: &HeteroGraph, spec: &EcoSpec) -> DeltaPatch {
+    assert!(spec.churn >= 0.0 && spec.churn <= 1.0, "churn must be in [0, 1]");
+    let mut rng = Rng::new(spec.seed);
+    let mut patch = DeltaPatch::new();
+    // Every op must target a distinct (row, col); these sets also keep
+    // mirrored edits consistent (never add over a removal and vice versa).
+    let mut near_touched: BTreeSet<(usize, usize)> = BTreeSet::new();
+    let mut pins_touched: BTreeSet<(usize, usize)> = BTreeSet::new();
+    let mut cells_touched: BTreeSet<usize> = BTreeSet::new();
+
+    let near_budget = ((g.near.nnz() as f64 * spec.churn).round() as usize).max(2);
+    let pin_budget = (((g.pins.nnz() as f64 * spec.churn) / 2.0).round() as usize).max(1);
+
+    // Near removals (~1/4 of the near budget), mirrored: a dropped
+    // proximity link disappears in both directions.
+    let mut removed = 0usize;
+    for _ in 0..near_budget * 4 {
+        if removed * 4 >= near_budget {
+            break;
+        }
+        let Some((r, c)) = pick_edge(&g.near, &mut rng) else { break };
+        if near_touched.contains(&(r, c)) || near_touched.contains(&(c, r)) {
+            continue;
+        }
+        near_touched.insert((r, c));
+        patch = patch.remove_edge(EdgeType::Near, r, c);
+        removed += 1;
+        if r != c && g.near.get(c, r).is_some() {
+            near_touched.insert((c, r));
+            patch = patch.remove_edge(EdgeType::Near, c, r);
+        }
+        cells_touched.insert(r);
+        cells_touched.insert(c);
+    }
+
+    // Near additions (~1/4), mirrored: new proximity from a placement
+    // shift.
+    let mut added = 0usize;
+    for _ in 0..near_budget * 4 {
+        if added * 4 >= near_budget || g.n_cells < 2 {
+            break;
+        }
+        let r = rng.below(g.n_cells);
+        let c = rng.below(g.n_cells);
+        if r == c
+            || g.near.get(r, c).is_some()
+            || near_touched.contains(&(r, c))
+            || near_touched.contains(&(c, r))
+        {
+            continue;
+        }
+        let w = rng.uniform(0.5, 1.5);
+        near_touched.insert((r, c));
+        near_touched.insert((c, r));
+        patch = patch.add_edge(EdgeType::Near, r, c, w).add_edge(EdgeType::Near, c, r, w);
+        added += 1;
+        cells_touched.insert(r);
+        cells_touched.insert(c);
+    }
+
+    // Near reweights (the rest): distance drift without topology change.
+    let mut reweighed = 0usize;
+    for _ in 0..near_budget * 4 {
+        if reweighed * 2 >= near_budget {
+            break;
+        }
+        let Some((r, c)) = pick_edge(&g.near, &mut rng) else { break };
+        if near_touched.contains(&(r, c)) || near_touched.contains(&(c, r)) {
+            continue;
+        }
+        let w = rng.uniform(0.5, 1.5);
+        near_touched.insert((r, c));
+        patch = patch.reweight_edge(EdgeType::Near, r, c, w);
+        reweighed += 1;
+        if r != c && g.near.get(c, r).is_some() {
+            near_touched.insert((c, r));
+            patch = patch.reweight_edge(EdgeType::Near, c, r, w);
+        }
+    }
+
+    // Pin rewires: move one pin of a multi-pin net to a currently
+    // unconnected cell (the classic ECO: a net re-routed to a different
+    // driver/sink). Multi-pin only, so no net ever loses its last pin.
+    let mut rewired = 0usize;
+    for _ in 0..pin_budget * 8 {
+        if rewired >= pin_budget || g.n_nets == 0 || g.n_cells < 2 {
+            break;
+        }
+        let net = rng.below(g.n_nets);
+        let deg = g.pins.row_range(net).len();
+        if deg < 2 {
+            continue;
+        }
+        let q = g.pins.row_range(net).start + rng.below(deg);
+        let c_old = g.pins.indices[q] as usize;
+        let c_new = rng.below(g.n_cells);
+        if g.pins.get(net, c_new).is_some()
+            || pins_touched.contains(&(net, c_old))
+            || pins_touched.contains(&(net, c_new))
+        {
+            continue;
+        }
+        pins_touched.insert((net, c_old));
+        pins_touched.insert((net, c_new));
+        patch = patch
+            .remove_edge(EdgeType::Pins, net, c_old)
+            .add_edge(EdgeType::Pins, net, c_new, rng.uniform(0.5, 1.5));
+        rewired += 1;
+        cells_touched.insert(c_old);
+        cells_touched.insert(c_new);
+    }
+
+    // Feature/label drift on a few edited cells (resized cells change
+    // their raw features and congestion labels).
+    for (i, &cell) in cells_touched.iter().enumerate() {
+        if i >= 4 {
+            break;
+        }
+        let row: Vec<f32> =
+            g.x_cell.row(cell).iter().map(|v| v + 0.1 * rng.normal()).collect();
+        patch = patch.set_x_cell(cell, row);
+        if i == 0 {
+            patch = patch.set_y_cell(cell, g.y_cell.row(cell)[0] + 0.05);
+        }
+    }
+
+    patch
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::{generate_graph, GraphSpec};
+    use crate::graph::apply_delta;
+
+    fn test_graph(seed: u64) -> HeteroGraph {
+        let mut rng = Rng::new(seed);
+        generate_graph(
+            &GraphSpec {
+                n_cells: 120,
+                n_nets: 60,
+                target_near: 600,
+                target_pins: 150,
+                d_cell: 4,
+                d_net: 4,
+            },
+            0,
+            &mut rng,
+        )
+    }
+
+    #[test]
+    fn generated_ecos_apply_cleanly_and_are_deterministic() {
+        let g = test_graph(3);
+        for seed in 0..8 {
+            let spec = EcoSpec::new(0.02, seed);
+            let patch = generate_eco(&g, &spec);
+            assert!(!patch.is_empty(), "seed {seed}");
+            let patched = apply_delta(&g, &patch)
+                .unwrap_or_else(|e| panic!("seed {seed}: {e}\n{}", patch.describe()));
+            assert_ne!(patched.adjacency_hash(), g.adjacency_hash(), "seed {seed}");
+            assert_eq!(patch, generate_eco(&g, &spec), "same seed, same patch");
+        }
+        assert_ne!(
+            generate_eco(&g, &EcoSpec::new(0.02, 1)),
+            generate_eco(&g, &EcoSpec::new(0.02, 2)),
+            "different seeds should differ"
+        );
+    }
+
+    #[test]
+    fn churn_scales_the_op_count() {
+        let g = test_graph(4);
+        let small = generate_eco(&g, &EcoSpec::new(0.005, 9));
+        let large = generate_eco(&g, &EcoSpec::new(0.1, 9));
+        assert!(
+            large.n_edge_ops() > 2 * small.n_edge_ops(),
+            "{} vs {}",
+            large.n_edge_ops(),
+            small.n_edge_ops()
+        );
+    }
+
+    /// Symmetric near matrices stay symmetric: the patched near must equal
+    /// its own transpose (the generator mirrors every near edit).
+    #[test]
+    fn near_edits_preserve_symmetry() {
+        let g = test_graph(5);
+        assert!(g.near.is_transpose_of(&g.near), "fixture sanity: generated near is symmetric");
+        let patched = apply_delta(&g, &generate_eco(&g, &EcoSpec::new(0.05, 11))).unwrap();
+        assert!(patched.near.is_transpose_of(&patched.near), "symmetry lost");
+    }
+}

@@ -15,6 +15,7 @@
 //!   (d) features + congestion labels derived from both.
 
 pub mod designs;
+pub mod eco;
 pub mod features;
 pub mod layout;
 pub mod netlist;
@@ -127,6 +128,7 @@ pub fn mini_circuitnet(
 
 /// Re-export: the three Table-1 designs.
 pub use designs::{table1_design, table1_designs, DesignSize};
+pub use eco::{generate_eco, EcoSpec};
 
 /// Convenience: percentage difference of generated vs target counts.
 pub fn count_error(actual: usize, target: usize) -> f64 {

@@ -26,6 +26,7 @@ static BUCKETS_BUILT: AtomicUsize = AtomicUsize::new(0);
 static GROUPS_BUILT: AtomicUsize = AtomicUsize::new(0);
 static ELLS_BUILT: AtomicUsize = AtomicUsize::new(0);
 static BLOCKS_BUILT: AtomicUsize = AtomicUsize::new(0);
+static REPAIRS_BUILT: AtomicUsize = AtomicUsize::new(0);
 
 /// Snapshot of the process-wide plan-construction counters.
 ///
@@ -47,6 +48,11 @@ pub struct PlanCounters {
     pub ells: usize,
     /// Blocked-CSR schedules built (BCSR plans; counts fwd+bwd as one).
     pub blocks: usize,
+    /// Plans *repaired* incrementally from an ECO delta
+    /// ([`crate::engine::repair`]) instead of cold-built. Repairs bump this
+    /// counter only — a delta replan region showing `repairs > 0` with
+    /// `plans == 0` proves no cold build happened.
+    pub repairs: usize,
 }
 
 impl PlanCounters {
@@ -59,6 +65,7 @@ impl PlanCounters {
             groups: self.groups - earlier.groups,
             ells: self.ells - earlier.ells,
             blocks: self.blocks - earlier.blocks,
+            repairs: self.repairs - earlier.repairs,
         }
     }
 }
@@ -72,7 +79,15 @@ pub fn plan_counters() -> PlanCounters {
         groups: GROUPS_BUILT.load(Ordering::Relaxed),
         ells: ELLS_BUILT.load(Ordering::Relaxed),
         blocks: BLOCKS_BUILT.load(Ordering::Relaxed),
+        repairs: REPAIRS_BUILT.load(Ordering::Relaxed),
     }
+}
+
+/// Record one incremental plan repair (called by [`crate::engine::repair`];
+/// deliberately NOT any of the cold-build counters, so counter snapshots
+/// can prove a replan region did repairs only).
+pub(crate) fn count_plan_repair() {
+    REPAIRS_BUILT.fetch_add(1, Ordering::Relaxed);
 }
 
 /// Per-graph, per-edge-type precomputed kernel state.

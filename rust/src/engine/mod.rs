@@ -42,6 +42,7 @@ pub mod auto;
 pub mod kernel;
 pub mod planstore;
 pub mod registry;
+pub mod repair;
 
 pub use auto::{auto_select, AutoDecision};
 pub use kernel::{
@@ -50,6 +51,7 @@ pub use kernel::{
 };
 pub use planstore::{KProfileRecord, PlanStore};
 pub use registry::{known_names, KernelEntry, KernelSpec, REGISTRY};
+pub use repair::RepairStats;
 
 use crate::graph::{Cbsr, Csr, EdgeType, HeteroGraph, NodeType};
 use crate::sparse::{drelu, GnnaConfig};
@@ -72,13 +74,23 @@ fn edge_index(e: EdgeType) -> usize {
 /// row-mean for `pins`/`pinned`. Shared by [`EngineBuilder::build`] and the
 /// scheduler rig so the bench measures the exact matrices training uses.
 pub fn normalized_adjacencies(g: &HeteroGraph) -> [Csr; 3] {
-    let mut near = g.near.clone();
-    near.normalize_gcn();
-    let mut pins = g.pins.clone();
-    pins.normalize_rows();
-    let mut pinned = g.pinned.clone();
-    pinned.normalize_rows();
-    [near, pins, pinned]
+    [
+        normalized_adjacency(g, EdgeType::Near),
+        normalized_adjacency(g, EdgeType::Pins),
+        normalized_adjacency(g, EdgeType::Pinned),
+    ]
+}
+
+/// Normalise one edge type's adjacency (the per-edge unit behind
+/// [`normalized_adjacencies`]; the incremental plan repair uses it to
+/// renormalise only the touched edge types).
+pub fn normalized_adjacency(g: &HeteroGraph, e: EdgeType) -> Csr {
+    let mut adj = g.adj(e).clone();
+    match e {
+        EdgeType::Near => adj.normalize_gcn(),
+        EdgeType::Pins | EdgeType::Pinned => adj.normalize_rows(),
+    }
+    adj
 }
 
 /// Display label for a resolved kernel triple ([`EdgeType::ALL`] order):
@@ -274,7 +286,11 @@ impl EngineBuilder {
         let k_near = self.resolve_kernel(EdgeType::Near, &near);
         let k_pins = self.resolve_kernel(EdgeType::Pins, &pins);
         let k_pinned = self.resolve_kernel(EdgeType::Pinned, &pinned);
-        let plans = [k_near.plan(near), k_pins.plan(pins), k_pinned.plan(pinned)];
+        let plans = [
+            Arc::new(k_near.plan(near)),
+            Arc::new(k_pins.plan(pins)),
+            Arc::new(k_pinned.plan(pinned)),
+        ];
         Engine {
             kernels: [k_near, k_pins, k_pinned],
             plans,
@@ -296,7 +312,7 @@ impl EngineBuilder {
 #[derive(Debug)]
 pub struct Engine {
     kernels: [Arc<dyn SpmmKernel>; 3],
-    plans: [KernelPlan; 3],
+    plans: [Arc<KernelPlan>; 3],
     k_cell: usize,
     k_net: usize,
     parallel: bool,
@@ -322,6 +338,14 @@ impl Engine {
 
     /// The cached plan for an edge type.
     pub fn plan(&self, e: EdgeType) -> &KernelPlan {
+        &self.plans[edge_index(e)]
+    }
+
+    /// The shared handle to an edge type's plan. Plans live behind `Arc` so
+    /// the incremental repair path ([`crate::engine::repair`]) can carry
+    /// untouched plans into the repaired engine without copying a byte —
+    /// and so tests can prove the reuse with `Arc::ptr_eq`.
+    pub fn plan_shared(&self, e: EdgeType) -> &Arc<KernelPlan> {
         &self.plans[edge_index(e)]
     }
 

@@ -335,7 +335,14 @@ impl PlanStore {
             kernels.push(kernel);
             // Struct-literal reconstruction: deliberately bypasses
             // `KernelPlan::base` so warm loads register zero plan builds.
-            plans.push(KernelPlan { adj, csc, buckets, gnna, ell, blocks });
+            plans.push(std::sync::Arc::new(KernelPlan {
+                adj,
+                csc,
+                buckets,
+                gnna,
+                ell,
+                blocks,
+            }));
         }
         if !r.is_empty() {
             return Err(format!("{} trailing bytes after the last edge record", r.remaining()));

@@ -43,17 +43,20 @@ pub struct CacheStats {
     pub disk_loads: usize,
     /// Freshly built plans persisted to the backing store.
     pub disk_stores: usize,
+    /// Lookups served by incrementally repairing a cached engine from an
+    /// ECO delta ([`PlanCache::engine_for_patched`]) — no cold build.
+    pub repairs: usize,
 }
 
 impl CacheStats {
     /// Unique engines materialised (one per distinct adjacency), whether
-    /// built cold or loaded from the store.
+    /// built cold, loaded from the store, or repaired from a predecessor.
     pub fn unique(&self) -> usize {
-        self.misses + self.disk_loads
+        self.misses + self.disk_loads + self.repairs
     }
 
     pub fn lookups(&self) -> usize {
-        self.hits + self.misses + self.disk_loads
+        self.hits + self.misses + self.disk_loads + self.repairs
     }
 
     /// Lookups recorded after the `earlier` snapshot (counters are
@@ -65,6 +68,7 @@ impl CacheStats {
             misses: self.misses - earlier.misses,
             disk_loads: self.disk_loads - earlier.disk_loads,
             disk_stores: self.disk_stores - earlier.disk_stores,
+            repairs: self.repairs - earlier.repairs,
         }
     }
 
@@ -75,6 +79,7 @@ impl CacheStats {
             misses: self.misses + other.misses,
             disk_loads: self.disk_loads + other.disk_loads,
             disk_stores: self.disk_stores + other.disk_stores,
+            repairs: self.repairs + other.repairs,
         }
     }
 
@@ -87,6 +92,12 @@ impl CacheStats {
             Lookup::Loaded => self.disk_loads += 1,
             Lookup::Built { stored } => {
                 self.misses += 1;
+                if stored {
+                    self.disk_stores += 1;
+                }
+            }
+            Lookup::Repaired { stored } => {
+                self.repairs += 1;
                 if stored {
                     self.disk_stores += 1;
                 }
@@ -104,6 +115,10 @@ pub enum Lookup {
     Loaded,
     /// Built cold; `stored` says whether it was persisted to the store.
     Built { stored: bool },
+    /// Incrementally repaired from the cached pre-patch engine
+    /// ([`PlanCache::engine_for_patched`]) — zero cold plan builds;
+    /// `stored` says whether the repaired plan was persisted.
+    Repaired { stored: bool },
 }
 
 /// Content-addressed engine cache used while building fleets and serving
@@ -116,6 +131,7 @@ pub struct PlanCache {
     misses: AtomicUsize,
     disk_loads: AtomicUsize,
     disk_stores: AtomicUsize,
+    repairs: AtomicUsize,
 }
 
 impl PlanCache {
@@ -128,6 +144,7 @@ impl PlanCache {
             misses: AtomicUsize::new(0),
             disk_loads: AtomicUsize::new(0),
             disk_stores: AtomicUsize::new(0),
+            repairs: AtomicUsize::new(0),
         }
     }
 
@@ -214,12 +231,98 @@ impl PlanCache {
         }
     }
 
+    /// An already-materialised engine for an adjacency hash, without
+    /// triggering a build. The ECO path uses this to find the pre-patch
+    /// engine worth repairing.
+    pub fn peek(&self, hash: u64) -> Option<Arc<Engine>> {
+        let map = self.entries.lock().unwrap_or_else(|e| e.into_inner());
+        map.get(&hash).and_then(|cell| cell.get()).map(|(e, _)| Arc::clone(e))
+    }
+
+    /// Drop the cache entry for an adjacency hash (the ECO path evicts
+    /// exactly the hashes a delta invalidated — untouched entries stay).
+    /// Engines already handed out stay alive through their `Arc`s; a later
+    /// lookup for the same hash re-materialises. Returns whether an entry
+    /// was present.
+    pub fn evict(&self, hash: u64) -> bool {
+        let mut map = self.entries.lock().unwrap_or_else(|e| e.into_inner());
+        map.remove(&hash).is_some()
+    }
+
+    /// The engine for a *patched* subgraph, repairing the cached pre-patch
+    /// engine incrementally when possible (see
+    /// [`EngineBuilder::repair`](crate::engine::repair)) instead of
+    /// cold-building. `old_g`/`new_g` are the pre-/post-patch graphs and
+    /// `patch` the delta between them. The pre-patch hash is evicted —
+    /// that adjacency no longer exists in the design. Falls back to
+    /// [`engine_for_traced`](Self::engine_for_traced) when the pre-patch
+    /// engine isn't cached (never materialises the old graph just to
+    /// repair it). Returns the repair stats when a repair happened.
+    pub fn engine_for_patched(
+        &self,
+        old_g: &HeteroGraph,
+        new_g: &HeteroGraph,
+        patch: &crate::graph::DeltaPatch,
+    ) -> (Arc<Engine>, Lookup, Option<crate::engine::RepairStats>) {
+        let old_key = old_g.adjacency_hash();
+        let new_key = new_g.adjacency_hash();
+        let old_engine = self.peek(old_key);
+        let cell = {
+            let mut map = self.entries.lock().unwrap_or_else(|e| e.into_inner());
+            Arc::clone(map.entry(new_key).or_default())
+        };
+        let mut initialized_here = false;
+        let mut repair_stats = None;
+        let (engine, first_lookup) = cell.get_or_init(|| {
+            initialized_here = true;
+            let Some(prev) = &old_engine else {
+                return self.materialise(new_g);
+            };
+            // Same effective-builder rule as cold materialisation: a
+            // stored §4.3 K profile applies to repairs too, so repaired
+            // and cold engines stay bit-identical.
+            let eff = match &self.store {
+                Some(store) => store.effective_builder(&self.builder, new_g),
+                None => self.builder.clone(),
+            };
+            let (engine, stats) = eff.repair(prev, new_g, patch);
+            repair_stats = Some(stats);
+            self.repairs.fetch_add(1, Ordering::Relaxed);
+            let engine = Arc::new(engine);
+            let stored = match &self.store {
+                Some(store) => match store.store(new_g, &engine) {
+                    Ok(_) => {
+                        self.disk_stores.fetch_add(1, Ordering::Relaxed);
+                        true
+                    }
+                    Err(e) => {
+                        crate::warn!("{e}; repaired plan stays in-memory only");
+                        false
+                    }
+                },
+                None => false,
+            };
+            (engine, Lookup::Repaired { stored })
+        });
+        let lookup = if initialized_here {
+            *first_lookup
+        } else {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            Lookup::Hit
+        };
+        if old_key != new_key {
+            self.evict(old_key);
+        }
+        (Arc::clone(engine), lookup, repair_stats)
+    }
+
     pub fn stats(&self) -> CacheStats {
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
             disk_loads: self.disk_loads.load(Ordering::Relaxed),
             disk_stores: self.disk_stores.load(Ordering::Relaxed),
+            repairs: self.repairs.load(Ordering::Relaxed),
         }
     }
 
@@ -401,10 +504,74 @@ mod tests {
         local.record(Lookup::Loaded);
         local.record(Lookup::Built { stored: true });
         local.record(Lookup::Built { stored: false });
+        local.record(Lookup::Repaired { stored: true });
         assert_eq!(
             local,
-            CacheStats { hits: 1, misses: 2, disk_loads: 1, disk_stores: 1 }
+            CacheStats { hits: 1, misses: 2, disk_loads: 1, disk_stores: 2, repairs: 1 }
         );
-        assert_eq!(local.plus(&local).lookups(), 8);
+        assert_eq!(local.plus(&local).lookups(), 10);
+    }
+
+    #[test]
+    fn peek_and_evict() {
+        let cache = PlanCache::new(EngineBuilder::csr());
+        let g = toy(0.0);
+        let key = g.adjacency_hash();
+        assert!(cache.peek(key).is_none());
+        assert!(!cache.evict(key));
+        let e = cache.engine_for(&g);
+        let peeked = cache.peek(key).expect("materialised entry is peekable");
+        assert!(Arc::ptr_eq(&e, &peeked));
+        assert!(cache.evict(key));
+        assert!(cache.peek(key).is_none());
+        // Re-lookup after eviction is a fresh miss, not a poisoned entry.
+        let e2 = cache.engine_for(&g);
+        assert!(!Arc::ptr_eq(&e, &e2));
+        assert_eq!(cache.stats().misses, 2);
+    }
+
+    #[test]
+    fn patched_lookup_repairs_instead_of_cold_building() {
+        use crate::engine::plan_counters;
+        use crate::graph::{DeltaPatch, EdgeType};
+        let cache = PlanCache::new(EngineBuilder::dr(2, 2));
+        let g = toy(0.0);
+        let patch = DeltaPatch::new().add_edge(EdgeType::Near, 0, 2, 0.5);
+        let patched = patch.apply(&g).unwrap();
+
+        // Pre-patch engine not cached yet → falls back to a cold build.
+        let (_, lookup, stats) = cache.engine_for_patched(&g, &patched, &patch);
+        assert_eq!(lookup, Lookup::Built { stored: false });
+        assert!(stats.is_none());
+        cache.evict(patched.adjacency_hash());
+
+        // With the pre-patch engine cached, the lookup repairs.
+        let old_engine = cache.engine_for(&g);
+        let before = plan_counters();
+        let (repaired, lookup, stats) = cache.engine_for_patched(&g, &patched, &patch);
+        assert_eq!(lookup, Lookup::Repaired { stored: false });
+        let stats = stats.expect("repair stats on a repaired lookup");
+        assert_eq!(stats.plans_reused, 2, "pins/pinned untouched: {stats:?}");
+        assert_eq!(stats.plans_repaired, 1);
+        let during = plan_counters().since(&before);
+        assert!(during.repairs >= 1, "{during:?}");
+        // The old hash was evicted, the new hash serves hits.
+        assert!(cache.peek(g.adjacency_hash()).is_none());
+        let (again, lookup2, _) = cache.engine_for_patched(&g, &patched, &patch);
+        assert_eq!(lookup2, Lookup::Hit);
+        assert!(Arc::ptr_eq(&repaired, &again));
+        // Repaired ≡ cold-built, bitwise, for the near plan that changed.
+        let cold = EngineBuilder::dr(2, 2).build(&patched);
+        assert_eq!(repaired.plan(EdgeType::Near).adj, cold.plan(EdgeType::Near).adj);
+        assert_eq!(
+            repaired.plan(EdgeType::Near).csc.indices,
+            cold.plan(EdgeType::Near).csc.indices
+        );
+        // Untouched plans are shared with the pre-patch engine by pointer.
+        assert!(Arc::ptr_eq(
+            repaired.plan_shared(EdgeType::Pins),
+            old_engine.plan_shared(EdgeType::Pins)
+        ));
+        assert_eq!(cache.stats().repairs, 1);
     }
 }

@@ -1,0 +1,338 @@
+//! Incremental ECO tracking for a partitioned fleet (ISSUE 8 tentpole).
+//!
+//! An ECO (engineering change order) arrives as a [`DeltaPatch`] against a
+//! *parent* design that has already been partitioned, planned, and trained
+//! on. Rebuilding everything from scratch would repeat Alg. 1 stage 1 for
+//! every partition; [`apply_eco`] instead routes the delta through the
+//! partition maps ([`crate::graph::route_patch`]) and gives each partition
+//! the cheapest treatment its classification allows:
+//!
+//! * **Untouched** — the old subgraph and map are kept as-is and the plan
+//!   cache serves its existing engine (a [`Lookup::Hit`]);
+//! * **Patch** — the localized delta is applied to the old subgraph and
+//!   the cached engine is *repaired* incrementally
+//!   ([`PlanCache::engine_for_patched`] →
+//!   [`crate::engine::EngineBuilder::repair`]): untouched edge types keep
+//!   their plans by pointer, touched ones splice only dirty rows/columns;
+//! * **Restage** — the partition's net *set* changed, so its local net ids
+//!   are no longer stable. The partition is re-cut from the patched parent
+//!   ([`crate::graph::cut_partition`]) over its original cell range and
+//!   planned cold. Only these partitions pay the full price.
+//!
+//! Stale plan-cache entries — the pre-patch adjacency hashes of patched
+//! and restaged partitions — are evicted so the cache tracks the design
+//! as it now exists. Untouched partitions' entries survive, which is the
+//! cache-level statement of "restage only touched subgraphs".
+//!
+//! The output is guaranteed equivalent to re-partitioning the patched
+//! parent from scratch: same subgraphs (bit-identical adjacencies,
+//! features, labels), same maps. `benches/fig14_eco_delta.rs` measures
+//! the speedup; `tests/integration_delta.rs` gates the equivalence.
+
+use crate::engine::{Engine, RepairStats};
+use crate::fleet::cache::{CacheStats, Lookup, PlanCache};
+use crate::graph::{
+    apply_delta, cut_partition, route_patch, DeltaPatch, HeteroGraph, PartitionMap, RoutedPatch,
+};
+use std::sync::Arc;
+
+/// How each partition of an ECO was treated, plus the aggregate cost
+/// evidence: cache lookups and incremental-repair statistics. A delta
+/// replan shows up here as `untouched + patched ≫ restaged` with
+/// `repair.plans_reused` high and `cache.misses` equal to what the
+/// restaged partitions alone require.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct EcoReport {
+    /// Partitions the delta never touched (kept verbatim, cache hit).
+    pub untouched: usize,
+    /// Partitions updated in place via a localized patch + plan repair.
+    pub patched: usize,
+    /// Partitions re-cut from the patched parent and planned cold.
+    pub restaged: usize,
+    /// Pre-patch plan-cache hashes invalidated (≤ patched + restaged —
+    /// a patch that leaves the adjacency hash unchanged evicts nothing).
+    pub evicted: usize,
+    /// Near ops dropped by the router because their endpoints live in
+    /// different partitions (cross-partition near edges don't exist in
+    /// any subgraph — see [`crate::graph::RoutedDelta::dropped_near`]).
+    pub dropped_near: usize,
+    /// Aggregate incremental-repair statistics over all patched
+    /// partitions (plans reused by pointer vs repaired vs rebuilt,
+    /// dirty-row/column splice counts).
+    pub repair: RepairStats,
+    /// Plan-cache lookups this ECO performed, tallied locally (exact even
+    /// when other threads share the cache).
+    pub cache: CacheStats,
+}
+
+impl EcoReport {
+    /// One-line summary for logs.
+    pub fn describe(&self) -> String {
+        format!(
+            "eco: {} untouched / {} patched / {} restaged partition(s), {} cache \
+             entr{} evicted; {}",
+            self.untouched,
+            self.patched,
+            self.restaged,
+            self.evicted,
+            if self.evicted == 1 { "y" } else { "ies" },
+            self.repair.describe(),
+        )
+    }
+}
+
+/// One post-ECO partition: the (possibly new) subgraph, its parent
+/// mapping, the engine serving it, and how the plan cache satisfied the
+/// lookup.
+pub struct EcoSubgraph {
+    pub graph: HeteroGraph,
+    pub map: PartitionMap,
+    pub engine: Arc<Engine>,
+    pub lookup: Lookup,
+}
+
+/// The result of [`apply_eco`]: the patched parent (the new baseline for
+/// the *next* ECO), every partition brought up to date, and the cost
+/// evidence.
+pub struct EcoOutcome {
+    pub parent: HeteroGraph,
+    pub subgraphs: Vec<EcoSubgraph>,
+    pub report: EcoReport,
+}
+
+/// Apply an ECO to a partitioned design incrementally. `parent` is the
+/// pre-patch design, `subs` its current partitions with their maps (as
+/// produced by [`crate::graph::partition_with_map`], in partition order),
+/// `patch` the ECO in parent coordinates, and `cache` the plan cache the
+/// fleet resolves engines through (ideally already warm with the
+/// pre-patch engines — a cold cache still works, the patched partitions
+/// just fall back to cold builds instead of repairs).
+///
+/// Errors if the patch doesn't apply to the parent (or a routed local
+/// patch doesn't apply to its partition — impossible for correctly
+/// routed patches, reported rather than unwrapped anyway). On error
+/// nothing is evicted and no state has changed.
+pub fn apply_eco(
+    parent: &HeteroGraph,
+    subs: &[(HeteroGraph, PartitionMap)],
+    patch: &DeltaPatch,
+    cache: &PlanCache,
+) -> Result<EcoOutcome, String> {
+    let patched_parent = apply_delta(parent, patch)?;
+    let maps: Vec<PartitionMap> = subs.iter().map(|(_, m)| m.clone()).collect();
+    let routed = route_patch(parent, patch, &maps);
+    debug_assert_eq!(routed.parts.len(), subs.len());
+
+    let mut report = EcoReport { dropped_near: routed.dropped_near, ..EcoReport::default() };
+    let mut subgraphs = Vec::with_capacity(subs.len());
+    for (i, routing) in routed.parts.iter().enumerate() {
+        let (old_sub, old_map) = &subs[i];
+        let sub = match routing {
+            RoutedPatch::Untouched => {
+                report.untouched += 1;
+                let (engine, lookup) = cache.engine_for_traced(old_sub);
+                report.cache.record(lookup);
+                EcoSubgraph { graph: old_sub.clone(), map: old_map.clone(), engine, lookup }
+            }
+            RoutedPatch::Patch(local) => {
+                report.patched += 1;
+                let graph = local.apply(old_sub).map_err(|e| {
+                    format!("routed patch failed on partition {i} ({}): {e}", local.describe())
+                })?;
+                if graph.adjacency_hash() != old_sub.adjacency_hash() {
+                    report.evicted += 1; // engine_for_patched evicts it
+                }
+                let (engine, lookup, stats) = cache.engine_for_patched(old_sub, &graph, local);
+                report.cache.record(lookup);
+                if let Some(stats) = stats {
+                    report.repair = report.repair.plus(&stats);
+                }
+                // The net set is stable by construction (that's what the
+                // router's restage rule protects), so the old map still
+                // describes the patched subgraph.
+                EcoSubgraph { graph, map: old_map.clone(), engine, lookup }
+            }
+            RoutedPatch::Restage => {
+                report.restaged += 1;
+                // The cell range is stable (range partitioning); only the
+                // net-id side of the map went stale. Re-cut exactly this
+                // range from the patched parent, keeping the fleet id.
+                let lo = old_map.cell_ids[0];
+                let hi = lo + old_map.cell_ids.len();
+                let (graph, map) = cut_partition(&patched_parent, lo, hi, old_sub.id);
+                let old_hash = old_sub.adjacency_hash();
+                if graph.adjacency_hash() != old_hash {
+                    cache.evict(old_hash);
+                    report.evicted += 1;
+                }
+                let (engine, lookup) = cache.engine_for_traced(&graph);
+                report.cache.record(lookup);
+                EcoSubgraph { graph, map, engine, lookup }
+            }
+        };
+        subgraphs.push(sub);
+    }
+    Ok(EcoOutcome { parent: patched_parent, subgraphs, report })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::EngineBuilder;
+    use crate::graph::{partition_with_map, Csr, EdgeType};
+    use crate::tensor::Matrix;
+
+    /// The same shape as partition.rs's routing fixture: 6 cells / 4 nets,
+    /// cut into two partitions of 3 cells. Net 0 pins {0,1}, net 1 pins
+    /// {2,3} (spans both partitions), net 2 pins {4,5}, net 3 pins {1}.
+    fn fixture() -> HeteroGraph {
+        let near = Csr::from_triplets(
+            6,
+            6,
+            &[
+                (0, 1, 1.0),
+                (1, 0, 1.0),
+                (1, 2, 1.0),
+                (2, 1, 1.0),
+                (2, 3, 1.0),
+                (3, 2, 1.0),
+                (3, 4, 1.0),
+                (4, 3, 1.0),
+            ],
+        );
+        let pins = Csr::from_triplets(
+            4,
+            6,
+            &[
+                (0, 0, 1.0),
+                (0, 1, 1.0),
+                (1, 2, 1.0),
+                (1, 3, 1.0),
+                (2, 4, 1.0),
+                (2, 5, 1.0),
+                (3, 1, 1.0),
+            ],
+        );
+        let pinned = pins.transpose();
+        HeteroGraph {
+            id: 7,
+            n_cells: 6,
+            n_nets: 4,
+            near,
+            pins,
+            pinned,
+            x_cell: Matrix::from_fn(6, 3, |r, c| (r * 3 + c) as f32),
+            x_net: Matrix::from_fn(4, 3, |r, c| 0.5 + (r * 3 + c) as f32),
+            y_cell: Matrix::from_fn(6, 1, |r, _| r as f32),
+        }
+    }
+
+    fn assert_matches_full_repartition(outcome: &EcoOutcome, parts: usize) {
+        let fresh = partition_with_map(&outcome.parent, parts);
+        assert_eq!(outcome.subgraphs.len(), fresh.len());
+        for (got, (want, want_map)) in outcome.subgraphs.iter().zip(&fresh) {
+            assert_eq!(got.graph.adjacency_hash(), want.adjacency_hash());
+            assert_eq!(got.graph.x_cell.data, want.x_cell.data);
+            assert_eq!(got.graph.x_net.data, want.x_net.data);
+            assert_eq!(got.graph.y_cell.data, want.y_cell.data);
+            assert_eq!(got.map.cell_ids, want_map.cell_ids);
+            assert_eq!(got.map.net_ids, want_map.net_ids);
+        }
+    }
+
+    #[test]
+    fn eco_patches_only_the_touched_partition() {
+        let parent = fixture();
+        let subs = partition_with_map(&parent, 2);
+        let cache = PlanCache::new(EngineBuilder::dr(2, 2));
+        let warm: Vec<_> = subs.iter().map(|(g, _)| cache.engine_for(g)).collect();
+
+        // A symmetric near edge inside partition 1 (cells 3..6).
+        let patch = DeltaPatch::new()
+            .add_edge(EdgeType::Near, 3, 5, 0.5)
+            .add_edge(EdgeType::Near, 5, 3, 0.5);
+        let outcome = apply_eco(&parent, &subs, &patch, &cache).unwrap();
+
+        let r = &outcome.report;
+        assert_eq!((r.untouched, r.patched, r.restaged), (1, 1, 0), "{}", r.describe());
+        assert_eq!(r.evicted, 1);
+        assert_eq!(r.dropped_near, 0);
+        // Untouched partition: same engine object, served as a hit.
+        assert_eq!(outcome.subgraphs[0].lookup, Lookup::Hit);
+        assert!(Arc::ptr_eq(&outcome.subgraphs[0].engine, &warm[0]));
+        // Patched partition: repaired, not cold-built. Only near changed,
+        // so the pins/pinned plans are reused by pointer.
+        assert_eq!(outcome.subgraphs[1].lookup, Lookup::Repaired { stored: false });
+        assert_eq!(r.repair.plans_reused, 2, "{}", r.repair.describe());
+        assert_eq!(r.repair.plans_repaired, 1);
+        assert_eq!(r.repair.plans_rebuilt, 0);
+        assert!(Arc::ptr_eq(
+            outcome.subgraphs[1].engine.plan_shared(EdgeType::Pins),
+            warm[1].plan_shared(EdgeType::Pins)
+        ));
+        assert_eq!(r.cache, CacheStats { hits: 1, repairs: 1, ..CacheStats::default() });
+        // The old hash is gone from the cache, the new one serves hits.
+        assert!(cache.peek(subs[1].0.adjacency_hash()).is_none());
+        assert!(cache.peek(outcome.subgraphs[1].graph.adjacency_hash()).is_some());
+
+        assert_matches_full_repartition(&outcome, 2);
+    }
+
+    #[test]
+    fn eco_restages_partitions_whose_net_set_changes() {
+        let parent = fixture();
+        let subs = partition_with_map(&parent, 2);
+        let cache = PlanCache::new(EngineBuilder::dr(2, 2));
+        for (g, _) in &subs {
+            cache.engine_for(g);
+        }
+
+        // Net 3 currently pins only cell 1 (partition 0). Pinning cell 4
+        // introduces it to partition 1 → partition 1's local net ids
+        // shift → restage. Partition 0's pin set is untouched.
+        let patch = DeltaPatch::new().add_edge(EdgeType::Pins, 3, 4, 1.0);
+        let outcome = apply_eco(&parent, &subs, &patch, &cache).unwrap();
+
+        let r = &outcome.report;
+        assert_eq!((r.untouched, r.patched, r.restaged), (1, 0, 1), "{}", r.describe());
+        assert_eq!(r.evicted, 1);
+        assert_eq!(outcome.subgraphs[0].lookup, Lookup::Hit);
+        // Restaged partition is planned cold (a miss), never repaired.
+        assert_eq!(outcome.subgraphs[1].lookup, Lookup::Built { stored: false });
+        assert_eq!(r.repair, RepairStats::default());
+        assert_eq!(outcome.subgraphs[1].graph.n_nets, 3, "net 3 joined partition 1");
+        assert!(cache.peek(subs[1].0.adjacency_hash()).is_none(), "stale entry evicted");
+
+        assert_matches_full_repartition(&outcome, 2);
+    }
+
+    #[test]
+    fn identity_eco_is_all_hits_and_evicts_nothing() {
+        let parent = fixture();
+        let subs = partition_with_map(&parent, 2);
+        let cache = PlanCache::new(EngineBuilder::csr());
+        let warm: Vec<_> = subs.iter().map(|(g, _)| cache.engine_for(g)).collect();
+
+        let outcome = apply_eco(&parent, &subs, &DeltaPatch::new(), &cache).unwrap();
+        let r = &outcome.report;
+        assert_eq!((r.untouched, r.patched, r.restaged, r.evicted), (2, 0, 0, 0));
+        assert_eq!(outcome.parent.adjacency_hash(), parent.adjacency_hash());
+        for (i, sub) in outcome.subgraphs.iter().enumerate() {
+            assert_eq!(sub.lookup, Lookup::Hit);
+            assert!(Arc::ptr_eq(&sub.engine, &warm[i]));
+        }
+        assert_matches_full_repartition(&outcome, 2);
+    }
+
+    #[test]
+    fn bad_patch_reports_instead_of_panicking() {
+        let parent = fixture();
+        let subs = partition_with_map(&parent, 2);
+        let cache = PlanCache::new(EngineBuilder::csr());
+        // Edge already present in the parent → apply fails up front.
+        let patch = DeltaPatch::new().add_edge(EdgeType::Near, 0, 1, 1.0);
+        let err = apply_eco(&parent, &subs, &patch, &cache).unwrap_err();
+        assert!(err.contains("already exists"), "{err}");
+        assert_eq!(cache.stats(), CacheStats::default(), "error path touched the cache");
+    }
+}

@@ -26,7 +26,11 @@
 //!   shared evil rows accumulate through atomic f32 adds whose order can
 //!   vary, so its guarantee is within-tolerance, not bitwise;
 //! * [`FleetSpec`] — the single parse point for `--fleet` / `fleet`
-//!   settings, mirroring the engine's kernel registry.
+//!   settings, mirroring the engine's kernel registry;
+//! * [`apply_eco`] — incremental ECO tracking: a [`crate::graph::DeltaPatch`]
+//!   against an already-partitioned design restages only the partitions it
+//!   touches, repairing cached plans instead of cold-building them (see
+//!   [`eco`] and `docs/DELTA.md`).
 //!
 //! Inside each worker the §3.4 edge-level lanes still apply (the engine's
 //! `parallel` flag, dispatched via [`crate::sched::run_lanes`]), giving the
@@ -37,9 +41,11 @@
 //! root budget however high `--fleet` is set. See `docs/FLEET.md`.
 
 pub mod cache;
+pub mod eco;
 pub mod spec;
 
 pub use cache::{CacheStats, Lookup, PlanCache};
+pub use eco::{apply_eco, EcoOutcome, EcoReport, EcoSubgraph};
 pub use spec::FleetSpec;
 
 use crate::engine::{Engine, EngineBuilder};

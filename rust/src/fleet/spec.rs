@@ -83,6 +83,28 @@ impl FleetSpec {
         }
     }
 
+    /// The partition count a graph of `n_cells` cells *actually* gets
+    /// under this spec. A `<workers>x<parts>` request is capped by the
+    /// cell count: `partition_with_map` cannot cut more cell-contiguous
+    /// partitions than there are cells, and it warns loudly when it has
+    /// to truncate (see [`crate::graph::partition_with_map`]). Sweeps and
+    /// logs should report this, not the requested number — fig13/fig14
+    /// emit both so a config can't silently lie about its shape.
+    pub fn effective_parts(&self, n_cells: usize) -> usize {
+        match self.parts() {
+            None => 1,
+            Some(parts) => {
+                if n_cells == 0 {
+                    return 0;
+                }
+                // Mirrors the partitioner: ranges of ceil(n_cells/parts)
+                // cells, empty trailing ranges dropped.
+                let per = n_cells.div_ceil(parts);
+                n_cells.div_ceil(per)
+            }
+        }
+    }
+
     /// One-line description for logs and tables.
     pub fn describe(&self) -> String {
         match self {
@@ -124,6 +146,37 @@ mod tests {
             let err = FleetSpec::parse(bad).unwrap_err();
             assert!(err.contains("<workers>"), "{bad}: {err}");
         }
+    }
+
+    /// `effective_parts` must agree with what the partitioner produces.
+    #[test]
+    fn effective_parts_matches_the_partitioner() {
+        use crate::datagen::{generate_graph, GraphSpec};
+        use crate::graph::partition_with_map;
+        use crate::util::rng::Rng;
+        let g = generate_graph(
+            &GraphSpec {
+                n_cells: 13,
+                n_nets: 6,
+                target_near: 40,
+                target_pins: 13,
+                d_cell: 3,
+                d_net: 3,
+            },
+            0,
+            &mut Rng::new(1),
+        );
+        for parts in [1usize, 2, 3, 5, 13, 20, 100] {
+            let spec = FleetSpec::On { workers: 1, parts: Some(parts) };
+            assert_eq!(
+                spec.effective_parts(g.n_cells),
+                partition_with_map(&g, parts).len(),
+                "parts={parts}"
+            );
+        }
+        assert_eq!(FleetSpec::Off.effective_parts(13), 1);
+        assert_eq!(FleetSpec::On { workers: 2, parts: None }.effective_parts(13), 1);
+        assert_eq!(FleetSpec::On { workers: 2, parts: Some(4) }.effective_parts(0), 0);
     }
 
     #[test]

@@ -66,7 +66,8 @@ impl Csr {
         m
     }
 
-    /// Sort each row by column index and merge duplicate entries.
+    /// Sort each row by column index and merge duplicate entries into
+    /// canonical form (see [`push_canonical_row`]).
     fn sort_and_dedup(&mut self) {
         let mut new_indptr = vec![0usize; self.rows + 1];
         let mut new_indices = Vec::with_capacity(self.indices.len());
@@ -79,23 +80,51 @@ impl Csr {
                 .zip(self.values[s..e].iter().copied())
                 .collect();
             row.sort_by_key(|&(c, _)| c);
-            let mut i = 0;
-            while i < row.len() {
-                let (c, mut v) = row[i];
-                let mut j = i + 1;
-                while j < row.len() && row[j].0 == c {
-                    v += row[j].1;
-                    j += 1;
-                }
-                new_indices.push(c);
-                new_values.push(v);
-                i = j;
-            }
+            push_canonical_row(&row, &mut new_indices, &mut new_values);
             new_indptr[r + 1] = new_indices.len();
         }
         self.indptr = new_indptr;
         self.indices = new_indices;
         self.values = new_values;
+    }
+
+    /// Whether this matrix is in canonical form: every row's columns
+    /// strictly ascending (sorted, no duplicates) and no stored value
+    /// exactly `±0.0`. Every constructor in the crate produces canonical
+    /// matrices; [`crate::graph::delta`] relies on the invariant to make
+    /// patched graphs bit-identical to from-scratch rebuilds.
+    pub fn is_canonical(&self) -> bool {
+        for r in 0..self.rows {
+            let range = self.row_range(r);
+            if !self.indices[range.clone()].windows(2).all(|w| w[0] < w[1]) {
+                return false;
+            }
+            if self.values[range].iter().any(|&v| v == 0.0) {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Value stored at `(r, c)`, if any — binary search over the row's
+    /// sorted column indices (canonical form), O(log degree).
+    pub fn get(&self, r: usize, c: usize) -> Option<f32> {
+        let range = self.row_range(r);
+        let cols = &self.indices[range.clone()];
+        cols.binary_search(&(c as u32)).ok().map(|i| self.values[range.start + i])
+    }
+
+    /// The matrix as `(row, col, value)` triplets in storage order.
+    /// Feeding them back through [`Csr::from_triplets`] reproduces the
+    /// matrix bit-identically (canonical form is a fixed point).
+    pub fn to_triplets(&self) -> Vec<(usize, usize, f32)> {
+        let mut out = Vec::with_capacity(self.nnz());
+        for r in 0..self.rows {
+            for p in self.row_range(r) {
+                out.push((r, self.indices[p] as usize, self.values[p]));
+            }
+        }
+        out
     }
 
     pub fn nnz(&self) -> usize {
@@ -228,12 +257,58 @@ impl Csr {
 
     /// Structural equality with another matrix's transpose — validates the
     /// paper's pins = pinnedᵀ invariant without allocating a transpose.
+    ///
+    /// Genuinely allocation-free (a PR-7 doc claim this now actually
+    /// honors): every entry `(r, c)` of `self` is looked up at `(c, r)` in
+    /// `other` by binary search. With both matrices canonical (unique
+    /// columns per row — every in-crate constructor guarantees it), equal
+    /// nnz plus all probes matching is a bijection proof: distinct `self`
+    /// entries probe distinct `other` keys, so `nnz` successful probes
+    /// cover all of `other`. O(nnz · log degree), zero heap traffic. The
+    /// `transpose()`-based tests remain the reference oracle.
     pub fn is_transpose_of(&self, other: &Csr) -> bool {
         if self.rows != other.cols || self.cols != other.rows || self.nnz() != other.nnz() {
             return false;
         }
-        let t = other.transpose();
-        self.indptr == t.indptr && self.indices == t.indices && self.values == t.values
+        for r in 0..self.rows {
+            for p in self.row_range(r) {
+                let c = self.indices[p] as usize;
+                if other.get(c, r) != Some(self.values[p]) {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}
+
+/// Append one sorted row's canonical form to `indices`/`values`: duplicate
+/// columns are summed and entries whose **merged** value is exactly `±0.0`
+/// are dropped. This is the single canonicalization point shared by
+/// [`Csr::from_triplets`] and [`crate::graph::delta`]: any triplet list
+/// maps to exactly one stored form, so an ECO add-then-remove round-trip
+/// restores the original `content_hash` bit for bit. (Consequence: a CSR
+/// cannot hold an explicit zero-weight edge — "weight 0" *is* "no edge".)
+/// `row` must already be sorted by column.
+pub(crate) fn push_canonical_row(
+    row: &[(u32, f32)],
+    indices: &mut Vec<u32>,
+    values: &mut Vec<f32>,
+) {
+    debug_assert!(row.windows(2).all(|w| w[0].0 <= w[1].0), "row must be sorted");
+    let mut i = 0;
+    while i < row.len() {
+        let (c, mut v) = row[i];
+        let mut j = i + 1;
+        while j < row.len() && row[j].0 == c {
+            v += row[j].1;
+            j += 1;
+        }
+        if v != 0.0 {
+            indices.push(c);
+            values.push(v);
+        }
+        i = j;
     }
 }
 
@@ -308,6 +383,46 @@ mod tests {
     }
 
     #[test]
+    fn duplicates_cancelling_to_zero_are_dropped() {
+        // The PR-8 canonical-form fix: a merged sum of exactly 0.0 removes
+        // the entry, so "edge added then removed" hashes like "never there".
+        let m = Csr::from_triplets(2, 3, &[(0, 1, 1.5), (0, 1, -1.5), (1, 2, 2.0)]);
+        assert_eq!(m.nnz(), 1);
+        assert_eq!(m.indices, vec![2]);
+        assert!(m.is_canonical());
+        let clean = Csr::from_triplets(2, 3, &[(1, 2, 2.0)]);
+        assert_eq!(m, clean);
+        assert_eq!(m.content_hash(), clean.content_hash());
+        // An explicit-zero triplet is likewise unrepresentable.
+        let z = Csr::from_triplets(1, 2, &[(0, 0, 0.0)]);
+        assert_eq!(z.nnz(), 0);
+        // -0.0 counts as zero too (f32 == semantics).
+        let nz = Csr::from_triplets(1, 2, &[(0, 0, -0.0)]);
+        assert_eq!(nz.nnz(), 0);
+    }
+
+    #[test]
+    fn canonical_form_is_a_from_triplets_fixed_point() {
+        let m = sample();
+        assert!(m.is_canonical());
+        let rebuilt = Csr::from_triplets(m.rows, m.cols, &m.to_triplets());
+        assert_eq!(m, rebuilt);
+        assert_eq!(m.content_hash(), rebuilt.content_hash());
+        let mut broken = m.clone();
+        broken.values[0] = 0.0;
+        assert!(!broken.is_canonical());
+    }
+
+    #[test]
+    fn get_finds_exactly_the_stored_entries() {
+        let m = sample();
+        assert_eq!(m.get(0, 1), Some(1.0));
+        assert_eq!(m.get(3, 2), Some(6.0));
+        assert_eq!(m.get(0, 0), None);
+        assert_eq!(m.get(2, 1), None);
+    }
+
+    #[test]
     fn rows_sorted() {
         let m = Csr::from_triplets(1, 5, &[(0, 4, 1.0), (0, 1, 2.0), (0, 3, 3.0)]);
         assert_eq!(m.indices, vec![1, 3, 4]);
@@ -347,6 +462,65 @@ mod tests {
         }
         assert!(t.is_transpose_of(&m));
         assert!(m.is_transpose_of(&t));
+    }
+
+    /// The allocation-free `is_transpose_of` against the materialising
+    /// oracle (`transpose()` + array equality), positive and negative
+    /// cases over random matrices.
+    #[test]
+    fn is_transpose_of_matches_transpose_oracle() {
+        let mut rng = crate::util::rng::Rng::new(42);
+        for trial in 0..40 {
+            let rows = rng.range(1, 12);
+            let cols = rng.range(1, 12);
+            let mut t = Vec::new();
+            for r in 0..rows {
+                for _ in 0..rng.range(0, 5) {
+                    t.push((r, rng.below(cols), rng.uniform(-2.0, 2.0)));
+                }
+            }
+            let m = Csr::from_triplets(rows, cols, &t);
+            let mut other = m.transpose();
+            // Half the trials perturb `other` somewhere.
+            if trial % 2 == 1 && other.nnz() > 0 {
+                let p = rng.below(other.nnz());
+                if rng.next_u32() & 1 == 0 {
+                    other.values[p] += 0.25;
+                } else {
+                    // Move an entry to a (possibly) different column.
+                    let row = (0..other.rows).find(|&r| other.row_range(r).contains(&p)).unwrap();
+                    let tr = Csr::from_triplets(
+                        other.rows,
+                        other.cols,
+                        &other
+                            .to_triplets()
+                            .into_iter()
+                            .map(|(r, c, v)| {
+                                if r == row && c == other.indices[p] as usize {
+                                    (r, (c + 1) % other.cols, v)
+                                } else {
+                                    (r, c, v)
+                                }
+                            })
+                            .collect::<Vec<_>>(),
+                    );
+                    other = tr;
+                }
+            }
+            let oracle = {
+                let tt = other.transpose();
+                m.rows == tt.rows
+                    && m.cols == tt.cols
+                    && m.indptr == tt.indptr
+                    && m.indices == tt.indices
+                    && m.values == tt.values
+            };
+            assert_eq!(m.is_transpose_of(&other), oracle, "trial {trial}");
+        }
+        // Shape mismatches short-circuit to false.
+        let a = Csr::from_triplets(2, 3, &[(0, 0, 1.0)]);
+        let b = Csr::from_triplets(2, 3, &[(0, 0, 1.0)]);
+        assert!(!a.is_transpose_of(&b));
     }
 
     #[test]

@@ -1,0 +1,529 @@
+//! Incremental ECO deltas: patch a [`HeteroGraph`] in place of a rebuild.
+//!
+//! Real EDA flows never regenerate a netlist — they apply small
+//! engineering change orders (ECOs) to a design that is 99.9% unchanged
+//! (ROADMAP item 3). A [`DeltaPatch`] captures one such ECO: edge
+//! add/remove/reweight ops per [`EdgeType`] plus node-feature and label
+//! updates. [`apply`] produces a patched graph that is **bit-identical**
+//! (same `content_hash`/`adjacency_hash`, same CSR arrays) to rebuilding
+//! the graph from the patched triplet list with [`Csr::from_triplets`] —
+//! the property everything downstream leans on: the engine's incremental
+//! plan repair ([`crate::engine::repair`]) diffs old vs new normalized
+//! rows, and the fleet's ECO restage ([`crate::fleet::eco`]) reuses the
+//! plan-cache entries of untouched subgraphs.
+//!
+//! Bit-identity holds because both paths share one canonicalization point
+//! ([`super::csr::push_canonical_row`]): rows sorted by column, duplicates
+//! summed, exact-zero merged values dropped. A consequence worth stating:
+//! a zero weight *is* edge absence, so `Reweight` to `0.0` removes the
+//! edge and `Add` with weight `0.0` is a no-op — exactly what a
+//! from-scratch rebuild of the same triplets would store.
+//!
+//! `Pins`/`Pinned` are one logical relation stored twice (pins = pinnedᵀ,
+//! §2.2). Ops may be expressed against either type; the patch normalizes
+//! them into pins coordinates `(net, cell)` and [`apply`] edits **both**
+//! matrices, so the transpose invariant survives by construction (and is
+//! re-checked by `validate`). See `docs/DELTA.md`.
+
+use super::csr::{push_canonical_row, Csr};
+use super::hetero::{EdgeType, HeteroGraph};
+
+/// One edge mutation in the destination-major `(row, col)` frame of its
+/// edge type's adjacency (`near`: both cells; `pins`: row = net,
+/// col = cell; `pinned`: row = cell, col = net).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum EdgeOp {
+    /// Insert an absent edge. Errors if the edge exists (use `Reweight`);
+    /// a weight of exactly `0.0` is a no-op (canonical form holds no
+    /// explicit zeros).
+    Add { row: usize, col: usize, w: f32 },
+    /// Delete an existing edge. Errors if absent.
+    Remove { row: usize, col: usize },
+    /// Replace an existing edge's weight. Errors if absent; a new weight
+    /// of exactly `0.0` removes the edge.
+    Reweight { row: usize, col: usize, w: f32 },
+}
+
+impl EdgeOp {
+    /// The `(row, col)` this op targets.
+    pub fn target(&self) -> (usize, usize) {
+        match *self {
+            EdgeOp::Add { row, col, .. }
+            | EdgeOp::Remove { row, col }
+            | EdgeOp::Reweight { row, col, .. } => (row, col),
+        }
+    }
+
+    /// The weight this op writes, if any.
+    pub fn weight(&self) -> Option<f32> {
+        match *self {
+            EdgeOp::Add { w, .. } | EdgeOp::Reweight { w, .. } => Some(w),
+            EdgeOp::Remove { .. } => None,
+        }
+    }
+
+    fn verb(&self) -> &'static str {
+        match self {
+            EdgeOp::Add { .. } => "add",
+            EdgeOp::Remove { .. } => "remove",
+            EdgeOp::Reweight { .. } => "reweight",
+        }
+    }
+
+    /// The same op with row and column swapped — how a pins-frame op maps
+    /// onto the `pinned` matrix and vice versa.
+    fn mirrored(&self) -> EdgeOp {
+        match *self {
+            EdgeOp::Add { row, col, w } => EdgeOp::Add { row: col, col: row, w },
+            EdgeOp::Remove { row, col } => EdgeOp::Remove { row: col, col: row },
+            EdgeOp::Reweight { row, col, w } => EdgeOp::Reweight { row: col, col: row, w },
+        }
+    }
+}
+
+/// One engineering change order against a [`HeteroGraph`]: sparse edge
+/// edits plus node-feature/label row updates. Node *counts* never change
+/// under a delta — an ECO that grows the netlist is a new design.
+///
+/// Build with the chainable `add_edge`/`remove_edge`/`reweight_edge`/
+/// `set_*` methods, apply with [`apply`]. `Pinned`-frame edge ops are
+/// stored mirrored into pins coordinates, so a patch touching either side
+/// of the relation always patches both matrices consistently.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct DeltaPatch {
+    /// `near` ops, (cell, cell).
+    near: Vec<EdgeOp>,
+    /// `pins`-frame ops, (net, cell) — covers `pinned` by mirroring.
+    pins: Vec<EdgeOp>,
+    /// Full-row replacements of cell features: `(cell, new_row)`.
+    x_cell: Vec<(usize, Vec<f32>)>,
+    /// Full-row replacements of net features: `(net, new_row)`.
+    x_net: Vec<(usize, Vec<f32>)>,
+    /// Label updates: `(cell, new_label)`.
+    y_cell: Vec<(usize, f32)>,
+}
+
+impl DeltaPatch {
+    pub fn new() -> DeltaPatch {
+        DeltaPatch::default()
+    }
+
+    /// Append one edge op in `e`'s own coordinate frame.
+    pub fn edge(mut self, e: EdgeType, op: EdgeOp) -> DeltaPatch {
+        match e {
+            EdgeType::Near => self.near.push(op),
+            EdgeType::Pins => self.pins.push(op),
+            EdgeType::Pinned => self.pins.push(op.mirrored()),
+        }
+        self
+    }
+
+    pub fn add_edge(self, e: EdgeType, row: usize, col: usize, w: f32) -> DeltaPatch {
+        self.edge(e, EdgeOp::Add { row, col, w })
+    }
+
+    pub fn remove_edge(self, e: EdgeType, row: usize, col: usize) -> DeltaPatch {
+        self.edge(e, EdgeOp::Remove { row, col })
+    }
+
+    pub fn reweight_edge(self, e: EdgeType, row: usize, col: usize, w: f32) -> DeltaPatch {
+        self.edge(e, EdgeOp::Reweight { row, col, w })
+    }
+
+    /// Replace one cell's feature row.
+    pub fn set_x_cell(mut self, cell: usize, row: Vec<f32>) -> DeltaPatch {
+        self.x_cell.push((cell, row));
+        self
+    }
+
+    /// Replace one net's feature row.
+    pub fn set_x_net(mut self, net: usize, row: Vec<f32>) -> DeltaPatch {
+        self.x_net.push((net, row));
+        self
+    }
+
+    /// Replace one cell's congestion label.
+    pub fn set_y_cell(mut self, cell: usize, y: f32) -> DeltaPatch {
+        self.y_cell.push((cell, y));
+        self
+    }
+
+    /// An identity patch — [`apply`] returns a bit-identical graph.
+    pub fn is_empty(&self) -> bool {
+        self.near.is_empty()
+            && self.pins.is_empty()
+            && self.x_cell.is_empty()
+            && self.x_net.is_empty()
+            && self.y_cell.is_empty()
+    }
+
+    /// Whether this patch edits an edge type's adjacency. A pins-frame op
+    /// touches both `Pins` and `Pinned` (one relation, two matrices).
+    pub fn touches(&self, e: EdgeType) -> bool {
+        match e {
+            EdgeType::Near => !self.near.is_empty(),
+            EdgeType::Pins | EdgeType::Pinned => !self.pins.is_empty(),
+        }
+    }
+
+    /// Total edge ops (pins-frame ops counted once).
+    pub fn n_edge_ops(&self) -> usize {
+        self.near.len() + self.pins.len()
+    }
+
+    /// The edge ops for one type, in that type's coordinate frame
+    /// (`Pinned` returns the mirrored pins ops). Used by the partition
+    /// router to re-express a parent ECO per subgraph.
+    pub fn ops(&self, e: EdgeType) -> Vec<EdgeOp> {
+        match e {
+            EdgeType::Near => self.near.clone(),
+            EdgeType::Pins => self.pins.clone(),
+            EdgeType::Pinned => self.pins.iter().map(|op| op.mirrored()).collect(),
+        }
+    }
+
+    /// Feature-row updates for cells: `(cell, new_row)`.
+    pub fn x_cell_updates(&self) -> &[(usize, Vec<f32>)] {
+        &self.x_cell
+    }
+
+    /// Feature-row updates for nets: `(net, new_row)`.
+    pub fn x_net_updates(&self) -> &[(usize, Vec<f32>)] {
+        &self.x_net
+    }
+
+    /// Label updates: `(cell, new_label)`.
+    pub fn y_cell_updates(&self) -> &[(usize, f32)] {
+        &self.y_cell
+    }
+
+    /// Apply this patch to a graph (see [`apply`]).
+    pub fn apply(&self, g: &HeteroGraph) -> Result<HeteroGraph, String> {
+        apply(g, self)
+    }
+
+    /// One-line summary for logs.
+    pub fn describe(&self) -> String {
+        format!(
+            "delta: {} near op(s), {} pin op(s), {} feature/label update(s)",
+            self.near.len(),
+            self.pins.len(),
+            self.x_cell.len() + self.x_net.len() + self.y_cell.len()
+        )
+    }
+}
+
+/// Apply an ECO to a graph, returning the patched graph.
+///
+/// The result is bit-identical — same CSR arrays, same
+/// `content_hash`/`adjacency_hash` — to rebuilding each adjacency from
+/// its patched triplet list with [`Csr::from_triplets`] (asserted by
+/// proptests in `tests/integration_delta.rs`). Node counts, graph id and
+/// untouched features carry over unchanged. Errors (leaving `g` untouched)
+/// on: out-of-bounds targets, `Add` of an existing edge, `Remove`/
+/// `Reweight` of an absent edge, duplicate ops on one edge, non-finite
+/// weights, or feature rows of the wrong width.
+pub fn apply(g: &HeteroGraph, patch: &DeltaPatch) -> Result<HeteroGraph, String> {
+    let near = apply_csr(&g.near, &patch.near, "near")?;
+    let pins = apply_csr(&g.pins, &patch.pins, "pins")?;
+    let mirrored: Vec<EdgeOp> = patch.pins.iter().map(|op| op.mirrored()).collect();
+    let pinned = apply_csr(&g.pinned, &mirrored, "pinned")?;
+
+    let mut x_cell = g.x_cell.clone();
+    for (cell, row) in &patch.x_cell {
+        if *cell >= g.n_cells {
+            return Err(format!("x_cell update: cell {cell} out of bounds ({})", g.n_cells));
+        }
+        if row.len() != x_cell.cols {
+            return Err(format!(
+                "x_cell update for cell {cell}: width {} vs feature dim {}",
+                row.len(),
+                x_cell.cols
+            ));
+        }
+        x_cell.row_mut(*cell).copy_from_slice(row);
+    }
+    let mut x_net = g.x_net.clone();
+    for (net, row) in &patch.x_net {
+        if *net >= g.n_nets {
+            return Err(format!("x_net update: net {net} out of bounds ({})", g.n_nets));
+        }
+        if row.len() != x_net.cols {
+            return Err(format!(
+                "x_net update for net {net}: width {} vs feature dim {}",
+                row.len(),
+                x_net.cols
+            ));
+        }
+        x_net.row_mut(*net).copy_from_slice(row);
+    }
+    let mut y_cell = g.y_cell.clone();
+    for &(cell, y) in &patch.y_cell {
+        if cell >= g.n_cells {
+            return Err(format!("y_cell update: cell {cell} out of bounds ({})", g.n_cells));
+        }
+        y_cell.row_mut(cell)[0] = y;
+    }
+
+    let out = HeteroGraph {
+        id: g.id,
+        n_cells: g.n_cells,
+        n_nets: g.n_nets,
+        near,
+        pins,
+        pinned,
+        x_cell,
+        x_net,
+        y_cell,
+    };
+    out.validate()?;
+    Ok(out)
+}
+
+/// Patch one canonical CSR: untouched rows are copied wholesale; edited
+/// rows merge the old sorted entries with the (sorted, deduplicated) ops
+/// and re-canonicalize through the shared [`push_canonical_row`] — which
+/// is what makes the result bit-identical to a from-scratch
+/// [`Csr::from_triplets`] over the patched triplets.
+fn apply_csr(m: &Csr, ops: &[EdgeOp], what: &str) -> Result<Csr, String> {
+    if ops.is_empty() {
+        return Ok(m.clone());
+    }
+    let mut by_row: std::collections::BTreeMap<usize, Vec<(u32, EdgeOp)>> =
+        std::collections::BTreeMap::new();
+    for &op in ops {
+        let (r, c) = op.target();
+        if r >= m.rows || c >= m.cols {
+            return Err(format!(
+                "{what}: op targets ({r},{c}) outside {}×{}",
+                m.rows, m.cols
+            ));
+        }
+        if let Some(w) = op.weight() {
+            if !w.is_finite() {
+                return Err(format!("{what}: non-finite weight {w} at ({r},{c})"));
+            }
+        }
+        by_row.entry(r).or_default().push((c as u32, op));
+    }
+    for (r, edits) in by_row.iter_mut() {
+        edits.sort_by_key(|&(c, _)| c);
+        if let Some(w) = edits.windows(2).find(|w| w[0].0 == w[1].0) {
+            return Err(format!(
+                "{what}: duplicate ops target edge ({r},{}) — one op per edge per patch",
+                w[0].0
+            ));
+        }
+    }
+
+    let mut indptr = vec![0usize; m.rows + 1];
+    let mut indices = Vec::with_capacity(m.nnz() + ops.len());
+    let mut values = Vec::with_capacity(m.nnz() + ops.len());
+    let mut merged: Vec<(u32, f32)> = Vec::new();
+    for r in 0..m.rows {
+        match by_row.get(&r) {
+            None => {
+                let range = m.row_range(r);
+                indices.extend_from_slice(&m.indices[range.clone()]);
+                values.extend_from_slice(&m.values[range]);
+            }
+            Some(edits) => {
+                merged.clear();
+                let range = m.row_range(r);
+                let old_cols = &m.indices[range.clone()];
+                let old_vals = &m.values[range];
+                let (mut i, mut j) = (0usize, 0usize);
+                while i < old_cols.len() || j < edits.len() {
+                    if j >= edits.len() || (i < old_cols.len() && old_cols[i] < edits[j].0) {
+                        merged.push((old_cols[i], old_vals[i]));
+                        i += 1;
+                    } else if i >= old_cols.len() || edits[j].0 < old_cols[i] {
+                        // Op on an edge the matrix does not hold.
+                        let (c, op) = edits[j];
+                        match op {
+                            EdgeOp::Add { w, .. } => merged.push((c, w)),
+                            EdgeOp::Remove { .. } | EdgeOp::Reweight { .. } => {
+                                return Err(format!(
+                                    "{what}: no edge at ({r},{c}) to {}",
+                                    op.verb()
+                                ));
+                            }
+                        }
+                        j += 1;
+                    } else {
+                        // Op on an existing edge.
+                        let (c, op) = edits[j];
+                        match op {
+                            EdgeOp::Add { .. } => {
+                                return Err(format!(
+                                    "{what}: edge ({r},{c}) already exists — use Reweight"
+                                ));
+                            }
+                            EdgeOp::Remove { .. } => {}
+                            EdgeOp::Reweight { w, .. } => merged.push((c, w)),
+                        }
+                        i += 1;
+                        j += 1;
+                    }
+                }
+                push_canonical_row(&merged, &mut indices, &mut values);
+            }
+        }
+        indptr[r + 1] = indices.len();
+    }
+    Ok(Csr { rows: m.rows, cols: m.cols, indptr, indices, values })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Matrix;
+
+    fn toy() -> HeteroGraph {
+        let near = Csr::from_triplets(
+            3,
+            3,
+            &[(0, 1, 1.0), (1, 0, 1.0), (1, 2, 1.0), (2, 1, 1.0)],
+        );
+        let pins =
+            Csr::from_triplets(2, 3, &[(0, 0, 1.0), (0, 1, 1.0), (1, 1, 1.0), (1, 2, 1.0)]);
+        let pinned = pins.transpose();
+        HeteroGraph {
+            id: 7,
+            n_cells: 3,
+            n_nets: 2,
+            near,
+            pins,
+            pinned,
+            x_cell: Matrix::from_fn(3, 4, |r, c| (r * 4 + c) as f32),
+            x_net: Matrix::ones(2, 4),
+            y_cell: Matrix::zeros(3, 1),
+        }
+    }
+
+    #[test]
+    fn identity_patch_is_bit_identical() {
+        let g = toy();
+        let p = DeltaPatch::new();
+        assert!(p.is_empty());
+        let out = apply(&g, &p).unwrap();
+        assert_eq!(out.adjacency_hash(), g.adjacency_hash());
+        assert_eq!(out.near, g.near);
+        assert_eq!(out.x_cell.data, g.x_cell.data);
+        assert_eq!(out.id, g.id);
+    }
+
+    #[test]
+    fn add_remove_reweight_match_from_scratch() {
+        let g = toy();
+        let p = DeltaPatch::new()
+            .add_edge(EdgeType::Near, 0, 2, 0.5)
+            .remove_edge(EdgeType::Near, 1, 0)
+            .reweight_edge(EdgeType::Near, 2, 1, 3.0);
+        let out = apply(&g, &p).unwrap();
+        let want = Csr::from_triplets(
+            3,
+            3,
+            &[(0, 1, 1.0), (0, 2, 0.5), (1, 2, 1.0), (2, 1, 3.0)],
+        );
+        assert_eq!(out.near, want);
+        assert_eq!(out.near.content_hash(), want.content_hash());
+        out.validate().unwrap();
+    }
+
+    #[test]
+    fn pinned_frame_ops_mirror_into_both_matrices() {
+        let g = toy();
+        // Same logical edit expressed in either frame must agree: net 1
+        // gains a pin on cell 0.
+        let via_pins = apply(&g, &DeltaPatch::new().add_edge(EdgeType::Pins, 1, 0, 1.0)).unwrap();
+        let via_pinned =
+            apply(&g, &DeltaPatch::new().add_edge(EdgeType::Pinned, 0, 1, 1.0)).unwrap();
+        assert_eq!(via_pins.adjacency_hash(), via_pinned.adjacency_hash());
+        assert_eq!(via_pins.pins, via_pinned.pins);
+        assert_eq!(via_pins.pinned, via_pinned.pinned);
+        assert!(via_pins.pinned.is_transpose_of(&via_pins.pins));
+        // And it matches the from-scratch build of the patched relation.
+        let want_pins = Csr::from_triplets(
+            2,
+            3,
+            &[(0, 0, 1.0), (0, 1, 1.0), (1, 0, 1.0), (1, 1, 1.0), (1, 2, 1.0)],
+        );
+        assert_eq!(via_pins.pins, want_pins);
+        assert_eq!(via_pins.pinned, want_pins.transpose());
+    }
+
+    #[test]
+    fn add_then_remove_round_trips_to_original_hash() {
+        // The canonical-form bugfix in action: an ECO that adds an edge
+        // and a later ECO that removes it restore the original hash.
+        let g = toy();
+        let h0 = g.adjacency_hash();
+        let added = apply(&g, &DeltaPatch::new().add_edge(EdgeType::Near, 0, 2, 0.25)).unwrap();
+        assert_ne!(added.adjacency_hash(), h0);
+        let back = apply(&added, &DeltaPatch::new().remove_edge(EdgeType::Near, 0, 2)).unwrap();
+        assert_eq!(back.adjacency_hash(), h0);
+        assert_eq!(back.near, g.near);
+        // Reweight-to-zero is the same removal.
+        let zeroed =
+            apply(&added, &DeltaPatch::new().reweight_edge(EdgeType::Near, 0, 2, 0.0)).unwrap();
+        assert_eq!(zeroed.adjacency_hash(), h0);
+    }
+
+    #[test]
+    fn feature_and_label_updates() {
+        let g = toy();
+        let p = DeltaPatch::new()
+            .set_x_cell(1, vec![9.0, 8.0, 7.0, 6.0])
+            .set_x_net(0, vec![2.0; 4])
+            .set_y_cell(2, 0.75);
+        assert!(!p.is_empty());
+        assert!(!p.touches(EdgeType::Near));
+        let out = apply(&g, &p).unwrap();
+        // Features never move the adjacency hash.
+        assert_eq!(out.adjacency_hash(), g.adjacency_hash());
+        assert_eq!(out.x_cell.row(1), &[9.0, 8.0, 7.0, 6.0]);
+        assert_eq!(out.x_cell.row(0), g.x_cell.row(0));
+        assert_eq!(out.x_net.row(0), &[2.0; 4]);
+        assert_eq!(out.y_cell.at(2, 0), 0.75);
+    }
+
+    #[test]
+    fn invalid_ops_error_and_leave_no_trace() {
+        let g = toy();
+        for (p, needle) in [
+            (DeltaPatch::new().add_edge(EdgeType::Near, 0, 1, 2.0), "already exists"),
+            (DeltaPatch::new().remove_edge(EdgeType::Near, 0, 0), "no edge"),
+            (DeltaPatch::new().reweight_edge(EdgeType::Pins, 0, 2, 1.0), "no edge"),
+            (DeltaPatch::new().add_edge(EdgeType::Near, 9, 0, 1.0), "outside"),
+            (DeltaPatch::new().add_edge(EdgeType::Near, 0, 2, f32::NAN), "non-finite"),
+            (
+                DeltaPatch::new()
+                    .remove_edge(EdgeType::Near, 0, 1)
+                    .reweight_edge(EdgeType::Near, 0, 1, 2.0),
+                "duplicate ops",
+            ),
+            (
+                // Same logical pin edited through both frames = duplicate.
+                DeltaPatch::new()
+                    .remove_edge(EdgeType::Pins, 0, 0)
+                    .reweight_edge(EdgeType::Pinned, 0, 0, 2.0),
+                "duplicate ops",
+            ),
+            (DeltaPatch::new().set_x_cell(0, vec![1.0]), "width"),
+            (DeltaPatch::new().set_y_cell(5, 1.0), "out of bounds"),
+        ] {
+            let err = apply(&g, &p).unwrap_err();
+            assert!(err.contains(needle), "{err:?} missing {needle:?}");
+        }
+    }
+
+    #[test]
+    fn ops_accessor_round_trips_frames() {
+        let p = DeltaPatch::new().add_edge(EdgeType::Pinned, 2, 1, 0.5);
+        assert_eq!(p.ops(EdgeType::Pins), vec![EdgeOp::Add { row: 1, col: 2, w: 0.5 }]);
+        assert_eq!(p.ops(EdgeType::Pinned), vec![EdgeOp::Add { row: 2, col: 1, w: 0.5 }]);
+        assert_eq!(p.n_edge_ops(), 1);
+        assert!(p.touches(EdgeType::Pins) && p.touches(EdgeType::Pinned));
+    }
+}

@@ -12,13 +12,21 @@
 //! * [`partition`] — splits a design into ~10k-node partitions (§2.2 item 1),
 //!   with stable node remapping ([`PartitionMap`]) for the fleet layer.
 
+//! * [`delta`] — incremental ECO patches ([`DeltaPatch`]): edit a graph in
+//!   place of a rebuild, bit-identical to the from-scratch result, and
+//!   route parent ECOs onto partitions so only touched subgraphs restage.
+
 pub mod cbsr;
 pub mod csr;
+pub mod delta;
 pub mod hetero;
 pub mod partition;
 pub mod stats;
 
 pub use cbsr::Cbsr;
 pub use csr::{Csc, Csr};
+pub use delta::{apply as apply_delta, DeltaPatch, EdgeOp};
 pub use hetero::{EdgeType, HeteroGraph, NodeType};
-pub use partition::{partition_with_map, PartitionMap};
+pub use partition::{
+    cut_partition, partition_with_map, route_patch, PartitionMap, RoutedDelta, RoutedPatch,
+};

@@ -7,7 +7,8 @@
 //! and so tests can check conservation invariants.
 
 use super::csr::Csr;
-use super::hetero::HeteroGraph;
+use super::delta::DeltaPatch;
+use super::hetero::{EdgeType, HeteroGraph};
 
 /// Stable node remapping of one partition back to its parent graph:
 /// `cell_ids[i]` / `net_ids[j]` are the parent indices of local cell `i` /
@@ -42,64 +43,296 @@ pub fn partition_with_map(g: &HeteroGraph, parts: usize) -> Vec<(HeteroGraph, Pa
         if cell_lo >= cell_hi {
             break;
         }
-        let n_cells = cell_hi - cell_lo;
-
-        // near: keep edges with both endpoints inside.
-        let mut near_t = Vec::new();
-        for r in cell_lo..cell_hi {
-            for q in g.near.row_range(r) {
-                let c = g.near.indices[q] as usize;
-                if (cell_lo..cell_hi).contains(&c) {
-                    near_t.push((r - cell_lo, c - cell_lo, g.near.values[q]));
-                }
-            }
-        }
-
-        // Nets touched by this partition's cells (via pins: rows = nets).
-        let mut net_map = vec![usize::MAX; g.n_nets];
-        let mut n_nets = 0usize;
-        let mut pins_t = Vec::new();
-        for net in 0..g.n_nets {
-            for q in g.pins.row_range(net) {
-                let cell = g.pins.indices[q] as usize;
-                if (cell_lo..cell_hi).contains(&cell) {
-                    if net_map[net] == usize::MAX {
-                        net_map[net] = n_nets;
-                        n_nets += 1;
-                    }
-                    pins_t.push((net_map[net], cell - cell_lo, g.pins.values[q]));
-                }
-            }
-        }
-
-        let near = Csr::from_triplets(n_cells, n_cells, &near_t);
-        let pins = Csr::from_triplets(n_nets, n_cells, &pins_t);
-        let pinned = pins.transpose();
-
-        // Feature/label slices.
-        let cell_idx: Vec<usize> = (cell_lo..cell_hi).collect();
-        let mut net_idx = vec![0usize; n_nets];
-        for (old, &new) in net_map.iter().enumerate() {
-            if new != usize::MAX {
-                net_idx[new] = old;
-            }
-        }
-        out.push((
-            HeteroGraph {
-                id: p,
-                n_cells,
-                n_nets,
-                near,
-                pins,
-                pinned,
-                x_cell: g.x_cell.gather_rows(&cell_idx),
-                x_net: g.x_net.gather_rows(&net_idx),
-                y_cell: g.y_cell.gather_rows(&cell_idx),
-            },
-            PartitionMap { cell_ids: cell_idx, net_ids: net_idx },
-        ));
+        out.push(cut_partition(g, cell_lo, cell_hi, p));
+    }
+    if out.len() < parts {
+        crate::warn!(
+            "partition_with_map: requested {parts} partitions but design {} has only \
+             {} cells — producing {} partition(s); downstream fleet runs with the \
+             effective count",
+            g.id,
+            g.n_cells,
+            out.len()
+        );
     }
     out
+}
+
+/// Cut the single partition covering parent cells `[cell_lo, cell_hi)` out
+/// of `g`, keeping the nets that touch those cells. This is the unit of
+/// work [`partition_with_map`] loops over; the fleet's ECO path
+/// ([`crate::fleet::eco`]) calls it directly to re-cut *one* restaged
+/// partition from a patched parent, using the cell range recorded in the
+/// old [`PartitionMap`], without re-cutting its untouched siblings.
+pub fn cut_partition(
+    g: &HeteroGraph,
+    cell_lo: usize,
+    cell_hi: usize,
+    id: usize,
+) -> (HeteroGraph, PartitionMap) {
+    assert!(cell_lo < cell_hi && cell_hi <= g.n_cells);
+    let n_cells = cell_hi - cell_lo;
+
+    // near: keep edges with both endpoints inside.
+    let mut near_t = Vec::new();
+    for r in cell_lo..cell_hi {
+        for q in g.near.row_range(r) {
+            let c = g.near.indices[q] as usize;
+            if (cell_lo..cell_hi).contains(&c) {
+                near_t.push((r - cell_lo, c - cell_lo, g.near.values[q]));
+            }
+        }
+    }
+
+    // Nets touched by this partition's cells (via pins: rows = nets).
+    // Local net ids are assigned in ascending parent-net order, so they are
+    // fully determined by the *set* of nets present — the stability the
+    // delta router's restage rule protects.
+    let mut net_map = vec![usize::MAX; g.n_nets];
+    let mut n_nets = 0usize;
+    let mut pins_t = Vec::new();
+    for net in 0..g.n_nets {
+        for q in g.pins.row_range(net) {
+            let cell = g.pins.indices[q] as usize;
+            if (cell_lo..cell_hi).contains(&cell) {
+                if net_map[net] == usize::MAX {
+                    net_map[net] = n_nets;
+                    n_nets += 1;
+                }
+                pins_t.push((net_map[net], cell - cell_lo, g.pins.values[q]));
+            }
+        }
+    }
+
+    let near = Csr::from_triplets(n_cells, n_cells, &near_t);
+    let pins = Csr::from_triplets(n_nets, n_cells, &pins_t);
+    let pinned = pins.transpose();
+
+    // Feature/label slices.
+    let cell_idx: Vec<usize> = (cell_lo..cell_hi).collect();
+    let mut net_idx = vec![0usize; n_nets];
+    for (old, &new) in net_map.iter().enumerate() {
+        if new != usize::MAX {
+            net_idx[new] = old;
+        }
+    }
+    (
+        HeteroGraph {
+            id,
+            n_cells,
+            n_nets,
+            near,
+            pins,
+            pinned,
+            x_cell: g.x_cell.gather_rows(&cell_idx),
+            x_net: g.x_net.gather_rows(&net_idx),
+            y_cell: g.y_cell.gather_rows(&cell_idx),
+        },
+        PartitionMap { cell_ids: cell_idx, net_ids: net_idx },
+    )
+}
+
+/// What one partition must do to track a parent ECO.
+#[derive(Clone, Debug)]
+pub enum RoutedPatch {
+    /// No parent op lands inside this partition — keep graph and plan.
+    Untouched,
+    /// Every op landing here maps to stable local ids — apply this local
+    /// delta and repair the plan incrementally.
+    Patch(DeltaPatch),
+    /// The partition's net set changes (a net gains its first / loses its
+    /// last pin here), so local net ids shift — re-cut from the patched
+    /// parent via [`cut_partition`] and rebuild cold.
+    Restage,
+}
+
+impl RoutedPatch {
+    pub fn is_untouched(&self) -> bool {
+        matches!(self, RoutedPatch::Untouched)
+    }
+}
+
+/// A parent ECO routed through partition maps: one verdict per partition,
+/// plus the count of `near` ops dropped because they cross a partition
+/// boundary (cross-partition edges are dropped by [`partition_with_map`]
+/// itself, so the routed subgraphs still mirror a full re-partition).
+#[derive(Clone, Debug)]
+pub struct RoutedDelta {
+    pub parts: Vec<RoutedPatch>,
+    pub dropped_near: usize,
+}
+
+/// Route a parent-graph ECO onto the partitions described by `maps`
+/// (as returned by [`partition_with_map`] for the *pre-patch* parent).
+///
+/// The contract — asserted by proptests — is that applying each routed
+/// local patch to its old subgraph (and re-cutting `Restage`d ones from
+/// the patched parent) reproduces, bit-identically, what
+/// `partition_with_map(apply(g, patch))` would build from scratch.
+///
+/// Per-op routing rules:
+/// * `near (r, c)` — both cells in one partition → local op; the edge
+///   crosses a boundary → dropped (counted in `dropped_near`).
+/// * `pins (net, cell)` — routed to `cell`'s owner. If the partition's
+///   net *set* would change (first pin added / last pin removed, counting
+///   every op of this patch on that net) the partition is `Restage`d,
+///   because local net ids are assigned by ascending parent-net order over
+///   the present set; otherwise the op maps to stable local ids.
+/// * feature/label rows — `x_cell`/`y_cell` go to the owning partition;
+///   `x_net` goes to every partition where the net is present.
+pub fn route_patch(g: &HeteroGraph, patch: &DeltaPatch, maps: &[PartitionMap]) -> RoutedDelta {
+    // Cell ownership: maps hold contiguous ascending ranges.
+    let ranges: Vec<(usize, usize)> = maps
+        .iter()
+        .map(|m| {
+            let lo = *m.cell_ids.first().expect("partition owns at least one cell");
+            debug_assert!(m.cell_ids.windows(2).all(|w| w[1] == w[0] + 1));
+            (lo, lo + m.cell_ids.len())
+        })
+        .collect();
+    let owner = |cell: usize| -> usize {
+        ranges
+            .iter()
+            .position(|&(lo, hi)| (lo..hi).contains(&cell))
+            .expect("cell ranges cover the parent")
+    };
+    // Local net id in partition p, if present: net_ids is ascending
+    // (assignment order is ascending parent-net order).
+    let local_net = |p: usize, net: usize| maps[p].net_ids.binary_search(&net).ok();
+    // Pins of `net` inside partition p's cell range, in the pre-patch parent.
+    let pre_pins = |p: usize, net: usize| -> usize {
+        let (lo, hi) = ranges[p];
+        g.pins
+            .row_range(net)
+            .filter(|&q| (lo..hi).contains(&(g.pins.indices[q] as usize)))
+            .count()
+    };
+
+    let mut local: Vec<DeltaPatch> = vec![DeltaPatch::new(); maps.len()];
+    let mut restage = vec![false; maps.len()];
+    let mut dropped_near = 0usize;
+
+    for op in patch.ops(EdgeType::Near) {
+        let (r, c) = op.target();
+        let p = owner(r);
+        if p == owner(c) {
+            let lo = ranges[p].0;
+            local[p] = std::mem::take(&mut local[p]).edge(
+                EdgeType::Near,
+                shift(op, lo, lo),
+            );
+        } else {
+            dropped_near += 1;
+        }
+    }
+
+    // Net-presence bookkeeping: pin-count delta per (partition, net) from
+    // *all* ops of this patch, so removing a 2-pin net's pins one op at a
+    // time still restages.
+    let pins_ops = patch.ops(EdgeType::Pins);
+    let mut delta: std::collections::BTreeMap<(usize, usize), isize> =
+        std::collections::BTreeMap::new();
+    for op in &pins_ops {
+        let (net, cell) = op.target();
+        let p = owner(cell);
+        let d = match op {
+            super::delta::EdgeOp::Add { w, .. } => {
+                if *w == 0.0 {
+                    0
+                } else {
+                    1
+                }
+            }
+            super::delta::EdgeOp::Remove { .. } => -1,
+            super::delta::EdgeOp::Reweight { w, .. } => {
+                if *w == 0.0 {
+                    -1
+                } else {
+                    0
+                }
+            }
+        };
+        *delta.entry((p, net)).or_insert(0) += d;
+    }
+    for (&(p, net), &d) in &delta {
+        let before = pre_pins(p, net);
+        let after = (before as isize + d).max(0) as usize;
+        if (before == 0) != (after == 0) {
+            restage[p] = true;
+        }
+    }
+    for op in &pins_ops {
+        let (net, cell) = op.target();
+        let p = owner(cell);
+        if restage[p] {
+            continue;
+        }
+        // A net absent from a stable partition can only be targeted by
+        // no-op edits (zero-weight Add) — nothing to express locally.
+        let Some(ln) = local_net(p, net) else { continue };
+        let lo = ranges[p].0;
+        local[p] = std::mem::take(&mut local[p]).edge(EdgeType::Pins, relabel(*op, ln, cell - lo));
+    }
+
+    for (cell, row) in patch.x_cell_updates() {
+        let p = owner(*cell);
+        if !restage[p] {
+            local[p] = std::mem::take(&mut local[p]).set_x_cell(cell - ranges[p].0, row.clone());
+        }
+    }
+    for (net, row) in patch.x_net_updates() {
+        for p in 0..maps.len() {
+            if restage[p] {
+                continue;
+            }
+            if let Some(ln) = local_net(p, *net) {
+                local[p] = std::mem::take(&mut local[p]).set_x_net(ln, row.clone());
+            }
+        }
+    }
+    for &(cell, y) in patch.y_cell_updates() {
+        let p = owner(cell);
+        if !restage[p] {
+            local[p] = std::mem::take(&mut local[p]).set_y_cell(cell - ranges[p].0, y);
+        }
+    }
+
+    let parts = local
+        .into_iter()
+        .zip(&restage)
+        .map(|(patch, &rs)| {
+            if rs {
+                RoutedPatch::Restage
+            } else if patch.is_empty() {
+                RoutedPatch::Untouched
+            } else {
+                RoutedPatch::Patch(patch)
+            }
+        })
+        .collect();
+    RoutedDelta { parts, dropped_near }
+}
+
+/// Shift a near op's endpoints into local coordinates.
+fn shift(op: super::delta::EdgeOp, row_off: usize, col_off: usize) -> super::delta::EdgeOp {
+    use super::delta::EdgeOp;
+    match op {
+        EdgeOp::Add { row, col, w } => EdgeOp::Add { row: row - row_off, col: col - col_off, w },
+        EdgeOp::Remove { row, col } => EdgeOp::Remove { row: row - row_off, col: col - col_off },
+        EdgeOp::Reweight { row, col, w } => {
+            EdgeOp::Reweight { row: row - row_off, col: col - col_off, w }
+        }
+    }
+}
+
+/// Re-target a pins op at explicit local (net, cell) ids.
+fn relabel(op: super::delta::EdgeOp, net: usize, cell: usize) -> super::delta::EdgeOp {
+    use super::delta::EdgeOp;
+    match op {
+        EdgeOp::Add { w, .. } => EdgeOp::Add { row: net, col: cell, w },
+        EdgeOp::Remove { .. } => EdgeOp::Remove { row: net, col: cell },
+        EdgeOp::Reweight { w, .. } => EdgeOp::Reweight { row: net, col: cell, w },
+    }
 }
 
 #[cfg(test)]
@@ -203,6 +436,211 @@ mod tests {
         // Cell ranges are contiguous and cover the parent exactly once.
         let all: Vec<usize> = a.iter().flat_map(|(_, m)| m.cell_ids.clone()).collect();
         assert_eq!(all, (0..60).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn requesting_more_parts_than_cells_truncates_loudly_but_correctly() {
+        let g = random_graph(3, 2, 11);
+        // 8 requested, 3 producible — the count is clamped (and warned
+        // about at runtime), never padded with empty partitions.
+        let parts = partition_with_map(&g, 8);
+        assert_eq!(parts.len(), 3);
+        let total: usize = parts.iter().map(|(p, _)| p.n_cells).sum();
+        assert_eq!(total, 3);
+    }
+
+    #[test]
+    fn cut_partition_matches_partition_with_map() {
+        let g = random_graph(50, 20, 12);
+        let whole = partition_with_map(&g, 3);
+        for (p, (sub, map)) in whole.iter().enumerate() {
+            let lo = map.cell_ids[0];
+            let hi = lo + map.cell_ids.len();
+            let (cut, cut_map) = cut_partition(&g, lo, hi, p);
+            assert_eq!(cut.adjacency_hash(), sub.adjacency_hash());
+            assert_eq!(cut.near, sub.near);
+            assert_eq!(cut.pins, sub.pins);
+            assert_eq!(cut_map.cell_ids, map.cell_ids);
+            assert_eq!(cut_map.net_ids, map.net_ids);
+        }
+    }
+
+    /// Fixed 6-cell / 4-net graph with known partition structure at
+    /// parts = 2 (cells [0,3) and [3,6)):
+    /// part 0 nets {0, 1, 3}, part 1 nets {1, 2}.
+    fn routed_fixture() -> HeteroGraph {
+        let near = Csr::from_triplets(
+            6,
+            6,
+            &[
+                (0, 1, 1.0),
+                (1, 0, 1.0),
+                (1, 2, 1.0),
+                (2, 1, 1.0),
+                (2, 3, 1.0),
+                (3, 2, 1.0),
+                (3, 4, 1.0),
+                (4, 3, 1.0),
+            ],
+        );
+        let pins = Csr::from_triplets(
+            4,
+            6,
+            &[
+                (0, 0, 1.0),
+                (0, 1, 1.0),
+                (1, 2, 1.0),
+                (1, 3, 1.0),
+                (2, 4, 1.0),
+                (2, 5, 1.0),
+                (3, 1, 1.0),
+            ],
+        );
+        let pinned = pins.transpose();
+        HeteroGraph {
+            id: 0,
+            n_cells: 6,
+            n_nets: 4,
+            near,
+            pins,
+            pinned,
+            x_cell: Matrix::from_fn(6, 3, |r, c| (r * 3 + c) as f32),
+            x_net: Matrix::from_fn(4, 3, |r, c| -((r * 3 + c) as f32)),
+            y_cell: Matrix::zeros(6, 1),
+        }
+    }
+
+    /// Replay a routed delta: untouched partitions are cloned, patched
+    /// ones delta-applied, restaged ones re-cut from the patched parent.
+    fn apply_routed(
+        patched_parent: &HeteroGraph,
+        old: &[(HeteroGraph, PartitionMap)],
+        routed: &RoutedDelta,
+    ) -> Vec<(HeteroGraph, PartitionMap)> {
+        old.iter()
+            .zip(&routed.parts)
+            .enumerate()
+            .map(|(p, ((sub, map), verdict))| match verdict {
+                RoutedPatch::Untouched => (sub.clone(), map.clone()),
+                RoutedPatch::Patch(local) => (local.apply(sub).unwrap(), map.clone()),
+                RoutedPatch::Restage => {
+                    let lo = map.cell_ids[0];
+                    cut_partition(patched_parent, lo, lo + map.cell_ids.len(), p)
+                }
+            })
+            .collect()
+    }
+
+    fn assert_same_partitions(
+        got: &[(HeteroGraph, PartitionMap)],
+        want: &[(HeteroGraph, PartitionMap)],
+    ) {
+        assert_eq!(got.len(), want.len());
+        for ((ga, ma), (gb, mb)) in got.iter().zip(want) {
+            assert_eq!(ga.adjacency_hash(), gb.adjacency_hash());
+            assert_eq!(ga.near, gb.near);
+            assert_eq!(ga.pins, gb.pins);
+            assert_eq!(ga.pinned, gb.pinned);
+            assert_eq!(ga.x_cell.data, gb.x_cell.data);
+            assert_eq!(ga.x_net.data, gb.x_net.data);
+            assert_eq!(ga.y_cell.data, gb.y_cell.data);
+            assert_eq!(ma.cell_ids, mb.cell_ids);
+            assert_eq!(ma.net_ids, mb.net_ids);
+        }
+    }
+
+    #[test]
+    fn routed_local_patches_reproduce_full_repartition() {
+        use crate::graph::delta::{apply, DeltaPatch};
+        let g = routed_fixture();
+        let old = partition_with_map(&g, 2);
+        // Net sets stay stable: near edits inside each half, a pin
+        // reweight, and feature/label updates on both sides.
+        let patch = DeltaPatch::new()
+            .reweight_edge(EdgeType::Near, 0, 1, 2.5)
+            .add_edge(EdgeType::Near, 4, 5, 0.75)
+            .reweight_edge(EdgeType::Pins, 2, 4, 3.0)
+            .set_x_cell(4, vec![9.0, 9.0, 9.0])
+            .set_x_net(1, vec![7.0, 7.0, 7.0])
+            .set_y_cell(0, 0.5);
+        let patched = apply(&g, &patch).unwrap();
+
+        let routed = route_patch(&g, &patch, &[old[0].1.clone(), old[1].1.clone()]);
+        assert_eq!(routed.dropped_near, 0);
+        assert!(matches!(routed.parts[0], RoutedPatch::Patch(_)));
+        assert!(matches!(routed.parts[1], RoutedPatch::Patch(_)));
+        // x_net update on net 1 must land in BOTH partitions (it spans).
+        if let RoutedPatch::Patch(p0) = &routed.parts[0] {
+            assert_eq!(p0.x_net_updates().len(), 1);
+        }
+
+        let got = apply_routed(&patched, &old, &routed);
+        let want = partition_with_map(&patched, 2);
+        assert_same_partitions(&got, &want);
+    }
+
+    #[test]
+    fn cross_partition_near_ops_are_dropped_and_counted() {
+        use crate::graph::delta::DeltaPatch;
+        let g = routed_fixture();
+        let maps: Vec<PartitionMap> =
+            partition_with_map(&g, 2).into_iter().map(|(_, m)| m).collect();
+        // (2,3) crosses the boundary; its removal never reaches a subgraph
+        // (the partitioner dropped the edge at cut time already).
+        let patch = DeltaPatch::new()
+            .remove_edge(EdgeType::Near, 2, 3)
+            .add_edge(EdgeType::Near, 0, 5, 1.0);
+        let routed = route_patch(&g, &patch, &maps);
+        assert_eq!(routed.dropped_near, 2);
+        assert!(routed.parts.iter().all(|p| p.is_untouched()));
+    }
+
+    #[test]
+    fn net_set_changes_force_restage() {
+        use crate::graph::delta::{apply, DeltaPatch};
+        let g = routed_fixture();
+        let old = partition_with_map(&g, 2);
+        let maps: Vec<PartitionMap> = old.iter().map(|(_, m)| m.clone()).collect();
+
+        // Net 3 gains its first pin in partition 1 → restage part 1 only.
+        let grow = DeltaPatch::new().add_edge(EdgeType::Pins, 3, 5, 1.0);
+        let routed = route_patch(&g, &grow, &maps);
+        assert!(routed.parts[0].is_untouched());
+        assert!(matches!(routed.parts[1], RoutedPatch::Restage));
+        let patched = apply(&g, &grow).unwrap();
+        assert_same_partitions(
+            &apply_routed(&patched, &old, &routed),
+            &partition_with_map(&patched, 2),
+        );
+
+        // Net 3 loses its only pin in partition 0 → restage part 0.
+        let shrink = DeltaPatch::new().remove_edge(EdgeType::Pins, 3, 1);
+        let routed = route_patch(&g, &shrink, &maps);
+        assert!(matches!(routed.parts[0], RoutedPatch::Restage));
+        assert!(routed.parts[1].is_untouched());
+        let patched = apply(&g, &shrink).unwrap();
+        assert_same_partitions(
+            &apply_routed(&patched, &old, &routed),
+            &partition_with_map(&patched, 2),
+        );
+
+        // Reweight-to-zero is a removal for presence purposes too.
+        let zeroed = DeltaPatch::new().reweight_edge(EdgeType::Pins, 3, 1, 0.0);
+        let routed = route_patch(&g, &zeroed, &maps);
+        assert!(matches!(routed.parts[0], RoutedPatch::Restage));
+
+        // Rewiring a pin within one partition while the net keeps
+        // another pin there stays a local patch (net 0: cells 0 and 1).
+        let rewire = DeltaPatch::new()
+            .remove_edge(EdgeType::Pins, 0, 0)
+            .add_edge(EdgeType::Pins, 0, 2, 1.0);
+        let routed = route_patch(&g, &rewire, &maps);
+        assert!(matches!(routed.parts[0], RoutedPatch::Patch(_)));
+        let patched = apply(&g, &rewire).unwrap();
+        assert_same_partitions(
+            &apply_routed(&patched, &old, &routed),
+            &partition_with_map(&patched, 2),
+        );
     }
 
     #[test]

@@ -31,6 +31,12 @@
 //! engine-configuration signature, so a restarted process warm-starts
 //! Alg. 1 stage 1; and the [`serve`] subsystem runs a bounded job queue
 //! over one shared disk-backed plan cache. See `docs/SERVE.md`.
+//!
+//! Designs evolve under the tool: [`graph::delta`] applies engineering
+//! change orders (ECOs) bit-identically to a from-scratch rebuild,
+//! `EngineBuilder::repair` patches cached kernel plans instead of
+//! rebuilding them, and [`fleet::apply_eco`] restages only the fleet
+//! partitions an ECO actually touches. See `docs/DELTA.md`.
 
 pub mod bench;
 pub mod config;

@@ -1,0 +1,478 @@
+//! Integration: incremental ECO delta updates (ISSUE 8).
+//!
+//! Three contracts are gated here:
+//!
+//! 1. **Patch ≡ rebuild** — `graph::delta::apply` produces a graph
+//!    bit-identical (CSR arrays, hashes, features) to rebuilding from
+//!    patched triplets from scratch, for random patches including the
+//!    empty patch and pins↔pinned-coupled edits (a property test against
+//!    an independent triplet model).
+//! 2. **Repair ≡ cold build** — an incrementally repaired `Engine` is
+//!    bit-identical to a cold build of the patched graph for every kernel
+//!    in the registry, and the global plan counters prove the repair
+//!    cold-built nothing.
+//! 3. **ECO ≡ re-partition** — routing a parent-level ECO through the
+//!    partition maps and restaging only touched subgraphs reproduces a
+//!    full re-partition of the patched parent exactly; an identity ECO
+//!    changes nothing (all cache hits, bit-identical training — the
+//!    golden traces in `tests/golden/` stay valid by construction).
+
+use dr_circuitgnn::datagen::{
+    generate_design, generate_eco, generate_graph, table1_designs, EcoSpec, GraphSpec,
+};
+use dr_circuitgnn::engine::{plan_counters, Engine, EngineBuilder, KernelSpec, REGISTRY};
+use dr_circuitgnn::fleet::{apply_eco, Fleet, Lookup, PlanCache};
+use dr_circuitgnn::graph::{
+    apply_delta, partition_with_map, Csr, DeltaPatch, EdgeOp, EdgeType, HeteroGraph,
+};
+use dr_circuitgnn::nn::{Adam, DrCircuitGnn};
+use dr_circuitgnn::tensor::Matrix;
+use dr_circuitgnn::util::proptest::{check, Gen};
+use dr_circuitgnn::util::rng::Rng;
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Mutex;
+
+/// The plan counters are process-global; tests in this binary run on
+/// threads, so every test that builds plans takes this lock to keep the
+/// exact-count assertions meaningful.
+static COUNTER_GUARD: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    COUNTER_GUARD.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn ensure(cond: bool, msg: impl Fn() -> String) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg())
+    }
+}
+
+fn same_csr(got: &Csr, want: &Csr, tag: &str) -> Result<(), String> {
+    ensure(got.rows == want.rows && got.cols == want.cols, || format!("{tag}: shape"))?;
+    ensure(got.indptr == want.indptr, || format!("{tag}: indptr"))?;
+    ensure(got.indices == want.indices, || format!("{tag}: indices"))?;
+    let same_bits = got.values.len() == want.values.len()
+        && got.values.iter().zip(&want.values).all(|(a, b)| a.to_bits() == b.to_bits());
+    ensure(same_bits, || format!("{tag}: value bits"))
+}
+
+fn same_f32_bits(got: &[f32], want: &[f32], tag: &str) -> Result<(), String> {
+    let same = got.len() == want.len()
+        && got.iter().zip(want).all(|(a, b)| a.to_bits() == b.to_bits());
+    ensure(same, || format!("{tag}: bits differ"))
+}
+
+// ---------------------------------------------------------------------------
+// 1. Patch ≡ rebuild, against an independent triplet model.
+// ---------------------------------------------------------------------------
+
+/// The from-scratch reference: edge maps + feature matrices, rebuilt into
+/// a `HeteroGraph` through `Csr::from_triplets` — the same constructor the
+/// datagen pipeline uses, and deliberately *not* the delta code path.
+#[derive(Clone)]
+struct TripletModel {
+    n_cells: usize,
+    n_nets: usize,
+    near: BTreeMap<(usize, usize), f32>,
+    pins: BTreeMap<(usize, usize), f32>,
+    x_cell: Matrix,
+    x_net: Matrix,
+    y_cell: Matrix,
+}
+
+impl TripletModel {
+    fn random(g: &mut Gen) -> TripletModel {
+        let n_cells = g.sized(2, 40);
+        let n_nets = g.sized(1, 20);
+        let mut near = BTreeMap::new();
+        for _ in 0..g.rng.below(4 * n_cells) {
+            let r = g.rng.below(n_cells);
+            let c = g.rng.below(n_cells);
+            if r != c {
+                near.insert((r, c), g.rng.uniform(0.1, 2.0));
+            }
+        }
+        let mut pins = BTreeMap::new();
+        for _ in 0..g.rng.below(3 * n_nets + 1) {
+            pins.insert((g.rng.below(n_nets), g.rng.below(n_cells)), g.rng.uniform(0.1, 2.0));
+        }
+        TripletModel {
+            n_cells,
+            n_nets,
+            near,
+            pins,
+            x_cell: Matrix::from_vec(n_cells, 3, g.normal_vec(n_cells * 3)),
+            x_net: Matrix::from_vec(n_nets, 3, g.normal_vec(n_nets * 3)),
+            y_cell: Matrix::from_vec(n_cells, 1, g.normal_vec(n_cells)),
+        }
+    }
+
+    fn graph(&self) -> HeteroGraph {
+        let near_t: Vec<(usize, usize, f32)> =
+            self.near.iter().map(|(&(r, c), &w)| (r, c, w)).collect();
+        let pins_t: Vec<(usize, usize, f32)> =
+            self.pins.iter().map(|(&(n, c), &w)| (n, c, w)).collect();
+        let pins = Csr::from_triplets(self.n_nets, self.n_cells, &pins_t);
+        let pinned = pins.transpose();
+        HeteroGraph {
+            id: 0,
+            n_cells: self.n_cells,
+            n_nets: self.n_nets,
+            near: Csr::from_triplets(self.n_cells, self.n_cells, &near_t),
+            pins,
+            pinned,
+            x_cell: self.x_cell.clone(),
+            x_net: self.x_net.clone(),
+            y_cell: self.y_cell.clone(),
+        }
+    }
+}
+
+/// A random valid patch and the model with the same edits applied. Ops
+/// target the pins relation through *both* frames (Pins: net→cell and
+/// Pinned: cell→net) to exercise the mirroring; one shared used-set keyed
+/// in pins coordinates keeps targets distinct across frames, matching the
+/// patch's own duplicate rule.
+fn random_patch(g: &mut Gen, m: &TripletModel) -> (DeltaPatch, TripletModel) {
+    let mut patch = DeltaPatch::new();
+    let mut next = m.clone();
+    let mut used_near: BTreeSet<(usize, usize)> = BTreeSet::new();
+    let mut used_pins: BTreeSet<(usize, usize)> = BTreeSet::new();
+    let n_ops = g.rng.below(14); // 0 ⇒ the identity patch is covered too
+    for _ in 0..n_ops {
+        match g.rng.below(8) {
+            0 | 1 => {
+                // near add (sometimes a zero-weight no-op add)
+                let r = g.rng.below(m.n_cells);
+                let c = g.rng.below(m.n_cells);
+                if m.near.contains_key(&(r, c)) || used_near.contains(&(r, c)) {
+                    continue;
+                }
+                let w = if g.rng.below(6) == 0 { 0.0 } else { g.rng.uniform(0.1, 2.0) };
+                used_near.insert((r, c));
+                patch = patch.add_edge(EdgeType::Near, r, c, w);
+                if w != 0.0 {
+                    next.near.insert((r, c), w);
+                }
+            }
+            2 => {
+                // near remove
+                let keys: Vec<_> =
+                    m.near.keys().filter(|k| !used_near.contains(k)).copied().collect();
+                if keys.is_empty() {
+                    continue;
+                }
+                let (r, c) = *g.pick(&keys);
+                used_near.insert((r, c));
+                patch = patch.remove_edge(EdgeType::Near, r, c);
+                next.near.remove(&(r, c));
+            }
+            3 => {
+                // near reweight (sometimes to exact zero = removal)
+                let keys: Vec<_> =
+                    m.near.keys().filter(|k| !used_near.contains(k)).copied().collect();
+                if keys.is_empty() {
+                    continue;
+                }
+                let (r, c) = *g.pick(&keys);
+                let w = if g.rng.below(4) == 0 { 0.0 } else { g.rng.uniform(0.1, 2.0) };
+                used_near.insert((r, c));
+                patch = patch.reweight_edge(EdgeType::Near, r, c, w);
+                if w == 0.0 {
+                    next.near.remove(&(r, c));
+                } else {
+                    next.near.insert((r, c), w);
+                }
+            }
+            4 | 5 => {
+                // pins add/remove in the Pins frame (net, cell)
+                let net = g.rng.below(m.n_nets);
+                let cell = g.rng.below(m.n_cells);
+                if used_pins.contains(&(net, cell)) {
+                    continue;
+                }
+                used_pins.insert((net, cell));
+                if m.pins.contains_key(&(net, cell)) {
+                    patch = patch.remove_edge(EdgeType::Pins, net, cell);
+                    next.pins.remove(&(net, cell));
+                } else {
+                    let w = g.rng.uniform(0.1, 2.0);
+                    patch = patch.add_edge(EdgeType::Pins, net, cell, w);
+                    next.pins.insert((net, cell), w);
+                }
+            }
+            6 | 7 => {
+                // the same relation edited through the Pinned frame
+                // (cell, net) — must mirror into both matrices
+                let net = g.rng.below(m.n_nets);
+                let cell = g.rng.below(m.n_cells);
+                if used_pins.contains(&(net, cell)) {
+                    continue;
+                }
+                used_pins.insert((net, cell));
+                if m.pins.contains_key(&(net, cell)) {
+                    let w = g.rng.uniform(0.1, 2.0);
+                    patch = patch
+                        .edge(EdgeType::Pinned, EdgeOp::Reweight { row: cell, col: net, w });
+                    next.pins.insert((net, cell), w);
+                } else {
+                    let w = g.rng.uniform(0.1, 2.0);
+                    patch = patch.edge(EdgeType::Pinned, EdgeOp::Add { row: cell, col: net, w });
+                    next.pins.insert((net, cell), w);
+                }
+            }
+            _ => unreachable!(),
+        }
+    }
+    if g.bool() {
+        let cell = g.rng.below(m.n_cells);
+        let row = g.normal_vec(3);
+        patch = patch.set_x_cell(cell, row.clone());
+        next.x_cell.row_mut(cell).copy_from_slice(&row);
+    }
+    if g.bool() {
+        let net = g.rng.below(m.n_nets);
+        let row = g.normal_vec(3);
+        patch = patch.set_x_net(net, row.clone());
+        next.x_net.row_mut(net).copy_from_slice(&row);
+    }
+    if g.bool() {
+        let cell = g.rng.below(m.n_cells);
+        let y = g.rng.uniform(-1.0, 1.0);
+        patch = patch.set_y_cell(cell, y);
+        next.y_cell.row_mut(cell)[0] = y;
+    }
+    (patch, next)
+}
+
+#[test]
+fn prop_apply_equals_from_scratch_rebuild() {
+    check("delta::apply≡rebuild", 80, 0xDE17A, |g| {
+        let m = TripletModel::random(g);
+        let (patch, want_model) = random_patch(g, &m);
+        let got = apply_delta(&m.graph(), &patch)
+            .map_err(|e| format!("apply failed: {e}\npatch: {}", patch.describe()))?;
+        got.validate().map_err(|e| format!("patched graph invalid: {e}"))?;
+        let want = want_model.graph();
+        same_csr(&got.near, &want.near, "near")?;
+        same_csr(&got.pins, &want.pins, "pins")?;
+        same_csr(&got.pinned, &want.pinned, "pinned")?;
+        ensure(got.adjacency_hash() == want.adjacency_hash(), || "adjacency_hash".into())?;
+        same_f32_bits(&got.x_cell.data, &want.x_cell.data, "x_cell")?;
+        same_f32_bits(&got.x_net.data, &want.x_net.data, "x_net")?;
+        same_f32_bits(&got.y_cell.data, &want.y_cell.data, "y_cell")
+    });
+}
+
+// ---------------------------------------------------------------------------
+// 2. Repair ≡ cold build, for every registry kernel, counters proving it.
+// ---------------------------------------------------------------------------
+
+fn repair_fixture() -> (HeteroGraph, DeltaPatch, HeteroGraph) {
+    let parent = generate_graph(
+        &GraphSpec {
+            n_cells: 150,
+            n_nets: 70,
+            target_near: 900,
+            target_pins: 220,
+            d_cell: 5,
+            d_net: 5,
+        },
+        0,
+        &mut Rng::new(11),
+    );
+    let patch = generate_eco(&parent, &EcoSpec::new(0.04, 7));
+    let patched = apply_delta(&parent, &patch).expect("generated ECOs apply");
+    (parent, patch, patched)
+}
+
+fn assert_engines_bit_identical(a: &Engine, b: &Engine, g: &HeteroGraph, tag: &str) {
+    for e in EdgeType::ALL {
+        let (pa, pb) = (a.plan(e), b.plan(e));
+        assert_eq!(pa.adj.indptr, pb.adj.indptr, "{tag} {} adj indptr", e.name());
+        assert_eq!(pa.adj.indices, pb.adj.indices, "{tag} {} adj indices", e.name());
+        same_f32_bits(&pa.adj.values, &pb.adj.values, "adj values")
+            .unwrap_or_else(|m| panic!("{tag} {}: {m}", e.name()));
+        assert_eq!(pa.csc.indptr, pb.csc.indptr, "{tag} {} csc indptr", e.name());
+        assert_eq!(pa.csc.indices, pb.csc.indices, "{tag} {} csc indices", e.name());
+        same_f32_bits(&pa.csc.values, &pb.csc.values, "csc values")
+            .unwrap_or_else(|m| panic!("{tag} {}: {m}", e.name()));
+    }
+    // End to end: a full model forward is bitwise identical.
+    let mut rng = Rng::new(3);
+    let model = DrCircuitGnn::new(g.x_cell.cols, g.x_net.cols, 8, &mut rng);
+    let pred_a = model.clone().forward(a, g);
+    let pred_b = model.clone().forward(b, g);
+    same_f32_bits(&pred_a.data, &pred_b.data, "forward")
+        .unwrap_or_else(|m| panic!("{tag}: {m}"));
+}
+
+#[test]
+fn repaired_plans_match_cold_builds_for_every_registry_kernel() {
+    let _g = lock();
+    let (parent, patch, patched) = repair_fixture();
+    for entry in REGISTRY {
+        let builder = Engine::builder().kernel(entry.name).k_cell(4).k_net(4);
+        let old = builder.build(&parent);
+        let before = plan_counters();
+        let (repaired, stats) = builder.repair(&old, &patched, &patch);
+        let during = plan_counters().since(&before);
+        // The only-touched-structures proof: repair never cold-builds a
+        // plan (`plans == 0` while `repairs > 0`). The auto policy may
+        // legitimately flip a kernel choice on the patched adjacency,
+        // which routes through the rebuild tier — cold plans there must
+        // match the rebuilt count exactly and nothing else.
+        if entry.spec == KernelSpec::Auto {
+            assert_eq!(during.plans, stats.plans_rebuilt, "{}: {}", entry.name, stats.describe());
+        } else {
+            assert_eq!(during.plans, 0, "{}: repair cold-built a plan", entry.name);
+            assert_eq!(stats.plans_rebuilt, 0, "{}", entry.name);
+        }
+        assert_eq!(during.repairs, stats.plans_repaired, "{}", entry.name);
+        assert_eq!(
+            stats.plans_reused + stats.plans_repaired + stats.plans_rebuilt,
+            3,
+            "{}: every edge type classified once: {}",
+            entry.name,
+            stats.describe()
+        );
+        let cold = builder.build(&patched);
+        assert_engines_bit_identical(&repaired, &cold, &patched, entry.name);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 3. ECO routing ≡ full re-partition; identity ECO changes nothing.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_routed_eco_equals_full_repartition() {
+    let _g = lock();
+    check("apply_eco≡repartition", 10, 0xEC0, |g| {
+        let n_cells = g.sized(40, 160);
+        let parent = generate_graph(
+            &GraphSpec {
+                n_cells,
+                n_nets: n_cells / 2,
+                target_near: n_cells * 5,
+                target_pins: n_cells + n_cells / 3,
+                d_cell: 4,
+                d_net: 4,
+            },
+            0,
+            &mut Rng::new(g.rng.next_u64()),
+        );
+        let parts = *g.pick(&[2usize, 3, 5]);
+        let subs = partition_with_map(&parent, parts);
+        let churn = *g.pick(&[0.01f64, 0.05]);
+        let patch = generate_eco(&parent, &EcoSpec::new(churn, g.rng.next_u64()));
+
+        let cache = PlanCache::new(EngineBuilder::csr());
+        for (sub, _) in &subs {
+            cache.engine_for(sub); // warm: the patched path must repair
+        }
+        let outcome = apply_eco(&parent, &subs, &patch, &cache)
+            .map_err(|e| format!("apply_eco failed: {e}\npatch: {}", patch.describe()))?;
+
+        let fresh = partition_with_map(&apply_delta(&parent, &patch).unwrap(), parts);
+        ensure(outcome.subgraphs.len() == fresh.len(), || "partition count".into())?;
+        for (i, (got, (want, want_map))) in
+            outcome.subgraphs.iter().zip(&fresh).enumerate()
+        {
+            let tag = |what: &str| {
+                format!(
+                    "partition {i} ({:?}) {what} diverged from full repartition\npatch: {}",
+                    got.lookup,
+                    patch.describe()
+                )
+            };
+            ensure(got.graph.adjacency_hash() == want.adjacency_hash(), || tag("adjacency"))?;
+            same_f32_bits(&got.graph.x_cell.data, &want.x_cell.data, "x_cell")
+                .map_err(|_| tag("x_cell"))?;
+            same_f32_bits(&got.graph.x_net.data, &want.x_net.data, "x_net")
+                .map_err(|_| tag("x_net"))?;
+            same_f32_bits(&got.graph.y_cell.data, &want.y_cell.data, "y_cell")
+                .map_err(|_| tag("y_cell"))?;
+            ensure(got.map.cell_ids == want_map.cell_ids, || tag("cell map"))?;
+            ensure(got.map.net_ids == want_map.net_ids, || tag("net map"))?;
+        }
+        // Cost discipline: every partition was served from the cache —
+        // hits for untouched, repairs (or re-materialisation) otherwise;
+        // a delta never re-plans everything.
+        ensure(
+            outcome.report.untouched + outcome.report.patched + outcome.report.restaged
+                == subs.len(),
+            || "partition accounting".into(),
+        )
+    });
+}
+
+/// The identity ECO is free and exact: all cache hits, nothing evicted,
+/// and training on the "updated" fleet is bit-identical to the original —
+/// which is why the committed golden traces in `tests/golden/` need no
+/// regeneration for this PR.
+#[test]
+fn identity_eco_is_free_and_preserves_training_bits() {
+    let _g = lock();
+    let graphs = generate_design(&table1_designs(0.02)[0]);
+    let parent = graphs.into_iter().max_by_key(|g| g.n_cells).expect("design graphs");
+    let subs = partition_with_map(&parent, 3);
+    let cache = PlanCache::new(EngineBuilder::dr(4, 4));
+    for (sub, _) in &subs {
+        cache.engine_for(sub);
+    }
+
+    let outcome = apply_eco(&parent, &subs, &DeltaPatch::new(), &cache).expect("identity");
+    let r = outcome.report;
+    assert_eq!(
+        (r.untouched, r.patched, r.restaged, r.evicted),
+        (subs.len(), 0, 0, 0),
+        "{}",
+        r.describe()
+    );
+    assert!(outcome.subgraphs.iter().all(|s| s.lookup == Lookup::Hit));
+    assert_eq!(outcome.parent.adjacency_hash(), parent.adjacency_hash());
+
+    let train = |graphs: &[HeteroGraph]| -> Vec<f64> {
+        let fleet = Fleet::builder(EngineBuilder::dr(4, 4)).workers(2).build(graphs);
+        let mut rng = Rng::new(42);
+        let mut model =
+            DrCircuitGnn::new(parent.x_cell.cols, parent.x_net.cols, 16, &mut rng);
+        let mut opt = Adam::new(2e-4, 1e-5);
+        (0..3).map(|_| fleet.step(&mut model, &mut opt).loss).collect()
+    };
+    let original: Vec<HeteroGraph> = subs.iter().map(|(g, _)| g.clone()).collect();
+    let updated: Vec<HeteroGraph> =
+        outcome.subgraphs.iter().map(|s| s.graph.clone()).collect();
+    assert_eq!(train(&original), train(&updated), "identity ECO changed training");
+}
+
+/// The canonical-form bugfix (exact-zero merged entries dropped in
+/// `Csr::sort_and_dedup`) is a no-op for every seed design — the datagen
+/// pipeline never emits zero weights — so all committed golden traces
+/// remain valid without regeneration. This pins that reasoning.
+#[test]
+fn seed_designs_are_already_canonical() {
+    for spec in table1_designs(0.02) {
+        for g in generate_design(&spec) {
+            for (name, adj) in
+                [("near", &g.near), ("pins", &g.pins), ("pinned", &g.pinned)]
+            {
+                assert!(
+                    adj.is_canonical(),
+                    "{} graph {} {name}: seed adjacency not canonical",
+                    spec.name,
+                    g.id
+                );
+                assert!(
+                    adj.values.iter().all(|w| *w != 0.0),
+                    "{} graph {} {name}: zero stored weight",
+                    spec.name,
+                    g.id
+                );
+            }
+        }
+    }
+}
