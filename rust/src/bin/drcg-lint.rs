@@ -1,0 +1,105 @@
+//! drcg-lint CLI: scan `rust/src/**` with the in-repo static-analysis
+//! rules (R1–R5) and fail on any finding the allowlist does not justify.
+//!
+//! Usage:
+//!
+//! ```text
+//! drcg-lint [--src <dir>] [--allow <file>] [--list-rules]
+//! ```
+//!
+//! Defaults resolve from the working directory: `src/` (when run from
+//! `rust/`, as CI does) or `rust/src/` (from the repo root), with the
+//! allowlist at `lint-allow.txt` beside the source root's parent. Exit
+//! code 0 only when the tree is clean AND every allowlist entry still
+//! covers a finding — stale exemptions fail too, so the allowlist can
+//! only shrink unless a new justification is written. See
+//! `docs/ANALYSIS.md` for the rule catalog.
+
+use dr_circuitgnn::analysis::{lint_tree, Allowlist};
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+const RULES: &[(&str, &str)] = &[
+    ("R1", "every `unsafe` carries a `// SAFETY:` disjointness contract"),
+    ("R2", "thread fan-out and Send/Sync capabilities confined to util::pool"),
+    ("R3", "locks recover from poisoning via into_inner(); no bare lock-unwrap"),
+    ("R4", "no nondeterminism sources in golden-trace paths"),
+    ("R5", "every KernelSpec variant has a plan-store serializer arm"),
+];
+
+fn main() -> ExitCode {
+    let mut src: Option<PathBuf> = None;
+    let mut allow: Option<PathBuf> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--src" => src = args.next().map(PathBuf::from),
+            "--allow" => allow = args.next().map(PathBuf::from),
+            "--list-rules" => {
+                for (id, what) in RULES {
+                    println!("{id}  {what}");
+                }
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("drcg-lint: unknown argument '{other}'");
+                eprintln!("usage: drcg-lint [--src <dir>] [--allow <file>] [--list-rules]");
+                return ExitCode::FAILURE;
+            }
+        }
+    }
+    let src = src.unwrap_or_else(|| {
+        if PathBuf::from("src/lib.rs").exists() {
+            PathBuf::from("src")
+        } else {
+            PathBuf::from("rust/src")
+        }
+    });
+    let allow_path = allow.unwrap_or_else(|| {
+        src.parent().map(|p| p.join("lint-allow.txt")).unwrap_or_else(|| "lint-allow.txt".into())
+    });
+
+    let allowlist = match Allowlist::load(&allow_path) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("drcg-lint: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let report = match lint_tree(&src, &allowlist) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("drcg-lint: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+
+    for d in &report.diagnostics {
+        println!("{d}");
+        if !d.excerpt.is_empty() {
+            println!("    --> {}", d.excerpt);
+        }
+    }
+    for a in &report.stale {
+        println!(
+            "{}: stale allowlist entry [{} {} {}] covers nothing — remove it ({})",
+            allow_path.display(),
+            a.rule,
+            a.path,
+            a.needle,
+            a.reason
+        );
+    }
+    println!(
+        "drcg-lint: {} files, {} finding(s), {} allowlisted, {} stale allowlist entr(ies)",
+        report.files_scanned,
+        report.diagnostics.len(),
+        report.allowlisted.len(),
+        report.stale.len()
+    );
+    if report.is_clean() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

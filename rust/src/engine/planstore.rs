@@ -307,20 +307,17 @@ impl PlanStore {
                     kernel.name()
                 ));
             }
-            match name.as_str() {
-                "dr" if buckets.is_none() => {
-                    return Err(format!("{}: DR plan is missing degree buckets", e.name()))
-                }
-                "gnna" if gnna.is_none() => {
-                    return Err(format!("{}: GNNA plan is missing neighbor groups", e.name()))
-                }
-                "ell" if ell.is_none() => {
-                    return Err(format!("{}: ELL plan is missing the slot layout", e.name()))
-                }
-                "bcsr" if blocks.is_none() => {
-                    return Err(format!("{}: BCSR plan is missing the block schedule", e.name()))
-                }
-                _ => {}
+            let spec = KernelSpec::parse(&name).map_err(|_| {
+                format!("{}: stored kernel name '{name}' is not in the registry", e.name())
+            })?;
+            if let Some(missing) =
+                missing_payload(spec, buckets.is_some(), gnna.is_some(), ell.is_some(), blocks.is_some())
+            {
+                return Err(format!(
+                    "{}: {} plan is missing {missing}",
+                    e.name(),
+                    name.to_ascii_uppercase()
+                ));
             }
             if let Some(gp) = &gnna {
                 let gs = builder.gnna_cfg().group_size;
@@ -436,6 +433,37 @@ impl KProfileRecord {
             }
         }
         (best.0, *pinned_best)
+    }
+}
+
+/// Decode-side payload validation, exhaustive over [`KernelSpec`].
+///
+/// This is the single place a new registry backend declares which optional
+/// plan section it must find on disk: the compiler enforces a new variant
+/// gets an arm, lint rule R5 (`docs/ANALYSIS.md`) enforces this function
+/// keeps naming every `KernelSpec::` variant, and
+/// `every_kernel_spec_has_a_payload_arm` pins the arm semantics at runtime.
+/// Returns the human-readable name of the payload `spec` requires but the
+/// decoded record lacks, or `None` when the record is complete.
+fn missing_payload(
+    spec: KernelSpec,
+    buckets: bool,
+    gnna: bool,
+    ell: bool,
+    blocks: bool,
+) -> Option<&'static str> {
+    match spec {
+        // CSR stores no side payload: the normalised CSR/CSC pair is enough.
+        KernelSpec::Csr => None,
+        KernelSpec::Dr if !buckets => Some("degree buckets"),
+        KernelSpec::Gnna if !gnna => Some("neighbor groups"),
+        KernelSpec::Ell if !ell => Some("the slot layout"),
+        KernelSpec::Bcsr if !blocks => Some("the block schedule"),
+        KernelSpec::Dr | KernelSpec::Gnna | KernelSpec::Ell | KernelSpec::Bcsr => None,
+        // Auto is a policy, not a kernel: it resolves before storage, and a
+        // stored "auto" name would already have failed the resolve-match
+        // check against the builder.
+        KernelSpec::Auto => None,
     }
 }
 
@@ -907,6 +935,31 @@ mod tests {
             let (ya, _) = a.aggregate_with(e, x, prep_a.as_ref());
             let (yb, _) = b.aggregate_with(e, x, prep_b.as_ref());
             assert_eq!(ya.data, yb.data, "{} forward differs", e.name());
+        }
+    }
+
+    /// R5 cross-check (see `docs/ANALYSIS.md`): every registry variant has
+    /// a decode-validation arm, and the arm demands exactly the payload
+    /// `store()` writes for that kernel. A backend added to [`KernelSpec`]
+    /// without deciding its payload fails to compile (`missing_payload` is
+    /// exhaustive); one whose arm is wrong fails here.
+    #[test]
+    fn every_kernel_spec_has_a_payload_arm() {
+        for &spec in KernelSpec::ALL {
+            // With no payloads present, exactly the plan-carrying kernels
+            // must complain...
+            let missing = missing_payload(spec, false, false, false, false);
+            match spec {
+                KernelSpec::Csr | KernelSpec::Auto => assert!(
+                    missing.is_none(),
+                    "{spec:?} needs no side payload but demanded {missing:?}"
+                ),
+                KernelSpec::Dr | KernelSpec::Gnna | KernelSpec::Ell | KernelSpec::Bcsr => {
+                    assert!(missing.is_some(), "{spec:?} must require its plan payload")
+                }
+            }
+            // ...and with every payload present, nothing may complain.
+            assert_eq!(missing_payload(spec, true, true, true, true), None);
         }
     }
 

@@ -37,7 +37,15 @@
 //! `EngineBuilder::repair` patches cached kernel plans instead of
 //! rebuilding them, and [`fleet::apply_eco`] restages only the fleet
 //! partitions an ECO actually touches. See `docs/DELTA.md`.
+//!
+//! The invariants all of this rests on — documented `unsafe` disjointness
+//! contracts, budgeted fan-out, one mutex-poisoning policy, determinism of
+//! trace-feeding paths, registry/plan-store exhaustiveness — are machine-
+//! checked by the in-tree [`analysis`] pass (`drcg-lint`), with loom /
+//! Miri / ThreadSanitizer lanes around the code it polices. See
+//! `docs/ANALYSIS.md`.
 
+pub mod analysis;
 pub mod bench;
 pub mod config;
 pub mod datagen;

@@ -32,11 +32,18 @@ impl Timeline {
     }
 
     /// Record a span around a closure.
+    ///
+    /// Poisoning policy (repo-wide, lint rule R3): recover the event list
+    /// with `into_inner()`. A lane that panics poisons the lock *between*
+    /// pushes — each push is a single `Vec` operation, so the recovered
+    /// Vec is always a well-formed prefix of the events; losing the
+    /// panicked lane's span must not take the whole Fig. 9 chart (or the
+    /// surviving lanes' makespan accounting) down with it.
     pub fn record<T>(&self, lane: usize, label: &str, f: impl FnOnce() -> T) -> T {
         let start = self.origin.elapsed().as_secs_f64();
         let out = f();
         let end = self.origin.elapsed().as_secs_f64();
-        self.events.lock().unwrap().push(TimelineEvent {
+        self.events.lock().unwrap_or_else(|e| e.into_inner()).push(TimelineEvent {
             lane,
             label: label.to_string(),
             start,
@@ -46,19 +53,24 @@ impl Timeline {
     }
 
     pub fn events(&self) -> Vec<TimelineEvent> {
-        let mut e = self.events.lock().unwrap().clone();
+        // Poisoning: recover via `into_inner()` — see [`Timeline::record`].
+        let mut e = self.events.lock().unwrap_or_else(|e| e.into_inner()).clone();
         e.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
         e
     }
 
     /// Wall-clock makespan (max end over events).
     pub fn makespan(&self) -> f64 {
-        self.events.lock().unwrap().iter().map(|e| e.end).fold(0.0, f64::max)
+        // Poisoning: recover via `into_inner()` — see [`Timeline::record`].
+        let guard = self.events.lock().unwrap_or_else(|e| e.into_inner());
+        guard.iter().map(|e| e.end).fold(0.0, f64::max)
     }
 
     /// Sum of event durations (the sequential-equivalent busy time).
     pub fn busy_time(&self) -> f64 {
-        self.events.lock().unwrap().iter().map(|e| e.end - e.start).sum()
+        // Poisoning: recover via `into_inner()` — see [`Timeline::record`].
+        let guard = self.events.lock().unwrap_or_else(|e| e.into_inner());
+        guard.iter().map(|e| e.end - e.start).sum()
     }
 
     /// Overlap factor = busy / makespan; 1.0 ⇒ fully serial, `L` ⇒ perfect

@@ -182,7 +182,15 @@ impl<'a> Server<'a> {
                             let queue_seconds = enqueued.elapsed().as_secs_f64();
                             let result =
                                 self.run_job(id, job, queue_seconds, enqueued, datasets);
-                            results.lock().unwrap().push(result);
+                            // Poisoning: recover via `into_inner()` (lint
+                            // rule R3) — one panicking worker must not
+                            // discard every other worker's finished
+                            // results. A single Vec::push either lands or
+                            // doesn't; the panicked job is simply absent.
+                            results
+                                .lock()
+                                .unwrap_or_else(|e| e.into_inner())
+                                .push(result);
                         }
                     })
                 });
@@ -200,7 +208,10 @@ impl<'a> Server<'a> {
         });
         let wall_seconds = started.elapsed().as_secs_f64();
 
-        let mut results = results.into_inner().unwrap();
+        // Same recovery at collection: the guard is gone (scope joined all
+        // workers), so a poisoned flag only records that some job panicked
+        // — every result that was pushed is still intact.
+        let mut results = results.into_inner().unwrap_or_else(|e| e.into_inner());
         results.sort_by_key(|r| r.id);
         Ok(ServeReport {
             results,

@@ -13,8 +13,8 @@
 //! *completion* order is of course up to the scheduler, which is why
 //! [`super::ServeReport`] sorts results by job id.
 
+use crate::util::sync::{Condvar, Mutex};
 use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
 
 struct State<T> {
     items: VecDeque<T>,
@@ -48,8 +48,16 @@ impl<T> Queue<T> {
     }
 
     /// Items currently queued (racy by nature; for reporting only).
+    ///
+    /// Poisoning policy (repo-wide, lint rule R3): every lock in this
+    /// queue recovers the guard with `into_inner()` rather than
+    /// cascading a worker's panic into every other producer and
+    /// consumer. The state is panic-safe by construction: each
+    /// critical section is a single `VecDeque` operation or a single
+    /// flag write, both of which either happen entirely or not at all —
+    /// there is no intermediate state a panicking thread could leak.
     pub fn len(&self) -> usize {
-        self.state.lock().unwrap().items.len()
+        self.state.lock().unwrap_or_else(|e| e.into_inner()).items.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -60,7 +68,8 @@ impl<T> Queue<T> {
     /// the queue was closed — the item is handed back so the producer can
     /// report it as rejected rather than silently dropped.
     pub fn push(&self, v: T) -> Result<(), T> {
-        let mut st = self.state.lock().unwrap();
+        // Poisoning: recover via `into_inner()` — see [`Queue::len`].
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
         loop {
             if st.closed {
                 return Err(v);
@@ -71,7 +80,7 @@ impl<T> Queue<T> {
                 self.not_empty.notify_one();
                 return Ok(());
             }
-            st = self.not_full.wait(st).unwrap();
+            st = self.not_full.wait(st).unwrap_or_else(|e| e.into_inner());
         }
     }
 
@@ -79,7 +88,8 @@ impl<T> Queue<T> {
     /// once the queue is closed *and* drained — the worker shutdown
     /// signal.
     pub fn pop(&self) -> Option<T> {
-        let mut st = self.state.lock().unwrap();
+        // Poisoning: recover via `into_inner()` — see [`Queue::len`].
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
         loop {
             if let Some(v) = st.items.pop_front() {
                 drop(st);
@@ -89,14 +99,17 @@ impl<T> Queue<T> {
             if st.closed {
                 return None;
             }
-            st = self.not_empty.wait(st).unwrap();
+            st = self.not_empty.wait(st).unwrap_or_else(|e| e.into_inner());
         }
     }
 
     /// Close the queue: future `push`es fail, `pop` drains the backlog
     /// then returns `None`. Idempotent.
     pub fn close(&self) {
-        let mut st = self.state.lock().unwrap();
+        // Poisoning: recover via `into_inner()` — close() is how the
+        // server shuts the queue down after a failure, so it must work
+        // even when the poisoning panic was the failure (see [`Queue::len`]).
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
         st.closed = true;
         drop(st);
         self.not_empty.notify_all();

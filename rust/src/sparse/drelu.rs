@@ -28,6 +28,7 @@ pub fn drelu(x: &Matrix, k: usize) -> Cbsr {
             select_topk(row, k, &mut heap);
             // SAFETY: rows [lo,hi) exclusively owned by this worker.
             let vals = unsafe { std::slice::from_raw_parts_mut(vp.0.add(r * k), k) };
+            // SAFETY: same disjoint [lo,hi) row ownership as `vals`.
             let idxs = unsafe { std::slice::from_raw_parts_mut(ip.0.add(r * k), k) };
             for (t, &(v, c)) in heap.iter().enumerate() {
                 vals[t] = v;
@@ -92,6 +93,9 @@ pub fn drelu_backward(dy: &Matrix, fwd: &Cbsr) -> Matrix {
     parallel_for_chunks(dy.rows, |lo, hi| {
         let dp = ptr;
         for r in lo..hi {
+            // SAFETY: parallel_for_chunks hands each worker a disjoint
+            // [lo, hi) row range, so row r's d-wide slice of dx is owned
+            // exclusively by this worker; dx outlives the scoped threads.
             let dxrow = unsafe { std::slice::from_raw_parts_mut(dp.0.add(r * d), d) };
             let dyrow = dy.row(r);
             for &c in fwd.row_indices(r) {

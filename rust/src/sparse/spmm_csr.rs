@@ -42,6 +42,10 @@ pub fn spmm_csr_bwd(a_csc: &Csc, dy: &Matrix) -> Matrix {
     parallel_for_chunks(a_csc.cols, |lo, hi| {
         let dp = dx_ptr;
         for j in lo..hi {
+            // SAFETY: the CSC traversal writes dX by *column* j of A, and
+            // parallel_for_chunks gives each worker a disjoint [lo, hi)
+            // column range — row j of dX has exactly one writer; dx
+            // outlives the scoped threads.
             let dxrow = unsafe { std::slice::from_raw_parts_mut(dp.0.add(j * d), d) };
             for p in a_csc.col_range(j) {
                 let i = a_csc.indices[p] as usize;

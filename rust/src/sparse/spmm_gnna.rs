@@ -191,7 +191,15 @@ fn spmm_groups_core(
             // Multi-group rows: atomic accumulate (f32 CAS on the bits).
             for (c, &v) in partial.iter().enumerate() {
                 if v != 0.0 {
-                    atomic_add_f32(unsafe { &*(yp.0.add(row * d + c) as *const AtomicU32) }, v);
+                    // SAFETY: shared rows are written by several groups
+                    // concurrently, so *every* access to them goes through
+                    // this AtomicU32 view of the f32 cell — no plain
+                    // reference to a shared row exists while the dispatch
+                    // runs (the non-shared branch below handles only rows
+                    // with a single owner). f32 and AtomicU32 have the
+                    // same size/alignment; y outlives the scoped threads.
+                    let cell = unsafe { &*(yp.0.add(row * d + c) as *const AtomicU32) };
+                    atomic_add_f32(cell, v);
                 }
             }
         } else {

@@ -75,6 +75,8 @@ pub fn matmul_a_bt(a: &Matrix, b: &Matrix) -> Matrix {
         let cp = c_ptr;
         for i in lo..hi {
             let arow = &a.data[i * k..(i + 1) * k];
+            // SAFETY: C rows [lo,hi) owned exclusively by this worker; c
+            // outlives the scoped threads.
             let crow =
                 unsafe { std::slice::from_raw_parts_mut(cp.0.add(i * n), n) };
             for (j, cij) in crow.iter_mut().enumerate() {

@@ -14,6 +14,7 @@ pub mod math;
 pub mod pool;
 pub mod proptest;
 pub mod rng;
+pub(crate) mod sync;
 pub mod timer;
 
 pub use pool::{num_threads, parallel_for, parallel_map, Budget};

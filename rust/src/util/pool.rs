@@ -46,9 +46,9 @@
 //! result to a caller-indexed slot, so outputs are bit-identical for any
 //! budget (the `fleet(N) ≡ sequential` guarantee survives).
 
+use crate::util::sync::{Condvar, Mutex};
 use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Condvar, Mutex};
 
 /// The process-wide root thread budget. `0` = not yet initialized.
 static ROOT_THREADS: AtomicUsize = AtomicUsize::new(0);
@@ -470,6 +470,28 @@ where
 }
 
 /// Pointer wrapper asserting disjoint-index write safety across threads.
+///
+/// # Contract
+///
+/// Constructing a `SendPtr` is a promise about every write made through
+/// it while more than one thread holds a copy:
+///
+/// * **Disjoint index ranges per worker.** Each participating thread
+///   writes only through `ptr.add(i)` for indices `i` in a set no other
+///   participant writes (or reads) concurrently — one worker per output
+///   row, one writer per slot. Overlapping rows are a data race and
+///   undefined behavior.
+/// * **In-bounds.** Every index stays within the allocation the wrapped
+///   pointer was derived from, which the caller must keep alive (and not
+///   reallocate) for as long as any copy of the wrapper can be used.
+/// * **Synchronized handback.** The owner re-reads the data only after
+///   the writing threads are joined (the scoped-thread primitives in this
+///   module provide that happens-before edge at scope exit).
+///
+/// Kernel code consumes `SendPtr` only inside this module's budgeted
+/// primitives; minting new cross-thread capabilities (`unsafe impl
+/// Send/Sync`) outside `util::pool` is rejected by lint rule R2
+/// (`docs/ANALYSIS.md`).
 pub struct SendPtr<T>(pub *mut T);
 // Manual impls: derives would add a spurious `T: Copy` bound.
 impl<T> Clone for SendPtr<T> {
@@ -478,7 +500,14 @@ impl<T> Clone for SendPtr<T> {
     }
 }
 impl<T> Copy for SendPtr<T> {}
+// SAFETY: sending the wrapper only moves the address; the contract above
+// (disjoint index ranges per worker, no overlapping rows, join-before-read)
+// is what makes the cross-thread *writes* race-free. Upheld by every
+// construction site, each carrying its own SAFETY comment (lint rule R1).
 unsafe impl<T> Send for SendPtr<T> {}
+// SAFETY: `&SendPtr` only exposes the raw address (`Copy` read of field 0);
+// aliased writes through it are governed by the same disjointness contract
+// as `Send` above.
 unsafe impl<T> Sync for SendPtr<T> {}
 
 /// Run `n` independent tasks on at most `workers` threads (further capped
@@ -561,6 +590,8 @@ pub fn join_all<T: Send, F: FnOnce() -> T + Send>(tasks: Vec<F>) -> Vec<T> {
             // participant: the task is taken once, its slot written once.
             let task = unsafe { (*tp.0.add(i)).take().expect("join_all: task reused") };
             let result = task();
+            // SAFETY: same single-owner index i as above — output slot i
+            // is written exactly once, by this participant.
             unsafe { *op.0.add(i) = Some(result) };
         }
     };
@@ -621,8 +652,15 @@ impl<T> Handoff<T> {
 
     /// Block until the slot is free, then deposit `v`. Returns `Err(v)` if
     /// the handoff was closed (the consumer is gone — stop producing).
+    ///
+    /// Poisoning policy (repo-wide, lint rule R3): recover the guard with
+    /// `into_inner()`. Every slot transition here is a single field write,
+    /// so a peer that panicked mid-critical-section cannot have left a
+    /// half-updated invariant — and a panicking pipeline stage closes the
+    /// handoff on unwind ([`HandoffCloser`]), so the recovered state is
+    /// already marked closed by the time we observe it.
     pub fn put(&self, v: T) -> Result<(), T> {
-        let mut slot = self.slot.lock().unwrap();
+        let mut slot = self.slot.lock().unwrap_or_else(|e| e.into_inner());
         loop {
             if slot.closed {
                 return Err(v);
@@ -632,14 +670,16 @@ impl<T> Handoff<T> {
                 self.cond.notify_all();
                 return Ok(());
             }
-            slot = self.cond.wait(slot).unwrap();
+            slot = self.cond.wait(slot).unwrap_or_else(|e| e.into_inner());
         }
     }
 
     /// Block until a value arrives, then take it. Returns `None` once the
     /// handoff is closed *and* drained (the producer is gone).
+    ///
+    /// Poisoning policy: recover via `into_inner()` — see [`Handoff::put`].
     pub fn take(&self) -> Option<T> {
-        let mut slot = self.slot.lock().unwrap();
+        let mut slot = self.slot.lock().unwrap_or_else(|e| e.into_inner());
         loop {
             if let Some(v) = slot.value.take() {
                 self.cond.notify_all();
@@ -648,14 +688,18 @@ impl<T> Handoff<T> {
             if slot.closed {
                 return None;
             }
-            slot = self.cond.wait(slot).unwrap();
+            slot = self.cond.wait(slot).unwrap_or_else(|e| e.into_inner());
         }
     }
 
     /// Close the handoff, waking any blocked peer. Values already in the
     /// slot stay takeable (close-then-drain); new `put`s are refused.
+    ///
+    /// Poisoning policy: recover via `into_inner()` — this is the method
+    /// [`HandoffCloser`] runs *during unwind*, so it must keep working
+    /// after the panicking thread poisoned the lock (see [`Handoff::put`]).
     pub fn close(&self) {
-        self.slot.lock().unwrap().closed = true;
+        self.slot.lock().unwrap_or_else(|e| e.into_inner()).closed = true;
         self.cond.notify_all();
     }
 }

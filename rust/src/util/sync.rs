@@ -1,0 +1,26 @@
+//! Synchronization substrate switch: `std::sync` normally, `loom::sync`
+//! under `--cfg loom`.
+//!
+//! The concurrency core's blocking primitives — [`crate::util::pool::Handoff`]
+//! and [`crate::serve::Queue`] — import `Mutex`/`Condvar` from here instead
+//! of `std::sync`, so the *production implementations themselves* (not
+//! copies) compile against loom's model-checked types when the loom cfg is
+//! set. `tests/loom_models.rs` then explores every interleaving of their
+//! protocols (put/take/close, push/pop/shutdown) under loom's C11 memory
+//! model. See `docs/ANALYSIS.md` for how to run the models.
+//!
+//! Normal builds see plain re-exports of `std::sync` and compile to exactly
+//! the code this module replaced; loom is declared as a
+//! `[target.'cfg(loom)'.dependencies]` entry, so it is never downloaded or
+//! built unless the cfg is on.
+//!
+//! Both substrates share the `std::sync` poisoning API surface (`lock()`
+//! returns `LockResult`), so the repo-wide poisoning policy — recover with
+//! `unwrap_or_else(|e| e.into_inner())`, never bare `.lock().unwrap()`
+//! (lint rule R3) — compiles identically under either.
+
+#[cfg(loom)]
+pub(crate) use loom::sync::{Condvar, Mutex};
+
+#[cfg(not(loom))]
+pub(crate) use std::sync::{Condvar, Mutex};

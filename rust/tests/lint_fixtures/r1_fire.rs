@@ -1,0 +1,10 @@
+// R1 must fire: unsafe without a SAFETY comment anywhere nearby.
+pub fn scatter(p: *mut f32, i: usize, v: f32) {
+    let q = p;
+
+    unsafe { *q.add(i) = v };
+}
+
+pub struct RawCell(pub *mut u8);
+
+unsafe impl Send for RawCell {}

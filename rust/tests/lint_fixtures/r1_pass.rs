@@ -1,0 +1,14 @@
+// R1 must pass: every unsafe documents its disjointness contract.
+pub fn scatter(p: *mut f32, i: usize, v: f32) {
+    // SAFETY: index i is owned exclusively by this caller.
+    unsafe { *p.add(i) = v };
+}
+
+pub fn gather(p: *const f32, i: usize) -> f32 {
+    // A comment line in between is fine:
+    // SAFETY: i is in bounds by the caller's contract.
+    unsafe { *p.add(i) }
+}
+
+// Doc text that merely mentions unsafe code must not trip the rule.
+pub fn safe_mention() {}

@@ -1,0 +1,12 @@
+// R2 must fire twice outside util::pool: raw fan-out and a new
+// cross-thread capability.
+pub fn fan_out() {
+    std::thread::scope(|s| {
+        s.spawn(|| {});
+    });
+}
+
+pub struct Wrapper(pub *mut u8);
+
+// SAFETY: documented, so R1 passes — R2 must still reject the capability.
+unsafe impl Send for Wrapper {}

@@ -1,0 +1,15 @@
+// R2 must pass: the budgeted primitives are the sanctioned fan-out, and
+// test modules may spawn scratch threads.
+pub fn fan_out(n: usize) {
+    crate::util::pool::parallel_for(n, |_i| {});
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn scratch_threads_are_fine_in_tests() {
+        std::thread::scope(|s| {
+            s.spawn(|| {});
+        });
+    }
+}

@@ -1,0 +1,28 @@
+// R3 must fire on every bare poison-unwrap, including the split
+// builder-style call and the condvar wait.
+use std::sync::{Condvar, Mutex};
+
+pub fn bare(m: &Mutex<Vec<u32>>) -> usize {
+    m.lock().unwrap().len()
+}
+
+pub fn expecting(m: &Mutex<Vec<u32>>) -> usize {
+    m.lock().expect("poisoned").len()
+}
+
+pub fn split(m: &Mutex<Vec<u32>>) -> usize {
+    m.lock()
+        .unwrap()
+        .len()
+}
+
+pub fn consume(m: Mutex<Vec<u32>>) -> Vec<u32> {
+    m.into_inner().unwrap()
+}
+
+pub fn waiting(m: &Mutex<bool>, c: &Condvar) {
+    let mut g = m.lock().unwrap_or_else(|e| e.into_inner());
+    while !*g {
+        g = c.wait(g).unwrap();
+    }
+}

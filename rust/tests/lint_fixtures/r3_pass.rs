@@ -1,0 +1,28 @@
+// R3 must pass: the one documented poisoning policy — recover the guard
+// with into_inner() and keep going.
+use std::sync::{Condvar, Mutex};
+
+pub fn recovering(m: &Mutex<Vec<u32>>) -> usize {
+    m.lock().unwrap_or_else(|e| e.into_inner()).len()
+}
+
+pub fn split(m: &Mutex<Vec<u32>>) -> usize {
+    m.lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .len()
+}
+
+pub fn consume(m: Mutex<Vec<u32>>) -> Vec<u32> {
+    m.into_inner().unwrap_or_else(|e| e.into_inner())
+}
+
+pub fn waiting(m: &Mutex<bool>, c: &Condvar) {
+    let mut g = m.lock().unwrap_or_else(|e| e.into_inner());
+    while !*g {
+        g = c.wait(g).unwrap_or_else(|e| e.into_inner());
+    }
+}
+
+pub fn unrelated_unwrap(v: Option<u32>) -> u32 {
+    v.unwrap()
+}

@@ -1,0 +1,16 @@
+// R4 must fire when this file sits in a golden-trace directory: hash-map
+// iteration order and wall-clock reads are nondeterminism sources.
+use std::collections::HashMap;
+use std::time::Instant;
+
+pub fn degree_histogram(degrees: &[u32]) -> HashMap<u32, usize> {
+    let mut h = HashMap::new();
+    for &d in degrees {
+        *h.entry(d).or_insert(0) += 1;
+    }
+    h
+}
+
+pub fn stamp() -> Instant {
+    Instant::now()
+}

@@ -1,0 +1,184 @@
+//! drcg-lint self-tests: every rule must both fire on its failing fixture
+//! and stay silent on its passing fixture, the allowlist grammar must
+//! reject unjustified entries, and — the live gate — the real source tree
+//! must lint clean under the committed allowlist. Runs as a plain
+//! `cargo test`; the CI `analysis` job additionally runs the CLI so the
+//! gate exists even for toolchains that skip tests. See `docs/ANALYSIS.md`.
+
+use dr_circuitgnn::analysis::{
+    check_registry_planstore, kernel_spec_variants, lint_file, lint_tree, Allowlist,
+};
+use std::path::Path;
+
+fn rules_of(diags: &[dr_circuitgnn::analysis::Diagnostic]) -> Vec<&'static str> {
+    diags.iter().map(|d| d.rule).collect()
+}
+
+// --- R1: SAFETY contracts --------------------------------------------------
+
+#[test]
+fn r1_fires_on_undocumented_unsafe() {
+    // Scanned under the pool path so R2 stays out of the way.
+    let diags = lint_file("util/pool.rs", include_str!("lint_fixtures/r1_fire.rs"));
+    assert_eq!(rules_of(&diags), vec!["R1", "R1"], "{diags:?}");
+    assert_eq!(diags[0].line, 5);
+    assert_eq!(diags[1].line, 10);
+}
+
+#[test]
+fn r1_passes_documented_unsafe() {
+    let diags = lint_file("util/pool.rs", include_str!("lint_fixtures/r1_pass.rs"));
+    assert!(diags.is_empty(), "{diags:?}");
+}
+
+// --- R2: fan-out confinement -----------------------------------------------
+
+#[test]
+fn r2_fires_outside_the_pool() {
+    let diags = lint_file("serve/helper.rs", include_str!("lint_fixtures/r2_fire.rs"));
+    assert_eq!(rules_of(&diags), vec!["R2", "R2"], "{diags:?}");
+}
+
+#[test]
+fn r2_exempts_the_pool_itself() {
+    // The same offending source is legal inside util::pool — that is
+    // where the budgeted substrate and SendPtr live.
+    let diags = lint_file("util/pool.rs", include_str!("lint_fixtures/r2_fire.rs"));
+    assert!(diags.iter().all(|d| d.rule != "R2"), "{diags:?}");
+}
+
+#[test]
+fn r2_passes_budgeted_fanout_and_test_threads() {
+    let diags = lint_file("serve/helper.rs", include_str!("lint_fixtures/r2_pass.rs"));
+    assert!(diags.is_empty(), "{diags:?}");
+}
+
+// --- R3: poisoning policy --------------------------------------------------
+
+#[test]
+fn r3_fires_on_every_bare_poison_unwrap() {
+    let diags = lint_file("serve/helper.rs", include_str!("lint_fixtures/r3_fire.rs"));
+    assert_eq!(rules_of(&diags), vec!["R3"; 5], "{diags:?}");
+    // The split builder-style call is attributed to the `.lock()` line.
+    assert!(diags.iter().any(|d| d.excerpt.contains("m.lock()")), "{diags:?}");
+}
+
+#[test]
+fn r3_passes_into_inner_recovery() {
+    let diags = lint_file("serve/helper.rs", include_str!("lint_fixtures/r3_pass.rs"));
+    assert!(diags.is_empty(), "{diags:?}");
+}
+
+// --- R4: determinism of trace paths ----------------------------------------
+
+#[test]
+fn r4_fires_in_golden_trace_dirs() {
+    let diags = lint_file("sparse/fixture.rs", include_str!("lint_fixtures/r4_fire.rs"));
+    assert_eq!(rules_of(&diags), vec!["R4"; 4], "{diags:?}");
+    let lines: Vec<usize> = diags.iter().map(|d| d.line).collect();
+    assert_eq!(lines, vec![3, 6, 7, 15], "{diags:?}");
+}
+
+#[test]
+fn r4_is_scoped_to_trace_feeding_dirs() {
+    // The very same source is fine outside sparse/tensor/nn/graph/
+    // engine/train — the serve loop may read clocks.
+    let diags = lint_file("serve/fixture.rs", include_str!("lint_fixtures/r4_fire.rs"));
+    assert!(diags.is_empty(), "{diags:?}");
+}
+
+#[test]
+fn r4_passes_ordered_containers_and_test_clocks() {
+    let diags = lint_file("sparse/fixture.rs", include_str!("lint_fixtures/r4_pass.rs"));
+    assert!(diags.is_empty(), "{diags:?}");
+}
+
+// --- R5: registry/plan-store exhaustiveness ---------------------------------
+
+const MINI_REGISTRY: &str = r#"
+pub enum KernelSpec {
+    /// baseline
+    Csr,
+    Dr,
+    Ell,
+}
+"#;
+
+#[test]
+fn r5_parses_the_variant_list() {
+    assert_eq!(kernel_spec_variants(MINI_REGISTRY), vec!["Csr", "Dr", "Ell"]);
+}
+
+#[test]
+fn r5_fires_on_a_missing_serializer_arm() {
+    let planstore = "fn missing_payload(s: KernelSpec) {\n\
+                     match s { KernelSpec::Csr => {} KernelSpec::Dr => {} }\n}";
+    let diags = check_registry_planstore(MINI_REGISTRY, planstore);
+    assert_eq!(rules_of(&diags), vec!["R5"], "{diags:?}");
+    assert!(diags[0].message.contains("KernelSpec::Ell"), "{diags:?}");
+}
+
+#[test]
+fn r5_passes_a_complete_arm_set() {
+    let planstore = "fn missing_payload(s: KernelSpec) {\n\
+                     match s { KernelSpec::Csr => {} KernelSpec::Dr => {} \
+                     KernelSpec::Ell => {} }\n}";
+    assert!(check_registry_planstore(MINI_REGISTRY, planstore).is_empty());
+}
+
+// --- Allowlist grammar ------------------------------------------------------
+
+#[test]
+fn allowlist_requires_a_written_justification() {
+    assert!(Allowlist::parse("R2 serve/mod.rs thread::scope").is_err());
+    assert!(Allowlist::parse("R2 serve/mod.rs thread::scope -- ").is_err());
+    assert!(Allowlist::parse("R2 serve/mod.rs -- reason with no needle").is_err());
+    let ok = Allowlist::parse(
+        "# comment\n\nR2 serve/mod.rs thread::scope -- workers are the budget roots\n",
+    )
+    .unwrap();
+    assert_eq!(ok.entries.len(), 1);
+    assert_eq!(ok.entries[0].needle, "thread::scope");
+}
+
+#[test]
+fn stale_allowlist_entries_fail_the_tree_scan() {
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let mut allow =
+        Allowlist::load(&Path::new(env!("CARGO_MANIFEST_DIR")).join("lint-allow.txt")).unwrap();
+    allow.entries.push(dr_circuitgnn::analysis::AllowEntry {
+        rule: "R3".to_string(),
+        path: "does/not/exist.rs".to_string(),
+        needle: "never".to_string(),
+        reason: "stale on purpose".to_string(),
+    });
+    let report = lint_tree(&src, &allow).unwrap();
+    assert_eq!(report.stale.len(), 1, "exactly the planted entry is stale");
+    assert!(!report.is_clean());
+}
+
+// --- The live gate ----------------------------------------------------------
+
+/// The real tree lints clean under the committed allowlist — the same
+/// check CI's `analysis` job runs via the CLI, enforced here so any plain
+/// `cargo test` catches a violation before it lands.
+#[test]
+fn the_source_tree_is_clean() {
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let allow = Allowlist::load(&manifest.join("lint-allow.txt")).unwrap();
+    let report = lint_tree(&manifest.join("src"), &allow).unwrap();
+    assert!(
+        report.is_clean(),
+        "drcg-lint findings:\n{}\nstale allowlist entries: {:?}",
+        report
+            .diagnostics
+            .iter()
+            .map(|d| format!("{d}\n    --> {}", d.excerpt))
+            .collect::<Vec<_>>()
+            .join("\n"),
+        report.stale
+    );
+    assert!(report.files_scanned > 40, "walked the real tree");
+    // Both standing exemptions are still load-bearing.
+    assert_eq!(report.allowlisted.len(), 2, "{:?}", report.allowlisted);
+}

@@ -1,0 +1,192 @@
+//! loom models of the concurrency core (`docs/ANALYSIS.md`).
+//!
+//! Compiled only under `RUSTFLAGS="--cfg loom"` (which also makes Cargo
+//! resolve the loom dependency — see `[target.'cfg(loom)'.dependencies]`).
+//! Under that cfg, `util::sync` re-exports loom's `Mutex`/`Condvar`, so the
+//! models below drive the *production* `Handoff` and `serve::Queue`
+//! implementations — not copies — through every interleaving loom's model
+//! checker can reach, under the C11 memory model:
+//!
+//! ```text
+//! RUSTFLAGS="--cfg loom" cargo test --release --test loom_models
+//! ```
+//!
+//! Close-on-unwind is modeled as an early drop of the RAII closer
+//! (`HandoffCloser`) while the peer is blocked: unwinding runs exactly that
+//! `Drop` impl, and loom cannot model a panicking thread directly. The
+//! `Budget` lease accounting model replicates the `WorkerGuard`
+//! enter/exit protocol from `util::pool` (fetch_add / fetch_max /
+//! fetch_sub on the live/peak counters) with loom atomics, since the real
+//! statics cannot be swapped per-model.
+#![cfg(loom)]
+
+use dr_circuitgnn::serve::Queue;
+use dr_circuitgnn::util::pool::{Handoff, HandoffCloser};
+use loom::sync::atomic::{AtomicUsize, Ordering};
+use loom::sync::Arc;
+use loom::thread;
+
+#[test]
+fn handoff_delivers_in_order_then_closes() {
+    loom::model(|| {
+        let h = Arc::new(Handoff::new());
+        let producer = {
+            let h = Arc::clone(&h);
+            thread::spawn(move || {
+                let closer = HandoffCloser(&h);
+                h.put(1u32).expect("consumer alive");
+                h.put(2u32).expect("consumer alive");
+                drop(closer);
+            })
+        };
+        assert_eq!(h.take(), Some(1));
+        assert_eq!(h.take(), Some(2));
+        // After the producer closes, take() must observe the shutdown —
+        // no lost wakeup leaves the consumer blocked forever (loom would
+        // report the deadlock).
+        assert_eq!(h.take(), None);
+        producer.join().unwrap();
+    });
+}
+
+#[test]
+fn handoff_close_on_unwind_releases_blocked_consumer() {
+    loom::model(|| {
+        let h = Arc::new(Handoff::<u32>::new());
+        let producer = {
+            let h = Arc::clone(&h);
+            thread::spawn(move || {
+                // A stage that "unwinds" before producing anything: the
+                // RAII closer drops (the unwind path) without a put.
+                let _closer = HandoffCloser(&h);
+            })
+        };
+        // The consumer may already be blocked inside take() when the
+        // closer fires — every interleaving must wake it with None.
+        assert_eq!(h.take(), None);
+        producer.join().unwrap();
+    });
+}
+
+#[test]
+fn handoff_close_then_drain_keeps_the_last_value() {
+    loom::model(|| {
+        let h = Arc::new(Handoff::new());
+        let producer = {
+            let h = Arc::clone(&h);
+            thread::spawn(move || {
+                h.put(7u32).expect("consumer alive");
+                // Close with the value still (possibly) in the slot:
+                // close-then-drain semantics must keep it takeable.
+                h.close();
+            })
+        };
+        assert_eq!(h.take(), Some(7));
+        assert_eq!(h.take(), None);
+        producer.join().unwrap();
+    });
+}
+
+#[test]
+fn queue_shutdown_while_blocked_loses_nothing() {
+    loom::model(|| {
+        let q = Arc::new(Queue::bounded(1));
+        let producer = {
+            let q = Arc::clone(&q);
+            thread::spawn(move || {
+                q.push(1u32).expect("queue open");
+                q.close();
+            })
+        };
+        // The consumer may block on an empty queue before the push, or
+        // arrive after close: either way it must pop the item exactly
+        // once and then observe shutdown — no deadlock, no lost item.
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), None);
+        producer.join().unwrap();
+    });
+}
+
+#[test]
+fn queue_bounded_push_blocks_then_completes() {
+    loom::model(|| {
+        let q = Arc::new(Queue::bounded(1));
+        let producer = {
+            let q = Arc::clone(&q);
+            thread::spawn(move || {
+                // Second push must block until the consumer frees the
+                // single slot; close() drains gracefully afterwards.
+                q.push(1u32).expect("queue open");
+                q.push(2u32).expect("queue open");
+                q.close();
+            })
+        };
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None);
+        producer.join().unwrap();
+    });
+}
+
+#[test]
+fn queue_close_refuses_producers_but_drains_backlog() {
+    loom::model(|| {
+        let q = Arc::new(Queue::bounded(2));
+        q.push(1u32).expect("queue open");
+        let closer = {
+            let q = Arc::clone(&q);
+            thread::spawn(move || q.close())
+        };
+        // Racing a push against close: it either lands before the close
+        // (and must then be popped) or is refused with the item handed
+        // back — never silently dropped.
+        let second_landed = q.push(2).is_ok();
+        closer.join().unwrap();
+        assert_eq!(q.pop(), Some(1));
+        if second_landed {
+            assert_eq!(q.pop(), Some(2));
+        }
+        assert_eq!(q.pop(), None);
+    });
+}
+
+/// The `WorkerGuard` live/peak accounting protocol from `util::pool`,
+/// replicated on loom atomics: enter = `live.fetch_add(1)` then
+/// `peak.fetch_max(live_now)`, exit = `live.fetch_sub(1)`. The invariant
+/// the thread-budget tests rely on — the peak never under-counts the
+/// true high-water mark of concurrently live workers — must hold in
+/// every interleaving, including the window between a worker's add and
+/// its max.
+#[test]
+fn budget_lease_accounting_peak_never_undercounts() {
+    loom::model(|| {
+        let live = Arc::new(AtomicUsize::new(0));
+        let peak = Arc::new(AtomicUsize::new(0));
+        let both_live = Arc::new(AtomicUsize::new(0));
+        let workers: Vec<_> = (0..2)
+            .map(|_| {
+                let live = Arc::clone(&live);
+                let peak = Arc::clone(&peak);
+                let both_live = Arc::clone(&both_live);
+                thread::spawn(move || {
+                    let now = live.fetch_add(1, Ordering::SeqCst) + 1;
+                    peak.fetch_max(now, Ordering::SeqCst);
+                    if now == 2 {
+                        // Witness: both workers were live at once.
+                        both_live.store(1, Ordering::SeqCst);
+                    }
+                    live.fetch_sub(1, Ordering::SeqCst);
+                })
+            })
+            .collect();
+        for w in workers {
+            w.join().unwrap();
+        }
+        assert_eq!(live.load(Ordering::SeqCst), 0, "every guard released its slot");
+        let p = peak.load(Ordering::SeqCst);
+        assert!(p >= 1 && p <= 2, "peak within the budget: {p}");
+        if both_live.load(Ordering::SeqCst) == 1 {
+            assert_eq!(p, 2, "observed concurrency must be reflected in the peak");
+        }
+    });
+}
