@@ -38,6 +38,7 @@ fn main() {
         parallel: false,
         epoch_pipeline: false,
         log_every: 0,
+        ..TrainConfig::dr_default()
     };
 
     // Baselines: identical model trained through the dense engines.

@@ -48,6 +48,7 @@ fn main() {
         parallel: false,
         epoch_pipeline: false,
         log_every: 0,
+        ..TrainConfig::dr_default()
     };
     let mut homo_scores = Vec::new();
     for kind in [HomoKind::Gcn, HomoKind::Sage, HomoKind::Gat] {
@@ -79,6 +80,7 @@ fn main() {
         parallel: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) > 1,
         epoch_pipeline: false,
         log_every: 0,
+        ..TrainConfig::dr_default()
     };
     let (_m, r) = Trainer::train_dr(&train, &test, &EngineBuilder::dr(8, 8), &dr_cfg);
     t.row(&[

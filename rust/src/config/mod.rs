@@ -10,6 +10,7 @@
 //! strings (`--fleet`, `fleet`) go through [`FleetSpec::parse`] the same
 //! way.
 
+use crate::datagen::WindowSpec;
 use crate::engine::{Engine, EngineBuilder, KernelSpec};
 use crate::fleet::FleetSpec;
 use crate::sched::ScheduleMode;
@@ -41,6 +42,18 @@ pub struct Config {
     /// N's execute + optimizer step. Requires fleet mode; results are
     /// bit-identical to the serial epoch schedule.
     pub epoch_pipeline: bool,
+    /// Window-sampled training (`--window <count>x<cells>`, `window`):
+    /// per epoch each design contributes `count` seeded windows of
+    /// `cells` contiguous cells, trained as the fleet's subgraphs instead
+    /// of the full graphs. Requires fleet mode. `Off` = full-graph
+    /// training (the default; golden traces are pinned to it).
+    pub window: WindowSpec,
+    /// Activation checkpointing (`--checkpoint on|off`, `checkpoint`):
+    /// the forward pass stores only per-layer checkpoints and the
+    /// backward pass recomputes each layer's activations on demand —
+    /// bit-identical gradients, roughly one extra forward pass of time,
+    /// peak activation memory of a single layer.
+    pub checkpoint: bool,
     /// Root thread budget (`--threads`, `threads`): the single cap that
     /// fleet workers × §3.4 edge lanes × kernel `parallel_for` subdivide
     /// ([`crate::util::pool::Budget`]). `None` = `DRCG_THREADS` env var or
@@ -85,6 +98,8 @@ impl Default for Config {
             parallel: true,
             fleet: FleetSpec::Off,
             epoch_pipeline: false,
+            window: WindowSpec::Off,
+            checkpoint: false,
             threads: None,
             dim: 64,
             artifacts_dir: PathBuf::from("artifacts"),
@@ -145,6 +160,12 @@ impl Config {
             self.epoch_pipeline =
                 parse_on_off(v).map_err(|e| format!("epoch_pipeline: {e}"))?;
         }
+        if let Some(v) = f.get("window") {
+            self.window = WindowSpec::parse(v).map_err(|e| format!("window: {e}"))?;
+        }
+        if let Some(v) = f.get("checkpoint") {
+            self.checkpoint = parse_on_off(v).map_err(|e| format!("checkpoint: {e}"))?;
+        }
         if let Some(v) = f.get_usize("threads") {
             self.threads = Some(v?);
         }
@@ -191,6 +212,12 @@ impl Config {
         if let Some(v) = a.get("epoch-pipeline") {
             self.epoch_pipeline =
                 parse_on_off(v).map_err(|e| format!("--epoch-pipeline: {e}"))?;
+        }
+        if let Some(v) = a.get("window") {
+            self.window = WindowSpec::parse(v).map_err(|e| format!("--window: {e}"))?;
+        }
+        if let Some(v) = a.get("checkpoint") {
+            self.checkpoint = parse_on_off(v).map_err(|e| format!("--checkpoint: {e}"))?;
         }
         if let Some(v) = a.get("threads") {
             let t: usize =
@@ -239,6 +266,13 @@ impl Config {
             return Err(
                 "epoch-pipeline requires fleet mode (--fleet <workers>[x<parts>]); \
                  the pipeline overlaps one design's prepare with another's execute"
+                    .into(),
+            );
+        }
+        if self.window.is_on() && !self.fleet.is_on() {
+            return Err(
+                "window requires fleet mode (--fleet <workers>); sampled windows \
+                 are trained as the fleet's subgraphs"
                     .into(),
             );
         }
@@ -381,6 +415,55 @@ mod tests {
         let args = Args::default().parse(&raw(&["--epoch-pipeline", "off"])).unwrap();
         cfg.apply_args(&args).unwrap();
         assert!(!cfg.epoch_pipeline);
+    }
+
+    #[test]
+    fn window_parsed_and_gated_on_fleet() {
+        // Defaults off.
+        assert_eq!(Config::default().window, WindowSpec::Off);
+        // CLI surface: requires fleet mode.
+        let args = Args::default().parse(&raw(&["--fleet", "4", "--window", "2x500"])).unwrap();
+        let cfg = Config::resolve(&args).unwrap();
+        assert_eq!(cfg.window, WindowSpec::On { count: 2, cells: 500 });
+        // Without fleet mode the flag is rejected loudly.
+        let args = Args::default().parse(&raw(&["--window", "2x500"])).unwrap();
+        let err = Config::resolve(&args).unwrap_err();
+        assert!(err.contains("fleet"), "{err}");
+        // Junk rejected with the grammar (a bare count is an error, not a
+        // silently-defaulted window size).
+        let args = Args::default().parse(&raw(&["--fleet", "2", "--window", "4"])).unwrap();
+        let err = Config::resolve(&args).unwrap_err();
+        assert!(err.contains("<count>x<cells>"), "{err}");
+        // File surface, overridden by CLI.
+        let mut cfg = Config::default();
+        let f = ConfigFile::parse("fleet = \"2\"\nwindow = \"3x100\"").unwrap();
+        cfg.apply_file(&f).unwrap();
+        assert_eq!(cfg.window, WindowSpec::On { count: 3, cells: 100 });
+        let args = Args::default().parse(&raw(&["--window", "off"])).unwrap();
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.window, WindowSpec::Off);
+    }
+
+    #[test]
+    fn checkpoint_parsed_on_off() {
+        // Defaults off; needs no fleet (it is a model-level toggle).
+        assert!(!Config::default().checkpoint);
+        let args = Args::default().parse(&raw(&["--checkpoint", "on"])).unwrap();
+        assert!(Config::resolve(&args).unwrap().checkpoint);
+        let args = Args::default().parse(&raw(&["--checkpoint", "off"])).unwrap();
+        assert!(!Config::resolve(&args).unwrap().checkpoint);
+        // Junk rejected with the grammar.
+        let args = Args::default().parse(&raw(&["--checkpoint", "maybe"])).unwrap();
+        let err = Config::resolve(&args).unwrap_err();
+        assert!(err.contains("on|off"), "{err}");
+        // File surface, overridden by CLI.
+        let mut cfg = Config::default();
+        let f = ConfigFile::parse("checkpoint = \"on\"").unwrap();
+        cfg.apply_file(&f).unwrap();
+        assert!(cfg.checkpoint);
+        let args = Args::default().parse(&raw(&["--checkpoint", "off"])).unwrap();
+        cfg.apply_args(&args).unwrap();
+        assert!(!cfg.checkpoint);
     }
 
     #[test]

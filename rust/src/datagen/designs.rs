@@ -8,12 +8,15 @@
 use super::{DesignSpec, GraphSpec};
 use crate::util::rng::Rng;
 
-/// Paper-named design sizes.
+/// Paper-named design sizes. `Full` is the CircuitNet-scale tier (≈10⁶
+/// cells across its partitions at scale 1.0) used for the window-sampling
+/// and checkpointing experiments; the other three are the Table-1 seeds.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DesignSize {
     Small,
     Medium,
     Large,
+    Full,
 }
 
 impl DesignSize {
@@ -22,6 +25,7 @@ impl DesignSize {
             DesignSize::Small => "9282-zero",
             DesignSize::Medium => "2216-RISCY",
             DesignSize::Large => "7598-zero",
+            DesignSize::Full => "circuitnet-full",
         }
     }
 }
@@ -78,14 +82,52 @@ pub fn table1_designs(scale: f64) -> Vec<DesignSpec> {
     ]
 }
 
-/// Pick one Table-1 design by size.
+/// Pick one design by size (`Full` routes to [`full_design`]; the rest are
+/// Table-1 entries).
 pub fn table1_design(size: DesignSize, scale: f64) -> DesignSpec {
     let idx = match size {
         DesignSize::Small => 0,
         DesignSize::Medium => 1,
         DesignSize::Large => 2,
+        DesignSize::Full => return full_design(scale),
     };
     table1_designs(scale).swap_remove(idx)
+}
+
+/// The Full tier: a CircuitNet-sized design of ≈10⁶ cells at scale 1.0,
+/// split into 8 partitions of ~125k cells. Per-partition `target_near`
+/// (near-degree ≈ 50, as in Fig. 4) sits at ~6.3M — past
+/// `STREAMING_NEAR_THRESHOLD`, so generation takes the streaming path and
+/// never materialises the candidate pair list. Partition sizes vary
+/// slightly (fixed offsets, not RNG) so partitions are not clones of each
+/// other, mirroring how real designs split unevenly.
+pub fn full_design(scale: f64) -> DesignSpec {
+    let s = |x: usize| ((x as f64 * scale).round() as usize).max(8);
+    let e = |x: usize| ((x as f64 * scale).round() as usize).max(32);
+    // (cells, nets) per partition; totals 1_001_000 cells / 487_000 nets.
+    const PARTS: [(usize, usize); 8] = [
+        (127_400, 61_900),
+        (123_800, 60_300),
+        (126_100, 62_800),
+        (124_500, 59_600),
+        (125_900, 61_200),
+        (124_200, 60_700),
+        (126_700, 61_500),
+        (122_400, 59_000),
+    ];
+    let graphs = PARTS
+        .iter()
+        .map(|&(cells, nets)| GraphSpec {
+            n_cells: s(cells),
+            n_nets: s(nets),
+            // near-degree ≈ 50, pin fanout ≈ 3 — the Fig. 4 shape.
+            target_near: e(cells * 50),
+            target_pins: e(nets * 3),
+            d_cell: D_CELL_RAW,
+            d_net: D_NET_RAW,
+        })
+        .collect();
+    DesignSpec { name: "circuitnet-full".into(), seed: 10_617, graphs }
 }
 
 /// Random design with CircuitNet-like proportions at `scale`
@@ -146,6 +188,38 @@ mod tests {
         assert_eq!(table1_design(DesignSize::Medium, 1.0).name, "2216-RISCY");
         assert_eq!(table1_design(DesignSize::Large, 1.0).name, "7598-zero");
         assert_eq!(DesignSize::Large.paper_name(), "7598-zero");
+    }
+
+    #[test]
+    fn full_tier_is_million_scale_and_streams() {
+        let d = full_design(1.0);
+        assert_eq!(d.name, "circuitnet-full");
+        assert_eq!(d.graphs.len(), 8);
+        let cells: usize = d.graphs.iter().map(|g| g.n_cells).sum();
+        assert!(
+            (990_000..=1_010_000).contains(&cells),
+            "Full tier must total ≈10⁶ cells, got {cells}"
+        );
+        for g in &d.graphs {
+            assert!(g.streams_near(), "every Full partition must stream near generation");
+            assert!(g.extent() > 3.0, "Full partitions must grow the die past the unit square");
+            // Fig. 4 shape: near much denser than pins.
+            assert!(g.target_near > 5 * g.target_pins);
+        }
+        assert_eq!(table1_design(DesignSize::Full, 1.0).name, "circuitnet-full");
+        assert_eq!(DesignSize::Full.paper_name(), "circuitnet-full");
+    }
+
+    #[test]
+    fn full_tier_scales_down_without_streaming() {
+        // Bench scales shrink below the streaming threshold and the unit
+        // die — same code path as the Table-1 tiers.
+        let d = full_design(0.005);
+        for g in &d.graphs {
+            assert!(!g.streams_near());
+            assert_eq!(g.extent(), 1.0);
+            assert!(g.n_cells >= 8 && g.target_near >= 32);
+        }
     }
 
     #[test]

@@ -45,13 +45,17 @@ pub fn build_features(
     let max_demand = demand.iter().cloned().fold(1.0, f32::max);
 
     // Cell features: [x, y, density, near_deg/max, demand/max, noise...]
+    // Positions are normalised by the die extent so Full-tier features stay
+    // in [0, 1) like the unit-die tiers (x / 1.0 is bitwise exact, so the
+    // Table-1 tiers are untouched).
+    let extent = placement.extent;
     let max_near = near.max_degree().max(1) as f32;
     let mut x_cell = Matrix::zeros(n_cells, d_cell);
     for i in 0..n_cells {
         let c = placement.cells[i];
         let row = x_cell.row_mut(i);
-        row[0] = c.x;
-        row[1] = c.y;
+        row[0] = c.x / extent;
+        row[1] = c.y / extent;
         row[2] = density[i];
         row[3] = near.degree(i) as f32 / max_near;
         if d_cell > 4 {
@@ -66,7 +70,7 @@ pub fn build_features(
     let max_fanout = nets.iter().map(|n| n.cells.len()).max().unwrap_or(1) as f32;
     let mut x_net = Matrix::zeros(n_nets, d_net);
     for (i, net) in nets.iter().enumerate() {
-        let (mut xmin, mut xmax, mut ymin, mut ymax) = (1f32, 0f32, 1f32, 0f32);
+        let (mut xmin, mut xmax, mut ymin, mut ymax) = (extent, 0f32, extent, 0f32);
         let mut dens = 0f32;
         for &c in &net.cells {
             let cell = placement.cells[c as usize];
@@ -78,8 +82,8 @@ pub fn build_features(
         }
         let row = x_net.row_mut(i);
         row[0] = net.cells.len() as f32 / max_fanout;
-        row[1] = (xmax - xmin).max(0.0);
-        row[2] = (ymax - ymin).max(0.0);
+        row[1] = (xmax - xmin).max(0.0) / extent;
+        row[2] = (ymax - ymin).max(0.0) / extent;
         row[3] = dens / net.cells.len().max(1) as f32;
         for v in row.iter_mut().skip(4) {
             *v = rng.normal() * 0.1;
@@ -173,6 +177,26 @@ mod tests {
         }
         let pearson = cov / (vd.sqrt() * vy.sqrt() + 1e-9);
         assert!(pearson > 0.2, "expected positive correlation, got {pearson}");
+    }
+
+    /// On a scaled die the position/bbox features must still land in unit
+    /// ranges (they are normalised by the extent).
+    #[test]
+    fn scaled_die_features_stay_in_unit_ranges() {
+        let mut rng = Rng::new(6);
+        let p = super::super::layout::place_cells_in(900, 3.0, &mut rng);
+        let near = near_edges(&p, 9_000, &mut rng);
+        let nets = build_netlist(&p, 300, 950, &mut rng);
+        let pins = pins_matrix(&nets, 900, 300);
+        let (xc, xn, _y) = build_features(&p, &nets, &near, &pins, 8, 8, &mut rng);
+        for r in 0..xc.rows {
+            assert!((0.0..1.0).contains(&xc.at(r, 0)), "x position normalized");
+            assert!((0.0..1.0).contains(&xc.at(r, 1)), "y position normalized");
+        }
+        for r in 0..xn.rows {
+            assert!((0.0..=1.0).contains(&xn.at(r, 1)), "bbox width normalized");
+            assert!((0.0..=1.0).contains(&xn.at(r, 2)), "bbox height normalized");
+        }
     }
 
     #[test]

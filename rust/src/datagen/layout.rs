@@ -26,6 +26,11 @@ pub struct Placement {
     pub grid: usize,
     /// Cell ids per bin, row-major `grid × grid`.
     pub bins: Vec<Vec<u32>>,
+    /// Die side length. The Table-1 tiers place into the unit square; the
+    /// Full tier grows the die with `sqrt(n)` so cell *density* (and with
+    /// it the near-degree distribution) stays at the paper's shape instead
+    /// of collapsing a million cells into one unit of area.
+    pub extent: f32,
 }
 
 /// Fraction of cells placed in hotspots.
@@ -33,36 +38,52 @@ const HOTSPOT_FRACTION: f64 = 0.45;
 /// Hotspot standard deviation.
 const HOTSPOT_SIGMA: f32 = 0.06;
 
-/// Place `n` cells: uniform background plus 4–8 Gaussian hotspots.
+/// Place `n` cells in the unit die: uniform background plus 4–8 Gaussian
+/// hotspots.
 pub fn place_cells(n: usize, rng: &mut Rng) -> Placement {
-    let n_hotspots = rng.range(4, 9);
+    place_cells_in(n, 1.0, rng)
+}
+
+/// Place `n` cells in an `extent × extent` die. Hotspot *density per unit
+/// area* is held constant (4–8 hotspots per unit of area, σ = 0.06
+/// absolute), so a Full-tier die is a tiling of Table-1-like neighborhoods
+/// rather than one stretched layout. `extent = 1.0` is bit-identical to
+/// [`place_cells`].
+pub fn place_cells_in(n: usize, extent: f32, rng: &mut Rng) -> Placement {
+    assert!(extent >= 1.0, "die extent must be ≥ 1.0, got {extent}");
+    let area = extent as f64 * extent as f64;
+    let hotspots_per_unit = rng.range(4, 9);
+    let n_hotspots = ((hotspots_per_unit as f64 * area).round() as usize).max(1);
     let centers: Vec<(f32, f32)> = (0..n_hotspots)
-        .map(|_| (rng.uniform(0.12, 0.88), rng.uniform(0.12, 0.88)))
+        .map(|_| {
+            (rng.uniform(0.12 * extent, 0.88 * extent), rng.uniform(0.12 * extent, 0.88 * extent))
+        })
         .collect();
+    let hi = 0.999_9 * extent;
     let mut cells = Vec::with_capacity(n);
     for _ in 0..n {
         if rng.f64() < HOTSPOT_FRACTION {
             let c = rng.below(n_hotspots);
             let (cx, cy) = centers[c];
-            let x = (cx + rng.normal() * HOTSPOT_SIGMA).clamp(0.0, 0.999_9);
-            let y = (cy + rng.normal() * HOTSPOT_SIGMA).clamp(0.0, 0.999_9);
+            let x = (cx + rng.normal() * HOTSPOT_SIGMA).clamp(0.0, hi);
+            let y = (cy + rng.normal() * HOTSPOT_SIGMA).clamp(0.0, hi);
             cells.push(Cell { x, y, cluster: c });
         } else {
             cells.push(Cell {
-                x: rng.uniform(0.0, 0.999_9),
-                y: rng.uniform(0.0, 0.999_9),
+                x: rng.uniform(0.0, hi),
+                y: rng.uniform(0.0, hi),
                 cluster: usize::MAX,
             });
         }
     }
     // Bin size targets O(10) cells/bin for neighbor queries.
     let grid = ((n as f64 / 10.0).sqrt().ceil() as usize).max(1);
-    let bin = 1.0 / grid as f32;
+    let bin = extent / grid as f32;
     let mut bins = vec![Vec::new(); grid * grid];
     for (i, c) in cells.iter().enumerate() {
-        bins[bin_index(c.x, c.y, grid)].push(i as u32);
+        bins[bin_index_in(c.x, c.y, grid, extent)].push(i as u32);
     }
-    Placement { cells, bin, grid, bins }
+    Placement { cells, bin, grid, bins, extent }
 }
 
 #[inline]
@@ -72,14 +93,23 @@ pub fn bin_index(x: f32, y: f32, grid: usize) -> usize {
     by * grid + bx
 }
 
+/// Bin index in an `extent × extent` die (`extent = 1.0` ≡ [`bin_index`] —
+/// division by 1.0 is exact).
+#[inline]
+pub fn bin_index_in(x: f32, y: f32, grid: usize, extent: f32) -> usize {
+    let bx = (((x / extent) * grid as f32) as usize).min(grid - 1);
+    let by = (((y / extent) * grid as f32) as usize).min(grid - 1);
+    by * grid + bx
+}
+
 impl Placement {
     /// Visit every cell within `radius` of cell `i` (excluding `i`).
     pub fn for_neighbors_within(&self, i: usize, radius: f32, mut f: impl FnMut(usize, f32)) {
         let c = self.cells[i];
         let r2 = radius * radius;
         let reach = (radius / self.bin).ceil() as isize;
-        let bx = ((c.x * self.grid as f32) as isize).min(self.grid as isize - 1);
-        let by = ((c.y * self.grid as f32) as isize).min(self.grid as isize - 1);
+        let bx = (((c.x / self.extent) * self.grid as f32) as isize).min(self.grid as isize - 1);
+        let by = (((c.y / self.extent) * self.grid as f32) as isize).min(self.grid as isize - 1);
         for dy in -reach..=reach {
             for dx in -reach..=reach {
                 let (nx, ny) = (bx + dx, by + dy);
@@ -169,5 +199,51 @@ mod tests {
         assert_eq!(bin_index(0.0, 0.0, 10), 0);
         assert_eq!(bin_index(0.999, 0.999, 10), 99);
         assert_eq!(bin_index(0.999, 0.0, 10), 9);
+    }
+
+    /// `extent = 1.0` must be the identity refactor: same cells, same bins,
+    /// same RNG consumption as the original unit-die `place_cells`.
+    #[test]
+    fn unit_extent_is_bit_identical_to_place_cells() {
+        let mut r1 = Rng::new(77);
+        let mut r2 = Rng::new(77);
+        let a = place_cells(400, &mut r1);
+        let b = place_cells_in(400, 1.0, &mut r2);
+        assert_eq!(a.cells, b.cells);
+        assert_eq!(a.bins, b.bins);
+        assert_eq!(a.bin.to_bits(), b.bin.to_bits());
+        assert_eq!(a.extent, 1.0);
+        assert_eq!(r1.next_u64(), r2.next_u64(), "rng draw counts must match");
+    }
+
+    #[test]
+    fn scaled_extent_places_in_die_and_queries_match_bruteforce() {
+        let mut rng = Rng::new(8);
+        let extent = 3.0f32;
+        let p = place_cells_in(900, extent, &mut rng);
+        assert!(p.cells.iter().all(|c| (0.0..extent).contains(&c.x) && (0.0..extent).contains(&c.y)));
+        assert!(
+            p.cells.iter().any(|c| c.x > 1.0 || c.y > 1.0),
+            "a 3×3 die must actually use the area beyond the unit square"
+        );
+        let binned: usize = p.bins.iter().map(|b| b.len()).sum();
+        assert_eq!(binned, 900);
+        let radius = 0.15;
+        for i in [0usize, 123, 456, 899] {
+            let mut fast: Vec<usize> = Vec::new();
+            p.for_neighbors_within(i, radius, |j, _| fast.push(j));
+            fast.sort_unstable();
+            let c = p.cells[i];
+            let mut brute: Vec<usize> = (0..p.cells.len())
+                .filter(|&j| {
+                    j != i && {
+                        let o = p.cells[j];
+                        (o.x - c.x).powi(2) + (o.y - c.y).powi(2) <= radius * radius
+                    }
+                })
+                .collect();
+            brute.sort_unstable();
+            assert_eq!(fast, brute, "cell {i}");
+        }
     }
 }

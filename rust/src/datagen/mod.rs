@@ -38,6 +38,32 @@ pub struct GraphSpec {
     pub d_net: usize,
 }
 
+/// Cell density the Table-1 tiers place at (≈10k cells per unit of die
+/// area); the die grows past the unit square above this so Full-tier
+/// graphs keep the paper's near-degree shape instead of densifying.
+const CELLS_PER_UNIT_AREA: f64 = 10_000.0;
+
+/// Near targets at or above this use the streaming generator
+/// ([`window::near_edges_streaming`]) — all Table-1-sized specs sit far
+/// below it, so their output is untouched.
+const STREAMING_NEAR_THRESHOLD: usize = 2_000_000;
+
+impl GraphSpec {
+    /// Die side length for this partition: 1.0 (the unit square) up to
+    /// [`CELLS_PER_UNIT_AREA`] cells, then growing with `sqrt(n)` to hold
+    /// placement density constant. Derived, not stored, so every existing
+    /// spec literal keeps its exact behavior.
+    pub fn extent(&self) -> f32 {
+        (self.n_cells as f64 / CELLS_PER_UNIT_AREA).sqrt().max(1.0) as f32
+    }
+
+    /// Whether [`generate_graph`] will build `near` via the streaming
+    /// (no-materialised-pairs) path.
+    pub fn streams_near(&self) -> bool {
+        self.target_near >= STREAMING_NEAR_THRESHOLD
+    }
+}
+
 /// Specification of a design = a set of partitions (paper §2.2: each design
 /// is evenly partitioned into ~10k-node graphs).
 #[derive(Clone, Debug)]
@@ -48,9 +74,25 @@ pub struct DesignSpec {
 }
 
 /// Generate one heterograph from a spec.
+///
+/// Table-1-sized specs run the exact pre-Full-tier pipeline (unit die,
+/// materialised pair down-sampling) bit-for-bit; specs past the streaming
+/// threshold place on a `sqrt(n)`-scaled die and build `near` without ever
+/// materialising the candidate pair list.
 pub fn generate_graph(spec: &GraphSpec, id: usize, rng: &mut Rng) -> HeteroGraph {
-    let placement = layout::place_cells(spec.n_cells, rng);
-    let near = window::near_edges(&placement, spec.target_near, rng);
+    let placement = layout::place_cells_in(spec.n_cells, spec.extent(), rng);
+    let near = if spec.streams_near() {
+        crate::info!(
+            "datagen: streaming near generation for graph {id} ({} cells, target_near {}, \
+             die extent {:.2})",
+            spec.n_cells,
+            spec.target_near,
+            spec.extent()
+        );
+        window::near_edges_streaming(&placement, spec.target_near, rng)
+    } else {
+        window::near_edges(&placement, spec.target_near, rng)
+    };
     let nets = netlist::build_netlist(&placement, spec.n_nets, spec.target_pins, rng);
     let pins = netlist::pins_matrix(&nets, spec.n_cells, spec.n_nets);
     let pinned = pins.transpose();
@@ -103,11 +145,21 @@ impl Dataset {
 /// Mini-CircuitNet (paper §4.1): `n_designs` sampled designs, scaled by
 /// `scale` (1.0 = paper-scale 5–10k nodes; benches/tests use smaller).
 /// Returns (train, test) split 5:1 like the paper's 100/20.
+///
+/// The test set is never empty: the `d % 6 == 5` rule only assigns a test
+/// design from the sixth on, so smaller datasets move their last train
+/// design to test instead — Table-2 eval then always averages over ≥ 1
+/// design rather than silently reporting `EvalScores::default()`. Needs
+/// `n_designs ≥ 2` (one train + one test); fewer is a loud panic.
 pub fn mini_circuitnet(
     n_designs: usize,
     scale: f64,
     seed: u64,
 ) -> (Dataset, Dataset) {
+    assert!(
+        n_designs >= 2,
+        "mini_circuitnet needs n_designs ≥ 2 (one train + one test design), got {n_designs}"
+    );
     let mut rng = Rng::new(seed);
     let mut train = Vec::new();
     let mut test = Vec::new();
@@ -120,6 +172,11 @@ pub fn mini_circuitnet(
             train.push((spec.name.clone(), graphs));
         }
     }
+    if test.is_empty() {
+        // n_designs < 6: generation order and specs are unchanged; only
+        // the split assignment of the final design moves.
+        test.push(train.pop().expect("n_designs ≥ 2 leaves a train design to move"));
+    }
     (
         Dataset { name: "mini-train".into(), designs: train },
         Dataset { name: "mini-test".into(), designs: test },
@@ -127,8 +184,9 @@ pub fn mini_circuitnet(
 }
 
 /// Re-export: the three Table-1 designs.
-pub use designs::{table1_design, table1_designs, DesignSize};
+pub use designs::{full_design, table1_design, table1_designs, DesignSize};
 pub use eco::{generate_eco, EcoSpec};
+pub use window::{sample_windows, WindowSpec};
 
 /// Convenience: percentage difference of generated vs target counts.
 pub fn count_error(actual: usize, target: usize) -> f64 {
@@ -193,6 +251,56 @@ mod tests {
         for g in train.graphs() {
             g.validate().unwrap();
         }
+    }
+
+    /// Every dataset size ≥ 2 must yield at least one test design —
+    /// the `d % 6 == 5` rule alone left the test set empty below 6
+    /// designs and Table-2 eval averaged nothing.
+    #[test]
+    fn mini_dataset_small_sizes_keep_a_test_design() {
+        for n in 2..=7 {
+            let (train, test) = mini_circuitnet(n, 0.02, 3);
+            assert!(!test.designs.is_empty(), "n_designs={n}: empty test set");
+            assert!(!train.designs.is_empty(), "n_designs={n}: empty train set");
+            assert_eq!(train.designs.len() + test.designs.len(), n);
+        }
+        // The move must not disturb the ≥6 split.
+        let (train, test) = mini_circuitnet(6, 0.02, 3);
+        assert_eq!((train.designs.len(), test.designs.len()), (5, 1));
+    }
+
+    #[test]
+    #[should_panic(expected = "n_designs ≥ 2")]
+    fn mini_dataset_rejects_single_design() {
+        mini_circuitnet(1, 0.02, 3);
+    }
+
+    #[test]
+    fn extent_grows_past_table1_scale() {
+        let mut small = small_spec();
+        assert_eq!(small.extent(), 1.0, "Table-1-sized specs stay on the unit die");
+        assert!(!small.streams_near());
+        small.n_cells = 1_000_000;
+        small.target_near = 50_000_000;
+        assert!((small.extent() - 10.0).abs() < 1e-5, "10⁶ cells → 10×10 die");
+        assert!(small.streams_near());
+    }
+
+    /// The streaming and dense near generators agree on the statistics the
+    /// rest of the pipeline consumes (symmetry, canonical form, target
+    /// count) for the same placement.
+    #[test]
+    fn streaming_near_matches_dense_statistics_in_pipeline() {
+        let spec = small_spec();
+        let mut rng = Rng::new(21);
+        let placement = layout::place_cells_in(spec.n_cells, spec.extent(), &mut rng);
+        let dense = window::near_edges(&placement, spec.target_near, &mut rng.fork(0));
+        let streamed =
+            window::near_edges_streaming(&placement, spec.target_near, &mut rng.fork(1));
+        assert!(streamed.is_canonical());
+        assert!(streamed.is_transpose_of(&streamed));
+        assert!(count_error(streamed.nnz(), spec.target_near) < 0.05);
+        assert!(count_error(dense.nnz(), spec.target_near) < 0.05);
     }
 
     #[test]

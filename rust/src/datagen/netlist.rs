@@ -81,9 +81,11 @@ pub fn build_netlist(
         let seed = rng.below(n_cells);
         let mut chosen = vec![seed as u32];
         let mut candidates: Vec<u32> = Vec::new();
-        // Gather a local candidate pool around the seed.
+        // Gather a local candidate pool around the seed. The growth cap
+        // scales with the die so Full-tier seeds in sparse corners can
+        // still assemble a pool (identical at the unit extent).
         let mut radius = 0.03f32;
-        while candidates.len() < fanout * 3 && radius < 1.5 {
+        while candidates.len() < fanout * 3 && radius < 1.5 * placement.extent {
             candidates.clear();
             placement.for_neighbors_within(seed, radius, |j, _| candidates.push(j as u32));
             radius *= 2.0;

@@ -6,38 +6,85 @@
 //! are randomly down-sampled (keeping symmetry) so Table-1 counts are met
 //! within a tight tolerance while the hotspot layout keeps the degree
 //! distribution heavy-tailed as in Fig. 4.
+//!
+//! Two generation strategies share that calibration:
+//! * [`near_edges`] materialises the candidate pair list — exact
+//!   down-sampling, right for Table-1-sized partitions;
+//! * [`near_edges_streaming`] never materialises it — two counting passes
+//!   plus a deterministic per-pair hash thinning build the CSR directly,
+//!   which is what makes the `Full` (≈10⁶-cell) tier generable.
+//!
+//! This module also owns window *sampling* ([`WindowSpec`],
+//! [`sample_windows`]): seeded, deterministic per-epoch mini-batch
+//! subgraphs cut from a parent graph for the fleet's sampled training mode.
 
 use super::layout::Placement;
+use crate::graph::hetero::HeteroGraph;
+use crate::graph::partition::cut_partition;
 use crate::graph::Csr;
 use crate::util::rng::Rng;
 
+/// Calibrate the link radius: grow from the density estimate until the
+/// undirected pair count reaches `target_pairs` or the radius covers the
+/// whole die (no further pairs exist). Returns `(radius, pair_count)`.
+/// Pure counting — draws no RNG, materialises nothing.
+fn calibrate_radius(placement: &Placement, target_nnz: usize, target_pairs: usize) -> (f32, usize) {
+    let n = placement.cells.len();
+    // Initial radius from a uniform-density estimate: avg_deg = ρ·π·r² with
+    // ρ = n / area. The pre-extent code divided by `n` assuming a unit die;
+    // on a Full-tier die that underestimated r by the extent factor and the
+    // growth loop burned all its attempts recovering.
+    let avg_deg = target_nnz as f64 / n as f64;
+    let area = placement.extent as f64 * placement.extent as f64;
+    let mut radius = (avg_deg * area / (std::f64::consts::PI * n as f64)).sqrt() as f32;
+    let diagonal = placement.extent * std::f32::consts::SQRT_2;
+    loop {
+        let mut pairs = 0usize;
+        for i in 0..n {
+            placement.for_neighbors_within(i, radius, |j, _| {
+                if j > i {
+                    pairs += 1;
+                }
+            });
+        }
+        if pairs >= target_pairs || radius >= diagonal {
+            return (radius, pairs);
+        }
+        radius *= 1.35;
+    }
+}
+
+fn warn_shortfall(kind: &str, achieved_nnz: usize, target_nnz: usize) {
+    crate::warn!(
+        "near_edges ({kind}): placement cannot reach target_near {target_nnz} — achieved \
+         {achieved_nnz} stored entries ({:.1}% short) even with the window radius grown to \
+         the full die; Table-1/Fig-4 statistics for this graph will be off by that factor",
+        100.0 * super::count_error(achieved_nnz, target_nnz)
+    );
+}
+
 /// Build the symmetric `near` adjacency with ≈`target_nnz` stored entries
-/// (each undirected link contributes two).
+/// (each undirected link contributes two). Undershoot is loud: if even a
+/// die-spanning radius cannot produce `target_nnz / 2` pairs the shortfall
+/// is `warn!`ed with the achieved-vs-target error instead of silently
+/// returning a thinner graph.
 pub fn near_edges(placement: &Placement, target_nnz: usize, rng: &mut Rng) -> Csr {
     let n = placement.cells.len();
     if n == 0 || target_nnz == 0 {
         return Csr::from_triplets(n, n, &[]);
     }
     let target_pairs = target_nnz / 2;
-    // Initial radius from a uniform-density estimate: avg_deg = n·π·r².
-    let avg_deg = target_nnz as f64 / n as f64;
-    let mut radius = (avg_deg / (std::f64::consts::PI * n as f64)).sqrt() as f32;
+    let (radius, _) = calibrate_radius(placement, target_nnz, target_pairs);
     let mut pairs: Vec<(u32, u32)> = Vec::new();
-    // Clustering concentrates mass, so the uniform estimate usually
-    // overshoots pair counts; iterate radius until we have enough pairs.
-    for _attempt in 0..12 {
-        pairs.clear();
-        for i in 0..n {
-            placement.for_neighbors_within(i, radius, |j, _| {
-                if j > i {
-                    pairs.push((i as u32, j as u32));
-                }
-            });
-        }
-        if pairs.len() >= target_pairs {
-            break;
-        }
-        radius *= 1.35;
+    for i in 0..n {
+        placement.for_neighbors_within(i, radius, |j, _| {
+            if j > i {
+                pairs.push((i as u32, j as u32));
+            }
+        });
+    }
+    if pairs.len() < target_pairs {
+        warn_shortfall("dense", pairs.len() * 2, target_nnz);
     }
     if pairs.len() > target_pairs {
         // Down-sample pairs uniformly (partial Fisher–Yates).
@@ -55,9 +102,164 @@ pub fn near_edges(placement: &Placement, target_nnz: usize, rng: &mut Rng) -> Cs
     Csr::from_triplets(n, n, &triplets)
 }
 
+/// Symmetric per-pair keep decision: a SplitMix64-style mix of the seed and
+/// the *unordered* pair, so both directions of a link always agree without
+/// any shared state between rows.
+#[inline]
+fn pair_hash(seed: u64, a: u32, b: u32) -> u64 {
+    let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+    let mut z = seed ^ (((hi as u64) << 32) | lo as u64).wrapping_mul(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Streaming variant of [`near_edges`] for Full-tier graphs: the candidate
+/// pair list (which can be tens of millions of entries before
+/// down-sampling) is never materialised. After the counting calibration,
+/// excess pairs are thinned by a deterministic symmetric hash with keep
+/// probability `target_pairs / candidates`, and the CSR is built directly
+/// with two per-row passes (count → fill), peak memory O(nnz) instead of
+/// O(candidate pairs × triplet expansion).
+///
+/// The thinned count is binomial around the target (the exact-count
+/// Fisher–Yates would need the materialised list); [`super::count_error`]
+/// against `target_nnz` stays within the generator's usual tolerance.
+pub fn near_edges_streaming(placement: &Placement, target_nnz: usize, rng: &mut Rng) -> Csr {
+    let n = placement.cells.len();
+    if n == 0 || target_nnz == 0 {
+        return Csr::from_triplets(n, n, &[]);
+    }
+    let target_pairs = target_nnz / 2;
+    let (radius, candidates) = calibrate_radius(placement, target_nnz, target_pairs);
+    if candidates < target_pairs {
+        warn_shortfall("streaming", candidates * 2, target_nnz);
+    }
+    let seed = rng.next_u64();
+    // Keep threshold on the hash's full u64 range; keep-all when the
+    // calibration landed at or under the target.
+    let keep_all = candidates <= target_pairs;
+    let threshold = if keep_all {
+        u64::MAX
+    } else {
+        ((target_pairs as f64 / candidates as f64) * u64::MAX as f64) as u64
+    };
+    let keep = |i: u32, j: u32| keep_all || pair_hash(seed, i, j) <= threshold;
+
+    // Pass A: per-row kept degrees → indptr.
+    let mut indptr = vec![0usize; n + 1];
+    for i in 0..n {
+        let mut deg = 0usize;
+        placement.for_neighbors_within(i, radius, |j, _| {
+            if keep(i as u32, j as u32) {
+                deg += 1;
+            }
+        });
+        indptr[i + 1] = indptr[i] + deg;
+    }
+    let nnz = indptr[n];
+    // Pass B: fill and sort each row (bin iteration order is spatial, not
+    // by index).
+    let mut indices = vec![0u32; nnz];
+    for i in 0..n {
+        let mut p = indptr[i];
+        placement.for_neighbors_within(i, radius, |j, _| {
+            if keep(i as u32, j as u32) {
+                indices[p] = j as u32;
+                p += 1;
+            }
+        });
+        debug_assert_eq!(p, indptr[i + 1]);
+        indices[indptr[i]..p].sort_unstable();
+    }
+    let csr = Csr { rows: n, cols: n, indptr, indices, values: vec![1.0; nnz] };
+    debug_assert!(csr.is_canonical(), "streaming near must build canonical CSR directly");
+    csr
+}
+
+/// A parsed window-sampling selection — the single parse point for the
+/// `--window` CLI flag and the `window` config key (mirroring
+/// [`crate::fleet::FleetSpec`]'s grammar discipline).
+///
+/// Grammar (case-insensitive): `off` (also `none`, `0`) or
+/// `<count>x<cells>` — `count` windows of `cells` cells sampled per parent
+/// graph per epoch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WindowSpec {
+    /// Full-graph training (the default).
+    Off,
+    /// Sampled training: per epoch, each parent graph contributes `count`
+    /// windows of `cells` contiguous cells (clamped to the graph).
+    On { count: usize, cells: usize },
+}
+
+impl WindowSpec {
+    /// Parse a window setting. This is the only parse point in the crate.
+    pub fn parse(s: &str) -> Result<WindowSpec, String> {
+        let t = s.trim().to_ascii_lowercase();
+        if t == "off" || t == "none" || t == "0" {
+            return Ok(WindowSpec::Off);
+        }
+        let bad =
+            || format!("invalid window spec '{s}' (expected: off | <count>x<cells>, e.g. 4x2000)");
+        let (c, w) = t.split_once('x').ok_or_else(bad)?;
+        let count: usize = c.trim().parse().map_err(|_| bad())?;
+        let cells: usize = w.trim().parse().map_err(|_| bad())?;
+        if count == 0 || cells == 0 {
+            return Err(bad());
+        }
+        Ok(WindowSpec::On { count, cells })
+    }
+
+    pub fn is_on(&self) -> bool {
+        matches!(self, WindowSpec::On { .. })
+    }
+
+    /// One-line description for logs and tables.
+    pub fn describe(&self) -> String {
+        match self {
+            WindowSpec::Off => "off".to_string(),
+            WindowSpec::On { count, cells } => format!("{count} windows × {cells} cells"),
+        }
+    }
+}
+
+/// Sample `count` window subgraphs of `cells` contiguous cells from `g`,
+/// deterministically from `(seed, epoch, g.id)` — weight-independent, so
+/// the fleet's prepare stage can run it ahead of the optimizer without
+/// breaking the no-weight-reads invariant, and reproducible for any worker
+/// count or thread budget.
+///
+/// Windows are cut with [`cut_partition`] (cell-contiguous range, the nets
+/// touching it, gathered features/labels), so a window is exactly the kind
+/// of subgraph the fleet already schedules. Window `w` of the result keeps
+/// `id = w`; callers batching windows from several parents re-assign ids.
+pub fn sample_windows(
+    g: &HeteroGraph,
+    count: usize,
+    cells: usize,
+    seed: u64,
+    epoch: usize,
+) -> Vec<HeteroGraph> {
+    assert!(count > 0 && cells > 0, "window spec must be positive");
+    assert!(g.n_cells > 0, "cannot sample windows from an empty graph");
+    let win = cells.min(g.n_cells);
+    // Independent stream per (seed, epoch, graph): re-derived from scratch
+    // each call so sampling is stateless and schedule-independent.
+    let mut root = Rng::new(seed);
+    let mut per_epoch = root.fork(epoch as u64);
+    let mut rng = per_epoch.fork(g.id as u64);
+    (0..count)
+        .map(|w| {
+            let start = rng.below(g.n_cells - win + 1);
+            cut_partition(g, start, start + win, w).0
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
-    use super::super::layout::place_cells;
+    use super::super::layout::{place_cells, place_cells_in};
     use super::*;
 
     #[test]
@@ -65,6 +267,19 @@ mod tests {
         let mut rng = Rng::new(1);
         let p = place_cells(800, &mut rng);
         let target = 24_000;
+        let near = near_edges(&p, target, &mut rng);
+        let err = (near.nnz() as f64 - target as f64).abs() / target as f64;
+        assert!(err < 0.02, "nnz={} target={target}", near.nnz());
+    }
+
+    #[test]
+    fn hits_target_on_scaled_extent() {
+        // The area-aware radius estimate: on a 3×3 die the old unit-area
+        // formula starts 3× too small; the calibration must still converge
+        // to the target without a fixed attempt cap biting.
+        let mut rng = Rng::new(6);
+        let p = place_cells_in(900, 3.0, &mut rng);
+        let target = 27_000;
         let near = near_edges(&p, target, &mut rng);
         let err = (near.nnz() as f64 - target as f64).abs() / target as f64;
         assert!(err < 0.02, "nnz={} target={target}", near.nnz());
@@ -92,6 +307,18 @@ mod tests {
     }
 
     #[test]
+    fn infeasible_target_terminates_with_all_pairs() {
+        // 10 cells support at most 45 undirected pairs; asking for 400
+        // stored entries must terminate (radius capped at the die diagonal)
+        // and return every possible pair rather than looping or silently
+        // returning an arbitrary subset.
+        let mut rng = Rng::new(5);
+        let p = place_cells(10, &mut rng);
+        let near = near_edges(&p, 400, &mut rng);
+        assert_eq!(near.nnz(), 90, "all 45 pairs, both directions");
+    }
+
+    #[test]
     fn degree_tail_exceeds_mode() {
         // Hotspots should create rows with degree several times the average.
         let mut rng = Rng::new(4);
@@ -99,5 +326,112 @@ mod tests {
         let near = near_edges(&p, 60_000, &mut rng);
         let avg = near.avg_degree();
         assert!(near.max_degree() as f64 > 2.0 * avg, "max {} avg {avg}", near.max_degree());
+    }
+
+    #[test]
+    fn streaming_matches_dense_statistics() {
+        let mut rng = Rng::new(9);
+        let p = place_cells(800, &mut rng);
+        let target = 24_000;
+        let near = near_edges_streaming(&p, target, &mut rng);
+        assert!(near.is_canonical());
+        assert!(near.is_transpose_of(&near), "streaming near must stay symmetric");
+        for r in 0..near.rows {
+            for q in near.row_range(r) {
+                assert_ne!(near.indices[q] as usize, r, "self loop at {r}");
+            }
+        }
+        // Hash thinning is binomial around the target — allow a looser but
+        // still tight tolerance.
+        let err = (near.nnz() as f64 - target as f64).abs() / target as f64;
+        assert!(err < 0.05, "nnz={} target={target}", near.nnz());
+    }
+
+    #[test]
+    fn streaming_is_deterministic() {
+        let mut r1 = Rng::new(12);
+        let mut r2 = Rng::new(12);
+        let p1 = place_cells(500, &mut r1);
+        let p2 = place_cells(500, &mut r2);
+        let a = near_edges_streaming(&p1, 10_000, &mut r1);
+        let b = near_edges_streaming(&p2, 10_000, &mut r2);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn window_spec_grammar() {
+        assert_eq!(WindowSpec::parse("off").unwrap(), WindowSpec::Off);
+        assert_eq!(WindowSpec::parse("none").unwrap(), WindowSpec::Off);
+        assert_eq!(WindowSpec::parse("0").unwrap(), WindowSpec::Off);
+        assert_eq!(
+            WindowSpec::parse(" 4x2000 ").unwrap(),
+            WindowSpec::On { count: 4, cells: 2000 }
+        );
+        assert_eq!(WindowSpec::parse("2X64").unwrap(), WindowSpec::On { count: 2, cells: 64 });
+        for bad in ["", "x", "4x", "x2", "4x0", "0x2", "4", "fast", "4x2x1"] {
+            let err = WindowSpec::parse(bad).unwrap_err();
+            assert!(err.contains("<count>x<cells>"), "{bad}: {err}");
+        }
+        assert!(WindowSpec::On { count: 4, cells: 2000 }.is_on());
+        assert!(!WindowSpec::Off.is_on());
+        assert!(WindowSpec::On { count: 4, cells: 2000 }.describe().contains("4 windows"));
+    }
+
+    fn sample_parent() -> HeteroGraph {
+        use super::super::{generate_graph, GraphSpec};
+        generate_graph(
+            &GraphSpec {
+                n_cells: 300,
+                n_nets: 150,
+                target_near: 6_000,
+                target_pins: 450,
+                d_cell: 6,
+                d_net: 6,
+            },
+            7,
+            &mut Rng::new(31),
+        )
+    }
+
+    #[test]
+    fn sampled_windows_are_valid_and_deterministic() {
+        let g = sample_parent();
+        let a = sample_windows(&g, 3, 64, 42, 1);
+        let b = sample_windows(&g, 3, 64, 42, 1);
+        assert_eq!(a.len(), 3);
+        for (w, sub) in a.iter().enumerate() {
+            sub.validate().unwrap();
+            assert_eq!(sub.id, w);
+            assert_eq!(sub.n_cells, 64);
+        }
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.near, y.near);
+            assert_eq!(x.pins, y.pins);
+            assert_eq!(x.x_cell.data, y.x_cell.data);
+            assert_eq!(x.y_cell.data, y.y_cell.data);
+        }
+    }
+
+    #[test]
+    fn sampling_varies_with_epoch_and_seed() {
+        let g = sample_parent();
+        let e1 = sample_windows(&g, 4, 64, 42, 1);
+        let e2 = sample_windows(&g, 4, 64, 42, 2);
+        let s2 = sample_windows(&g, 4, 64, 43, 1);
+        let starts = |ws: &[HeteroGraph]| -> Vec<Vec<u32>> {
+            ws.iter().map(|w| w.near.indices.clone()).collect()
+        };
+        assert_ne!(starts(&e1), starts(&e2), "epochs must sample different windows");
+        assert_ne!(starts(&e1), starts(&s2), "seeds must sample different windows");
+    }
+
+    #[test]
+    fn oversized_window_clamps_to_whole_graph() {
+        let g = sample_parent();
+        let ws = sample_windows(&g, 2, 10_000, 1, 0);
+        for w in &ws {
+            assert_eq!(w.n_cells, g.n_cells);
+            assert_eq!(w.near, g.near);
+        }
     }
 }

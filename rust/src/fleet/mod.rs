@@ -151,6 +151,28 @@ impl FleetBuilder {
                 out
             }
         };
+        self.finish(subgraphs, cache)
+    }
+
+    /// Build a fleet that **owns** its subgraphs (`Fleet<'static>`) — the
+    /// window-sampling trainer's path. Each epoch cuts a fresh set of
+    /// window subgraphs per design ([`crate::datagen::sample_windows`]), so
+    /// the fleet cannot borrow from the dataset, and each build plans
+    /// through its own fresh [`PlanCache`]: window adjacencies change every
+    /// epoch, so a cache shared across epochs would only accumulate dead
+    /// plans without ever hitting. `parts` is *not* applied — the windows
+    /// already are the subgraphs (callers warn when a parts request is
+    /// dropped).
+    pub fn build_owned(&self, graphs: Vec<HeteroGraph>) -> Fleet<'static> {
+        let cache = PlanCache::new(self.engine.clone());
+        let subgraphs: Vec<Cow<'static, HeteroGraph>> =
+            graphs.into_iter().map(Cow::Owned).collect();
+        self.finish(subgraphs, &cache)
+    }
+
+    /// Shared tail of every build path: resolve one engine per subgraph
+    /// through the cache and assemble the fleet.
+    fn finish<'a>(&self, subgraphs: Vec<Cow<'a, HeteroGraph>>, cache: &PlanCache) -> Fleet<'a> {
         assert!(!subgraphs.is_empty(), "fleet needs at least one subgraph");
         let total_cells: usize = subgraphs.iter().map(|g| g.n_cells).sum();
         let mut cache_stats = CacheStats::default();
@@ -669,6 +691,32 @@ mod tests {
             last = fleet.step(&mut model, &mut opt).loss;
         }
         assert!(last < first.loss, "{} -> {last}", first.loss);
+    }
+
+    /// An owned fleet over sampled window subgraphs (the window-training
+    /// path) keeps the deterministic-reduction guarantee: gradients are
+    /// bit-identical for any worker count.
+    #[test]
+    fn owned_window_fleet_is_worker_invariant() {
+        let g = test_graph(120, 40);
+        let mut windows = crate::datagen::sample_windows(&g, 3, 40, 7, 0);
+        for (i, w) in windows.iter_mut().enumerate() {
+            w.id = i;
+        }
+        let builder = Fleet::builder(EngineBuilder::dr(3, 3));
+        let mut rng = Rng::new(3);
+        let model = DrCircuitGnn::new(6, 6, 8, &mut rng);
+        let reference = builder.clone().workers(1).build_owned(windows.clone());
+        assert_eq!(reference.n_subgraphs(), 3);
+        let base = reference.gradients(&model);
+        for workers in [2, 5] {
+            let fleet = builder.clone().workers(workers).build_owned(windows.clone());
+            let got = fleet.gradients(&model);
+            assert_eq!(got.loss, base.loss, "workers={workers}");
+            for (a, b) in got.grads.iter().zip(&base.grads) {
+                assert_eq!(a.data, b.data, "workers={workers}");
+            }
+        }
     }
 
     /// The stage split is behavior-preserving: running prepare and execute

@@ -58,6 +58,16 @@ fn main() {
             "on | off: overlap design N+1's prepare with design N's step (fleet mode)",
             true,
         )
+        .declare(
+            "window",
+            "off | <count>x<cells>: train on sampled windows per design per epoch (fleet mode)",
+            true,
+        )
+        .declare(
+            "checkpoint",
+            "on | off: recompute activations in backward (layer-peak memory, bit-identical)",
+            true,
+        )
         .declare("threads", "root thread budget (default: DRCG_THREADS or all cores)", true)
         .declare("plan-store", "persistent plan store directory (warm-starts Alg. 1 stage 1)", true)
         .declare("serve", "jobs file for serve mode (one design=… job per line)", true)
@@ -176,6 +186,8 @@ fn cmd_train(cfg: &Config, args: &Args) -> i32 {
         seed: cfg.seed,
         parallel: cfg.parallel,
         epoch_pipeline: cfg.epoch_pipeline,
+        window: cfg.window,
+        checkpoint: cfg.checkpoint,
         log_every: 5,
     };
     let model_kind = args.get_or("model", "dr").to_string();
@@ -192,9 +204,15 @@ fn cmd_train(cfg: &Config, args: &Args) -> i32 {
         };
         let (_, report) = if cfg.fleet.is_on() {
             dr_circuitgnn::info!(
-                "fleet mode: {}{}",
+                "fleet mode: {}{}{}{}",
                 cfg.fleet.describe(),
-                if cfg.epoch_pipeline { ", epoch pipeline on" } else { "" }
+                if cfg.epoch_pipeline { ", epoch pipeline on" } else { "" },
+                if cfg.window.is_on() {
+                    format!(", window {}", cfg.window.describe())
+                } else {
+                    String::new()
+                },
+                if cfg.checkpoint { ", checkpoint on" } else { "" }
             );
             Trainer::train_dr_fleet_cached(
                 &train,

@@ -29,6 +29,18 @@ impl Relu {
         y
     }
 
+    /// Cache-free forward (checkpointed paths recompute the mask later).
+    /// Bit-identical to [`Relu::forward`].
+    pub fn forward_inference(&self, x: &Matrix) -> Matrix {
+        let mut y = x.clone();
+        for v in y.data.iter_mut() {
+            if *v <= 0.0 {
+                *v = 0.0;
+            }
+        }
+        y
+    }
+
     pub fn backward(&self, dy: &Matrix) -> Matrix {
         let mask = self.mask.as_ref().expect("backward before forward");
         let mut dx = dy.clone();

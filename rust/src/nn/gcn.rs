@@ -38,6 +38,12 @@ impl GraphConv {
         y
     }
 
+    /// Cache-free variant of [`GraphConv::forward_from_agg`] for
+    /// checkpointed forwards (bit-identical output, nothing stored).
+    pub fn forward_from_agg_inference(&self, h: &Matrix) -> Matrix {
+        matmul(h, &self.w.value).add_bias(&self.b.value.data)
+    }
+
     /// Fused dense-aggregation forward against a planned adjacency.
     pub fn forward(&mut self, plan: &KernelPlan, x: &Matrix) -> Matrix {
         let (h, _) = CsrKernel.forward(plan, x, None);

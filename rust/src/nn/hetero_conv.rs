@@ -94,6 +94,39 @@ impl HeteroConv {
         (y_cell, y_net)
     }
 
+    /// Cache-free forward for checkpointed training: identical arithmetic
+    /// to [`HeteroConv::forward`] (same lanes, same merge) but nothing is
+    /// retained — no argmax mask, no aggregation caches, no module caches.
+    /// Deterministic kernels make the outputs bit-identical, so a later
+    /// recompute via the caching [`HeteroConv::forward`] on the same inputs
+    /// rebuilds exactly the state this call skipped.
+    pub fn forward_inference(
+        &self,
+        engine: &Engine,
+        x_cell: &Matrix,
+        x_net: &Matrix,
+    ) -> (Matrix, Matrix) {
+        let prep_cell = engine.sparsify(x_cell, NodeType::Cell);
+        let prep_net = engine.sparsify(x_net, NodeType::Net);
+        let results = run_lanes(
+            schedule_of(engine),
+            vec![
+                Box::new(|| engine.aggregate_with(EdgeType::Near, x_cell, prep_cell.as_ref()))
+                    as Box<dyn FnOnce() -> (Matrix, AggCache) + Send>,
+                Box::new(|| engine.aggregate_with(EdgeType::Pinned, x_net, prep_net.as_ref())),
+                Box::new(|| engine.aggregate_with(EdgeType::Pins, x_cell, prep_cell.as_ref())),
+            ],
+        );
+        let mut it = results.into_iter();
+        let [(h_near, _), (h_pinned, _), (h_pins, _)] =
+            [it.next().unwrap(), it.next().unwrap(), it.next().unwrap()];
+        let y_near = self.near.forward_from_agg_inference(&h_near);
+        let y_pinned = self.pinned.forward_from_agg_inference(x_cell, &h_pinned);
+        let y_net = self.pins.forward_from_agg_inference(x_net, &h_pins);
+        let (y_cell, _mask) = y_near.max_merge(&y_pinned);
+        (y_cell, y_net)
+    }
+
     /// Backward: returns `(dx_cell, dx_net)` and accumulates module grads.
     pub fn backward(
         &mut self,
@@ -283,6 +316,27 @@ mod tests {
             xm.data[i] -= eps;
             let fd = (loss(&g.x_cell, &xp) - loss(&g.x_cell, &xm)) / (2.0 * eps);
             assert!((fd - dxn.data[i]).abs() < 3e-2, "dx_net[{i}]: {fd} vs {}", dxn.data[i]);
+        }
+    }
+
+    /// The cache-free inference forward must be bit-identical to the
+    /// caching forward on every engine family.
+    #[test]
+    fn inference_forward_bitwise_equals_caching_forward() {
+        let g = toy();
+        let mut rng = Rng::new(9);
+        let layer0 = HeteroConv::new(4, 4, 5, &mut rng);
+        for builder in [
+            EngineBuilder::csr(),
+            EngineBuilder::gnna(GnnaConfig::default()),
+            EngineBuilder::dr(2, 2),
+        ] {
+            let engine = builder.build(&g);
+            let mut caching = layer0.clone();
+            let (yc1, yn1) = caching.forward(&engine, &g.x_cell, &g.x_net);
+            let (yc2, yn2) = layer0.forward_inference(&engine, &g.x_cell, &g.x_net);
+            assert_eq!(yc1.data, yc2.data, "{}", engine.describe());
+            assert_eq!(yn1.data, yn2.data, "{}", engine.describe());
         }
     }
 

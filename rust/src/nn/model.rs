@@ -22,6 +22,25 @@ use crate::graph::{Csr, HeteroGraph, NodeType};
 use crate::tensor::Matrix;
 use crate::util::rng::Rng;
 
+/// Per-layer checkpoints of the activation-recompute mode: only the
+/// *inputs at layer boundaries* survive the forward pass; everything a
+/// layer caches internally (aggregation CBSRs, aggregated features, argmax
+/// masks, ReLU masks) is rebuilt during backward, one layer at a time.
+#[derive(Clone, Debug)]
+struct Checkpoints {
+    /// Inputs of the per-type input Linears.
+    x_cell: Matrix,
+    x_net: Matrix,
+    /// Input of the conv1 + inter-layer-activation block.
+    xc0: Matrix,
+    xn0: Matrix,
+    /// Input of conv2 (post-activation).
+    c1a: Matrix,
+    n1a: Matrix,
+    /// Input of the output head.
+    c2: Matrix,
+}
+
 /// DR-CircuitGNN (two HeteroConv layers, Fig. 1).
 #[derive(Clone, Debug)]
 pub struct DrCircuitGnn {
@@ -33,6 +52,8 @@ pub struct DrCircuitGnn {
     relu_cell: Relu,
     relu_net: Relu,
     hidden: usize,
+    checkpoint: bool,
+    ckpt: Option<Checkpoints>,
 }
 
 impl DrCircuitGnn {
@@ -46,7 +67,25 @@ impl DrCircuitGnn {
             relu_cell: Relu::new(),
             relu_net: Relu::new(),
             hidden,
+            checkpoint: false,
+            ckpt: None,
         }
+    }
+
+    /// Switch activation checkpointing on or off (`--checkpoint on|off`).
+    /// When on, forward stores only layer-boundary activations and backward
+    /// recomputes each layer's internal state right before differentiating
+    /// it — trading ≈ one extra forward pass for dropping every intra-layer
+    /// cache. Deterministic kernels make the result bit-identical to the
+    /// uncheckpointed path.
+    pub fn set_checkpoint(&mut self, on: bool) {
+        self.checkpoint = on;
+        self.ckpt = None;
+    }
+
+    /// Whether activation checkpointing is enabled.
+    pub fn checkpointing(&self) -> bool {
+        self.checkpoint
     }
 
     /// Forward over one graph; returns per-cell congestion prediction (C×1).
@@ -67,6 +106,9 @@ impl DrCircuitGnn {
     /// prediction is bit-identical to [`DrCircuitGnn::forward`] on the
     /// graph itself.
     pub fn forward_on(&mut self, engine: &Engine, x_cell: &Matrix, x_net: &Matrix) -> Matrix {
+        if self.checkpoint {
+            return self.forward_checkpointed(engine, x_cell, x_net);
+        }
         let xc0 = self.lin_cell.forward(x_cell);
         let xn0 = self.lin_net.forward(x_net);
         let (c1, n1) = self.conv1.forward(engine, &xc0, &xn0);
@@ -84,8 +126,42 @@ impl DrCircuitGnn {
         self.out.forward(&c2)
     }
 
+    /// Checkpointed forward: every layer runs its cache-free inference
+    /// variant and only the boundary activations are kept. The arithmetic
+    /// is the caching forward's, so the prediction is bit-identical.
+    fn forward_checkpointed(&mut self, engine: &Engine, x_cell: &Matrix, x_net: &Matrix) -> Matrix {
+        let xc0 = self.lin_cell.forward_inference(x_cell);
+        let xn0 = self.lin_net.forward_inference(x_net);
+        let (c1, n1) = self.conv1.forward_inference(engine, &xc0, &xn0);
+        let c1a = if engine.sparsifies(NodeType::Cell) {
+            c1
+        } else {
+            self.relu_cell.forward_inference(&c1)
+        };
+        let n1a = if engine.sparsifies(NodeType::Net) {
+            n1
+        } else {
+            self.relu_net.forward_inference(&n1)
+        };
+        let (c2, _n2) = self.conv2.forward_inference(engine, &c1a, &n1a);
+        let pred = self.out.forward_inference(&c2);
+        self.ckpt = Some(Checkpoints {
+            x_cell: x_cell.clone(),
+            x_net: x_net.clone(),
+            xc0,
+            xn0,
+            c1a,
+            n1a,
+            c2,
+        });
+        pred
+    }
+
     /// Backward from the prediction gradient; accumulates all param grads.
     pub fn backward(&mut self, engine: &Engine, d_pred: &Matrix) {
+        if self.checkpoint {
+            return self.backward_checkpointed(engine, d_pred);
+        }
         let dc2 = self.out.backward(d_pred);
         // Net output of the last layer feeds nothing: zero gradient.
         let dn2 = Matrix::zeros(engine.n_nets(), self.hidden);
@@ -101,6 +177,45 @@ impl DrCircuitGnn {
             self.relu_net.backward(&dn1a)
         };
         let (dxc0, dxn0) = self.conv1.backward(engine, &dc1, &dn1);
+        self.lin_cell.backward(&dxc0);
+        self.lin_net.backward(&dxn0);
+    }
+
+    /// Checkpointed backward: walk the layers in reverse, re-running each
+    /// one's *caching* forward from its checkpointed input immediately
+    /// before its backward. Kernels are deterministic, so the rebuilt
+    /// caches (aggregation CBSRs, argmax/ReLU masks, cached inputs) match
+    /// the uncheckpointed run bit for bit — and therefore so do all
+    /// gradients (asserted by tests against the uncheckpointed path). At
+    /// most one layer's internal state is live at any time.
+    fn backward_checkpointed(&mut self, engine: &Engine, d_pred: &Matrix) {
+        let ckpt = self.ckpt.take().expect("backward before forward");
+        // Output head.
+        let _ = self.out.forward(&ckpt.c2);
+        let dc2 = self.out.backward(d_pred);
+        // conv2 (its recompute also frees the head's cache slot).
+        let _ = self.conv2.forward(engine, &ckpt.c1a, &ckpt.n1a);
+        let dn2 = Matrix::zeros(engine.n_nets(), self.hidden);
+        let (dc1a, dn1a) = self.conv2.backward(engine, &dc2, &dn2);
+        // conv1 + inter-layer activation: the ReLU masks are rebuilt from
+        // conv1's recomputed outputs (bit-identical to the forward pass).
+        let (c1, n1) = self.conv1.forward(engine, &ckpt.xc0, &ckpt.xn0);
+        let dc1 = if engine.sparsifies(NodeType::Cell) {
+            dc1a
+        } else {
+            let _ = self.relu_cell.forward(&c1);
+            self.relu_cell.backward(&dc1a)
+        };
+        let dn1 = if engine.sparsifies(NodeType::Net) {
+            dn1a
+        } else {
+            let _ = self.relu_net.forward(&n1);
+            self.relu_net.backward(&dn1a)
+        };
+        let (dxc0, dxn0) = self.conv1.backward(engine, &dc1, &dn1);
+        // Input Linears.
+        let _ = self.lin_cell.forward(&ckpt.x_cell);
+        let _ = self.lin_net.forward(&ckpt.x_net);
         self.lin_cell.backward(&dxc0);
         self.lin_net.backward(&dxn0);
     }
@@ -454,6 +569,57 @@ mod tests {
             losses.push(loss);
         }
         assert!(losses.last().unwrap() < &(losses[0] * 0.8), "{losses:?}");
+    }
+
+    /// The checkpointed path must be indistinguishable from the default
+    /// path at the bit level: same predictions, same gradients, and —
+    /// after optimizer steps — same parameters, across engine families.
+    #[test]
+    fn checkpointed_training_bitwise_equals_uncheckpointed() {
+        let g = toy();
+        for builder in
+            [EngineBuilder::csr(), EngineBuilder::gnna(Default::default()), EngineBuilder::dr(4, 4)]
+        {
+            let engine = builder.build(&g);
+            let mut rng = Rng::new(6);
+            let base = DrCircuitGnn::new(6, 6, 8, &mut rng);
+            let mut plain = base.clone();
+            let mut ckpt = base.clone();
+            ckpt.set_checkpoint(true);
+            assert!(ckpt.checkpointing() && !plain.checkpointing());
+            let mut opt_p = super::super::adam::Adam::new(0.01, 1e-4);
+            let mut opt_c = super::super::adam::Adam::new(0.01, 1e-4);
+            for step in 0..5 {
+                let pp = plain.forward(&engine, &g);
+                let pc = ckpt.forward(&engine, &g);
+                assert_eq!(pp.data, pc.data, "step {step}: predictions diverge");
+                let (_, dp) = mse(&pp, &g.y_cell);
+                let (_, dc) = mse(&pc, &g.y_cell);
+                plain.backward(&engine, &dp);
+                ckpt.backward(&engine, &dc);
+                for (a, b) in plain.params_mut().iter().zip(ckpt.params_mut().iter()) {
+                    assert_eq!(a.grad.data, b.grad.data, "step {step}: gradients diverge");
+                }
+                opt_p.step(&mut plain.params_mut());
+                opt_c.step(&mut ckpt.params_mut());
+                super::super::adam::Adam::zero_grad(&mut plain.params_mut());
+                super::super::adam::Adam::zero_grad(&mut ckpt.params_mut());
+            }
+            for (a, b) in plain.params_mut().iter().zip(ckpt.params_mut().iter()) {
+                assert_eq!(a.value.data, b.value.data, "params diverge after training");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "backward before forward")]
+    fn checkpointed_backward_without_forward_panics() {
+        let g = toy();
+        let engine = EngineBuilder::csr().build(&g);
+        let mut rng = Rng::new(11);
+        let mut model = DrCircuitGnn::new(6, 6, 8, &mut rng);
+        model.set_checkpoint(true);
+        model.backward(&engine, &Matrix::ones(4, 1));
     }
 
     #[test]

@@ -44,6 +44,14 @@ impl SageConv {
         y
     }
 
+    /// Cache-free variant of [`SageConv::forward_from_agg`] for
+    /// checkpointed forwards (bit-identical output, nothing stored).
+    pub fn forward_from_agg_inference(&self, x_dst: &Matrix, h: &Matrix) -> Matrix {
+        matmul(x_dst, &self.w_self.value)
+            .add(&matmul(h, &self.w_neigh.value))
+            .add_bias(&self.b.value.data)
+    }
+
     /// Fused forward against a planned adjacency.
     pub fn forward(&mut self, plan: &KernelPlan, x_src: &Matrix, x_dst: &Matrix) -> Matrix {
         let (h, _) = CsrKernel.forward(plan, x_src, None);

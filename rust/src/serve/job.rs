@@ -95,6 +95,8 @@ impl JobSpec {
             seed: self.seed,
             parallel,
             epoch_pipeline: false,
+            window: crate::datagen::WindowSpec::Off,
+            checkpoint: false,
             log_every: 0,
         }
     }

@@ -203,10 +203,16 @@ impl EvalScores {
     }
 
     /// Average a set of per-design scores (how the paper reports Table 2).
+    ///
+    /// An empty slice is a loud error: it means eval ran over zero designs
+    /// (an empty test split) and any reported numbers would be silent
+    /// `default()` zeros masquerading as real correlations.
     pub fn average(scores: &[EvalScores]) -> EvalScores {
-        if scores.is_empty() {
-            return EvalScores::default();
-        }
+        assert!(
+            !scores.is_empty(),
+            "EvalScores::average over an empty slice — eval ran on zero designs \
+             (the test split must be non-empty)"
+        );
         let n = scores.len() as f64;
         EvalScores {
             pearson: scores.iter().map(|s| s.pearson).sum::<f64>() / n,
@@ -291,6 +297,12 @@ mod tests {
         let avg = EvalScores::average(&[s1, s2]);
         assert!((avg.pearson - 0.5).abs() < 1e-9);
         assert!((avg.mae - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty slice")]
+    fn average_of_nothing_is_a_loud_error() {
+        EvalScores::average(&[]);
     }
 
     #[test]

@@ -9,12 +9,12 @@
 //! (paper Alg. 1 stage 1 — plans are cached across every epoch and layer).
 
 use super::metrics::EvalScores;
-use crate::datagen::Dataset;
+use crate::datagen::{sample_windows, Dataset, WindowSpec};
 use crate::engine::{Engine, EngineBuilder};
 use crate::fleet::{CacheStats, Fleet, FleetPipeline, FleetSpec, PlanCache};
 use crate::nn::model::{homogenize, HomoView};
 use crate::nn::{mse, Adam, DrCircuitGnn, HomoGnn, HomoKind};
-use crate::sched::ScheduleMode;
+use crate::sched::{pipeline_will_overlap, run_epoch_pipeline, ScheduleMode};
 use crate::util::rng::Rng;
 use crate::util::timer::time_it;
 use std::sync::Arc;
@@ -36,6 +36,21 @@ pub struct TrainConfig {
     /// are bit-identical to the serial epoch schedule — prepare reads no
     /// state the optimizer writes (gated by `tests/integration_golden.rs`).
     pub epoch_pipeline: bool,
+    /// Window/neighbor sampling (fleet mode only): when `On`, every epoch
+    /// each parent graph contributes freshly sampled window subgraphs
+    /// ([`crate::datagen::sample_windows`], seeded by
+    /// `(cfg.seed, epoch, graph id)`) and the fleet trains on those instead
+    /// of the full graphs — the million-node path where staging a whole
+    /// design would not fit. Deterministic reduction is preserved: losses
+    /// and parameters are bit-identical for any worker count at a fixed
+    /// seed.
+    pub window: WindowSpec,
+    /// Activation checkpointing ([`DrCircuitGnn::set_checkpoint`], DR model
+    /// only): forward keeps layer-boundary activations only, backward
+    /// recomputes each layer's internal state. Bit-identical results,
+    /// ≈ one extra forward of compute, intra-layer caches live one layer
+    /// at a time.
+    pub checkpoint: bool,
     pub log_every: usize,
 }
 
@@ -50,6 +65,8 @@ impl TrainConfig {
             seed: 42,
             parallel: false,
             epoch_pipeline: false,
+            window: WindowSpec::Off,
+            checkpoint: false,
             log_every: 10,
         }
     }
@@ -114,6 +131,7 @@ impl Trainer {
         let first = train.graphs().next().expect("empty training set");
         let (dc, dn) = (first.x_cell.cols, first.x_net.cols);
         let mut model = DrCircuitGnn::new(dc, dn, cfg.hidden, &mut rng);
+        model.set_checkpoint(cfg.checkpoint);
         let params = model.numel();
         let mut opt = Adam::new(cfg.lr, cfg.weight_decay);
 
@@ -233,6 +251,7 @@ impl Trainer {
         let first = train.graphs().next().expect("empty training set");
         let (dc, dn) = (first.x_cell.cols, first.x_net.cols);
         let mut model = DrCircuitGnn::new(dc, dn, cfg.hidden, &mut rng);
+        model.set_checkpoint(cfg.checkpoint);
         let params = model.numel();
         let mut opt = Adam::new(cfg.lr, cfg.weight_decay);
 
@@ -241,6 +260,90 @@ impl Trainer {
         let design_graphs: Vec<&[crate::graph::HeteroGraph]> =
             train.designs.iter().map(|(_, gs)| gs.as_slice()).collect();
         let n_designs = design_graphs.len();
+
+        // Window-sampling mode: every epoch, each design's prepare stage
+        // samples fresh window subgraphs from its parent graphs, cuts them
+        // (`cut_partition` semantics), builds an *owned* fleet over them
+        // and stages its features — all weight-independent, so the stage
+        // keeps the pipeline's no-weight-reads invariant and may overlap
+        // the previous design's execute. Execute runs on this thread in
+        // design order with the usual deterministic reduction, so losses
+        // and parameters are bit-identical for any worker count or budget
+        // at a fixed `cfg.seed`.
+        if let WindowSpec::On { count, cells } = cfg.window {
+            if spec.parts().is_some() {
+                crate::warn!(
+                    "[fleet {}] window mode ignores the partition request — \
+                     sampled windows are the subgraphs",
+                    spec.describe()
+                );
+            }
+            let mode = if cfg.epoch_pipeline {
+                ScheduleMode::Parallel
+            } else {
+                ScheduleMode::Sequential
+            };
+            let stage_copies = pipeline_will_overlap(n_designs, mode);
+            let mut epoch_losses = Vec::with_capacity(cfg.epochs);
+            let mut epoch_overlap = Vec::new();
+            let mut plan_cache = CacheStats::default();
+            let (_, secs) = time_it(|| {
+                for epoch in 0..cfg.epochs {
+                    let fb = &fleet_builder;
+                    let graphs = &design_graphs;
+                    let run = run_epoch_pipeline(
+                        n_designs,
+                        mode,
+                        |d| {
+                            let mut windows = Vec::new();
+                            for g in graphs[d] {
+                                windows.extend(sample_windows(g, count, cells, cfg.seed, epoch));
+                            }
+                            // Fleet-wide ids across the design's parents.
+                            for (i, w) in windows.iter_mut().enumerate() {
+                                w.id = i;
+                            }
+                            let fleet = fb.build_owned(windows);
+                            let staged = if stage_copies {
+                                fleet.prepare()
+                            } else {
+                                fleet.prepare_in_place()
+                            };
+                            (fleet, staged)
+                        },
+                        |_, (fleet, staged)| {
+                            plan_cache = plan_cache.plus(&fleet.cache_stats());
+                            fleet.execute(&staged, &mut model, &mut opt).loss
+                        },
+                    );
+                    let avg = run.results.iter().sum::<f64>() / n_designs.max(1) as f64;
+                    epoch_losses.push(avg);
+                    if cfg.epoch_pipeline {
+                        epoch_overlap.push(run.overlap_factor());
+                    }
+                    if cfg.log_every > 0 && epoch % cfg.log_every == 0 {
+                        crate::info!(
+                            "[fleet {} window {}] epoch {epoch:3}: loss {avg:.6}",
+                            spec.describe(),
+                            cfg.window.describe()
+                        );
+                    }
+                }
+            });
+            let (test_scores, per_graph_scores) = Self::eval_dr_cached(&mut model, test, cache);
+            return (
+                model,
+                TrainReport {
+                    epoch_losses,
+                    test_scores,
+                    per_graph_scores,
+                    train_seconds: secs,
+                    params,
+                    epoch_overlap,
+                    plan_cache,
+                },
+            );
+        }
 
         // One driver for both schedules: fleets built lazily inside the
         // prepare stage (epoch 0's Alg. 1 stage 1 planning overlaps
@@ -429,6 +532,8 @@ mod tests {
             seed: 1,
             parallel: false,
             epoch_pipeline: false,
+            window: WindowSpec::Off,
+            checkpoint: false,
             log_every: 0,
         }
     }
@@ -547,6 +652,79 @@ mod tests {
             Trainer::train_dr_fleet(&train, &test, &EngineBuilder::dr(4, 4), &cfg, &spec)
         });
         assert_eq!(wide.epoch_losses, starved.epoch_losses);
+    }
+
+    /// Window-sampled training must keep the fleet guarantees: losses and
+    /// final parameters bit-identical for any worker count at a fixed
+    /// sampling seed, identical across reruns, and identical between the
+    /// serial and pipelined epoch schedules.
+    #[test]
+    fn window_training_is_worker_invariant_and_seed_deterministic() {
+        let (train, test) = tiny_sets();
+        let mut cfg = fast_cfg();
+        cfg.epochs = 3;
+        cfg.window = WindowSpec::parse("2x40").unwrap();
+        let engine = EngineBuilder::dr(4, 4);
+        let run = |spec: &str, pipelined: bool| {
+            let mut c = cfg.clone();
+            c.epoch_pipeline = pipelined;
+            let spec = FleetSpec::parse(spec).unwrap();
+            Trainer::train_dr_fleet(&train, &test, &engine, &c, &spec)
+        };
+        let (mut m1, r1) = run("1", false);
+        assert_eq!(r1.epoch_losses.len(), 3);
+        assert!(r1.epoch_losses.iter().all(|l| l.is_finite()));
+        for (tag, (mut m, r)) in [
+            ("workers=4", run("4", false)),
+            ("rerun", run("1", false)),
+            ("pipelined", run("1", true)),
+        ] {
+            assert_eq!(r1.epoch_losses, r.epoch_losses, "{tag}: losses diverge");
+            for (a, b) in m1.params_mut().iter().zip(m.params_mut().iter()) {
+                assert_eq!(a.value.data, b.value.data, "{tag}: params diverge");
+            }
+        }
+    }
+
+    /// A different sampling seed must actually change the windows (and the
+    /// loss curve) — sampling is seeded, not frozen.
+    #[test]
+    fn window_training_varies_with_seed() {
+        let (train, test) = tiny_sets();
+        let mut cfg = fast_cfg();
+        cfg.epochs = 2;
+        cfg.window = WindowSpec::parse("2x40").unwrap();
+        let spec = FleetSpec::parse("2").unwrap();
+        let (_, r1) = Trainer::train_dr_fleet(&train, &test, &EngineBuilder::dr(4, 4), &cfg, &spec);
+        let mut cfg2 = cfg.clone();
+        cfg2.seed = 999;
+        let (_, r2) =
+            Trainer::train_dr_fleet(&train, &test, &EngineBuilder::dr(4, 4), &cfg2, &spec);
+        assert_ne!(r1.epoch_losses, r2.epoch_losses, "seed must steer the sampled windows");
+    }
+
+    /// `--checkpoint on` must not move a single bit of the training
+    /// trajectory, in full-graph and in window-sampled fleet mode.
+    #[test]
+    fn checkpointed_fleet_training_matches_default_bitwise() {
+        let (train, test) = tiny_sets();
+        let mut cfg = fast_cfg();
+        cfg.epochs = 3;
+        let spec = FleetSpec::parse("2x2").unwrap();
+        let engine = EngineBuilder::dr(4, 4);
+        for window in ["off", "2x40"] {
+            cfg.window = WindowSpec::parse(window).unwrap();
+            let (mut plain_model, plain) =
+                Trainer::train_dr_fleet(&train, &test, &engine, &cfg, &spec);
+            let mut ckpt_cfg = cfg.clone();
+            ckpt_cfg.checkpoint = true;
+            let (mut ckpt_model, ckpt) =
+                Trainer::train_dr_fleet(&train, &test, &engine, &ckpt_cfg, &spec);
+            assert_eq!(plain.epoch_losses, ckpt.epoch_losses, "window={window}");
+            for (a, b) in plain_model.params_mut().iter().zip(ckpt_model.params_mut().iter()) {
+                assert_eq!(a.value.data, b.value.data, "window={window}: params diverge");
+            }
+        }
     }
 
     #[test]

@@ -35,6 +35,7 @@ fn fast_cfg(epochs: usize) -> TrainConfig {
         parallel: false,
         epoch_pipeline: false,
         log_every: 0,
+        ..TrainConfig::dr_default()
     }
 }
 

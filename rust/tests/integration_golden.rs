@@ -150,6 +150,35 @@ fn all_schedules_reproduce_the_golden_traces() {
     }
 }
 
+/// Activation checkpointing (ISSUE 10) must reproduce the golden trace bit
+/// for bit: recomputing activations in backward is a memory strategy, not
+/// a numerics change, so a checkpointed model walks the exact trajectory
+/// the committed fixture pins.
+#[test]
+fn checkpointed_model_reproduces_the_golden_trace() {
+    let designs = seed_designs();
+    let plain = trace(&designs, 4, ScheduleMode::Sequential);
+
+    let pipeline = FleetPipeline::new(
+        Fleet::builder(engine()).workers(4),
+        designs.iter().map(|gs| gs.as_slice()).collect(),
+    );
+    let mut model = seed_model(&designs);
+    model.set_checkpoint(true);
+    let mut opt = Adam::new(2e-4, 1e-5);
+    let mut ckpt = Vec::new();
+    for epoch in 0..EPOCHS {
+        let run = pipeline.run_epoch(ScheduleMode::Sequential, |d, fleet, staged| {
+            let grads = fleet.gradients_staged(staged, &model);
+            let gnorm = grad_norm(&grads);
+            let step = fleet.apply_update(&mut model, &mut opt, grads);
+            line(epoch, d, step.loss, gnorm)
+        });
+        ckpt.extend(run.results);
+    }
+    assert_eq!(plain, ckpt, "checkpointing must not move a bit of the golden trace");
+}
+
 /// The golden trace must also be invariant under a starved thread budget —
 /// the property that lets the `DRCG_THREADS=2` CI lane run this harness.
 #[test]

@@ -210,6 +210,7 @@ fn train_once(cache: &Arc<PlanCache>, data: &Dataset) -> Vec<f64> {
         parallel: false,
         epoch_pipeline: false,
         log_every: 0,
+        ..TrainConfig::dr_default()
     };
     let spec = FleetSpec::parse("2").unwrap();
     let (_m, report) =

@@ -16,6 +16,7 @@ fn cfg(epochs: usize) -> TrainConfig {
         parallel: false,
         epoch_pipeline: false,
         log_every: 0,
+        ..TrainConfig::dr_default()
     }
 }
 

@@ -536,6 +536,119 @@ fn prop_epoch_pipeline_equals_serial_epochs() {
     });
 }
 
+/// Window-sampled fleets (ISSUE 10): sampling is a pure function of
+/// `(seed, epoch, graph id)` — two calls return identical windows — and an
+/// owned fleet over the sampled windows keeps the deterministic-reduction
+/// guarantee: loss and gradients are bit-identical for every worker count
+/// and thread budget.
+#[test]
+fn prop_window_sampled_fleet_is_worker_invariant_and_seed_deterministic() {
+    use dr_circuitgnn::datagen::sample_windows;
+    use dr_circuitgnn::util::pool::Budget;
+
+    check("windows≡workers", 10, 0x3196D0, |g| {
+        let d = 6usize;
+        let mut hg = random_heterograph(g, d);
+        hg.y_cell = Matrix::from_vec(hg.n_cells, 1, g.normal_vec(hg.n_cells));
+        let count = g.usize_in(1, 3);
+        let cells = g.usize_in(2, hg.n_cells);
+        let seed = 0x57A5 ^ g.case as u64;
+        let epoch = g.usize_in(0, 3);
+
+        // Seed-determinism: resampling with the same key is bit-identical.
+        let mut windows = sample_windows(&hg, count, cells, seed, epoch);
+        let again = sample_windows(&hg, count, cells, seed, epoch);
+        if windows.len() != count || again.len() != count {
+            return Err(format!("expected {count} windows, got {}", windows.len()));
+        }
+        for (a, b) in windows.iter().zip(&again) {
+            if a.n_cells != b.n_cells
+                || a.near != b.near
+                || a.pins != b.pins
+                || a.x_cell.data != b.x_cell.data
+                || a.y_cell.data != b.y_cell.data
+            {
+                return Err("resampling with the same (seed, epoch, id) diverged".into());
+            }
+        }
+
+        // Worker/budget invariance of the owned fleet over the windows.
+        for (i, w) in windows.iter_mut().enumerate() {
+            w.id = i;
+        }
+        let builder = Fleet::builder(EngineBuilder::dr(3, 3));
+        let mut rng = dr_circuitgnn::util::rng::Rng::new(0xEF ^ g.case as u64);
+        let model = DrCircuitGnn::new(d, d, 8, &mut rng);
+        let base = builder.clone().workers(1).build_owned(windows.clone()).gradients(&model);
+        for (workers, budget) in [(2usize, 4usize), (5, 1), (16, 2)] {
+            let fleet = builder.clone().workers(workers).build_owned(windows.clone());
+            let got = Budget::new(budget).with(|| fleet.gradients(&model));
+            if got.loss.to_bits() != base.loss.to_bits() {
+                return Err(format!(
+                    "workers {workers} budget {budget}: loss {} vs {}",
+                    got.loss, base.loss
+                ));
+            }
+            for (a, b) in got.grads.iter().zip(&base.grads) {
+                if a.data != b.data {
+                    return Err(format!("workers {workers} budget {budget}: gradient bits"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Activation checkpointing (ISSUE 10) is a pure recomputation strategy:
+/// for **every registered concrete kernel** (the registry iterated like
+/// the FD gate, so new entries inherit this check), a checkpointed model
+/// produces bit-identical predictions and parameter gradients to its
+/// uncheckpointed clone. Engines are built without §3.4 lane parallelism,
+/// where even GNNA's atomic accumulation runs in one deterministic order.
+#[test]
+fn prop_checkpointed_backward_is_bitwise_for_every_registry_kernel() {
+    check("ckpt≡plain", 12, 0xC4B7, |g| {
+        let d = 6usize;
+        let mut hg = random_heterograph(g, d);
+        hg.y_cell = Matrix::from_vec(hg.n_cells, 1, g.normal_vec(hg.n_cells));
+        let k = g.usize_in(1, 4);
+        for entry in REGISTRY {
+            if entry.spec == KernelSpec::Auto {
+                continue;
+            }
+            let eng = EngineBuilder::default()
+                .kernel(entry.name)
+                .k_cell(k)
+                .k_net(k)
+                .build(&hg);
+            let mut rng = dr_circuitgnn::util::rng::Rng::new(0x11 ^ g.case as u64);
+            let mut plain = DrCircuitGnn::new(d, d, 8, &mut rng);
+            let mut ckpt = plain.clone();
+            ckpt.set_checkpoint(true);
+
+            let pred_p = plain.forward(&eng, &hg);
+            let pred_c = ckpt.forward(&eng, &hg);
+            if pred_p.data != pred_c.data {
+                return Err(format!("{}: checkpointed forward bits diverged", entry.name));
+            }
+            let (_, dp) = mse(&pred_p, &hg.y_cell);
+            plain.backward(&eng, &dp);
+            ckpt.backward(&eng, &dp);
+            for (pi, (a, b)) in
+                plain.params_mut().iter().zip(ckpt.params_mut().iter()).enumerate()
+            {
+                if a.grad.data != b.grad.data {
+                    return Err(format!(
+                        "{} param {pi}: checkpointed gradient bits diverged",
+                        entry.name
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
 /// Backward gradients through the Engine must agree with the dense
 /// transpose reference — exactly for csr/gnna, masked to the forward CBSR
 /// support for DR.
